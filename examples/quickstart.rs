@@ -1,0 +1,51 @@
+//! Quickstart: build a scene, partition its LoD tree into an SLTree,
+//! run the LoD search, render a frame, and simulate the paper's five
+//! hardware variants — the whole public API in ~40 lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sltarch::prelude::*;
+use sltarch::sim::HwVariant;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A deterministic synthetic scene (HierarchicalGS stand-in).
+    let scene = SceneConfig::small_scale().quick().build(42);
+    println!(
+        "scene `{}`: {} Gaussians, LoD tree height {}",
+        scene.name,
+        scene.gaussians.len(),
+        scene.tree.height
+    );
+
+    // 2. Offline SLTree partitioning (paper Sec. III-B, tau_s = 32).
+    let sltree = SlTree::partition(&scene.tree, 32);
+    println!("SLTree: {} subtrees (size limit 32)", sltree.len());
+
+    // 3. LoD search: the streaming subtree traversal finds the cut.
+    let cam = scene.scenario_camera(0);
+    let cut = sltree.traverse(&scene.tree, &cam, 16.0);
+    println!("cut: {} Gaussians selected for rendering", cut.len());
+
+    // 4. Render with the divergence-free group-alpha dataflow.
+    let pipeline = FramePipeline::new(
+        scene,
+        RenderConfig::default(),
+        ArchConfig::default(),
+    );
+    let img = pipeline.render(&cam, AlphaMode::Group)?;
+    img.write_ppm(std::path::Path::new("quickstart.ppm"))?;
+    println!("wrote quickstart.ppm ({}x{})", img.width, img.height);
+
+    // 5. Simulate the Fig. 9 hardware variants on this frame.
+    let report = pipeline.simulate(&cam, &HwVariant::fig9());
+    let gpu = report.sim_seconds(HwVariant::Gpu).unwrap();
+    for r in &report.sims {
+        println!(
+            "  {:<10} {:>8.3} ms  ({:>5.2}x vs GPU)",
+            r.report.variant,
+            r.report.total_seconds() * 1e3,
+            gpu / r.report.total_seconds()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,76 @@
+"""AOT lowering: jax entry points -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` rust crate binds) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<name>.hlo.txt`` per entry point in ``model.ENTRY_POINTS``
+plus a ``manifest.json`` recording shapes for the rust ArtifactManifest
+self-check.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ENTRY_POINTS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str):
+    fn, specs = ENTRY_POINTS[name]
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered), specs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="lower a single entry point by name")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    names = [args.only] if args.only else list(ENTRY_POINTS)
+    manifest = {}
+    for name in names:
+        text, specs = lower_entry(name)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest[name] = {
+            "file": path.name,
+            "inputs": [list(s.shape) for s in specs],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest_path = out_dir / "manifest.json"
+    if manifest_path.exists() and args.only:
+        existing = json.loads(manifest_path.read_text())
+        existing.update(manifest)
+        manifest = existing
+    manifest_path.write_text(json.dumps(manifest, indent=2, sort_keys=True))
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""Pure-jnp correctness oracles for the SLTarch kernels.
+
+These are the ground-truth implementations of the two compute hot-spots
+of the PBNR pipeline (paper Fig. 1):
+
+  * ``project_ref``      — 3D Gaussian -> screen-space (EWA splatting
+                           projection, identical maths to 3DGS/GSCore).
+  * ``splat_tile_ref``   — front-to-back alpha blending of K depth-sorted
+                           Gaussians over one 16x16 pixel tile, in the two
+                           dataflows the paper contrasts:
+                             alpha_mode="pixel" : canonical per-pixel
+                                 alpha check (divergent on a GPU warp),
+                             alpha_mode="group" : SLTarch 2x2 pixel-group
+                                 alpha check (divergence-free, Sec. IV-C).
+
+The Pallas kernels in ``project.py`` / ``splat.py`` must match these
+(allclose within float32 tolerance); pytest + hypothesis sweeps enforce
+that at build time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Blending constants (paper Sec. IV-C / 3DGS rasterizer).
+ALPHA_THRESH = 1.0 / 255.0  # transparency cut-off for integration
+ALPHA_CLAMP = 0.99          # max per-sample alpha (numerical guard)
+COV2D_DILATION = 0.3        # EWA low-pass dilation added to cov2d diagonal
+
+TILE = 16                   # tile side in pixels
+GROUP = 2                   # pixel-group side (SP unit granularity)
+
+
+def quat_to_rotmat(q):
+    """Normalized quaternion (w,x,y,z) -> 3x3 rotation matrix. q: (...,4)."""
+    q = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-12)
+    w, x, y, z = q[..., 0], q[..., 1], q[..., 2], q[..., 3]
+    r00 = 1.0 - 2.0 * (y * y + z * z)
+    r01 = 2.0 * (x * y - w * z)
+    r02 = 2.0 * (x * z + w * y)
+    r10 = 2.0 * (x * y + w * z)
+    r11 = 1.0 - 2.0 * (x * x + z * z)
+    r12 = 2.0 * (y * z - w * x)
+    r20 = 2.0 * (x * z - w * y)
+    r21 = 2.0 * (y * z + w * x)
+    r22 = 1.0 - 2.0 * (x * x + y * y)
+    rows = [
+        jnp.stack([r00, r01, r02], axis=-1),
+        jnp.stack([r10, r11, r12], axis=-1),
+        jnp.stack([r20, r21, r22], axis=-1),
+    ]
+    return jnp.stack(rows, axis=-2)
+
+
+def project_ref(means, scales, quats, viewmat, intr):
+    """EWA projection of N 3D Gaussians to screen space.
+
+    Args:
+      means:   (N,3) world-space centres.
+      scales:  (N,3) per-axis standard deviations (linear, not log).
+      quats:   (N,4) orientations, (w,x,y,z), not necessarily normalized.
+      viewmat: (4,4) world->camera, row-major.
+      intr:    (4,)  pinhole intrinsics fx, fy, cx, cy.
+
+    Returns:
+      mean2d: (N,2) pixel-space centres.
+      conic:  (N,3) inverse 2D covariance (a,b,c) with
+              power = -0.5*(a dx^2 + c dy^2) - b dx dy.
+      depth:  (N,)  camera-space z.
+      radius: (N,)  3-sigma screen-space radius in pixels (0 if culled).
+    """
+    fx, fy, cx, cy = intr[0], intr[1], intr[2], intr[3]
+    R = viewmat[:3, :3]
+    t = viewmat[:3, 3]
+
+    # Camera-space centres.
+    tc = means @ R.T + t  # (N,3)
+    tz = tc[:, 2]
+    # Guard against division by ~0 depth; culled later via radius.
+    tz_safe = jnp.where(jnp.abs(tz) < 1e-6, 1e-6, tz)
+
+    mean2d = jnp.stack(
+        [fx * tc[:, 0] / tz_safe + cx, fy * tc[:, 1] / tz_safe + cy], axis=-1
+    )
+
+    # 3D covariance = R_q diag(s^2) R_q^T.
+    Rq = quat_to_rotmat(quats)  # (N,3,3)
+    M = Rq * (scales[:, None, :] ** 2)  # R * diag(s^2)
+    cov3d = M @ jnp.swapaxes(Rq, -1, -2)  # (N,3,3)
+
+    # Perspective Jacobian rows (EWA).
+    zinv = 1.0 / tz_safe
+    zinv2 = zinv * zinv
+    n = means.shape[0]
+    J = jnp.zeros((n, 2, 3), dtype=means.dtype)
+    J = J.at[:, 0, 0].set(fx * zinv)
+    J = J.at[:, 0, 2].set(-fx * tc[:, 0] * zinv2)
+    J = J.at[:, 1, 1].set(fy * zinv)
+    J = J.at[:, 1, 2].set(-fy * tc[:, 1] * zinv2)
+
+    W = R[None, :, :]  # world->camera rotation
+    T_ = J @ W  # (N,2,3)
+    cov2d = T_ @ cov3d @ jnp.swapaxes(T_, -1, -2)  # (N,2,2)
+    a = cov2d[:, 0, 0] + COV2D_DILATION
+    b = cov2d[:, 0, 1]
+    c = cov2d[:, 1, 1] + COV2D_DILATION
+
+    det = a * c - b * b
+    det_safe = jnp.where(det <= 1e-12, 1e-12, det)
+    conic = jnp.stack([c / det_safe, -b / det_safe, a / det_safe], axis=-1)
+
+    # 3-sigma radius from the larger eigenvalue of cov2d.
+    mid = 0.5 * (a + c)
+    lam = mid + jnp.sqrt(jnp.maximum(mid * mid - det, 0.0))
+    radius = jnp.ceil(3.0 * jnp.sqrt(jnp.maximum(lam, 0.0)))
+    visible = (tz > 0.2) & (det > 1e-12)
+    radius = jnp.where(visible, radius, 0.0)
+
+    return mean2d, conic, tz, radius
+
+
+def pixel_centers(tile_origin):
+    """(256,2) pixel-centre coordinates of a TILE x TILE tile."""
+    ys, xs = jnp.meshgrid(
+        jnp.arange(TILE, dtype=jnp.float32),
+        jnp.arange(TILE, dtype=jnp.float32),
+        indexing="ij",
+    )
+    px = tile_origin[0] + xs.reshape(-1) + 0.5
+    py = tile_origin[1] + ys.reshape(-1) + 0.5
+    return jnp.stack([px, py], axis=-1)  # (256,2)
+
+
+def group_centers(tile_origin):
+    """(64,2) centre coordinates of the 2x2 pixel groups of a tile."""
+    g = TILE // GROUP
+    ys, xs = jnp.meshgrid(
+        jnp.arange(g, dtype=jnp.float32),
+        jnp.arange(g, dtype=jnp.float32),
+        indexing="ij",
+    )
+    # Group covers pixel centres {2g+0.5, 2g+1.5} -> centre at 2g+1.
+    px = tile_origin[0] + 2.0 * xs.reshape(-1) + 1.0
+    py = tile_origin[1] + 2.0 * ys.reshape(-1) + 1.0
+    return jnp.stack([px, py], axis=-1)  # (64,2)
+
+
+def gauss_power(conic, d):
+    """Gaussian exponent power. conic: (...,3), d: (...,2) offset."""
+    a, b, c = conic[..., 0], conic[..., 1], conic[..., 2]
+    dx, dy = d[..., 0], d[..., 1]
+    return -0.5 * (a * dx * dx + c * dy * dy) - b * dx * dy
+
+
+def splat_tile_ref(
+    mean2d, conic, color, opacity, tile_origin, rgb_in, t_in, alpha_mode
+):
+    """Blend K front-to-back sorted Gaussians over one 16x16 tile.
+
+    Args:
+      mean2d:  (K,2)  screen-space centres.
+      conic:   (K,3)  inverse 2D covariances.
+      color:   (K,3)  RGB.
+      opacity: (K,)   base opacity in [0,1]; entries <=0 are padding and
+                      contribute nothing (L3 pads chunks with zeros).
+      tile_origin: (2,) pixel coords of the tile's top-left corner.
+      rgb_in:  (256,3) accumulated colour carried across K-chunks.
+      t_in:    (256,)  remaining transmittance carried across K-chunks.
+      alpha_mode: "pixel" (canonical) or "group" (SLTarch 2x2 group check).
+
+    Returns (rgb_out, t_out) with the same shapes as the carried state.
+    """
+    px = pixel_centers(tile_origin)  # (256,2)
+    gc = group_centers(tile_origin)  # (64,2)
+
+    def body(carry, g):
+        rgb, t = carry
+        m, cn, col, op = g
+        d = px - m[None, :]  # (256,2)
+        power = jnp.minimum(gauss_power(cn[None, :], d), 0.0)  # (256,)
+        alpha = jnp.minimum(op * jnp.exp(power), ALPHA_CLAMP)  # (256,)
+
+        if alpha_mode == "pixel":
+            # Canonical: each pixel decides for itself (warp-divergent).
+            keep = alpha >= ALPHA_THRESH
+        else:
+            # SLTarch: one alpha-check per 2x2 group at the group centre;
+            # the decision is broadcast to all 4 pixels (divergence-free).
+            gd = gc - m[None, :]
+            gpower = jnp.minimum(gauss_power(cn[None, :], gd), 0.0)
+            galpha = jnp.minimum(op * jnp.exp(gpower), ALPHA_CLAMP)
+            gkeep = galpha >= ALPHA_THRESH  # (64,)
+            side = TILE // GROUP
+            keep = (
+                gkeep.reshape(side, side)
+                .repeat(GROUP, axis=0)
+                .repeat(GROUP, axis=1)
+                .reshape(-1)
+            )
+        keep = keep & (op > 0.0)
+        eff = jnp.where(keep, alpha, 0.0)  # (256,)
+        rgb = rgb + (t * eff)[:, None] * col[None, :]
+        t = t * (1.0 - eff)
+        return (rgb, t), None
+
+    (rgb, t), _ = jax.lax.scan(
+        body, (rgb_in, t_in), (mean2d, conic, color, opacity)
+    )
+    return rgb, t

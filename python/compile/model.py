@@ -1,0 +1,78 @@
+"""Layer-2 JAX compute graph for the SLTarch PBNR pipeline.
+
+Defines the fixed-shape entry points that ``aot.py`` lowers to HLO text
+for the rust runtime (one artifact per entry point). Python never runs at
+render time: the rust coordinator pads/chunks live workloads to these
+static shapes.
+
+Entry points (shapes chosen for the rust batcher; see
+rust/src/runtime/artifacts.rs which mirrors this table):
+
+  project_n256   : project a batch of 256 Gaussians
+  splat_pixel_k64: blend 64 sorted Gaussians into a 16x16 tile,
+                   canonical per-pixel alpha check
+  splat_group_k64: same, SLTarch 2x2 pixel-group alpha check (Sec. IV-C)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.project import BLOCK_N, project_pallas
+from .kernels.splat import K_CHUNK, PIXELS, splat_tile_pallas
+
+PROJECT_N = 256  # Gaussians per projection batch (multiple of BLOCK_N)
+assert PROJECT_N % BLOCK_N == 0
+
+
+def project_batch(means, scales, quats, viewmat, intr):
+    """Project PROJECT_N Gaussians; returns (mean2d, conic, depth, radius).
+
+    Thin L2 wrapper: the entire computation lives in the L1 Pallas kernel
+    so the lowered HLO is a single fused region (no L2-side recompute).
+    """
+    return tuple(project_pallas(means, scales, quats, viewmat, intr))
+
+
+def splat_tile_pixel(mean2d, conic, color, opacity, origin, rgb_in, t_in):
+    """Canonical splatting chunk: per-pixel alpha check (divergent)."""
+    rgb, t = splat_tile_pallas(
+        mean2d, conic, color, opacity, origin, rgb_in, t_in,
+        alpha_mode="pixel",
+    )
+    return rgb, t
+
+
+def splat_tile_group(mean2d, conic, color, opacity, origin, rgb_in, t_in):
+    """SLTarch splatting chunk: 2x2 group alpha check (divergence-free)."""
+    rgb, t = splat_tile_pallas(
+        mean2d, conic, color, opacity, origin, rgb_in, t_in,
+        alpha_mode="group",
+    )
+    return rgb, t
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# name -> (callable, example argument shapes). aot.py lowers each entry;
+# the rust ArtifactManifest (runtime/artifacts.rs) mirrors this table.
+ENTRY_POINTS = {
+    "project_n256": (
+        project_batch,
+        (_f32(PROJECT_N, 3), _f32(PROJECT_N, 3), _f32(PROJECT_N, 4),
+         _f32(4, 4), _f32(4)),
+    ),
+    "splat_pixel_k64": (
+        splat_tile_pixel,
+        (_f32(K_CHUNK, 2), _f32(K_CHUNK, 3), _f32(K_CHUNK, 3),
+         _f32(K_CHUNK), _f32(2), _f32(PIXELS, 3), _f32(PIXELS)),
+    ),
+    "splat_group_k64": (
+        splat_tile_group,
+        (_f32(K_CHUNK, 2), _f32(K_CHUNK, 3), _f32(K_CHUNK, 3),
+         _f32(K_CHUNK), _f32(2), _f32(PIXELS, 3), _f32(PIXELS)),
+    ),
+}

@@ -1,0 +1,295 @@
+"""Kernel-vs-reference correctness: the CORE build-time signal.
+
+The Pallas kernels (interpret=True) must agree with the pure-jnp oracles
+in ``compile.kernels.ref`` for every shape/value regime the rust runtime
+can feed them. hypothesis sweeps the value space; fixed tests pin the
+regimes the paper cares about (padding rows, saturated tiles, group-vs-
+pixel divergence behaviour).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.project import BLOCK_N, project_pallas
+from compile.kernels.splat import K_CHUNK, PIXELS, splat_tile_pallas
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------- helpers
+
+def rand_gaussians3d(rng, n):
+    means = rng.uniform(-5.0, 5.0, (n, 3)).astype(np.float32)
+    scales = rng.uniform(0.05, 1.5, (n, 3)).astype(np.float32)
+    quats = rng.normal(0.0, 1.0, (n, 4)).astype(np.float32)
+    # Avoid the degenerate zero quaternion.
+    quats[np.abs(quats).sum(axis=1) < 1e-3] = np.array(
+        [1, 0, 0, 0], dtype=np.float32
+    )
+    return means, scales, quats
+
+
+def lookat_viewmat(eye, target=(0.0, 0.0, 0.0), up=(0.0, 1.0, 0.0)):
+    eye = np.asarray(eye, dtype=np.float32)
+    target = np.asarray(target, dtype=np.float32)
+    up = np.asarray(up, dtype=np.float32)
+    fwd = target - eye
+    fwd = fwd / np.linalg.norm(fwd)
+    right = np.cross(fwd, up)
+    right = right / np.linalg.norm(right)
+    true_up = np.cross(right, fwd)
+    # Camera looks down +z in our convention.
+    R = np.stack([right, true_up, fwd])
+    t = -R @ eye
+    view = np.eye(4, dtype=np.float32)
+    view[:3, :3] = R
+    view[:3, 3] = t
+    return view
+
+
+INTR = np.array([300.0, 300.0, 128.0, 128.0], dtype=np.float32)
+
+
+def rand_splat_inputs(rng, k=K_CHUNK, origin=(96.0, 96.0), spread=40.0):
+    mean2d = (
+        np.asarray(origin, dtype=np.float32)
+        + rng.uniform(-spread, spread + 16.0, (k, 2)).astype(np.float32)
+    )
+    # Random SPD conics: conic = M^T M + eps*I packed as (a,b,c).
+    m = rng.normal(0.0, 0.6, (k, 2, 2)).astype(np.float32)
+    spd = np.einsum("kji,kjl->kil", m, m) + 1e-3 * np.eye(2, dtype=np.float32)
+    conic = np.stack([spd[:, 0, 0], spd[:, 0, 1], spd[:, 1, 1]], axis=-1)
+    color = rng.uniform(0.0, 1.0, (k, 3)).astype(np.float32)
+    opacity = rng.uniform(0.0, 1.0, k).astype(np.float32)
+    return mean2d, conic.astype(np.float32), color, opacity
+
+
+def run_both_splat(mean2d, conic, color, opacity, origin, rgb_in, t_in, mode):
+    got = splat_tile_pallas(
+        jnp.asarray(mean2d), jnp.asarray(conic), jnp.asarray(color),
+        jnp.asarray(opacity), jnp.asarray(origin), jnp.asarray(rgb_in),
+        jnp.asarray(t_in), alpha_mode=mode,
+    )
+    want = ref.splat_tile_ref(
+        jnp.asarray(mean2d), jnp.asarray(conic), jnp.asarray(color),
+        jnp.asarray(opacity), jnp.asarray(origin), jnp.asarray(rgb_in),
+        jnp.asarray(t_in), alpha_mode=mode,
+    )
+    return got, want
+
+
+# ------------------------------------------------------------- projection
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_project_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    n = BLOCK_N * 4
+    means, scales, quats = rand_gaussians3d(rng, n)
+    view = lookat_viewmat((0.0, 0.0, -12.0))
+    got = project_pallas(
+        jnp.asarray(means), jnp.asarray(scales), jnp.asarray(quats),
+        jnp.asarray(view), jnp.asarray(INTR),
+    )
+    want = ref.project_ref(
+        jnp.asarray(means), jnp.asarray(scales), jnp.asarray(quats),
+        jnp.asarray(view), jnp.asarray(INTR),
+    )
+    for g, w, name in zip(got, want, ["mean2d", "conic", "depth", "radius"]):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=2e-4, atol=2e-4,
+            err_msg=f"projection output {name} mismatch",
+        )
+
+
+def test_project_culls_behind_camera():
+    rng = np.random.default_rng(7)
+    n = BLOCK_N
+    means, scales, quats = rand_gaussians3d(rng, n)
+    # Camera at origin looking at +z; half the points behind it.
+    means[: n // 2, 2] = -np.abs(means[: n // 2, 2]) - 1.0
+    means[n // 2:, 2] = np.abs(means[n // 2:, 2]) + 1.0
+    view = np.eye(4, dtype=np.float32)
+    _, _, depth, radius = project_pallas(
+        jnp.asarray(means), jnp.asarray(scales), jnp.asarray(quats),
+        jnp.asarray(view), jnp.asarray(INTR),
+    )
+    depth = np.asarray(depth)
+    radius = np.asarray(radius)
+    assert (radius[depth <= 0.2] == 0).all(), "behind-camera must be culled"
+    assert (radius[depth > 0.2] > 0).any(), "front Gaussians must survive"
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    eye_z=st.floats(-50.0, -2.0),
+    f=st.floats(50.0, 1200.0),
+)
+def test_project_matches_ref_hypothesis(seed, eye_z, f):
+    rng = np.random.default_rng(seed)
+    means, scales, quats = rand_gaussians3d(rng, BLOCK_N)
+    view = lookat_viewmat((0.0, 0.0, eye_z))
+    intr = np.array([f, f, 128.0, 128.0], dtype=np.float32)
+    got = project_pallas(
+        jnp.asarray(means), jnp.asarray(scales), jnp.asarray(quats),
+        jnp.asarray(view), jnp.asarray(intr),
+    )
+    want = ref.project_ref(
+        jnp.asarray(means), jnp.asarray(scales), jnp.asarray(quats),
+        jnp.asarray(view), jnp.asarray(intr),
+    )
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=1e-3, atol=1e-3
+        )
+
+
+# --------------------------------------------------------------- splatting
+
+@pytest.mark.parametrize("mode", ["pixel", "group"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_splat_matches_ref(mode, seed):
+    rng = np.random.default_rng(seed)
+    mean2d, conic, color, opacity = rand_splat_inputs(rng)
+    origin = np.array([96.0, 96.0], dtype=np.float32)
+    rgb_in = np.zeros((PIXELS, 3), dtype=np.float32)
+    t_in = np.ones(PIXELS, dtype=np.float32)
+    got, want = run_both_splat(
+        mean2d, conic, color, opacity, origin, rgb_in, t_in, mode
+    )
+    np.testing.assert_allclose(
+        np.asarray(got[0]), np.asarray(want[0]), rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(got[1]), np.asarray(want[1]), rtol=1e-4, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("mode", ["pixel", "group"])
+def test_splat_padding_rows_are_inert(mode):
+    """Zero-opacity padding rows (rust chunking) must not change the tile."""
+    rng = np.random.default_rng(11)
+    mean2d, conic, color, opacity = rand_splat_inputs(rng)
+    opacity[K_CHUNK // 2:] = 0.0
+    origin = np.array([96.0, 96.0], dtype=np.float32)
+    rgb_in = np.zeros((PIXELS, 3), dtype=np.float32)
+    t_in = np.ones(PIXELS, dtype=np.float32)
+    full, _ = run_both_splat(
+        mean2d, conic, color, opacity, origin, rgb_in, t_in, mode
+    )
+    # Replace the padding rows' other attributes with garbage: must be inert.
+    mean2d2 = mean2d.copy()
+    mean2d2[K_CHUNK // 2:] = 1e6
+    color2 = color.copy()
+    color2[K_CHUNK // 2:] = 123.0
+    garbage, _ = run_both_splat(
+        mean2d2, conic, color2, opacity, origin, rgb_in, t_in, mode
+    )
+    np.testing.assert_allclose(
+        np.asarray(full[0]), np.asarray(garbage[0]), rtol=1e-6, atol=1e-7
+    )
+
+
+@pytest.mark.parametrize("mode", ["pixel", "group"])
+def test_splat_chunk_chaining(mode):
+    """Blending 2x K_CHUNK in one ref scan == chaining two kernel calls."""
+    rng = np.random.default_rng(3)
+    m1, c1, col1, o1 = rand_splat_inputs(rng)
+    m2, c2, col2, o2 = rand_splat_inputs(rng)
+    origin = np.array([0.0, 0.0], dtype=np.float32)
+    rgb = np.zeros((PIXELS, 3), dtype=np.float32)
+    t = np.ones(PIXELS, dtype=np.float32)
+
+    got1 = splat_tile_pallas(
+        jnp.asarray(m1), jnp.asarray(c1), jnp.asarray(col1),
+        jnp.asarray(o1), jnp.asarray(origin), jnp.asarray(rgb),
+        jnp.asarray(t), alpha_mode=mode,
+    )
+    got2 = splat_tile_pallas(
+        jnp.asarray(m2), jnp.asarray(c2), jnp.asarray(col2),
+        jnp.asarray(o2), jnp.asarray(origin), got1[0], got1[1],
+        alpha_mode=mode,
+    )
+    want = ref.splat_tile_ref(
+        jnp.concatenate([jnp.asarray(m1), jnp.asarray(m2)]),
+        jnp.concatenate([jnp.asarray(c1), jnp.asarray(c2)]),
+        jnp.concatenate([jnp.asarray(col1), jnp.asarray(col2)]),
+        jnp.concatenate([jnp.asarray(o1), jnp.asarray(o2)]),
+        jnp.asarray(origin), jnp.asarray(rgb), jnp.asarray(t),
+        alpha_mode=mode,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got2[0]), np.asarray(want[0]), rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(got2[1]), np.asarray(want[1]), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_group_mode_approximates_pixel_mode():
+    """Paper Tbl. I: group-alpha is a close approximation, not identical.
+
+    A Gaussian whose footprint straddles a group boundary can differ, but
+    the image-level error must stay small (that is the accuracy claim).
+    """
+    rng = np.random.default_rng(5)
+    mean2d, conic, color, opacity = rand_splat_inputs(rng, spread=20.0)
+    origin = np.array([96.0, 96.0], dtype=np.float32)
+    rgb_in = np.zeros((PIXELS, 3), dtype=np.float32)
+    t_in = np.ones(PIXELS, dtype=np.float32)
+    px, _ = run_both_splat(
+        mean2d, conic, color, opacity, origin, rgb_in, t_in, "pixel"
+    )
+    gp, _ = run_both_splat(
+        mean2d, conic, color, opacity, origin, rgb_in, t_in, "group"
+    )
+    err = np.abs(np.asarray(px[0]) - np.asarray(gp[0])).mean()
+    assert err < 0.02, f"group-alpha approximation too lossy: {err}"
+
+
+@pytest.mark.parametrize("mode", ["pixel", "group"])
+def test_splat_transmittance_monotone(mode):
+    """T never increases and stays in [0,1] after any chunk."""
+    rng = np.random.default_rng(9)
+    mean2d, conic, color, opacity = rand_splat_inputs(rng)
+    origin = np.array([96.0, 96.0], dtype=np.float32)
+    rgb_in = np.zeros((PIXELS, 3), dtype=np.float32)
+    t_in = rng.uniform(0.0, 1.0, PIXELS).astype(np.float32)
+    got, _ = run_both_splat(
+        mean2d, conic, color, opacity, origin, rgb_in, t_in, mode
+    )
+    t_out = np.asarray(got[1])
+    assert (t_out <= t_in + 1e-6).all()
+    assert (t_out >= 0.0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    ox=st.floats(0.0, 512.0),
+    oy=st.floats(0.0, 512.0),
+    mode=st.sampled_from(["pixel", "group"]),
+)
+def test_splat_matches_ref_hypothesis(seed, ox, oy, mode):
+    rng = np.random.default_rng(seed)
+    mean2d, conic, color, opacity = rand_splat_inputs(
+        rng, origin=(ox, oy), spread=30.0
+    )
+    origin = np.array([ox, oy], dtype=np.float32)
+    rgb_in = rng.uniform(0.0, 1.0, (PIXELS, 3)).astype(np.float32)
+    t_in = rng.uniform(0.0, 1.0, PIXELS).astype(np.float32)
+    got, want = run_both_splat(
+        mean2d, conic, color, opacity, origin, rgb_in, t_in, mode
+    )
+    np.testing.assert_allclose(
+        np.asarray(got[0]), np.asarray(want[0]), rtol=2e-4, atol=2e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(got[1]), np.asarray(want[1]), rtol=2e-4, atol=2e-5
+    )

@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig. 10 (normalized energy vs GPU).
+use sltarch::util::bench::Bench;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("SLTARCH_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("fig10_energy");
+    for cfg in sltarch::experiments::eval_scenes(quick) {
+        let name = cfg.name.clone();
+        b.iter(&format!("fig10_evaluate({name})"), 1, || {
+            sltarch::experiments::fig10::evaluate(&cfg, 42)
+        });
+    }
+    b.report();
+    sltarch::experiments::fig10::run(quick);
+}

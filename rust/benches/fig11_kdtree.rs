@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig. 11 (LoD-search accelerator comparison).
+use sltarch::util::bench::Bench;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("SLTARCH_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("fig11_kdtree");
+    for cfg in sltarch::experiments::eval_scenes(quick) {
+        let name = cfg.name.clone();
+        b.iter(&format!("fig11_evaluate({name})"), 1, || {
+            sltarch::experiments::fig11::evaluate(&cfg, 42)
+        });
+    }
+    b.report();
+    sltarch::experiments::fig11::run(quick);
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig. 12 (subtree-merging ablation).
+use sltarch::util::bench::Bench;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("SLTARCH_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("fig12_merging");
+    for cfg in sltarch::experiments::eval_scenes(quick) {
+        let name = cfg.name.clone();
+        b.iter(&format!("fig12_evaluate({name})"), 1, || {
+            sltarch::experiments::fig12::evaluate(&cfg, 42)
+        });
+    }
+    b.report();
+    sltarch::experiments::fig12::run(quick);
+    sltarch::experiments::dram::run(quick);
+    sltarch::experiments::area::run(quick);
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate Fig. 2 (GPU execution breakdown across LoDs) and
+//! time the workload-extraction pipeline behind it.
+use sltarch::util::bench::Bench;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("SLTARCH_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("fig2_breakdown");
+    let cfg = sltarch::experiments::eval_scenes(quick).remove(1);
+    b.iter("fig2_evaluate(large)", 3, || {
+        sltarch::experiments::fig2::evaluate(&cfg, 42)
+    });
+    b.report();
+    sltarch::experiments::fig2::run(quick);
+}

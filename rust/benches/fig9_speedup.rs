@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig. 9 (speedup over the GPU baseline).
+use sltarch::util::bench::Bench;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("SLTARCH_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("fig9_speedup");
+    for cfg in sltarch::experiments::eval_scenes(quick) {
+        let name = cfg.name.clone();
+        b.iter(&format!("fig9_evaluate({name})"), 1, || {
+            sltarch::experiments::fig9::evaluate(&cfg, 42)
+        });
+    }
+    b.report();
+    sltarch::experiments::fig9::run(quick);
+}

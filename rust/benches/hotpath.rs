@@ -1,0 +1,57 @@
+//! Bench: the L3 hot paths in isolation — SLTree partitioning, the
+//! streaming traversal, tile binning, depth sort and the blend loop.
+//! This is the harness the §Perf optimization pass iterates against.
+use sltarch::config::{RenderConfig, SceneConfig};
+use sltarch::coordinator::renderer::{AlphaMode, CpuRenderer};
+use sltarch::gaussian::project;
+use sltarch::lod::{traverse_sltree, SlTree};
+use sltarch::splat::{bin_splats, sort_tile_by_depth};
+use sltarch::util::bench::Bench;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("SLTARCH_BENCH_QUICK").is_ok();
+    let cfg = if quick {
+        SceneConfig::large_scale().quick()
+    } else {
+        let mut c = SceneConfig::large_scale();
+        c.leaves = 300_000; // keep the full bench under a minute
+        c
+    };
+    let scene = cfg.build(42);
+    let rcfg = RenderConfig::default();
+    let mut b = Bench::new("hotpath");
+
+    b.iter("sltree_partition(tau_s=32)", 3, || {
+        SlTree::partition(&scene.tree, 32)
+    });
+    let slt = SlTree::partition(&scene.tree, 32);
+    let cam = scene.scenario_camera(3);
+    b.iter("traverse_sltree", 5, || {
+        traverse_sltree(&scene.tree, &slt, &cam, rcfg.lod_tau, 4)
+    });
+    b.iter("canonical_search", 5, || scene.tree.canonical_search(&cam, rcfg.lod_tau));
+
+    let cut = slt.traverse(&scene.tree, &cam, rcfg.lod_tau);
+    let queue = scene.gaussians.gather(&cut);
+    b.iter("project(cut)", 5, || project(&queue, &cam));
+    let splats = project(&queue, &cam);
+    b.iter("bin_splats", 5, || bin_splats(&splats, 256, 256));
+    let bins = bin_splats(&splats, 256, 256);
+    b.iter("sort_all_tiles", 5, || {
+        let mut total = 0usize;
+        for idx in 0..bins.tile_count() {
+            let mut order = bins.per_tile[idx].clone();
+            sort_tile_by_depth(&mut order, &splats);
+            total += order.len();
+        }
+        total
+    });
+    b.iter("cpu_render(group)", 2, || {
+        CpuRenderer::render(&queue, &cam, AlphaMode::Group, &rcfg)
+    });
+    b.iter("cpu_render(pixel)", 2, || {
+        CpuRenderer::render(&queue, &cam, AlphaMode::Pixel, &rcfg)
+    });
+    b.report();
+}

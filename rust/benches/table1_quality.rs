@@ -1,0 +1,14 @@
+//! Bench: regenerate Table I (rendering quality Org vs SLTARCH).
+use sltarch::util::bench::Bench;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("SLTARCH_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("table1_quality");
+    let cfg = sltarch::experiments::eval_scenes(true).remove(0);
+    b.iter("table1_evaluate(small,quick)", 1, || {
+        sltarch::experiments::table1::evaluate_scene(&cfg, 42)
+    });
+    b.report();
+    sltarch::experiments::table1::run(quick);
+}

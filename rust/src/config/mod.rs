@@ -1,0 +1,198 @@
+//! Configuration system: scene recipes, architecture parameters and
+//! render settings, with a small TOML-subset parser (`toml`/`serde` are
+//! not vendored in this offline image — see `parse.rs`).
+//!
+//! Presets mirror the paper's evaluation setup (Sec. V-A): two scenes
+//! (small-scale / large-scale), six scenarios each, subtree size 32,
+//! LTCore 2x2 LT units + 128 KB 4-way subtree cache, SPCore with 4
+//! projection/sorting units and 2x2 SP units.
+
+pub mod arch;
+mod parse;
+
+pub use arch::{
+    ArchConfig, DramConfig, GpuConfig, GsCoreConfig, LtCoreConfig, SpCoreConfig,
+};
+pub use parse::{ConfigDoc, ParseError};
+
+use crate::scene::{
+    build_lod_tree, scenario_cameras, GeneratorKind, Scene, SceneSpec,
+};
+
+/// Scene recipe: everything needed to deterministically build a scene.
+#[derive(Clone, Debug)]
+pub struct SceneConfig {
+    pub name: String,
+    pub kind: GeneratorKind,
+    pub leaves: usize,
+    pub extent: f32,
+    pub mean_fanout: f32,
+    pub max_fanout: usize,
+    pub width: u32,
+    pub height: u32,
+}
+
+impl SceneConfig {
+    /// The paper's "small-scale" analogue: an indoor scene.
+    pub fn small_scale() -> Self {
+        SceneConfig {
+            name: "small-scale".into(),
+            kind: GeneratorKind::Room,
+            leaves: 150_000,
+            extent: 15.0,
+            mean_fanout: 2.0,
+            max_fanout: 512,
+            width: 256,
+            height: 256,
+        }
+    }
+
+    /// The paper's "large-scale" analogue: a city block grid.
+    pub fn large_scale() -> Self {
+        SceneConfig {
+            name: "large-scale".into(),
+            kind: GeneratorKind::City,
+            leaves: 1_000_000,
+            extent: 200.0,
+            mean_fanout: 2.0,
+            max_fanout: 1024,
+            width: 256,
+            height: 256,
+        }
+    }
+
+    /// Terrain variant used by the extension studies.
+    pub fn terrain() -> Self {
+        SceneConfig {
+            name: "terrain".into(),
+            kind: GeneratorKind::Terrain,
+            leaves: 300_000,
+            extent: 90.0,
+            mean_fanout: 2.0,
+            max_fanout: 768,
+            width: 256,
+            height: 256,
+        }
+    }
+
+    /// A fast variant for unit/integration tests and `--quick` runs.
+    /// Shrinks the leaf budget ~20x and the world extent by 20^(1/3) so
+    /// the *density* (and therefore the LoD-cut geometry) matches the
+    /// full-size scene statistically.
+    pub fn quick(mut self) -> Self {
+        let shrink = (self.leaves as f32 / (self.leaves / 20).max(2_000) as f32)
+            .max(1.0);
+        self.leaves = (self.leaves / 20).max(2_000);
+        self.extent /= shrink.cbrt();
+        self
+    }
+
+    /// Deterministically build the scene (generator -> LoD tree -> cams).
+    pub fn build(&self, seed: u64) -> Scene {
+        let spec = SceneSpec { kind: self.kind, leaves: self.leaves, extent: self.extent };
+        let leaves = spec.generate(seed);
+        let (gaussians, tree, _stats) =
+            build_lod_tree(leaves, seed, self.mean_fanout, self.max_fanout);
+        let cameras = scenario_cameras(self.extent, self.width, self.height);
+        Scene { name: self.name.clone(), gaussians, tree, cameras }
+    }
+
+    /// Resolve a preset by name (CLI `--scene`).
+    pub fn preset(name: &str) -> Option<SceneConfig> {
+        match name {
+            "small" | "small-scale" | "room" => Some(Self::small_scale()),
+            "large" | "large-scale" | "city" => Some(Self::large_scale()),
+            "terrain" => Some(Self::terrain()),
+            _ => None,
+        }
+    }
+
+    /// Override fields from a parsed config document (`[scene]` section).
+    pub fn apply_doc(&mut self, doc: &ConfigDoc) {
+        if let Some(v) = doc.get_usize("scene", "leaves") {
+            self.leaves = v;
+        }
+        if let Some(v) = doc.get_f32("scene", "extent") {
+            self.extent = v;
+        }
+        if let Some(v) = doc.get_f32("scene", "mean_fanout") {
+            self.mean_fanout = v;
+        }
+        if let Some(v) = doc.get_usize("scene", "max_fanout") {
+            self.max_fanout = v;
+        }
+        if let Some(v) = doc.get_usize("scene", "width") {
+            self.width = v as u32;
+        }
+        if let Some(v) = doc.get_usize("scene", "height") {
+            self.height = v as u32;
+        }
+        if let Some(v) = doc.get_str("scene", "kind") {
+            self.kind = match v {
+                "city" => GeneratorKind::City,
+                "terrain" => GeneratorKind::Terrain,
+                _ => GeneratorKind::Room,
+            };
+        }
+    }
+}
+
+/// Render-time knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct RenderConfig {
+    /// Target LoD granularity in projected pixels (paper's tau).
+    pub lod_tau: f32,
+    /// SLTree subtree size limit (paper default: 32).
+    pub subtree_size: u32,
+    /// Tile side in pixels (16 matches the splat artifacts).
+    pub tile: u32,
+    /// Early-terminate a tile when max transmittance drops below this.
+    pub t_min: f32,
+}
+
+impl Default for RenderConfig {
+    fn default() -> Self {
+        RenderConfig { lod_tau: 32.0, subtree_size: 32, tile: 16, t_min: 1.0 / 255.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        assert!(SceneConfig::preset("small").is_some());
+        assert!(SceneConfig::preset("large-scale").is_some());
+        assert!(SceneConfig::preset("terrain").is_some());
+        assert!(SceneConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn quick_shrinks() {
+        let q = SceneConfig::large_scale().quick();
+        assert!(q.leaves < SceneConfig::large_scale().leaves);
+        assert!(q.leaves >= 2_000);
+    }
+
+    #[test]
+    fn build_quick_scene() {
+        let scene = SceneConfig::small_scale().quick().build(1);
+        assert_eq!(scene.cameras.len(), 6);
+        assert!(scene.tree.len() > scene.gaussians.len() / 2);
+        scene.tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn doc_overrides() {
+        let doc = ConfigDoc::parse(
+            "[scene]\nleaves = 123\nextent = 9.5\nkind = \"terrain\"\n",
+        )
+        .unwrap();
+        let mut cfg = SceneConfig::small_scale();
+        cfg.apply_doc(&doc);
+        assert_eq!(cfg.leaves, 123);
+        assert!((cfg.extent - 9.5).abs() < 1e-6);
+        assert_eq!(cfg.kind, GeneratorKind::Terrain);
+    }
+}

@@ -1,0 +1,187 @@
+//! A tiny TOML-subset parser (the real `toml` crate is not vendored).
+//!
+//! Supports exactly the subset the config files use:
+//! `[section]` headers, `key = value` pairs where value is an integer,
+//! float, `true`/`false`, or a double-quoted string, plus `#` comments
+//! and blank lines. Unknown syntax is a hard [`ParseError`] — configs
+//! should never be silently misread.
+
+use std::collections::BTreeMap;
+
+/// Parse failure with line information.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// One parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+/// A parsed config document: `(section, key) -> value`.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigDoc {
+    values: BTreeMap<(String, String), Value>,
+}
+
+impl ConfigDoc {
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = idx + 1;
+            let t = raw.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            if let Some(rest) = t.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(ParseError {
+                    line,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = t.split_once('=').ok_or(ParseError {
+                line,
+                msg: format!("expected `key = value`, got `{t}`"),
+            })?;
+            let key = key.trim().to_string();
+            // Strip trailing comments outside strings.
+            let val = val.trim();
+            let val = if val.starts_with('"') {
+                val
+            } else {
+                val.split('#').next().unwrap().trim()
+            };
+            let parsed = Self::parse_value(val).map_err(|msg| ParseError { line, msg })?;
+            doc.values.insert((section.clone(), key), parsed);
+        }
+        Ok(doc)
+    }
+
+    fn parse_value(v: &str) -> Result<Value, String> {
+        if v == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if v == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Some(s) = v.strip_prefix('"') {
+            let inner = s.strip_suffix('"').ok_or("unterminated string")?;
+            return Ok(Value::Str(inner.to_string()));
+        }
+        if let Ok(i) = v.replace('_', "").parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = v.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        Err(format!("cannot parse value `{v}`"))
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        match self.get(section, key)? {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn get_f32(&self, section: &str, key: &str) -> Option<f32> {
+        match self.get(section, key)? {
+            Value::Float(f) => Some(*f as f32),
+            Value::Int(i) => Some(*i as f32),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key)? {
+            Value::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top comment
+[scene]
+leaves = 10_000
+extent = 25.5
+kind = "city"
+
+[ltcore]
+lt_units = 4       # inline comment
+enabled = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = ConfigDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get_usize("scene", "leaves"), Some(10_000));
+        assert_eq!(doc.get_f32("scene", "extent"), Some(25.5));
+        assert_eq!(doc.get_str("scene", "kind"), Some("city"));
+        assert_eq!(doc.get_usize("ltcore", "lt_units"), Some(4));
+        assert_eq!(doc.get_bool("ltcore", "enabled"), Some(true));
+        assert_eq!(doc.len(), 5);
+    }
+
+    #[test]
+    fn int_coerces_to_f32_but_not_string() {
+        let doc = ConfigDoc::parse("[a]\nx = 3\n").unwrap();
+        assert_eq!(doc.get_f32("a", "x"), Some(3.0));
+        assert_eq!(doc.get_str("a", "x"), None);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = ConfigDoc::parse("[ok]\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = ConfigDoc::parse("[unterminated\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = ConfigDoc::parse("[a]\nx = \"oops\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let doc = ConfigDoc::parse("[a]\nx = 1\n").unwrap();
+        assert!(doc.get("b", "x").is_none());
+        assert!(doc.get_usize("a", "y").is_none());
+    }
+}

@@ -1,0 +1,17 @@
+//! The Layer-3 frame coordinator: LoD search -> rendering queue -> tile
+//! binning -> depth sort -> chunked splatting -> image, plus the
+//! workload extraction the simulators replay.
+//!
+//! * [`workload`] — runs the real pipeline once per (scene, camera,
+//!   tau) and distils the traces every hardware model consumes.
+//! * [`renderer`] — produces actual images: a pure-CPU path (mirrors
+//!   the kernels) and a PJRT path (executes the AOT artifacts).
+//! * [`pipeline`] — the frame loop tying it together, with per-frame
+//!   reports (`sltarch render` / the examples drive this).
+
+pub mod pipeline;
+pub mod renderer;
+pub mod workload;
+
+pub use pipeline::{FramePipeline, FrameReport};
+pub use renderer::{AlphaMode, CpuRenderer};

@@ -1,0 +1,140 @@
+//! The frame pipeline: owns the scene, the SLTree, the architecture
+//! config and (optionally) the PJRT engine, and turns cameras into
+//! images + simulation reports.
+
+use super::renderer::{AlphaMode, CpuRenderer, PjrtRenderer};
+use super::workload::{frame_workload, lod_workload};
+use crate::config::{ArchConfig, RenderConfig};
+use crate::lod::SlTree;
+use crate::math::Camera;
+use crate::metrics::Image;
+use crate::runtime::PjrtEngine;
+use crate::scene::Scene;
+use crate::sim::{simulate_variant, HwVariant};
+use anyhow::Result;
+
+/// Per-frame output.
+#[derive(Debug, Default)]
+pub struct FrameReport {
+    /// Rendering-queue length (cut size).
+    pub cut_len: usize,
+    /// Nodes visited during LoD search.
+    pub lod_visited: u64,
+    /// Simulated per-variant frame reports (Fig. 9/10 rows).
+    pub sims: Vec<crate::sim::VariantResult>,
+    /// Wall-clock seconds the rust pipeline itself spent on the frame.
+    pub wall_seconds: f64,
+}
+
+impl FrameReport {
+    /// Simulated seconds for a named variant, if simulated.
+    pub fn sim_seconds(&self, v: HwVariant) -> Option<f64> {
+        self.sims
+            .iter()
+            .find(|r| r.variant == v)
+            .map(|r| r.report.total_seconds())
+    }
+}
+
+/// The long-lived pipeline state.
+pub struct FramePipeline {
+    pub scene: Scene,
+    pub sltree: SlTree,
+    pub rcfg: RenderConfig,
+    pub arch: ArchConfig,
+    pub engine: Option<PjrtEngine>,
+}
+
+impl FramePipeline {
+    /// Build from a scene (partitioning the SLTree offline, as the
+    /// paper prescribes — zero render-time cost).
+    pub fn new(scene: Scene, rcfg: RenderConfig, arch: ArchConfig) -> Self {
+        let sltree = SlTree::partition(&scene.tree, rcfg.subtree_size);
+        FramePipeline { scene, sltree, rcfg, arch, engine: None }
+    }
+
+    /// Attach a PJRT engine (renders then execute the AOT artifacts).
+    pub fn with_engine(mut self, engine: PjrtEngine) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// LoD search only: the cut for a camera.
+    pub fn search(&self, cam: &Camera) -> Vec<u32> {
+        self.sltree.traverse(&self.scene.tree, cam, self.rcfg.lod_tau)
+    }
+
+    /// Render one frame to an image. Uses the PJRT artifacts when an
+    /// engine is attached, the CPU mirror otherwise.
+    pub fn render(&self, cam: &Camera, mode: AlphaMode) -> Result<Image> {
+        let cut = self.search(cam);
+        let queue = self.scene.gaussians.gather(&cut);
+        match &self.engine {
+            Some(engine) => {
+                PjrtRenderer::render(engine, &queue, cam, mode, &self.rcfg)
+            }
+            None => Ok(CpuRenderer::render(&queue, cam, mode, &self.rcfg)),
+        }
+    }
+
+    /// Run the workload extraction + all five Fig. 9 variants for one
+    /// camera.
+    pub fn simulate(&self, cam: &Camera, variants: &[HwVariant]) -> FrameReport {
+        let t0 = std::time::Instant::now();
+        let (lod_w, splat_w) = frame_workload(&self.scene, &self.sltree, cam, &self.rcfg);
+        let sims = variants
+            .iter()
+            .map(|&v| simulate_variant(v, &lod_w, &splat_w, &self.arch))
+            .collect();
+        FrameReport {
+            cut_len: lod_w.cut_len as usize,
+            lod_visited: lod_w.trace.visited,
+            sims,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// LoD-stage-only workload (Fig. 11 / Fig. 12 experiments).
+    pub fn lod_only(&self, cam: &Camera) -> (Vec<u32>, crate::sim::workload::LodWorkload) {
+        lod_workload(&self.scene, &self.sltree, cam, &self.rcfg, 64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SceneConfig;
+
+    fn pipeline() -> FramePipeline {
+        FramePipeline::new(
+            SceneConfig::small_scale().quick().build(9),
+            RenderConfig::default(),
+            ArchConfig::default(),
+        )
+    }
+
+    #[test]
+    fn render_and_simulate_roundtrip() {
+        let p = pipeline();
+        let cam = p.scene.scenario_camera(0);
+        let img = p.render(&cam, AlphaMode::Group).unwrap();
+        assert_eq!(img.dims(), (256, 256));
+        let report = p.simulate(&cam, &HwVariant::fig9());
+        assert_eq!(report.sims.len(), 5);
+        assert!(report.cut_len > 0);
+        let gpu = report.sim_seconds(HwVariant::Gpu).unwrap();
+        let slt = report.sim_seconds(HwVariant::SlTarch).unwrap();
+        assert!(slt < gpu, "SLTARCH {slt} !< GPU {gpu}");
+    }
+
+    #[test]
+    fn search_respects_tau() {
+        let mut p = pipeline();
+        let cam = p.scene.scenario_camera(2);
+        p.rcfg.lod_tau = 2.0;
+        let fine = p.search(&cam).len();
+        p.rcfg.lod_tau = 32.0;
+        let coarse = p.search(&cam).len();
+        assert!(coarse < fine);
+    }
+}

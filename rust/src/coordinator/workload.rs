@@ -1,0 +1,141 @@
+//! Frame-workload extraction: run the real pipeline once and distil the
+//! traces the hardware models replay (DESIGN.md §2 — all Fig. 9/10/11/12
+//! variants are compared on identical, actually-executed work).
+
+use crate::config::RenderConfig;
+use crate::gaussian::project;
+use crate::lod::{naive_static_workloads, traverse_sltree, SlTree};
+use crate::math::Camera;
+use crate::scene::Scene;
+use crate::sim::workload::{LodWorkload, SplatWorkload};
+use crate::splat::{bin_splats, blend_tile, sort_tile_by_depth, BlendMode, BlendStats};
+use crate::splat::blend::PIXELS;
+
+/// Build the LoD-search workload for one frame.
+pub fn lod_workload(
+    scene: &Scene,
+    slt: &SlTree,
+    cam: &Camera,
+    rcfg: &RenderConfig,
+    gpu_threads: usize,
+) -> (Vec<u32>, LodWorkload) {
+    let (cut, trace) =
+        traverse_sltree(&scene.tree, slt, cam, rcfg.lod_tau, 4);
+    let (_, canon_trace) = scene.tree.canonical_search(cam, rcfg.lod_tau);
+    let naive = naive_static_workloads(&scene.tree, cam, rcfg.lod_tau, gpu_threads);
+    let w = LodWorkload {
+        total_nodes: scene.tree.len() as u64,
+        canonical_visited: canon_trace.visited,
+        cut_len: cut.len() as u64,
+        trace,
+        naive_thread_loads: naive,
+    };
+    (cut, w)
+}
+
+/// Build the splatting workload for one frame given the cut.
+pub fn splat_workload(
+    scene: &Scene,
+    cut: &[u32],
+    cam: &Camera,
+    rcfg: &RenderConfig,
+) -> SplatWorkload {
+    let queue = scene.gaussians.gather(cut);
+    let splats = project(&queue, cam);
+    let bins = bin_splats(&splats, cam.intr.width, cam.intr.height);
+
+    let mut pixel = BlendStats::default();
+    let mut group = BlendStats::default();
+    let mut tile_lens = Vec::with_capacity(bins.tile_count());
+    let mut rgb = [[0.0f32; 3]; PIXELS];
+    let mut t = [0.0f32; PIXELS];
+
+    for idx in 0..bins.tile_count() {
+        let mut order = bins.per_tile[idx].clone();
+        tile_lens.push(order.len() as u64);
+        if order.is_empty() {
+            continue;
+        }
+        sort_tile_by_depth(&mut order, &splats);
+        let origin = bins.tile_origin(idx);
+        // Per-pixel pass.
+        rgb.iter_mut().for_each(|p| *p = [0.0; 3]);
+        t.iter_mut().for_each(|v| *v = 1.0);
+        let sp = blend_tile(
+            &order, &splats, origin, BlendMode::PerPixel, &mut rgb, &mut t,
+            rcfg.t_min,
+        );
+        pixel.merge(&sp);
+        // Group pass.
+        rgb.iter_mut().for_each(|p| *p = [0.0; 3]);
+        t.iter_mut().for_each(|v| *v = 1.0);
+        let sg = blend_tile(
+            &order, &splats, origin, BlendMode::PixelGroup, &mut rgb, &mut t,
+            rcfg.t_min,
+        );
+        group.merge(&sg);
+    }
+
+    SplatWorkload {
+        queue_len: cut.len() as u64,
+        pairs: bins.pairs,
+        tile_lens,
+        pixel,
+        group,
+        image_bytes: cam.intr.width as u64 * cam.intr.height as u64 * 12,
+    }
+}
+
+/// Full frame workload (LoD + splat) in one call.
+pub fn frame_workload(
+    scene: &Scene,
+    slt: &SlTree,
+    cam: &Camera,
+    rcfg: &RenderConfig,
+) -> (LodWorkload, SplatWorkload) {
+    let (cut, lod) = lod_workload(scene, slt, cam, rcfg, 64);
+    let splat = splat_workload(scene, &cut, cam, rcfg);
+    (lod, splat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SceneConfig;
+
+    #[test]
+    fn workload_is_internally_consistent() {
+        let scene = SceneConfig::small_scale().quick().build(5);
+        let slt = SlTree::partition(&scene.tree, 32);
+        let rcfg = RenderConfig::default();
+        let cam = scene.scenario_camera(1);
+        let (lod, splat) = frame_workload(&scene, &slt, &cam, &rcfg);
+        assert_eq!(lod.cut_len, splat.queue_len);
+        assert_eq!(lod.trace.selected, lod.cut_len);
+        assert!(lod.canonical_visited >= lod.trace.visited);
+        assert_eq!(
+            splat.tile_lens.iter().sum::<u64>(),
+            splat.pairs,
+            "tile lists must account for every pair"
+        );
+        // Group dataflow does ~4x fewer checks than per-pixel evals on
+        // the same frame.
+        assert!(splat.group.group_checks * 3 < splat.pixel.alpha_evals);
+    }
+
+    #[test]
+    fn group_utilization_beats_pixel() {
+        let scene = SceneConfig::small_scale().quick().build(6);
+        let slt = SlTree::partition(&scene.tree, 32);
+        let rcfg = RenderConfig::default();
+        let cam = scene.scenario_camera(0);
+        let (_, splat) = frame_workload(&scene, &slt, &cam, &rcfg);
+        assert!(
+            splat.group.divergence.utilization()
+                >= splat.pixel.divergence.utilization(),
+            "group {} !>= pixel {}",
+            splat.group.divergence.utilization(),
+            splat.pixel.divergence.utilization()
+        );
+    }
+}

@@ -1,0 +1,57 @@
+//! §V-A "Area Overhead" — the published 16 nm component areas plus the
+//! derived comparisons the paper quotes (negligible vs a mobile SoC,
+//! similar to GSCore).
+
+use crate::config::arch::area;
+
+pub struct AreaRow {
+    pub component: &'static str,
+    pub mm2: f64,
+}
+
+pub fn table() -> Vec<AreaRow> {
+    vec![
+        AreaRow { component: "LT unit array", mm2: area::LT_UNIT_ARRAY },
+        AreaRow { component: "Subtree cache", mm2: area::SUBTREE_CACHE },
+        AreaRow { component: "LTCORE total", mm2: area::LTCORE },
+        AreaRow { component: "SPCORE total", mm2: area::SPCORE },
+        AreaRow { component: "SLTARCH total", mm2: area::SLTARCH_TOTAL },
+        AreaRow { component: "GSCore (scaled)", mm2: area::GSCORE_TOTAL },
+    ]
+}
+
+pub fn run(_quick: bool) {
+    println!("\n=== §V-A: area overhead (published 16 nm numbers) ===\n");
+    println!("{:<18} {:>9}", "component", "mm^2");
+    for row in table() {
+        println!("{:<18} {:>9.2}", row.component, row.mm2);
+    }
+    println!(
+        "\nSLTARCH vs mobile SoC (> {:.0} mm^2): {:.1}% — negligible",
+        area::MOBILE_SOC,
+        area::SLTARCH_TOTAL / area::MOBILE_SOC * 100.0
+    );
+    println!(
+        "SLTARCH vs GSCore: {:.2} vs {:.2} mm^2 ({:+.1}%)",
+        area::SLTARCH_TOTAL,
+        area::GSCORE_TOTAL,
+        (area::SLTARCH_TOTAL / area::GSCORE_TOTAL - 1.0) * 100.0
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn component_areas_sum_consistently() {
+        // LTCORE + SPCORE must equal the published total.
+        assert!((area::LTCORE + area::SPCORE - area::SLTARCH_TOTAL).abs() < 1e-9);
+        // LT unit array + subtree cache fit inside LTCORE.
+        assert!(area::LT_UNIT_ARRAY + area::SUBTREE_CACHE < area::LTCORE);
+        // "Similar area" claim: within 10% of GSCore.
+        assert!((area::SLTARCH_TOTAL / area::GSCORE_TOTAL - 1.0).abs() < 0.10);
+        // "Negligible" claim: < 2% of a mobile SoC.
+        assert!(area::SLTARCH_TOTAL / area::MOBILE_SOC < 0.02);
+    }
+}

@@ -1,0 +1,58 @@
+//! §V-C "DRAM Traffic" — LoD-search DRAM traffic: exhaustive full-tree
+//! streaming vs SLTree's frustum-and-cut-bounded traversal.
+//!
+//! Paper claim: −76.5% (small-scale) and −69.6% (large-scale) on
+//! average across scenarios.
+
+use super::{build_pipeline, eval_scenes};
+use crate::sim::workload::NODE_BYTES;
+
+pub struct DramResult {
+    pub scene: String,
+    pub reduction_pct: f64,
+}
+
+pub fn evaluate(cfg: &crate::config::SceneConfig, seed: u64) -> DramResult {
+    let p = build_pipeline(cfg, seed);
+    let exhaustive = p.scene.tree.len() as u64 * NODE_BYTES;
+    let mut reductions = Vec::new();
+    for i in 0..p.scene.cameras.len() {
+        let cam = p.scene.scenario_camera(i);
+        let (_, w) = p.lod_only(&cam);
+        let ours = w.trace.bytes_streamed;
+        reductions.push(1.0 - ours as f64 / exhaustive as f64);
+    }
+    DramResult {
+        scene: cfg.name.clone(),
+        reduction_pct: reductions.iter().sum::<f64>() / reductions.len() as f64 * 100.0,
+    }
+}
+
+pub fn run(quick: bool) {
+    println!("\n=== §V-C: LoD-search DRAM traffic reduction ===\n");
+    println!("{:<14} {:>22}", "scene", "traffic reduction");
+    for cfg in eval_scenes(quick) {
+        let r = evaluate(&cfg, 42);
+        println!("{:<14} {:>21.1}%", r.scene, r.reduction_pct);
+    }
+    println!("\npaper: 76.5% (small) / 69.6% (large)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sltree_reduces_dram_traffic_substantially() {
+        for cfg in eval_scenes(true) {
+            let r = evaluate(&cfg, 42);
+            assert!(
+                r.reduction_pct > 3.0,
+                "{}: reduction {}% too small",
+                r.scene,
+                r.reduction_pct
+            );
+            assert!(r.reduction_pct < 100.0);
+        }
+    }
+}

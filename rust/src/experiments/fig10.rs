@@ -1,0 +1,113 @@
+//! Fig. 10 — normalized energy of the hardware variants vs the GPU
+//! baseline.
+//!
+//! Paper claims: SLTARCH saves ~98% across both datasets; small-scale
+//! GPU+GS saves 74% / GPU+LT 26%; large-scale GPU+GS 44% / GPU+LT 57%
+//! (the flip tracks which stage dominates).
+
+use super::{build_pipeline, eval_scenes, geomean};
+use crate::sim::HwVariant;
+
+/// Normalized energy (variant / GPU) per scene, geomean over scenarios.
+pub struct Fig10Result {
+    pub scene: String,
+    pub variants: Vec<HwVariant>,
+    pub normalized: Vec<f64>,
+}
+
+pub fn evaluate(cfg: &crate::config::SceneConfig, seed: u64) -> Fig10Result {
+    let p = build_pipeline(cfg, seed);
+    let variants = HwVariant::fig9().to_vec();
+    let mut ratios = vec![Vec::new(); variants.len()];
+    for i in 0..p.scene.cameras.len() {
+        let cam = p.scene.scenario_camera(i);
+        let r = p.simulate(&cam, &variants);
+        let gpu = r
+            .sims
+            .iter()
+            .find(|s| s.variant == HwVariant::Gpu)
+            .unwrap()
+            .report
+            .total_energy_mj();
+        for (vi, v) in variants.iter().enumerate() {
+            let e = r
+                .sims
+                .iter()
+                .find(|s| s.variant == *v)
+                .unwrap()
+                .report
+                .total_energy_mj();
+            ratios[vi].push(e / gpu);
+        }
+    }
+    Fig10Result {
+        scene: cfg.name.clone(),
+        variants,
+        normalized: ratios.iter().map(|r| geomean(r)).collect(),
+    }
+}
+
+pub fn run(quick: bool) {
+    println!("\n=== Fig. 10: normalized energy vs GPU ===\n");
+    println!(
+        "{:<14} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "scene", "GPU", "GPU+LT", "GPU+GS", "LT+GS", "SLTARCH"
+    );
+    for cfg in eval_scenes(quick) {
+        let r = evaluate(&cfg, 42);
+        print!("{:<14}", r.scene);
+        for n in &r.normalized {
+            print!(" {:>9.3}", n);
+        }
+        println!();
+        let slt = r.normalized[r
+            .variants
+            .iter()
+            .position(|&v| v == HwVariant::SlTarch)
+            .unwrap()];
+        println!("    -> SLTARCH energy savings: {:.1}%", (1.0 - slt) * 100.0);
+    }
+    println!(
+        "\npaper: SLTARCH saves ~98%; small GPU+GS 74%/GPU+LT 26%; \
+         large GPU+GS 44%/GPU+LT 57%"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sltarch_saves_the_most_energy() {
+        let cfg = eval_scenes(true).remove(1);
+        let r = evaluate(&cfg, 42);
+        let get = |v: HwVariant| {
+            r.normalized[r.variants.iter().position(|&x| x == v).unwrap()]
+        };
+        let slt = get(HwVariant::SlTarch);
+        assert!(slt < get(HwVariant::GpuLt));
+        assert!(slt < get(HwVariant::GpuGs));
+        assert!(slt < 0.1, "SLTARCH must save >90%: normalized {slt}");
+    }
+
+    #[test]
+    fn partial_savings_flip_with_scale() {
+        // Small scale: splatting dominates -> GPU+GS saves more than
+        // GPU+LT. Large scale: LoD dominates -> GPU+LT saves more.
+        let scenes = eval_scenes(true);
+        let small = evaluate(&scenes[0], 42);
+        let large = evaluate(&scenes[1], 42);
+        let get = |r: &Fig10Result, v: HwVariant| {
+            r.normalized[r.variants.iter().position(|&x| x == v).unwrap()]
+        };
+        let small_gap =
+            get(&small, HwVariant::GpuLt) - get(&small, HwVariant::GpuGs);
+        let large_gap =
+            get(&large, HwVariant::GpuLt) - get(&large, HwVariant::GpuGs);
+        // The relative advantage of GPU+LT must improve with scale.
+        assert!(
+            large_gap < small_gap,
+            "LoD-side savings must grow with scale: {small_gap} -> {large_gap}"
+        );
+    }
+}

@@ -1,0 +1,89 @@
+//! Fig. 11 — LoD-search-stage comparison against kd-tree traversal
+//! accelerators (QuickNN, Crescent) at equal PE count, with the GPU
+//! running splatting in all variants.
+//!
+//! Paper claim: GPU+LT wins because (1) kd-trees are ill-suited to LoD
+//! search (irregular access, binary expansion) and (2) their stacks and
+//! offline schedules are pure overhead here.
+
+use super::{build_pipeline, eval_scenes, geomean};
+use crate::sim::HwVariant;
+
+pub struct Fig11Result {
+    pub scene: String,
+    pub variants: Vec<HwVariant>,
+    /// LoD-stage speedup over the GPU's LoD stage (geomean).
+    pub lod_speedups: Vec<f64>,
+}
+
+pub fn evaluate(cfg: &crate::config::SceneConfig, seed: u64) -> Fig11Result {
+    let p = build_pipeline(cfg, seed);
+    let variants = HwVariant::fig11().to_vec();
+    let mut ratios = vec![Vec::new(); variants.len()];
+    for i in 0..p.scene.cameras.len() {
+        let cam = p.scene.scenario_camera(i);
+        let r = p.simulate(&cam, &variants);
+        let gpu_lod = r
+            .sims
+            .iter()
+            .find(|s| s.variant == HwVariant::Gpu)
+            .unwrap()
+            .report
+            .lod
+            .seconds;
+        for (vi, v) in variants.iter().enumerate() {
+            let lod = r
+                .sims
+                .iter()
+                .find(|s| s.variant == *v)
+                .unwrap()
+                .report
+                .lod
+                .seconds;
+            ratios[vi].push(gpu_lod / lod);
+        }
+    }
+    Fig11Result {
+        scene: cfg.name.clone(),
+        variants,
+        lod_speedups: ratios.iter().map(|r| geomean(r)).collect(),
+    }
+}
+
+pub fn run(quick: bool) {
+    println!("\n=== Fig. 11: LoD-search accelerators (same #PEs) ===\n");
+    println!(
+        "{:<14} {:>8} {:>12} {:>13} {:>8}",
+        "scene", "GPU", "GPU+QuickNN", "GPU+Crescent", "GPU+LT"
+    );
+    for cfg in eval_scenes(quick) {
+        let r = evaluate(&cfg, 42);
+        print!("{:<14}", r.scene);
+        for s in &r.lod_speedups {
+            print!(" {:>8.2}x", s);
+        }
+        println!();
+    }
+    println!("\npaper: GPU+LT best; kd-tree designs pay stack + static-schedule overheads");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lt_beats_kdtree_accelerators_on_lod_search() {
+        let cfg = eval_scenes(true).remove(1);
+        let r = evaluate(&cfg, 42);
+        let get = |v: HwVariant| {
+            r.lod_speedups[r.variants.iter().position(|&x| x == v).unwrap()]
+        };
+        let lt = get(HwVariant::GpuLt);
+        let qn = get(HwVariant::GpuQuickNn);
+        let cr = get(HwVariant::GpuCrescent);
+        assert!(lt > qn, "LT {lt} !> QuickNN {qn}");
+        assert!(lt > cr, "LT {lt} !> Crescent {cr}");
+        // Crescent's streaming recovery should beat QuickNN.
+        assert!(cr > qn, "Crescent {cr} !> QuickNN {qn}");
+    }
+}

@@ -1,0 +1,103 @@
+//! Fig. 9 — speedup of the hardware variants over the GPU baseline on
+//! both scenes, per scenario.
+//!
+//! Paper claims: small-scale SLTARCH ~2.2x; large-scale SLTARCH ~3.9x
+//! (max 6.1x); GPU+GS ~1.2x and GPU+LT ~2.2x on large-scale.
+
+use super::{build_pipeline, eval_scenes, geomean};
+use crate::sim::HwVariant;
+
+/// Per-scene speedup table: `speedups[variant][scenario]`.
+pub struct Fig9Result {
+    pub scene: String,
+    pub variants: Vec<HwVariant>,
+    pub speedups: Vec<Vec<f64>>,
+}
+
+pub fn evaluate(cfg: &crate::config::SceneConfig, seed: u64) -> Fig9Result {
+    let p = build_pipeline(cfg, seed);
+    let variants = HwVariant::fig9().to_vec();
+    let mut speedups = vec![Vec::new(); variants.len()];
+    for i in 0..p.scene.cameras.len() {
+        let cam = p.scene.scenario_camera(i);
+        let r = p.simulate(&cam, &variants);
+        let gpu = r.sim_seconds(HwVariant::Gpu).unwrap();
+        for (vi, v) in variants.iter().enumerate() {
+            speedups[vi].push(gpu / r.sim_seconds(*v).unwrap());
+        }
+    }
+    Fig9Result { scene: cfg.name.clone(), variants, speedups }
+}
+
+pub fn run(quick: bool) {
+    println!("\n=== Fig. 9: speedup over GPU baseline ===\n");
+    for cfg in eval_scenes(quick) {
+        let r = evaluate(&cfg, 42);
+        println!("--- {} ---", r.scene);
+        print!("{:<12}", "variant");
+        for i in 0..r.speedups[0].len() {
+            print!(" {:>7}", format!("s{i}"));
+        }
+        println!(" {:>8} {:>7}", "geomean", "max");
+        for (vi, v) in r.variants.iter().enumerate() {
+            print!("{:<12}", v.name());
+            for s in &r.speedups[vi] {
+                print!(" {s:>7.2}");
+            }
+            let max = r.speedups[vi].iter().cloned().fold(0.0, f64::max);
+            println!(" {:>8.2} {:>7.2}", geomean(&r.speedups[vi]), max);
+        }
+        println!();
+    }
+    println!(
+        "paper: small SLTARCH 2.2x | large SLTARCH 3.9x (max 6.1x), \
+         GPU+GS 1.2x, GPU+LT 2.2x"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_shape_holds_on_large_scene() {
+        let cfg = eval_scenes(true).remove(1);
+        let r = evaluate(&cfg, 42);
+        let g = |v: HwVariant| {
+            let vi = r.variants.iter().position(|&x| x == v).unwrap();
+            geomean(&r.speedups[vi])
+        };
+        let sltarch = g(HwVariant::SlTarch);
+        let gpu_lt = g(HwVariant::GpuLt);
+        let gpu_gs = g(HwVariant::GpuGs);
+        let lt_gs = g(HwVariant::LtGs);
+        // Who-wins ordering from the paper. Note: quick scenes are
+        // splat-dominated (the LoD stage only dominates at full scale),
+        // so GPU+LT is only required not to regress here; the full-size
+        // run recorded in EXPERIMENTS.md shows the paper's 2.2x.
+        assert!(sltarch > gpu_lt, "SLTARCH {sltarch} !> GPU+LT {gpu_lt}");
+        assert!(sltarch > gpu_gs, "SLTARCH {sltarch} !> GPU+GS {gpu_gs}");
+        assert!(sltarch >= lt_gs * 0.95, "SLTARCH {sltarch} !>= LT+GS {lt_gs}");
+        assert!(gpu_lt > 0.9, "GPU+LT regressed: {gpu_lt}");
+        assert!(gpu_gs > 1.0, "GPU+GS must beat GPU: {gpu_gs}");
+        // Rough factor band (paper: 3.9x; accept 1.5-12x on the
+        // synthetic testbed).
+        assert!(sltarch > 1.5 && sltarch < 12.0, "SLTARCH {sltarch}");
+    }
+
+    #[test]
+    fn large_scene_gains_exceed_small_scene_gains() {
+        let scenes = eval_scenes(true);
+        let small = evaluate(&scenes[0], 42);
+        let large = evaluate(&scenes[1], 42);
+        let idx = small
+            .variants
+            .iter()
+            .position(|&v| v == HwVariant::SlTarch)
+            .unwrap();
+        let s = geomean(&small.speedups[idx]);
+        let l = geomean(&large.speedups[idx]);
+        // Paper: 2.2x small vs 3.9x large — scaling must favour large.
+        assert!(l > s, "large {l} !> small {s}");
+    }
+}

@@ -1,0 +1,98 @@
+//! One module per paper table/figure (DESIGN.md §5 index). Every
+//! experiment prints the same rows the paper reports, driven by the
+//! real pipeline + the trace-driven hardware models.
+//!
+//! `quick` mode shrinks the scenes ~20x so the full suite runs in
+//! seconds (used by tests); the default sizes are the repro
+//! configuration recorded in EXPERIMENTS.md.
+
+pub mod area;
+pub mod dram;
+pub mod fig11;
+pub mod fig12;
+pub mod fig2;
+pub mod fig3;
+pub mod fig9;
+pub mod fig10;
+pub mod table1;
+pub mod tau_s;
+
+use crate::config::{ArchConfig, RenderConfig, SceneConfig};
+use crate::coordinator::FramePipeline;
+
+/// All experiment names, in paper order.
+pub const ALL: [&str; 10] = [
+    "fig2", "fig3", "table1", "fig9", "fig10", "dram", "fig11", "fig12", "area",
+    "taus",
+];
+
+/// Run one experiment by name; returns false for an unknown name.
+pub fn run_by_name(name: &str, quick: bool) -> bool {
+    match name {
+        "fig2" => fig2::run(quick),
+        "fig3" => fig3::run(quick),
+        "table1" => table1::run(quick),
+        "fig9" => fig9::run(quick),
+        "fig10" => fig10::run(quick),
+        "dram" => dram::run(quick),
+        "fig11" => fig11::run(quick),
+        "fig12" => fig12::run(quick),
+        "area" => area::run(quick),
+        "taus" => tau_s::run(quick),
+        "all" => {
+            for n in ALL {
+                run_by_name(n, quick);
+            }
+        }
+        _ => return false,
+    }
+    true
+}
+
+/// The two evaluation scenes (small-scale / large-scale), sized per
+/// `quick`.
+pub fn eval_scenes(quick: bool) -> Vec<SceneConfig> {
+    let mut small = SceneConfig::small_scale();
+    let mut large = SceneConfig::large_scale();
+    if quick {
+        small = small.quick();
+        large = large.quick();
+    }
+    vec![small, large]
+}
+
+/// Standard pipeline construction for experiments.
+pub fn build_pipeline(cfg: &SceneConfig, seed: u64) -> FramePipeline {
+    FramePipeline::new(cfg.build(seed), RenderConfig::default(), ArchConfig::default())
+}
+
+/// Geometric mean (speedup aggregation, as the paper reports).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn unknown_experiment_is_rejected() {
+        assert!(!run_by_name("not-a-figure", true));
+    }
+
+    #[test]
+    fn eval_scenes_are_small_and_large() {
+        let scenes = eval_scenes(true);
+        assert_eq!(scenes.len(), 2);
+        assert!(scenes[0].leaves < scenes[1].leaves);
+    }
+}

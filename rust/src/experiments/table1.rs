@@ -1,0 +1,85 @@
+//! Table I — rendering quality: the canonical algorithm ("Org.") vs
+//! SLTarch's group-alpha approximation, on PSNR / SSIM / LPIPS(-proxy).
+//!
+//! Ground truth is the canonical per-pixel render of the *finest*
+//! in-frustum cut (the dataset GT substitution; DESIGN.md §2). Paper
+//! claim: SLTARCH matches Org. within noise (ΔPSNR ~= -0.01 dB).
+
+use super::{build_pipeline, eval_scenes};
+use crate::coordinator::renderer::{AlphaMode, CpuRenderer};
+use crate::metrics::{lpips_proxy, psnr, ssim, Image};
+
+/// One scene's averaged metrics.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct QualityRow {
+    pub psnr_org: f64,
+    pub psnr_slt: f64,
+    pub ssim_org: f64,
+    pub ssim_slt: f64,
+    pub lpips_org: f64,
+    pub lpips_slt: f64,
+}
+
+pub fn evaluate_scene(cfg: &crate::config::SceneConfig, seed: u64) -> QualityRow {
+    let p = build_pipeline(cfg, seed);
+    let mut row = QualityRow::default();
+    let n = p.scene.cameras.len() as f64;
+    for i in 0..p.scene.cameras.len() {
+        let cam = p.scene.scenario_camera(i);
+        // GT: finest cut, canonical dataflow.
+        let finest = p.sltree.traverse(&p.scene.tree, &cam, 1.0);
+        let gt_queue = p.scene.gaussians.gather(&finest);
+        let gt: Image = CpuRenderer::render(&gt_queue, &cam, AlphaMode::Pixel, &p.rcfg);
+        // Org / SLTARCH: default-tau cut, per-pixel vs group alpha.
+        let cut = p.search(&cam);
+        let queue = p.scene.gaussians.gather(&cut);
+        let org = CpuRenderer::render(&queue, &cam, AlphaMode::Pixel, &p.rcfg);
+        let slt = CpuRenderer::render(&queue, &cam, AlphaMode::Group, &p.rcfg);
+        row.psnr_org += psnr(&gt, &org) / n;
+        row.psnr_slt += psnr(&gt, &slt) / n;
+        row.ssim_org += ssim(&gt, &org) / n;
+        row.ssim_slt += ssim(&gt, &slt) / n;
+        row.lpips_org += lpips_proxy(&gt, &org) / n;
+        row.lpips_slt += lpips_proxy(&gt, &slt) / n;
+    }
+    row
+}
+
+pub fn run(quick: bool) {
+    println!("\n=== Table I: rendering quality (Org. vs SLTARCH) ===\n");
+    println!(
+        "{:<14} {:>10} {:>10} {:>9} {:>9} {:>9} {:>9}",
+        "dataset", "PSNR org", "PSNR slt", "SSIM org", "SSIM slt", "LPIPSp o", "LPIPSp s"
+    );
+    for cfg in eval_scenes(quick) {
+        let r = evaluate_scene(&cfg, 42);
+        println!(
+            "{:<14} {:>10.2} {:>10.2} {:>9.3} {:>9.3} {:>9.4} {:>9.4}",
+            cfg.name, r.psnr_org, r.psnr_slt, r.ssim_org, r.ssim_slt,
+            r.lpips_org, r.lpips_slt
+        );
+    }
+    println!(
+        "\npaper: PSNR 21.04/23.50 with ΔPSNR ~= -0.01 dB between Org and \
+         SLTARCH\n(absolute values differ — synthetic scenes + GT \
+         substitution — the claim is the tiny delta)"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sltarch_quality_is_marginally_below_org() {
+        let cfg = eval_scenes(true).remove(0);
+        let r = evaluate_scene(&cfg, 42);
+        // Org should be at least as good, but the gap must be small —
+        // the paper's headline accuracy claim.
+        let delta = r.psnr_org - r.psnr_slt;
+        assert!(delta > -0.5, "SLTARCH unexpectedly better by {delta}");
+        assert!(delta < 2.0, "group-alpha too lossy: ΔPSNR {delta}");
+        assert!((r.ssim_org - r.ssim_slt).abs() < 0.05);
+        assert!(r.psnr_org > 10.0, "renderer broken: PSNR {}", r.psnr_org);
+    }
+}

@@ -1,0 +1,19 @@
+//! Gaussian primitive storage and the CPU mirror of the L1 maths.
+//!
+//! [`Gaussians`] is the SoA store the whole pipeline shares (the exact
+//! flat layout the HLO artifacts consume); [`project`] mirrors the Pallas
+//! projection kernel so simulators, the CPU renderer and the PJRT path
+//! agree numerically.
+
+mod projection;
+mod soa;
+
+pub use projection::{project, project_one, Splat2D};
+pub use soa::Gaussians;
+
+/// Blending constants shared with `python/compile/kernels/ref.py`.
+pub const ALPHA_THRESH: f32 = 1.0 / 255.0;
+pub const ALPHA_CLAMP: f32 = 0.99;
+pub const COV2D_DILATION: f32 = 0.3;
+/// Behind-camera cull depth (matches the kernels' `tz > 0.2`).
+pub const NEAR_CULL: f32 = 0.2;

@@ -1,0 +1,175 @@
+//! CPU mirror of the L1 projection kernel (EWA splatting).
+//!
+//! Must stay numerically in lock-step with
+//! `python/compile/kernels/project.py`; the integration test
+//! `rust/tests/pjrt_roundtrip.rs` asserts allclose between this code and
+//! the compiled artifact.
+
+use super::{Gaussians, COV2D_DILATION, NEAR_CULL};
+use crate::math::{safe_recip, Camera, Vec2};
+
+/// One projected (screen-space) Gaussian.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Splat2D {
+    /// Pixel-space centre.
+    pub mean: Vec2,
+    /// Inverse 2D covariance `(a, b, c)`:
+    /// `power = -0.5*(a dx^2 + c dy^2) - b dx dy`.
+    pub conic: [f32; 3],
+    /// Camera-space depth.
+    pub depth: f32,
+    /// 3-sigma screen radius in pixels; 0 means culled.
+    pub radius: f32,
+    /// RGB colour (copied through for the splatting stage).
+    pub color: [f32; 3],
+    /// Base opacity.
+    pub opacity: f32,
+    /// Index into the source rendering queue.
+    pub id: u32,
+}
+
+impl Splat2D {
+    #[inline]
+    pub fn visible(&self) -> bool {
+        self.radius > 0.0
+    }
+}
+
+/// Project Gaussian `i` of `g` through `cam` (single-Gaussian scalar path).
+pub fn project_one(g: &Gaussians, i: usize, cam: &Camera) -> Splat2D {
+    let [fx, fy, cx, cy] = cam.intr.to_array();
+    let v = &cam.view.m;
+    let m = g.means[i];
+
+    // World -> camera.
+    let tx = v[0][0] * m[0] + v[0][1] * m[1] + v[0][2] * m[2] + v[0][3];
+    let ty = v[1][0] * m[0] + v[1][1] * m[1] + v[1][2] * m[2] + v[1][3];
+    let tz = v[2][0] * m[0] + v[2][1] * m[1] + v[2][2] * m[2] + v[2][3];
+    let zinv = safe_recip(tz);
+
+    let mean = Vec2::new(fx * tx * zinv + cx, fy * ty * zinv + cy);
+
+    // cov3d = R diag(s^2) R^T.
+    let r = g.quat(i).to_rotmat().m;
+    let s = g.scales[i];
+    let (sx2, sy2, sz2) = (s[0] * s[0], s[1] * s[1], s[2] * s[2]);
+    let cov = |a: usize, b: usize| {
+        r[a][0] * r[b][0] * sx2 + r[a][1] * r[b][1] * sy2 + r[a][2] * r[b][2] * sz2
+    };
+    let (c00, c01, c02) = (cov(0, 0), cov(0, 1), cov(0, 2));
+    let (c11, c12, c22) = (cov(1, 1), cov(1, 2), cov(2, 2));
+
+    // T = J @ W (2x3), J the perspective Jacobian.
+    let zinv2 = zinv * zinv;
+    let j00 = fx * zinv;
+    let j02 = -fx * tx * zinv2;
+    let j11 = fy * zinv;
+    let j12 = -fy * ty * zinv2;
+    let t0 = [
+        j00 * v[0][0] + j02 * v[2][0],
+        j00 * v[0][1] + j02 * v[2][1],
+        j00 * v[0][2] + j02 * v[2][2],
+    ];
+    let t1 = [
+        j11 * v[1][0] + j12 * v[2][0],
+        j11 * v[1][1] + j12 * v[2][1],
+        j11 * v[1][2] + j12 * v[2][2],
+    ];
+
+    // cov2d = T cov3d T^T (+ EWA dilation).
+    let u = [
+        c00 * t0[0] + c01 * t0[1] + c02 * t0[2],
+        c01 * t0[0] + c11 * t0[1] + c12 * t0[2],
+        c02 * t0[0] + c12 * t0[1] + c22 * t0[2],
+    ];
+    let w = [
+        c00 * t1[0] + c01 * t1[1] + c02 * t1[2],
+        c01 * t1[0] + c11 * t1[1] + c12 * t1[2],
+        c02 * t1[0] + c12 * t1[1] + c22 * t1[2],
+    ];
+    let a = t0[0] * u[0] + t0[1] * u[1] + t0[2] * u[2] + COV2D_DILATION;
+    let b = t1[0] * u[0] + t1[1] * u[1] + t1[2] * u[2];
+    let c = t1[0] * w[0] + t1[1] * w[1] + t1[2] * w[2] + COV2D_DILATION;
+
+    let det = a * c - b * b;
+    let det_safe = if det <= 1e-12 { 1e-12 } else { det };
+    let conic = [c / det_safe, -b / det_safe, a / det_safe];
+
+    let mid = 0.5 * (a + c);
+    let lam = mid + (mid * mid - det).max(0.0).sqrt();
+    let mut radius = (3.0 * lam.max(0.0).sqrt()).ceil();
+    if !(tz > NEAR_CULL && det > 1e-12) {
+        radius = 0.0;
+    }
+
+    Splat2D {
+        mean,
+        conic,
+        depth: tz,
+        radius,
+        color: g.colors[i],
+        opacity: g.opacity[i],
+        id: i as u32,
+    }
+}
+
+/// Project a whole batch (CPU path; the PJRT path goes through
+/// `runtime::exec::ProjectExe`).
+pub fn project(g: &Gaussians, cam: &Camera) -> Vec<Splat2D> {
+    (0..g.len()).map(|i| project_one(g, i, cam)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Intrinsics, Quat, Vec3};
+
+    fn cam() -> Camera {
+        Camera::look_at(
+            Vec3::new(0.0, 0.0, -10.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            Intrinsics { fx: 300.0, fy: 300.0, cx: 128.0, cy: 128.0, width: 256, height: 256 },
+        )
+    }
+
+    fn one_at(p: Vec3) -> Gaussians {
+        let mut g = Gaussians::default();
+        g.push(p, Vec3::splat(0.3), Quat::IDENTITY, [1.0, 1.0, 1.0], 0.8);
+        g
+    }
+
+    #[test]
+    fn center_projects_to_principal_point() {
+        let g = one_at(Vec3::ZERO);
+        let s = project_one(&g, 0, &cam());
+        assert!((s.mean.x - 128.0).abs() < 1e-3);
+        assert!((s.mean.y - 128.0).abs() < 1e-3);
+        assert!((s.depth - 10.0).abs() < 1e-4);
+        assert!(s.visible());
+    }
+
+    #[test]
+    fn behind_camera_is_culled() {
+        let g = one_at(Vec3::new(0.0, 0.0, -20.0));
+        let s = project_one(&g, 0, &cam());
+        assert!(!s.visible());
+    }
+
+    #[test]
+    fn conic_is_isotropic_for_axis_aligned_gaussian() {
+        let g = one_at(Vec3::ZERO);
+        let s = project_one(&g, 0, &cam());
+        // Symmetric setup -> a == c, b == 0.
+        assert!((s.conic[0] - s.conic[2]).abs() < 1e-4, "{:?}", s.conic);
+        assert!(s.conic[1].abs() < 1e-5);
+        assert!(s.radius >= 1.0);
+    }
+
+    #[test]
+    fn closer_gaussian_has_larger_radius() {
+        let near = project_one(&one_at(Vec3::new(0.0, 0.0, -5.0)), 0, &cam());
+        let far = project_one(&one_at(Vec3::new(0.0, 0.0, 8.0)), 0, &cam());
+        assert!(near.radius > far.radius);
+    }
+}

@@ -1,0 +1,195 @@
+//! SoA Gaussian storage.
+
+use crate::math::{Aabb, Quat, Vec3};
+
+/// A structure-of-arrays batch of 3D Gaussians.
+///
+/// Field layouts match the flat `f32` buffers the PJRT `project_n256`
+/// artifact takes: `means` is `N x 3` row-major, `scales` `N x 3`,
+/// `quats` `N x 4` in `(w,x,y,z)` order, `colors` `N x 3`, `opacity` `N`.
+#[derive(Clone, Debug, Default)]
+pub struct Gaussians {
+    pub means: Vec<[f32; 3]>,
+    pub scales: Vec<[f32; 3]>,
+    pub quats: Vec<[f32; 4]>,
+    pub colors: Vec<[f32; 3]>,
+    pub opacity: Vec<f32>,
+}
+
+impl Gaussians {
+    pub fn with_capacity(n: usize) -> Self {
+        Gaussians {
+            means: Vec::with_capacity(n),
+            scales: Vec::with_capacity(n),
+            quats: Vec::with_capacity(n),
+            colors: Vec::with_capacity(n),
+            opacity: Vec::with_capacity(n),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.means.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.means.is_empty()
+    }
+
+    /// Append one Gaussian; returns its index.
+    pub fn push(
+        &mut self,
+        mean: Vec3,
+        scale: Vec3,
+        quat: Quat,
+        color: [f32; 3],
+        opacity: f32,
+    ) -> usize {
+        self.means.push(mean.to_array());
+        self.scales.push(scale.to_array());
+        self.quats.push(quat.to_array());
+        self.colors.push(color);
+        self.opacity.push(opacity);
+        self.means.len() - 1
+    }
+
+    #[inline]
+    pub fn mean(&self, i: usize) -> Vec3 {
+        Vec3::from_array(self.means[i])
+    }
+
+    #[inline]
+    pub fn scale(&self, i: usize) -> Vec3 {
+        Vec3::from_array(self.scales[i])
+    }
+
+    #[inline]
+    pub fn quat(&self, i: usize) -> Quat {
+        let q = self.quats[i];
+        Quat::new(q[0], q[1], q[2], q[3])
+    }
+
+    /// Conservative world-space AABB of Gaussian `i` at `k` standard
+    /// deviations (`k = 3` bounds >99.7% of its mass per axis).
+    pub fn aabb(&self, i: usize, k: f32) -> Aabb {
+        // Half-extent of the rotated ellipsoid along each world axis:
+        // h_a = k * sqrt(sum_j (R[a][j] * s_j)^2).
+        let r = self.quat(i).to_rotmat();
+        let s = self.scale(i);
+        let h = Vec3::new(
+            (r.m[0][0] * s.x).hypot(r.m[0][1] * s.y).hypot(r.m[0][2] * s.z),
+            (r.m[1][0] * s.x).hypot(r.m[1][1] * s.y).hypot(r.m[1][2] * s.z),
+            (r.m[2][0] * s.x).hypot(r.m[2][1] * s.y).hypot(r.m[2][2] * s.z),
+        ) * k;
+        Aabb::from_center_half(self.mean(i), h)
+    }
+
+    /// Gather a subset by index into a new batch (rendering-queue build).
+    pub fn gather(&self, idx: &[u32]) -> Gaussians {
+        let mut out = Gaussians::with_capacity(idx.len());
+        for &i in idx {
+            let i = i as usize;
+            out.means.push(self.means[i]);
+            out.scales.push(self.scales[i]);
+            out.quats.push(self.quats[i]);
+            out.colors.push(self.colors[i]);
+            out.opacity.push(self.opacity[i]);
+        }
+        out
+    }
+
+    /// Flat row-major buffers for the PJRT artifacts (padded to `n`).
+    pub fn to_flat_padded(&self, n: usize) -> FlatGaussians {
+        assert!(self.len() <= n);
+        let mut f = FlatGaussians {
+            means: vec![0.0; n * 3],
+            scales: vec![1e-6; n * 3], // degenerate-but-valid padding
+            quats: vec![0.0; n * 4],
+            n_real: self.len(),
+        };
+        for i in 0..self.len() {
+            f.means[i * 3..i * 3 + 3].copy_from_slice(&self.means[i]);
+            f.scales[i * 3..i * 3 + 3].copy_from_slice(&self.scales[i]);
+            f.quats[i * 4..i * 4 + 4].copy_from_slice(&self.quats[i]);
+        }
+        // Identity quats on padding rows keep the kernel maths finite.
+        for i in self.len()..n {
+            f.quats[i * 4] = 1.0;
+        }
+        f
+    }
+}
+
+/// Flat padded buffers ready for `Literal::vec1(...).reshape(...)`.
+pub struct FlatGaussians {
+    pub means: Vec<f32>,
+    pub scales: Vec<f32>,
+    pub quats: Vec<f32>,
+    pub n_real: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Gaussians {
+        let mut g = Gaussians::default();
+        g.push(
+            Vec3::new(1.0, 2.0, 3.0),
+            Vec3::splat(0.5),
+            Quat::IDENTITY,
+            [1.0, 0.0, 0.0],
+            0.9,
+        );
+        g.push(
+            Vec3::new(-1.0, 0.0, 1.0),
+            Vec3::new(0.1, 0.2, 0.3),
+            Quat::from_axis_angle(Vec3::new(0.0, 1.0, 0.0), 0.7),
+            [0.0, 1.0, 0.0],
+            0.5,
+        );
+        g
+    }
+
+    #[test]
+    fn push_and_access() {
+        let g = sample();
+        assert_eq!(g.len(), 2);
+        assert_eq!(g.mean(0), Vec3::new(1.0, 2.0, 3.0));
+        assert_eq!(g.quat(0).w, 1.0);
+        assert_eq!(g.opacity[1], 0.5);
+    }
+
+    #[test]
+    fn aabb_contains_mean_and_scales_with_k() {
+        let g = sample();
+        let b1 = g.aabb(1, 1.0);
+        let b3 = g.aabb(1, 3.0);
+        assert!(b1.contains(g.mean(1)));
+        assert!(b3.half_extent().x > b1.half_extent().x);
+        // Axis-aligned identity Gaussian: half extent == k * scale.
+        let b = g.aabb(0, 3.0);
+        assert!((b.half_extent().x - 1.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gather_preserves_order() {
+        let g = sample();
+        let sub = g.gather(&[1, 0]);
+        assert_eq!(sub.mean(0), g.mean(1));
+        assert_eq!(sub.mean(1), g.mean(0));
+    }
+
+    #[test]
+    fn flat_padding_is_valid() {
+        let g = sample();
+        let f = g.to_flat_padded(4);
+        assert_eq!(f.means.len(), 12);
+        assert_eq!(f.quats.len(), 16);
+        assert_eq!(f.n_real, 2);
+        // Padding quats are identity (w=1).
+        assert_eq!(f.quats[2 * 4], 1.0);
+        assert_eq!(f.quats[3 * 4], 1.0);
+    }
+}

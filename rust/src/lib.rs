@@ -1,0 +1,58 @@
+//! # SLTarch — scalable point-based neural rendering, reproduced.
+//!
+//! This crate is the Layer-3 (rust) half of a three-layer reproduction of
+//! *"SLTarch: Towards Scalable Point-Based Neural Rendering by Taming
+//! Workload Imbalance and Memory Irregularity"* (CS.AR 2025):
+//!
+//! * [`lod`] — the paper's algorithmic contribution: the canonical LoD
+//!   tree, **SLTree** partitioning (Algo 1 + subtree merging) and the
+//!   streaming subtree-queue traversal, bit-accurate vs the canonical cut.
+//! * [`sim`] — cycle-approximate models of every piece of hardware the
+//!   paper evaluates: the mobile-Ampere GPU baseline, **LTCore** (LT
+//!   units, two-segment subtree queue, 4-way subtree cache), **SPCore**
+//!   (group-alpha SP units), GSCore, and the QuickNN/Crescent kd-tree
+//!   accelerators, plus the LPDDR4/SRAM energy model.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`); python never runs at render time.
+//! * [`coordinator`] — the frame pipeline: LoD search -> rendering queue
+//!   -> tile binning -> depth sort -> chunked splatting -> image.
+//! * [`experiments`] — one module per paper table/figure; each prints the
+//!   rows the paper reports (see DESIGN.md §5 for the index).
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use sltarch::prelude::*;
+//! let scene = SceneConfig::small_scale().build(42);
+//! let sltree = SlTree::partition(&scene.tree, 32);
+//! let cam = scene.scenario_camera(0);
+//! let cut = sltree.traverse(&scene.tree, &cam, 1.0);
+//! println!("{} Gaussians selected", cut.len());
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod gaussian;
+pub mod lod;
+pub mod math;
+pub mod metrics;
+pub mod runtime;
+pub mod scene;
+pub mod sim;
+pub mod splat;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{ArchConfig, RenderConfig, SceneConfig};
+    pub use crate::coordinator::pipeline::{FramePipeline, FrameReport};
+    pub use crate::coordinator::renderer::{AlphaMode, CpuRenderer};
+    pub use crate::gaussian::Gaussians;
+    pub use crate::lod::sltree::SlTree;
+    pub use crate::lod::tree::LodTree;
+    pub use crate::math::{Camera, Mat4, Vec3};
+    pub use crate::metrics::{psnr, ssim, lpips_proxy};
+    pub use crate::scene::Scene;
+    pub use crate::sim::report::SimReport;
+}

@@ -1,0 +1,19 @@
+//! The paper's algorithmic core: LoD trees, SLTree partitioning, and the
+//! streaming subtree-queue traversal.
+//!
+//! * [`tree`] — the canonical LoD tree (variable fan-out, BFS node
+//!   layout) and the canonical top-down LoD search that defines the
+//!   ground-truth "cut" (paper Fig. 1).
+//! * [`sltree`] — SLTree partitioning: Algo 1 initial BFS partitioning
+//!   plus greedy subtree merging (Sec. III-B).
+//! * [`traversal`] — the subtree-granular streaming traversal
+//!   (Sec. III-A), bit-accurate vs the canonical search, emitting the
+//!   per-thread workload and memory traces the simulators consume.
+
+pub mod sltree;
+pub mod traversal;
+pub mod tree;
+
+pub use sltree::{SlTree, Subtree};
+pub use traversal::{naive_static_workloads, traverse_sltree, TraversalTrace};
+pub use tree::{CanonicalTrace, LodTree, Node, NONE};

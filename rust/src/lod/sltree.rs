@@ -1,0 +1,464 @@
+//! SLTree partitioning (paper Sec. III-B, Algo 1).
+//!
+//! Translates the canonical LoD tree into comparable-size *subtrees*
+//! while preserving every hierarchical relationship, in two steps:
+//!
+//! 1. **Initial partitioning** — BFS from the root; whenever the
+//!    cumulative traversed-node count reaches the size limit `tau_s`,
+//!    the collected nodes become one subtree and every uncollected
+//!    immediate child seeds a new root in the work queue.
+//! 2. **Subtree merging** — adjacent small subtrees (size <= tau_s/2)
+//!    under the *same parent subtree* are greedily combined while the
+//!    merged size stays <= tau_s, shrinking the size variance that
+//!    drives workload imbalance (evaluated in Fig. 12).
+//!
+//! Within each subtree, nodes are stored in **DFS order** with a
+//! per-node `skip` (in-subtree descendant count), exactly the layout the
+//! subtree-cache entry uses so the LT unit can bypass a node's subtree
+//! with a single index increment (Sec. IV-B). Partitioning is fully
+//! offline (zero render-time cost) and never alters search semantics:
+//! `traversal::traverse_sltree` is bit-accurate vs the canonical search.
+
+use super::tree::{LodTree, NONE};
+
+/// Entry point of one constituent root inside a (possibly merged)
+/// subtree.
+#[derive(Clone, Copy, Debug)]
+pub struct SubtreeRoot {
+    /// Position of the root in `Subtree::nodes`.
+    pub pos: u32,
+    /// Parent *node* (in the full tree) of this root; `NONE` for the
+    /// tree root. Traversal uses it to activate only the roots whose
+    /// parent actually requested descent.
+    pub parent_node: u32,
+}
+
+/// One subtree: a DFS-ordered slab of node ids plus the boundary links
+/// to child subtrees — the unit of scheduling, caching and DRAM
+/// streaming.
+#[derive(Clone, Debug, Default)]
+pub struct Subtree {
+    /// Node ids in DFS order (a forest after merging: each root's
+    /// segment is contiguous).
+    pub nodes: Vec<u32>,
+    /// In-subtree descendant count per position (the "remaining subtree
+    /// size" of the cache entry): skipping node at `p` jumps to
+    /// `p + 1 + skip[p]`.
+    pub skip: Vec<u32>,
+    /// Constituent roots (1 before merging, >=1 after).
+    pub roots: Vec<SubtreeRoot>,
+    /// Parent subtree id (`NONE` for the top subtree).
+    pub parent_sid: u32,
+    /// Boundary descent links: `(pos, child_sid)` — descending past the
+    /// node at `pos` must enqueue `child_sid` (deduplicated).
+    pub boundary: Vec<(u32, u32)>,
+}
+
+impl Subtree {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Bytes this subtree occupies in DRAM / one cache entry
+    /// (AABB 24 B + world size 4 B + skip 4 B + child-SID link 4 B per
+    /// node — the attribute set of Fig. 7).
+    #[inline]
+    pub fn bytes(&self) -> u64 {
+        self.nodes.len() as u64 * 36
+    }
+}
+
+/// The subtree-based LoD tree.
+#[derive(Clone, Debug)]
+pub struct SlTree {
+    pub subtrees: Vec<Subtree>,
+    /// node id -> subtree id.
+    pub node_sid: Vec<u32>,
+    /// The subtree containing the tree root.
+    pub top: u32,
+    /// Size limit used at construction.
+    pub tau_s: u32,
+}
+
+impl SlTree {
+    /// Full partitioning: initial BFS split + subtree merging.
+    pub fn partition(tree: &LodTree, tau_s: u32) -> SlTree {
+        Self::build(tree, tau_s, true)
+    }
+
+    /// Ablation variant without the merging pass (Fig. 12 "w/o merge").
+    pub fn partition_unmerged(tree: &LodTree, tau_s: u32) -> SlTree {
+        Self::build(tree, tau_s, false)
+    }
+
+    fn build(tree: &LodTree, tau_s: u32, merge: bool) -> SlTree {
+        assert!(tau_s >= 2, "subtree size limit must be >= 2");
+        assert!(!tree.is_empty(), "cannot partition an empty tree");
+
+        // ---------- initial partitioning (Algo 1, first loop) ----------
+        // Work queue of (root node, parent node).
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back((LodTree::ROOT, NONE));
+        // Raw subtrees: (member nodes in BFS order, root, parent node).
+        let mut raw: Vec<(Vec<u32>, u32, u32)> = Vec::new();
+        let mut node_raw_sid = vec![NONE; tree.len()];
+
+        // §Perf: one reusable BFS deque for all work items (a fresh
+        // VecDeque per subtree showed up in the partitioning profile).
+        let mut bfs = std::collections::VecDeque::new();
+        while let Some((root, parent_node)) = queue.pop_front() {
+            // BFS from `root`, stopping once tau_s nodes are collected.
+            let mut members = Vec::with_capacity(tau_s as usize);
+            bfs.clear();
+            bfs.push_back(root);
+            while let Some(n) = bfs.pop_front() {
+                if members.len() == tau_s as usize {
+                    // Uncollected: n becomes a new subtree root.
+                    queue.push_back((n, tree.nodes[n as usize].parent));
+                    continue;
+                }
+                members.push(n);
+                for c in tree.children(n) {
+                    bfs.push_back(c);
+                }
+            }
+            let sid = raw.len() as u32;
+            for &m in &members {
+                node_raw_sid[m as usize] = sid;
+            }
+            raw.push((members, root, parent_node));
+        }
+
+        // ---------- subtree merging (Algo 1, second loop) --------------
+        // Greedy left-to-right: absorb small subtrees that share the
+        // parent subtree while the running size stays within tau_s.
+        // Groups are lists of raw sids.
+        let parent_raw_sid = |r: &(Vec<u32>, u32, u32)| -> u32 {
+            if r.2 == NONE {
+                NONE
+            } else {
+                node_raw_sid[r.2 as usize]
+            }
+        };
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        if merge {
+            let mut cur: Vec<usize> = Vec::new();
+            let mut cur_size = 0usize;
+            let mut cur_parent = NONE;
+            for (i, r) in raw.iter().enumerate() {
+                let p = parent_raw_sid(r);
+                let small = r.0.len() <= (tau_s / 2) as usize;
+                if !cur.is_empty()
+                    && p == cur_parent
+                    && small
+                    && cur_size + r.0.len() <= tau_s as usize
+                {
+                    cur.push(i);
+                    cur_size += r.0.len();
+                } else {
+                    if !cur.is_empty() {
+                        groups.push(std::mem::take(&mut cur));
+                    }
+                    cur.push(i);
+                    cur_size = r.0.len();
+                    cur_parent = p;
+                }
+            }
+            if !cur.is_empty() {
+                groups.push(cur);
+            }
+        } else {
+            groups = (0..raw.len()).map(|i| vec![i]).collect();
+        }
+
+        // ---------- final layout: DFS order + skip counts ---------------
+        let mut node_sid = vec![NONE; tree.len()];
+        for (gid, group) in groups.iter().enumerate() {
+            for &ri in group {
+                for &m in &raw[ri].0 {
+                    node_sid[m as usize] = gid as u32;
+                }
+            }
+        }
+
+        // §Perf: epoch-stamped scratch arrays replace the per-subtree
+        // HashSet/HashMap (hashing dominated partitioning time; see
+        // EXPERIMENTS.md §Perf). `stamp[n] == epoch` marks membership
+        // and `pos_scratch[n]` holds the node's DFS position.
+        let mut stamp = vec![0u32; tree.len()];
+        let mut pos_scratch = vec![0u32; tree.len()];
+        let mut epoch = 0u32;
+
+        let mut subtrees = Vec::with_capacity(groups.len());
+        for group in groups.iter() {
+            let mut st = Subtree::default();
+            let mut parent_sid = NONE;
+            for &ri in group {
+                let (members, root, parent_node) = &raw[ri];
+                if *parent_node != NONE {
+                    parent_sid = node_sid[*parent_node as usize];
+                }
+                // DFS within this constituent, restricted to `members`.
+                epoch += 1;
+                for &m in members {
+                    stamp[m as usize] = epoch;
+                }
+                let root_pos = st.nodes.len() as u32;
+                st.roots.push(SubtreeRoot { pos: root_pos, parent_node: *parent_node });
+                // Iterative DFS; push children in reverse so the first
+                // child is processed first (stable order).
+                let mut stack = vec![*root];
+                while let Some(n) = stack.pop() {
+                    st.nodes.push(n);
+                    st.skip.push(0); // filled below
+                    for c in tree.children(n).rev() {
+                        if stamp[c as usize] == epoch {
+                            stack.push(c);
+                        }
+                    }
+                }
+                debug_assert_eq!(
+                    st.nodes.len() as u32 - root_pos,
+                    members.len() as u32
+                );
+            }
+            // skip counts: descendants *within the subtree*. Walk
+            // backwards: skip[p] = sum over in-subtree children (1 + skip).
+            // Membership + positions via one fresh epoch over the whole
+            // (possibly merged) subtree.
+            epoch += 1;
+            for (p, &n) in st.nodes.iter().enumerate() {
+                stamp[n as usize] = epoch;
+                pos_scratch[n as usize] = p as u32;
+            }
+            for p in (0..st.nodes.len()).rev() {
+                let n = st.nodes[p];
+                let parent = tree.nodes[n as usize].parent;
+                if parent != NONE && stamp[parent as usize] == epoch {
+                    let pp = pos_scratch[parent as usize];
+                    // Only count if the parent precedes (same DFS seg).
+                    if (pp as usize) < p {
+                        st.skip[pp as usize] += 1 + st.skip[p];
+                    }
+                }
+            }
+            st.parent_sid = parent_sid;
+            subtrees.push(st);
+        }
+
+        // Boundary links: for every node, children in other subtrees.
+        for st in subtrees.iter_mut() {
+            let mut links: Vec<(u32, u32)> = Vec::new();
+            for (p, &n) in st.nodes.iter().enumerate() {
+                for c in tree.children(n) {
+                    let csid = node_sid[c as usize];
+                    if csid != node_sid[n as usize] {
+                        links.push((p as u32, csid));
+                    }
+                }
+            }
+            links.sort_unstable();
+            links.dedup();
+            st.boundary = links;
+        }
+
+        let top = node_sid[LodTree::ROOT as usize];
+        SlTree { subtrees, node_sid, top, tau_s }
+    }
+
+    /// Convenience wrapper over [`super::traversal::traverse_sltree`]
+    /// with the default LT-unit count; returns just the cut.
+    pub fn traverse(&self, tree: &LodTree, cam: &crate::math::Camera, tau: f32) -> Vec<u32> {
+        super::traversal::traverse_sltree(tree, self, cam, tau, 4).0
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.subtrees.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.subtrees.is_empty()
+    }
+
+    /// Size (node count) of every subtree — the Fig. 5 balance metric.
+    pub fn sizes(&self) -> Vec<usize> {
+        self.subtrees.iter().map(|s| s.len()).collect()
+    }
+
+    /// Validate structural invariants; returns the first violation.
+    pub fn check_invariants(&self, tree: &LodTree) -> Result<(), String> {
+        let mut seen = vec![false; tree.len()];
+        for (sid, st) in self.subtrees.iter().enumerate() {
+            let sid = sid as u32;
+            if st.len() > self.tau_s as usize {
+                return Err(format!("subtree {sid} exceeds tau_s: {}", st.len()));
+            }
+            if st.is_empty() {
+                return Err(format!("subtree {sid} is empty"));
+            }
+            for (p, &n) in st.nodes.iter().enumerate() {
+                if seen[n as usize] {
+                    return Err(format!("node {n} in two subtrees"));
+                }
+                seen[n as usize] = true;
+                if self.node_sid[n as usize] != sid {
+                    return Err(format!("node {n}: node_sid mismatch"));
+                }
+                let end = p + 1 + st.skip[p] as usize;
+                if end > st.len() {
+                    return Err(format!("subtree {sid} pos {p}: skip escapes"));
+                }
+            }
+            for &(pos, csid) in &st.boundary {
+                if csid as usize >= self.subtrees.len() || pos as usize >= st.len() {
+                    return Err(format!("subtree {sid}: dangling boundary"));
+                }
+            }
+            for r in &st.roots {
+                if r.pos as usize >= st.len() {
+                    return Err(format!("subtree {sid}: root pos out of range"));
+                }
+                let n = st.nodes[r.pos as usize];
+                if tree.nodes[n as usize].parent != r.parent_node {
+                    return Err(format!("subtree {sid}: root parent mismatch"));
+                }
+            }
+        }
+        if let Some(missing) = seen.iter().position(|&s| !s) {
+            return Err(format!("node {missing} not assigned to any subtree"));
+        }
+        // Hierarchy preservation: parent subtree of every non-top
+        // subtree must contain the parents of all its roots.
+        for (sid, st) in self.subtrees.iter().enumerate() {
+            for r in &st.roots {
+                if r.parent_node != NONE {
+                    let psid = self.node_sid[r.parent_node as usize];
+                    if psid == sid as u32 {
+                        return Err(format!(
+                            "subtree {sid}: root {} has in-subtree parent",
+                            st.nodes[r.pos as usize]
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SceneConfig;
+    use crate::util::stats::cov;
+
+    fn scene_tree() -> LodTree {
+        SceneConfig::small_scale().quick().build(7).tree
+    }
+
+    #[test]
+    fn partition_covers_every_node_exactly_once() {
+        let tree = scene_tree();
+        for tau_s in [8, 32, 128] {
+            let slt = SlTree::partition(&tree, tau_s);
+            slt.check_invariants(&tree).unwrap();
+            let total: usize = slt.sizes().iter().sum();
+            assert_eq!(total, tree.len());
+        }
+    }
+
+    #[test]
+    fn unmerged_partition_also_valid() {
+        let tree = scene_tree();
+        let slt = SlTree::partition_unmerged(&tree, 32);
+        slt.check_invariants(&tree).unwrap();
+        // Every unmerged subtree has exactly one root.
+        for st in &slt.subtrees {
+            assert_eq!(st.roots.len(), 1);
+        }
+    }
+
+    #[test]
+    fn merging_reduces_size_variance() {
+        let tree = scene_tree();
+        let a = SlTree::partition_unmerged(&tree, 32);
+        let b = SlTree::partition(&tree, 32);
+        let cov_a = cov(&a.sizes().iter().map(|&s| s as f64).collect::<Vec<_>>());
+        let cov_b = cov(&b.sizes().iter().map(|&s| s as f64).collect::<Vec<_>>());
+        assert!(b.len() <= a.len(), "merging cannot add subtrees");
+        assert!(
+            cov_b < cov_a,
+            "merging must cut size variance: {cov_b} !< {cov_a}"
+        );
+    }
+
+    #[test]
+    fn top_subtree_contains_root() {
+        let tree = scene_tree();
+        let slt = SlTree::partition(&tree, 32);
+        let top = &slt.subtrees[slt.top as usize];
+        assert!(top.nodes.contains(&LodTree::ROOT));
+        assert_eq!(top.parent_sid, NONE);
+        assert!(top.roots.iter().any(|r| r.parent_node == NONE));
+    }
+
+    #[test]
+    fn dfs_skip_matches_descendant_count() {
+        let tree = scene_tree();
+        let slt = SlTree::partition(&tree, 32);
+        // For every position, the skipped range must consist exactly of
+        // nodes whose ancestor chain (within the subtree) passes through
+        // the node at that position.
+        for st in &slt.subtrees {
+            let inset: std::collections::HashSet<u32> = st.nodes.iter().copied().collect();
+            for (p, &n) in st.nodes.iter().enumerate() {
+                let end = p + 1 + st.skip[p] as usize;
+                for q in p + 1..end {
+                    let mut anc = tree.nodes[st.nodes[q] as usize].parent;
+                    let mut found = false;
+                    while anc != NONE && inset.contains(&anc) {
+                        if anc == n {
+                            found = true;
+                            break;
+                        }
+                        anc = tree.nodes[anc as usize].parent;
+                    }
+                    assert!(found, "pos {q} not a descendant of pos {p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_links_point_to_child_roots() {
+        let tree = scene_tree();
+        let slt = SlTree::partition(&tree, 32);
+        for st in &slt.subtrees {
+            for &(pos, csid) in &st.boundary {
+                let n = st.nodes[pos as usize];
+                let child_st = &slt.subtrees[csid as usize];
+                // Some root of the child subtree must have n as parent.
+                assert!(
+                    child_st.roots.iter().any(|r| r.parent_node == n),
+                    "boundary ({pos},{csid}) has no matching root"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn small_tau_means_more_subtrees() {
+        let tree = scene_tree();
+        let a = SlTree::partition(&tree, 8);
+        let b = SlTree::partition(&tree, 64);
+        assert!(a.len() > b.len());
+    }
+}

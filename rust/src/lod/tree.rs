@@ -1,0 +1,358 @@
+//! The canonical LoD tree and the canonical (ground-truth) LoD search.
+//!
+//! Every tree node is one Gaussian (node index == Gaussian index; the
+//! paper uses "Gaussian", "node" and "tree node" interchangeably). Child
+//! counts are *unfixed* — HierarchicalGS trees reach height ~24 with
+//! single parents owning >10^3 children — which is exactly the
+//! irregularity SLTree exists to tame.
+//!
+//! Nodes are stored in BFS order from the root: parents always precede
+//! children and siblings are contiguous, which is what both Algo 1 and
+//! the subtree cache layout assume.
+
+use crate::math::{Aabb, Camera};
+
+/// Sentinel for "no node".
+pub const NONE: u32 = u32::MAX;
+
+/// One LoD-tree node. Children are the contiguous id range
+/// `[first_child, first_child + child_count)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Node {
+    pub parent: u32,
+    pub first_child: u32,
+    pub child_count: u32,
+    /// Depth from the root (root = 0).
+    pub level: u16,
+}
+
+impl Node {
+    #[inline]
+    pub fn is_leaf(&self) -> bool {
+        self.child_count == 0
+    }
+}
+
+/// The canonical LoD tree.
+#[derive(Clone, Debug, Default)]
+pub struct LodTree {
+    pub nodes: Vec<Node>,
+    /// Conservative world AABB of node `i`'s entire subtree.
+    pub aabbs: Vec<Aabb>,
+    /// World-space extent of the node's own Gaussian (longest 3-sigma
+    /// edge) — the quantity whose projection the LoD test compares.
+    pub world_size: Vec<f32>,
+    pub height: u32,
+}
+
+/// Execution trace of a canonical search (feeds the GPU model).
+#[derive(Clone, Debug, Default)]
+pub struct CanonicalTrace {
+    /// Total nodes visited (frustum/LoD tests executed).
+    pub visited: u64,
+    /// Nodes culled by the frustum test.
+    pub frustum_culled: u64,
+    /// Nodes selected into the cut.
+    pub selected: u64,
+}
+
+impl LodTree {
+    pub const ROOT: u32 = 0;
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Children ids of `n` as a range.
+    #[inline]
+    pub fn children(&self, n: u32) -> std::ops::Range<u32> {
+        let node = &self.nodes[n as usize];
+        node.first_child..node.first_child + node.child_count
+    }
+
+    /// The LoD test (paper Sec. II-A): does this node, projected at the
+    /// camera, already meet the target level of detail `tau` (pixels)?
+    /// `true` => the node itself is fine enough to stand in for its
+    /// whole subtree.
+    #[inline]
+    pub fn meets_lod(&self, n: u32, cam: &Camera, tau: f32) -> bool {
+        let depth = cam.depth(self.aabbs[n as usize].center());
+        cam.projected_size(self.world_size[n as usize], depth) <= tau
+    }
+
+    /// Canonical top-down LoD search — the semantic ground truth the
+    /// SLTree traversal must reproduce **bit-accurately**.
+    ///
+    /// Selection rule per node:
+    ///   * outside the frustum            -> skip the subtree, select none
+    ///   * `meets_lod`                    -> select the node, stop descending
+    ///   * fails LoD but is a true leaf   -> select the leaf (cannot refine)
+    ///   * fails LoD, has children        -> recurse
+    ///
+    /// Returns the selected cut (ascending node ids) and the trace.
+    pub fn canonical_search(
+        &self,
+        cam: &Camera,
+        tau: f32,
+    ) -> (Vec<u32>, CanonicalTrace) {
+        let frustum = cam.frustum();
+        let mut cut = Vec::new();
+        let mut trace = CanonicalTrace::default();
+        if self.is_empty() {
+            return (cut, trace);
+        }
+        // Explicit stack: HierarchicalGS trees are deep enough that
+        // recursion depth is worth avoiding on big scenes.
+        let mut stack = vec![Self::ROOT];
+        while let Some(n) = stack.pop() {
+            trace.visited += 1;
+            if !frustum.intersects_aabb(&self.aabbs[n as usize]) {
+                trace.frustum_culled += 1;
+                continue;
+            }
+            let node = &self.nodes[n as usize];
+            if self.meets_lod(n, cam, tau) || node.is_leaf() {
+                cut.push(n);
+                continue;
+            }
+            stack.extend(self.children(n));
+        }
+        trace.selected = cut.len() as u64;
+        cut.sort_unstable();
+        (cut, trace)
+    }
+
+    /// The exhaustive search prior work falls back to for GPU balance
+    /// (paper Sec. II-B "the existing solutions are to simply apply
+    /// exhaustive searches to all tree nodes"): every node is visited and
+    /// tested; the cut is identical. Returns (cut, visited_count).
+    pub fn exhaustive_search(&self, cam: &Camera, tau: f32) -> (Vec<u32>, u64) {
+        let frustum = cam.frustum();
+        let mut cut = Vec::new();
+        for n in 0..self.nodes.len() as u32 {
+            if !frustum.intersects_aabb(&self.aabbs[n as usize]) {
+                continue;
+            }
+            let node = &self.nodes[n as usize];
+            let meets = self.meets_lod(n, cam, tau) || node.is_leaf();
+            if !meets {
+                continue;
+            }
+            // On the cut iff no ancestor would already have been selected.
+            let parent_ok = node.parent == NONE
+                || (!self.meets_lod(node.parent, cam, tau)
+                    && frustum
+                        .intersects_aabb(&self.aabbs[node.parent as usize]));
+            // All ancestors must fail LoD and stay in-frustum.
+            let mut anc = node.parent;
+            let mut on_cut = parent_ok;
+            while on_cut && anc != NONE {
+                let a = &self.nodes[anc as usize];
+                if self.meets_lod(anc, cam, tau)
+                    || !frustum.intersects_aabb(&self.aabbs[anc as usize])
+                {
+                    on_cut = false;
+                }
+                anc = a.parent;
+            }
+            if on_cut {
+                cut.push(n);
+            }
+        }
+        cut.sort_unstable();
+        (cut, self.nodes.len() as u64)
+    }
+
+    /// Per-node subtree sizes (including self) — used by SLTree
+    /// partitioning, skip offsets and the imbalance study (Fig. 3).
+    pub fn subtree_sizes(&self) -> Vec<u32> {
+        let mut sizes = vec![1u32; self.nodes.len()];
+        // BFS order => children have larger ids; accumulate in reverse.
+        for i in (0..self.nodes.len()).rev() {
+            let p = self.nodes[i].parent;
+            if p != NONE {
+                sizes[p as usize] += sizes[i];
+            }
+        }
+        sizes
+    }
+
+    /// Validate the structural invariants the rest of the pipeline
+    /// assumes (BFS layout, contiguous children, consistent AABBs).
+    /// Returns a description of the first violation.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.is_empty() {
+            return Ok(());
+        }
+        if self.nodes[0].parent != NONE {
+            return Err("root must have no parent".into());
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            let i = i as u32;
+            if n.child_count > 0 {
+                if n.first_child <= i {
+                    return Err(format!("node {i}: children must follow it (BFS)"));
+                }
+                for c in self.children(i) {
+                    if self.nodes[c as usize].parent != i {
+                        return Err(format!("node {c}: bad parent link"));
+                    }
+                    if self.nodes[c as usize].level != n.level + 1 {
+                        return Err(format!("node {c}: bad level"));
+                    }
+                    // Parent AABB must contain child AABBs (conservative).
+                    let pa = &self.aabbs[i as usize];
+                    let ca = &self.aabbs[c as usize];
+                    let grown = pa.union(ca);
+                    if (grown.min - pa.min).length() > 1e-4
+                        || (grown.max - pa.max).length() > 1e-4
+                    {
+                        return Err(format!("node {c}: AABB not nested in {i}"));
+                    }
+                }
+            }
+            if n.parent != NONE && n.parent >= i {
+                return Err(format!("node {i}: parent must precede it (BFS)"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Intrinsics, Vec3};
+
+    /// Tiny hand-built tree:         0
+    ///                            /  |  \
+    ///                           1   2   3
+    ///                          / \      |
+    ///                         4   5     6
+    pub fn tiny_tree() -> LodTree {
+        let parents = [NONE, 0, 0, 0, 1, 1, 3];
+        let firsts = [1u32, 4, 0, 6, 0, 0, 0];
+        let counts = [3u32, 2, 0, 1, 0, 0, 0];
+        let levels = [0u16, 1, 1, 1, 2, 2, 2];
+        let centers = [
+            Vec3::ZERO,
+            Vec3::new(-2.0, 0.0, 0.0),
+            Vec3::new(0.0, 0.0, 0.0),
+            Vec3::new(2.0, 0.0, 0.0),
+            Vec3::new(-2.5, 0.0, 0.0),
+            Vec3::new(-1.5, 0.0, 0.0),
+            Vec3::new(2.0, 0.5, 0.0),
+        ];
+        let sizes = [8.0f32, 3.0, 3.0, 3.0, 1.0, 1.0, 1.0];
+        let mut tree = LodTree::default();
+        for i in 0..7 {
+            tree.nodes.push(Node {
+                parent: parents[i],
+                first_child: firsts[i],
+                child_count: counts[i],
+                level: levels[i],
+            });
+            tree.world_size.push(sizes[i]);
+            tree.aabbs.push(Aabb::from_center_half(
+                centers[i],
+                Vec3::splat(sizes[i] * 0.5),
+            ));
+        }
+        // Make ancestors contain descendants.
+        for i in (0..7).rev() {
+            let p = tree.nodes[i].parent;
+            if p != NONE {
+                tree.aabbs[p as usize] = tree.aabbs[p as usize].union(&tree.aabbs[i]);
+            }
+        }
+        tree.height = 3;
+        tree
+    }
+
+    pub fn tiny_cam(dist: f32) -> Camera {
+        Camera::look_at(
+            Vec3::new(0.0, 0.0, -dist),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            Intrinsics::from_fov(256, 256, 60f32.to_radians()),
+        )
+    }
+
+    #[test]
+    fn invariants_hold() {
+        tiny_tree().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn coarse_lod_selects_high_nodes() {
+        let tree = tiny_tree();
+        // Far camera + large tau -> root alone satisfies the LoD.
+        let (cut, trace) = tree.canonical_search(&tiny_cam(100.0), 500.0);
+        assert_eq!(cut, vec![0]);
+        assert_eq!(trace.visited, 1);
+    }
+
+    #[test]
+    fn fine_lod_descends_to_leaves() {
+        let tree = tiny_tree();
+        // Near camera + tiny tau -> every in-frustum leaf selected.
+        let (cut, _) = tree.canonical_search(&tiny_cam(10.0), 0.5);
+        assert_eq!(cut, vec![2, 4, 5, 6]);
+    }
+
+    #[test]
+    fn cut_separates_tree() {
+        // Every root-to-leaf path crosses the cut at most once, and
+        // in-frustum leaves are covered exactly once.
+        let tree = tiny_tree();
+        for tau in [0.5, 5.0, 50.0, 500.0] {
+            let (cut, _) = tree.canonical_search(&tiny_cam(20.0), tau);
+            let inset: std::collections::HashSet<u32> = cut.iter().copied().collect();
+            for leaf in [2u32, 4, 5, 6] {
+                let mut n = leaf;
+                let mut crossings = 0;
+                loop {
+                    if inset.contains(&n) {
+                        crossings += 1;
+                    }
+                    let p = tree.nodes[n as usize].parent;
+                    if p == NONE {
+                        break;
+                    }
+                    n = p;
+                }
+                assert!(crossings <= 1, "tau={tau} leaf={leaf}: {crossings}");
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustive_matches_canonical() {
+        let tree = tiny_tree();
+        for dist in [5.0, 20.0, 100.0] {
+            for tau in [0.5, 5.0, 50.0] {
+                let cam = tiny_cam(dist);
+                let (c1, _) = tree.canonical_search(&cam, tau);
+                let (c2, visited) = tree.exhaustive_search(&cam, tau);
+                assert_eq!(c1, c2, "dist={dist} tau={tau}");
+                assert_eq!(visited, 7);
+            }
+        }
+    }
+
+    #[test]
+    fn subtree_sizes_are_consistent() {
+        let tree = tiny_tree();
+        let sizes = tree.subtree_sizes();
+        assert_eq!(sizes[0], 7);
+        assert_eq!(sizes[1], 3);
+        assert_eq!(sizes[3], 2);
+        assert_eq!(sizes[2], 1);
+    }
+}

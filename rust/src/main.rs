@@ -1,0 +1,283 @@
+//! `sltarch` — the SLTarch CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   info        scene / tree / SLTree statistics
+//!   partition   run SLTree partitioning and report balance
+//!   render      render a frame (CPU mirror or PJRT artifacts) to PPM
+//!   simulate    run the hardware models for one frame
+//!   experiment  regenerate a paper table/figure (fig2..fig12, table1,
+//!               dram, area, or `all`)
+//!
+//! Argument parsing is hand-rolled (clap is not vendored offline).
+
+use anyhow::{bail, Context, Result};
+use sltarch::config::{ArchConfig, ConfigDoc, RenderConfig, SceneConfig};
+use sltarch::coordinator::renderer::AlphaMode;
+use sltarch::coordinator::FramePipeline;
+use sltarch::lod::SlTree;
+use sltarch::runtime::{default_artifacts_dir, ArtifactSet, PjrtEngine};
+use sltarch::sim::HwVariant;
+use sltarch::util::stats::{cov, summarize};
+
+/// Minimal flag parser: `--key value`, `--flag`, and positionals.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let next_is_value =
+                    i + 1 < argv.len() && !argv[i + 1].starts_with("--");
+                if next_is_value {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn scene_config(args: &Args) -> Result<SceneConfig> {
+    let name = args.get("scene").unwrap_or("small");
+    let mut cfg = SceneConfig::preset(name)
+        .with_context(|| format!("unknown scene preset `{name}` (small|large|terrain)"))?;
+    if args.get_bool("quick") {
+        cfg = cfg.quick();
+    }
+    if let Some(path) = args.get("config") {
+        let doc = ConfigDoc::load(std::path::Path::new(path))?;
+        cfg.apply_doc(&doc);
+    }
+    Ok(cfg)
+}
+
+fn render_config(args: &Args) -> RenderConfig {
+    let mut rcfg = RenderConfig::default();
+    rcfg.lod_tau = args.get_f32("tau", rcfg.lod_tau);
+    rcfg.subtree_size = args.get_usize("tau-s", rcfg.subtree_size as usize) as u32;
+    rcfg
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = scene_config(args)?;
+    let seed = args.get_usize("seed", 42) as u64;
+    let scene = cfg.build(seed);
+    let rcfg = render_config(args);
+    let slt = SlTree::partition(&scene.tree, rcfg.subtree_size);
+    println!("scene      : {}", scene.name);
+    println!("gaussians  : {}", scene.gaussians.len());
+    println!("tree height: {}", scene.tree.height);
+    println!("subtrees   : {} (tau_s = {})", slt.len(), rcfg.subtree_size);
+    let sizes: Vec<f64> = slt.sizes().iter().map(|&s| s as f64).collect();
+    let s = summarize(&sizes).unwrap();
+    println!(
+        "subtree sz : mean {:.1} std {:.1} max {:.0} (cov {:.3})",
+        s.mean,
+        s.std,
+        s.max,
+        cov(&sizes)
+    );
+    scene.tree.check_invariants().map_err(anyhow::Error::msg)?;
+    slt.check_invariants(&scene.tree).map_err(anyhow::Error::msg)?;
+    println!("invariants : ok");
+    if args.get_bool("levels") {
+        // Per-level node counts and world-size distribution.
+        let mut by_level: std::collections::BTreeMap<u16, Vec<f64>> = Default::default();
+        for (i, n) in scene.tree.nodes.iter().enumerate() {
+            by_level
+                .entry(n.level)
+                .or_default()
+                .push(scene.tree.world_size[i] as f64);
+        }
+        println!("{:>5} {:>8} {:>10} {:>10} {:>10}", "level", "nodes", "sz mean", "sz med", "sz max");
+        for (lvl, sizes) in by_level {
+            let s = summarize(&sizes).unwrap();
+            println!(
+                "{lvl:>5} {:>8} {:>10.2} {:>10.2} {:>10.2}",
+                s.n, s.mean, s.median, s.max
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let cfg = scene_config(args)?;
+    let scene = cfg.build(args.get_usize("seed", 42) as u64);
+    let tau_s = args.get_usize("tau-s", 32) as u32;
+    let merged = SlTree::partition(&scene.tree, tau_s);
+    let unmerged = SlTree::partition_unmerged(&scene.tree, tau_s);
+    for (name, slt) in [("unmerged", &unmerged), ("merged", &merged)] {
+        let sizes: Vec<f64> = slt.sizes().iter().map(|&s| s as f64).collect();
+        let s = summarize(&sizes).unwrap();
+        println!(
+            "{name:<9}: {:>7} subtrees | size mean {:>5.1} std {:>5.1} cov {:.3}",
+            slt.len(),
+            s.mean,
+            s.std,
+            cov(&sizes)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_render(args: &Args) -> Result<()> {
+    let cfg = scene_config(args)?;
+    let scene = cfg.build(args.get_usize("seed", 42) as u64);
+    let rcfg = render_config(args);
+    let mode = match args.get("mode").unwrap_or("group") {
+        "pixel" | "org" => AlphaMode::Pixel,
+        _ => AlphaMode::Group,
+    };
+    let mut pipeline = FramePipeline::new(scene, rcfg, ArchConfig::default());
+    if args.get_bool("pjrt") {
+        let set = ArtifactSet::discover(&default_artifacts_dir())?;
+        pipeline = pipeline.with_engine(PjrtEngine::load(&set)?);
+        println!("renderer: PJRT artifacts ({})", set.dir.display());
+    } else {
+        println!("renderer: CPU mirror");
+    }
+    let scenario = args.get_usize("scenario", 0);
+    let cam = pipeline.scene.scenario_camera(scenario);
+    let t0 = std::time::Instant::now();
+    let img = pipeline.render(&cam, mode)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let out = args.get("out").unwrap_or("frame.ppm");
+    img.write_ppm(std::path::Path::new(out))?;
+    println!(
+        "rendered scenario {scenario} ({}x{}) in {:.1} ms -> {out}",
+        img.width,
+        img.height,
+        dt * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = scene_config(args)?;
+    let scene = cfg.build(args.get_usize("seed", 42) as u64);
+    let pipeline = FramePipeline::new(scene, render_config(args), ArchConfig::default());
+    let scenario = args.get_usize("scenario", 0);
+    let cam = pipeline.scene.scenario_camera(scenario);
+    if args.get_bool("debug") {
+        let (lod_w, splat_w) = sltarch::coordinator::workload::frame_workload(
+            &pipeline.scene,
+            &pipeline.sltree,
+            &cam,
+            &pipeline.rcfg,
+        );
+        eprintln!("LOD: total_nodes {} visited {} cut {} fetches {} bytes {} activations {}",
+            lod_w.total_nodes, lod_w.trace.visited, lod_w.cut_len,
+            lod_w.trace.subtree_fetches, lod_w.trace.bytes_streamed,
+            lod_w.trace.activations);
+        {
+            let cut = pipeline.search(&cam);
+            let mut hist: std::collections::BTreeMap<u16, u32> = Default::default();
+            for &n in &cut {
+                *hist.entry(pipeline.scene.tree.nodes[n as usize].level).or_default() += 1;
+            }
+            eprintln!("CUT levels: {:?}", hist);
+        }
+        eprintln!("SPLAT: queue {} pairs {} | pixel: evals {} blends {} warps_issued {} warps_total {} util {:.3} | group: checks {} evals {} blends {} util {:.3}",
+            splat_w.queue_len, splat_w.pairs,
+            splat_w.pixel.alpha_evals, splat_w.pixel.blends,
+            splat_w.pixel.divergence.warps_issued, splat_w.pixel.divergence.warps_total,
+            splat_w.pixel.divergence.utilization(),
+            splat_w.group.group_checks, splat_w.group.alpha_evals, splat_w.group.blends,
+            splat_w.group.divergence.utilization());
+    }
+    let report = pipeline.simulate(&cam, &HwVariant::fig9());
+    println!(
+        "cut {} gaussians | {} nodes visited | extraction {:.1} ms\n",
+        report.cut_len,
+        report.lod_visited,
+        report.wall_seconds * 1e3
+    );
+    let gpu = report.sim_seconds(HwVariant::Gpu).unwrap();
+    for r in &report.sims {
+        println!(
+            "{}   speedup {:>5.2}x",
+            r.report.summary(),
+            gpu / r.report.total_seconds()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let quick = args.get_bool("quick");
+    if !sltarch::experiments::run_by_name(name, quick) {
+        bail!(
+            "unknown experiment `{name}`; choose one of {:?} or `all`",
+            sltarch::experiments::ALL
+        );
+    }
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "sltarch — scalable point-based neural rendering (SLTarch repro)\n\n\
+         usage: sltarch <command> [flags]\n\n\
+         commands:\n\
+           info        --scene small|large|terrain [--quick] [--tau-s N]\n\
+           partition   --scene ... [--tau-s N] [--quick]\n\
+           render      --scene ... [--scenario I] [--mode pixel|group]\n\
+                       [--pjrt] [--out frame.ppm] [--tau F] [--quick]\n\
+           simulate    --scene ... [--scenario I] [--quick]\n\
+           experiment  <fig2|fig3|table1|fig9|fig10|dram|fig11|fig12|area|all>\n\
+                       [--quick]\n"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let args = Args::parse(&argv);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("info") => cmd_info(&args),
+        Some("partition") => cmd_partition(&args),
+        Some("render") => cmd_render(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("experiment") => cmd_experiment(&args),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,111 @@
+//! Axis-aligned bounding boxes — the per-node geometry the LT unit tests
+//! against the view frustum during SLTree traversal (paper Sec. IV-B).
+
+use super::Vec3;
+
+/// Closed axis-aligned box `[min, max]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Aabb {
+    pub min: Vec3,
+    pub max: Vec3,
+}
+
+impl Aabb {
+    /// An empty box (min > max); the identity for [`Aabb::union`].
+    pub const EMPTY: Aabb = Aabb {
+        min: Vec3 { x: f32::INFINITY, y: f32::INFINITY, z: f32::INFINITY },
+        max: Vec3 {
+            x: f32::NEG_INFINITY,
+            y: f32::NEG_INFINITY,
+            z: f32::NEG_INFINITY,
+        },
+    };
+
+    #[inline]
+    pub fn new(min: Vec3, max: Vec3) -> Self {
+        Aabb { min, max }
+    }
+
+    /// Box centred at `c` with half-extent `h` per axis.
+    #[inline]
+    pub fn from_center_half(c: Vec3, h: Vec3) -> Self {
+        Aabb { min: c - h, max: c + h }
+    }
+
+    #[inline]
+    pub fn center(&self) -> Vec3 {
+        (self.min + self.max) * 0.5
+    }
+
+    #[inline]
+    pub fn half_extent(&self) -> Vec3 {
+        (self.max - self.min) * 0.5
+    }
+
+    #[inline]
+    pub fn union(&self, o: &Aabb) -> Aabb {
+        Aabb { min: self.min.min(o.min), max: self.max.max(o.max) }
+    }
+
+    #[inline]
+    pub fn grow(&mut self, p: Vec3) {
+        self.min = self.min.min(p);
+        self.max = self.max.max(p);
+    }
+
+    #[inline]
+    pub fn contains(&self, p: Vec3) -> bool {
+        p.x >= self.min.x
+            && p.x <= self.max.x
+            && p.y >= self.min.y
+            && p.y <= self.max.y
+            && p.z >= self.min.z
+            && p.z <= self.max.z
+    }
+
+    /// Longest edge — the "projected dimension" proxy scales from this.
+    #[inline]
+    pub fn longest_edge(&self) -> f32 {
+        (self.max - self.min).max_component()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.min.x > self.max.x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn union_and_contains() {
+        let a = Aabb::new(Vec3::ZERO, Vec3::ONE);
+        let b = Aabb::new(Vec3::splat(2.0), Vec3::splat(3.0));
+        let u = a.union(&b);
+        assert!(u.contains(Vec3::splat(0.5)));
+        assert!(u.contains(Vec3::splat(2.5)));
+        assert!(!a.contains(Vec3::splat(2.5)));
+        assert_eq!(u.longest_edge(), 3.0);
+    }
+
+    #[test]
+    fn empty_union_identity() {
+        let a = Aabb::new(Vec3::ZERO, Vec3::ONE);
+        let u = Aabb::EMPTY.union(&a);
+        assert_eq!(u, a);
+        assert!(Aabb::EMPTY.is_empty());
+        assert!(!u.is_empty());
+    }
+
+    #[test]
+    fn grow_expands() {
+        let mut b = Aabb::EMPTY;
+        b.grow(Vec3::new(1.0, -1.0, 0.0));
+        b.grow(Vec3::new(-1.0, 1.0, 2.0));
+        assert_eq!(b.min, Vec3::new(-1.0, -1.0, 0.0));
+        assert_eq!(b.max, Vec3::new(1.0, 1.0, 2.0));
+        assert_eq!(b.center(), Vec3::new(0.0, 0.0, 1.0));
+    }
+}

@@ -1,0 +1,215 @@
+//! Pinhole camera, view matrices and frustum culling.
+//!
+//! Conventions (shared with `python/compile/kernels/ref.py`):
+//! camera looks down **+z** in camera space, `viewmat` is row-major
+//! world->camera, intrinsics are `(fx, fy, cx, cy)` in pixels.
+
+use super::{Aabb, Mat3, Mat4, Vec3};
+
+/// Pinhole intrinsics in pixels.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Intrinsics {
+    pub fx: f32,
+    pub fy: f32,
+    pub cx: f32,
+    pub cy: f32,
+    pub width: u32,
+    pub height: u32,
+}
+
+impl Intrinsics {
+    /// Square image with a given vertical field of view (radians).
+    pub fn from_fov(width: u32, height: u32, fov_y: f32) -> Self {
+        let fy = height as f32 * 0.5 / (fov_y * 0.5).tan();
+        Intrinsics {
+            fx: fy,
+            fy,
+            cx: width as f32 * 0.5,
+            cy: height as f32 * 0.5,
+            width,
+            height,
+        }
+    }
+
+    #[inline]
+    pub fn to_array(&self) -> [f32; 4] {
+        [self.fx, self.fy, self.cx, self.cy]
+    }
+}
+
+/// A posed pinhole camera.
+#[derive(Clone, Copy, Debug)]
+pub struct Camera {
+    pub view: Mat4,
+    pub intr: Intrinsics,
+    /// Near plane distance (camera-space z); matches the kernels' 0.2 cull.
+    pub near: f32,
+    pub far: f32,
+}
+
+impl Camera {
+    /// Look-at constructor (matches `lookat_viewmat` in the python tests).
+    pub fn look_at(eye: Vec3, target: Vec3, up: Vec3, intr: Intrinsics) -> Self {
+        let fwd = (target - eye).normalized();
+        let right = fwd.cross(up).normalized();
+        let true_up = right.cross(fwd);
+        let r = Mat3::from_rows(right, true_up, fwd);
+        let t = -r.mul_vec(eye);
+        Camera { view: Mat4::from_rt(r, t), intr, near: 0.2, far: 1.0e4 }
+    }
+
+    /// Camera position in world space.
+    pub fn eye(&self) -> Vec3 {
+        let r = self.view.rotation();
+        -r.transpose().mul_vec(self.view.translation())
+    }
+
+    /// World -> camera.
+    #[inline]
+    pub fn to_camera(&self, p: Vec3) -> Vec3 {
+        self.view.transform_point(p)
+    }
+
+    /// Camera-space depth of a world point.
+    #[inline]
+    pub fn depth(&self, p: Vec3) -> f32 {
+        self.to_camera(p).z
+    }
+
+    /// The view frustum for culling.
+    pub fn frustum(&self) -> Frustum {
+        Frustum::from_camera(self)
+    }
+
+    /// Projected screen-space size (pixels) of a world-space extent
+    /// `world_size` at depth `z` — the paper's "projected dimension" used
+    /// by the LoD test. Conservative: uses max(fx, fy).
+    #[inline]
+    pub fn projected_size(&self, world_size: f32, z: f32) -> f32 {
+        let f = self.intr.fx.max(self.intr.fy);
+        if z <= self.near {
+            f32::INFINITY
+        } else {
+            f * world_size / z
+        }
+    }
+}
+
+/// Frustum as 5 inward-facing planes (near + 4 sides) in world space.
+/// `far` is handled by the LoD cut itself (distant nodes collapse to a
+/// single coarse Gaussian) — matching the paper's traversal which never
+/// far-culls explicitly.
+#[derive(Clone, Copy, Debug)]
+pub struct Frustum {
+    /// (normal, offset): a point p is inside iff `n.dot(p) + d >= 0`.
+    pub planes: [(Vec3, f32); 5],
+}
+
+impl Frustum {
+    pub fn from_camera(cam: &Camera) -> Self {
+        let r = cam.view.rotation();
+        let eye = cam.eye();
+        // Camera basis in world space.
+        let right = r.row(0);
+        let up = r.row(1);
+        let fwd = r.row(2);
+
+        let hw = cam.intr.width as f32 * 0.5 / cam.intr.fx;
+        let hh = cam.intr.height as f32 * 0.5 / cam.intr.fy;
+
+        // Side-plane normals: rotate `fwd` toward each image edge.
+        let nl = (fwd * hw + right).normalized(); // left plane keeps +right side
+        let nr = (fwd * hw - right).normalized();
+        let nt = (fwd * hh + up).normalized();
+        let nb = (fwd * hh - up).normalized();
+        let near_n = fwd;
+        let mk = |n: Vec3, p: Vec3| (n, -n.dot(p));
+        Frustum {
+            planes: [
+                mk(near_n, eye + fwd * cam.near),
+                mk(nl, eye),
+                mk(nr, eye),
+                mk(nt, eye),
+                mk(nb, eye),
+            ],
+        }
+    }
+
+    /// Conservative AABB-frustum test (box accepted if it is not fully
+    /// outside any plane) — exactly what the LT unit evaluates per node.
+    pub fn intersects_aabb(&self, b: &Aabb) -> bool {
+        let c = b.center();
+        let h = b.half_extent();
+        for (n, d) in &self.planes {
+            // Projection radius of the box onto the plane normal.
+            let r = h.x * n.x.abs() + h.y * n.y.abs() + h.z * n.z.abs();
+            if n.dot(c) + d + r < 0.0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    #[inline]
+    pub fn contains_point(&self, p: Vec3) -> bool {
+        self.planes.iter().all(|(n, d)| n.dot(p) + d >= 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cam() -> Camera {
+        Camera::look_at(
+            Vec3::new(0.0, 0.0, -10.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            Intrinsics::from_fov(256, 256, 60f32.to_radians()),
+        )
+    }
+
+    #[test]
+    fn eye_roundtrip() {
+        let cam = test_cam();
+        assert!((cam.eye() - Vec3::new(0.0, 0.0, -10.0)).length() < 1e-4);
+        // Target is 10 units in front of the camera.
+        assert!((cam.depth(Vec3::ZERO) - 10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn frustum_accepts_center_rejects_behind() {
+        let cam = test_cam();
+        let f = cam.frustum();
+        assert!(f.contains_point(Vec3::ZERO));
+        assert!(!f.contains_point(Vec3::new(0.0, 0.0, -20.0))); // behind eye
+        let visible = Aabb::from_center_half(Vec3::ZERO, Vec3::splat(1.0));
+        let behind =
+            Aabb::from_center_half(Vec3::new(0.0, 0.0, -30.0), Vec3::splat(1.0));
+        assert!(f.intersects_aabb(&visible));
+        assert!(!f.intersects_aabb(&behind));
+    }
+
+    #[test]
+    fn frustum_rejects_far_side() {
+        let cam = test_cam();
+        let f = cam.frustum();
+        // 60 deg fov at depth 10 -> half-width ~5.8; x=100 is far outside.
+        assert!(!f.contains_point(Vec3::new(100.0, 0.0, 0.0)));
+        // A huge AABB overlapping the frustum must be accepted.
+        let huge = Aabb::from_center_half(
+            Vec3::new(100.0, 0.0, 0.0),
+            Vec3::splat(120.0),
+        );
+        assert!(f.intersects_aabb(&huge));
+    }
+
+    #[test]
+    fn projected_size_shrinks_with_depth() {
+        let cam = test_cam();
+        let near = cam.projected_size(1.0, 5.0);
+        let far = cam.projected_size(1.0, 50.0);
+        assert!(near > far);
+        assert!(cam.projected_size(1.0, 0.0).is_infinite());
+    }
+}

@@ -1,0 +1,156 @@
+//! Row-major 3x3 and 4x4 matrices (the conventions of the L2 jax model).
+
+use super::Vec3;
+
+/// Row-major 3x3 matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mat3 {
+    pub m: [[f32; 3]; 3],
+}
+
+/// Row-major 4x4 matrix (used as a rigid world->camera transform).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mat4 {
+    pub m: [[f32; 4]; 4],
+}
+
+impl Mat3 {
+    pub const IDENTITY: Mat3 = Mat3 {
+        m: [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]],
+    };
+
+    #[inline]
+    pub fn from_rows(r0: Vec3, r1: Vec3, r2: Vec3) -> Self {
+        Mat3 {
+            m: [r0.to_array(), r1.to_array(), r2.to_array()],
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> Vec3 {
+        Vec3::from_array(self.m[i])
+    }
+
+    #[inline]
+    pub fn col(&self, j: usize) -> Vec3 {
+        Vec3::new(self.m[0][j], self.m[1][j], self.m[2][j])
+    }
+
+    #[inline]
+    pub fn transpose(&self) -> Mat3 {
+        Mat3::from_rows(self.col(0), self.col(1), self.col(2))
+    }
+
+    #[inline]
+    pub fn mul_vec(&self, v: Vec3) -> Vec3 {
+        Vec3::new(self.row(0).dot(v), self.row(1).dot(v), self.row(2).dot(v))
+    }
+
+    pub fn mul_mat(&self, o: &Mat3) -> Mat3 {
+        let mut out = [[0.0f32; 3]; 3];
+        for (i, row) in out.iter_mut().enumerate() {
+            for (j, cell) in row.iter_mut().enumerate() {
+                *cell = self.row(i).dot(o.col(j));
+            }
+        }
+        Mat3 { m: out }
+    }
+
+    /// `diag(d)` scaling matrix.
+    #[inline]
+    pub fn diag(d: Vec3) -> Mat3 {
+        Mat3 {
+            m: [[d.x, 0.0, 0.0], [0.0, d.y, 0.0], [0.0, 0.0, d.z]],
+        }
+    }
+}
+
+impl Mat4 {
+    pub const IDENTITY: Mat4 = Mat4 {
+        m: [
+            [1.0, 0.0, 0.0, 0.0],
+            [0.0, 1.0, 0.0, 0.0],
+            [0.0, 0.0, 1.0, 0.0],
+            [0.0, 0.0, 0.0, 1.0],
+        ],
+    };
+
+    /// Rigid transform from a rotation block and translation column.
+    pub fn from_rt(r: Mat3, t: Vec3) -> Self {
+        let mut m = [[0.0f32; 4]; 4];
+        for i in 0..3 {
+            m[i][..3].copy_from_slice(&r.m[i]);
+        }
+        m[0][3] = t.x;
+        m[1][3] = t.y;
+        m[2][3] = t.z;
+        m[3][3] = 1.0;
+        Mat4 { m }
+    }
+
+    #[inline]
+    pub fn rotation(&self) -> Mat3 {
+        Mat3 {
+            m: [
+                [self.m[0][0], self.m[0][1], self.m[0][2]],
+                [self.m[1][0], self.m[1][1], self.m[1][2]],
+                [self.m[2][0], self.m[2][1], self.m[2][2]],
+            ],
+        }
+    }
+
+    #[inline]
+    pub fn translation(&self) -> Vec3 {
+        Vec3::new(self.m[0][3], self.m[1][3], self.m[2][3])
+    }
+
+    /// Transform a point (w = 1).
+    #[inline]
+    pub fn transform_point(&self, p: Vec3) -> Vec3 {
+        self.rotation().mul_vec(p) + self.translation()
+    }
+
+    /// Flattened row-major 16 floats (the layout the HLO artifacts take).
+    pub fn to_flat(&self) -> [f32; 16] {
+        let mut out = [0.0f32; 16];
+        for i in 0..4 {
+            out[i * 4..i * 4 + 4].copy_from_slice(&self.m[i]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat3_identity_mul() {
+        let v = Vec3::new(1.0, -2.0, 3.0);
+        assert_eq!(Mat3::IDENTITY.mul_vec(v), v);
+        let m = Mat3::from_rows(
+            Vec3::new(0.0, 1.0, 0.0),
+            Vec3::new(-1.0, 0.0, 0.0),
+            Vec3::new(0.0, 0.0, 1.0),
+        );
+        let mt = m.transpose();
+        // Rotation: m * m^T == I.
+        let id = m.mul_mat(&mt);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((id.m[i][j] - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn mat4_transform_point() {
+        let r = Mat3::IDENTITY;
+        let t = Vec3::new(1.0, 2.0, 3.0);
+        let m = Mat4::from_rt(r, t);
+        assert_eq!(m.transform_point(Vec3::ZERO), t);
+        assert_eq!(m.to_flat()[3], 1.0);
+        assert_eq!(m.to_flat()[15], 1.0);
+    }
+}

@@ -1,0 +1,40 @@
+//! Minimal linear-algebra substrate: vectors, matrices, quaternions,
+//! axis-aligned bounding boxes, view frustums and pinhole cameras.
+//!
+//! Everything is `f32` and mirrors the conventions of the Layer-1/Layer-2
+//! python maths exactly (row-major matrices, camera looks down +z, pixel
+//! centres at `+0.5`), so the rust CPU reference pipeline and the PJRT
+//! artifacts agree numerically.
+
+mod aabb;
+mod camera;
+mod mat;
+mod quat;
+mod vec;
+
+pub use aabb::Aabb;
+pub use camera::{Camera, Frustum, Intrinsics};
+pub use mat::{Mat3, Mat4};
+pub use quat::Quat;
+pub use vec::{Vec2, Vec3};
+
+/// Numerically safe reciprocal used by the projection path
+/// (matches the `1e-6` guard in `python/compile/kernels/ref.py`).
+#[inline]
+pub fn safe_recip(x: f32) -> f32 {
+    let guarded = if x.abs() < 1e-6 { 1e-6 } else { x };
+    1.0 / guarded
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn safe_recip_guards_zero() {
+        assert!(safe_recip(0.0).is_finite());
+        assert_eq!(safe_recip(2.0), 0.5);
+        // Sign is preserved through the guard only for |x| >= 1e-6.
+        assert_eq!(safe_recip(-2.0), -0.5);
+    }
+}

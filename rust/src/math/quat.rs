@@ -1,0 +1,100 @@
+//! Quaternions in (w, x, y, z) order — the same convention as the L1
+//! kernels (`quat_to_rotmat` in `python/compile/kernels/ref.py`).
+
+use super::{Mat3, Vec3};
+
+/// Unit-ish quaternion; `to_rotmat` normalizes defensively like the kernel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Quat {
+    pub w: f32,
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+impl Quat {
+    pub const IDENTITY: Quat = Quat { w: 1.0, x: 0.0, y: 0.0, z: 0.0 };
+
+    #[inline]
+    pub const fn new(w: f32, x: f32, y: f32, z: f32) -> Self {
+        Quat { w, x, y, z }
+    }
+
+    /// Axis-angle constructor (axis need not be unit length).
+    pub fn from_axis_angle(axis: Vec3, angle: f32) -> Self {
+        let a = axis.normalized();
+        let (s, c) = (angle * 0.5).sin_cos();
+        Quat::new(c, a.x * s, a.y * s, a.z * s)
+    }
+
+    #[inline]
+    pub fn norm(self) -> f32 {
+        (self.w * self.w + self.x * self.x + self.y * self.y + self.z * self.z)
+            .sqrt()
+    }
+
+    /// Rotation matrix; mirrors the kernel maths bit-for-bit (including
+    /// the `1e-12` normalization guard).
+    pub fn to_rotmat(self) -> Mat3 {
+        let n = self.norm() + 1e-12;
+        let (w, x, y, z) = (self.w / n, self.x / n, self.y / n, self.z / n);
+        Mat3 {
+            m: [
+                [
+                    1.0 - 2.0 * (y * y + z * z),
+                    2.0 * (x * y - w * z),
+                    2.0 * (x * z + w * y),
+                ],
+                [
+                    2.0 * (x * y + w * z),
+                    1.0 - 2.0 * (x * x + z * z),
+                    2.0 * (y * z - w * x),
+                ],
+                [
+                    2.0 * (x * z - w * y),
+                    2.0 * (y * z + w * x),
+                    1.0 - 2.0 * (x * x + y * y),
+                ],
+            ],
+        }
+    }
+
+    #[inline]
+    pub fn to_array(self) -> [f32; 4] {
+        [self.w, self.x, self.y, self.z]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f32::consts::FRAC_PI_2;
+
+    #[test]
+    fn identity_is_noop() {
+        let m = Quat::IDENTITY.to_rotmat();
+        let v = Vec3::new(1.0, 2.0, 3.0);
+        let got = m.mul_vec(v);
+        assert!((got - v).length() < 1e-5);
+    }
+
+    #[test]
+    fn z_quarter_turn() {
+        let q = Quat::from_axis_angle(Vec3::new(0.0, 0.0, 1.0), FRAC_PI_2);
+        let got = q.to_rotmat().mul_vec(Vec3::new(1.0, 0.0, 0.0));
+        assert!((got - Vec3::new(0.0, 1.0, 0.0)).length() < 1e-5);
+    }
+
+    #[test]
+    fn rotmat_is_orthonormal_for_unnormalized_input() {
+        let q = Quat::new(0.3, -1.2, 0.4, 2.0); // deliberately unnormalized
+        let m = q.to_rotmat();
+        let id = m.mul_mat(&m.transpose());
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((id.m[i][j] - want).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Simple float RGB image with the helpers the metrics need and a PPM
+//! writer for eyeballing renders.
+
+/// RGB image, values nominally in [0,1], row-major.
+#[derive(Clone, Debug)]
+pub struct Image {
+    pub width: u32,
+    pub height: u32,
+    pub data: Vec<[f32; 3]>,
+}
+
+impl Image {
+    /// Black image.
+    pub fn new(width: u32, height: u32) -> Self {
+        Image { width, height, data: vec![[0.0; 3]; (width * height) as usize] }
+    }
+
+    #[inline]
+    pub fn dims(&self) -> (u32, u32) {
+        (self.width, self.height)
+    }
+
+    #[inline]
+    pub fn px(&self, x: u32, y: u32) -> [f32; 3] {
+        self.data[(y * self.width + x) as usize]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: u32, y: u32, v: [f32; 3]) {
+        self.data[(y * self.width + x) as usize] = v;
+    }
+
+    /// Rec.601 luma per pixel.
+    pub fn luma(&self) -> Vec<f32> {
+        self.data
+            .iter()
+            .map(|p| 0.299 * p[0] + 0.587 * p[1] + 0.114 * p[2])
+            .collect()
+    }
+
+    /// Gradient magnitude of the luma (forward differences).
+    pub fn grad_mag(&self) -> Vec<f32> {
+        let l = self.luma();
+        let (w, h) = (self.width as usize, self.height as usize);
+        let mut g = vec![0.0f32; w * h];
+        for y in 0..h {
+            for x in 0..w {
+                let v = l[y * w + x];
+                let gx = if x + 1 < w { l[y * w + x + 1] - v } else { 0.0 };
+                let gy = if y + 1 < h { l[(y + 1) * w + x] - v } else { 0.0 };
+                g[y * w + x] = gx.hypot(gy);
+            }
+        }
+        g
+    }
+
+    /// 2x box downsample (floor dims).
+    pub fn downsample2x(&self) -> Image {
+        let w = (self.width / 2).max(1);
+        let h = (self.height / 2).max(1);
+        let mut out = Image::new(w, h);
+        for y in 0..h as usize {
+            for x in 0..w as usize {
+                let mut acc = [0.0f32; 3];
+                let mut cnt = 0.0;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let sx = (x * 2 + dx).min(self.width as usize - 1) as u32;
+                        let sy: u32 = (y * 2 + dy).min(self.height as usize - 1) as u32;
+                        let p = self.px(sx, sy);
+                        for c in 0..3 {
+                            acc[c] += p[c];
+                        }
+                        cnt += 1.0;
+                    }
+                }
+                out.set(x as u32, y as u32, [acc[0] / cnt, acc[1] / cnt, acc[2] / cnt]);
+            }
+        }
+        out
+    }
+
+    /// Write a binary PPM (P6) for inspection.
+    pub fn write_ppm(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        write!(f, "P6\n{} {}\n255\n", self.width, self.height)?;
+        for p in &self.data {
+            let to8 = |v: f32| (v.clamp(0.0, 1.0) * 255.0).round() as u8;
+            f.write_all(&[to8(p[0]), to8(p[1]), to8(p[2])])?;
+        }
+        Ok(())
+    }
+
+    /// Mean absolute difference against another image.
+    pub fn mad(&self, o: &Image) -> f64 {
+        assert_eq!(self.dims(), o.dims());
+        let mut acc = 0.0f64;
+        for (a, b) in self.data.iter().zip(o.data.iter()) {
+            for c in 0..3 {
+                acc += (a[c] - b[c]).abs() as f64;
+            }
+        }
+        acc / (self.data.len() * 3) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut img = Image::new(4, 4);
+        img.set(2, 3, [0.5, 0.25, 1.0]);
+        assert_eq!(img.px(2, 3), [0.5, 0.25, 1.0]);
+        assert_eq!(img.px(0, 0), [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn downsample_halves_dims_and_averages() {
+        let mut img = Image::new(4, 4);
+        for y in 0..4 {
+            for x in 0..4 {
+                img.set(x, y, [if (x + y) % 2 == 0 { 1.0 } else { 0.0 }; 3]);
+            }
+        }
+        let d = img.downsample2x();
+        assert_eq!(d.dims(), (2, 2));
+        // Checkerboard averages to 0.5 everywhere.
+        for p in &d.data {
+            assert!((p[0] - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn grad_of_flat_image_is_zero() {
+        let img = Image::new(8, 8);
+        assert!(img.grad_mag().iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn ppm_writes_header_and_payload() {
+        let img = Image::new(3, 2);
+        let dir = std::env::temp_dir().join("sltarch_test_ppm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.ppm");
+        img.write_ppm(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P6\n3 2\n255\n"));
+        assert_eq!(bytes.len(), 11 + 18);
+    }
+}

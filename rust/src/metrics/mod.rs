@@ -1,0 +1,175 @@
+//! Image-quality metrics for Table I: PSNR, SSIM and a perceptual proxy
+//! for LPIPS.
+//!
+//! LPIPS proper requires a pretrained VGG/AlexNet which is unavailable
+//! offline; `lpips_proxy` substitutes a multi-scale gradient-similarity
+//! distance (documented in DESIGN.md §2). Table I's *claim* — SLTarch's
+//! group-alpha approximation degrades quality only marginally vs the
+//! canonical renderer — is preserved under any sane perceptual distance.
+
+mod image;
+
+pub use image::Image;
+
+/// Peak signal-to-noise ratio in dB over RGB in [0,1].
+/// Returns +inf for identical images.
+pub fn psnr(a: &Image, b: &Image) -> f64 {
+    assert_eq!(a.dims(), b.dims(), "psnr: image dims differ");
+    let n = (a.width * a.height * 3) as f64;
+    let mut se = 0.0f64;
+    for (pa, pb) in a.data.iter().zip(b.data.iter()) {
+        for c in 0..3 {
+            let d = (pa[c] - pb[c]) as f64;
+            se += d * d;
+        }
+    }
+    if se == 0.0 {
+        return f64::INFINITY;
+    }
+    let mse = se / n;
+    10.0 * (1.0 / mse).log10()
+}
+
+/// Mean SSIM over 8x8 windows on the luma channel (standard constants
+/// k1=0.01, k2=0.03, L=1).
+pub fn ssim(a: &Image, b: &Image) -> f64 {
+    assert_eq!(a.dims(), b.dims(), "ssim: image dims differ");
+    let la = a.luma();
+    let lb = b.luma();
+    let (w, h) = (a.width as usize, a.height as usize);
+    const WIN: usize = 8;
+    const C1: f64 = 0.01 * 0.01;
+    const C2: f64 = 0.03 * 0.03;
+    let mut total = 0.0;
+    let mut windows = 0usize;
+    let mut wy = 0;
+    while wy + WIN <= h {
+        let mut wx = 0;
+        while wx + WIN <= w {
+            let (mut sa, mut sb, mut saa, mut sbb, mut sab) = (0.0, 0.0, 0.0, 0.0, 0.0);
+            for y in wy..wy + WIN {
+                for x in wx..wx + WIN {
+                    let va = la[y * w + x] as f64;
+                    let vb = lb[y * w + x] as f64;
+                    sa += va;
+                    sb += vb;
+                    saa += va * va;
+                    sbb += vb * vb;
+                    sab += va * vb;
+                }
+            }
+            let n = (WIN * WIN) as f64;
+            let mu_a = sa / n;
+            let mu_b = sb / n;
+            let var_a = (saa / n - mu_a * mu_a).max(0.0);
+            let var_b = (sbb / n - mu_b * mu_b).max(0.0);
+            let cov = sab / n - mu_a * mu_b;
+            let s = ((2.0 * mu_a * mu_b + C1) * (2.0 * cov + C2))
+                / ((mu_a * mu_a + mu_b * mu_b + C1) * (var_a + var_b + C2));
+            total += s;
+            windows += 1;
+            wx += WIN;
+        }
+        wy += WIN;
+    }
+    if windows == 0 {
+        1.0
+    } else {
+        total / windows as f64
+    }
+}
+
+/// Perceptual-distance proxy for LPIPS: mean absolute difference of
+/// luma gradients across 3 dyadic scales (0 = identical; larger = more
+/// perceptually different). Correlates with LPIPS on blur/structure
+/// errors, which is the failure mode the group-alpha approximation has.
+pub fn lpips_proxy(a: &Image, b: &Image) -> f64 {
+    assert_eq!(a.dims(), b.dims(), "lpips_proxy: image dims differ");
+    let mut total = 0.0;
+    let mut scales = 0.0;
+    let mut ia = a.clone();
+    let mut ib = b.clone();
+    for _ in 0..3 {
+        let ga = ia.grad_mag();
+        let gb = ib.grad_mag();
+        let n = ga.len().max(1);
+        let d: f64 = ga
+            .iter()
+            .zip(gb.iter())
+            .map(|(x, y)| (x - y).abs() as f64)
+            .sum::<f64>()
+            / n as f64;
+        total += d;
+        scales += 1.0;
+        if ia.width <= 16 || ia.height <= 16 {
+            break;
+        }
+        ia = ia.downsample2x();
+        ib = ib.downsample2x();
+    }
+    total / scales
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn noise_image(seed: u64, w: u32, h: u32) -> Image {
+        let mut rng = Rng::new(seed);
+        let mut img = Image::new(w, h);
+        for p in img.data.iter_mut() {
+            *p = [rng.f32(), rng.f32(), rng.f32()];
+        }
+        img
+    }
+
+    fn perturb(img: &Image, eps: f32, seed: u64) -> Image {
+        let mut rng = Rng::new(seed);
+        let mut out = img.clone();
+        for p in out.data.iter_mut() {
+            for c in p.iter_mut() {
+                *c = (*c + rng.range(-eps, eps)).clamp(0.0, 1.0);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn psnr_identical_is_infinite() {
+        let a = noise_image(1, 64, 64);
+        assert!(psnr(&a, &a).is_infinite());
+        assert_eq!(ssim(&a, &a), 1.0);
+        assert_eq!(lpips_proxy(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn metrics_order_by_error_magnitude() {
+        let a = noise_image(2, 64, 64);
+        let slight = perturb(&a, 0.01, 3);
+        let heavy = perturb(&a, 0.2, 4);
+        assert!(psnr(&a, &slight) > psnr(&a, &heavy));
+        assert!(ssim(&a, &slight) > ssim(&a, &heavy));
+        assert!(lpips_proxy(&a, &slight) < lpips_proxy(&a, &heavy));
+    }
+
+    #[test]
+    fn psnr_known_value() {
+        // Uniform 0.1 error on one channel: mse = 0.01/3.
+        let a = Image::new(8, 8);
+        let mut b = Image::new(8, 8);
+        for p in b.data.iter_mut() {
+            p[0] = 0.1;
+        }
+        let want = 10.0 * (3.0 / 0.01f64).log10();
+        assert!((psnr(&a, &b) - want).abs() < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "dims differ")]
+    fn dim_mismatch_panics() {
+        let a = Image::new(8, 8);
+        let b = Image::new(4, 4);
+        psnr(&a, &b);
+    }
+}

@@ -1,0 +1,96 @@
+//! Artifact discovery and validation.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// The artifact names the runtime expects — must mirror
+/// `python/compile/model.py: ENTRY_POINTS`.
+pub const REQUIRED: [&str; 3] = ["project_n256", "splat_pixel_k64", "splat_group_k64"];
+
+/// Resolved artifact file paths.
+#[derive(Clone, Debug)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub project: PathBuf,
+    pub splat_pixel: PathBuf,
+    pub splat_group: PathBuf,
+}
+
+impl ArtifactSet {
+    /// Locate and validate the artifacts in `dir`.
+    pub fn discover(dir: &Path) -> Result<ArtifactSet> {
+        let file = |name: &str| -> Result<PathBuf> {
+            let p = dir.join(format!("{name}.hlo.txt"));
+            if !p.is_file() {
+                bail!(
+                    "missing artifact {p:?} — run `make artifacts` first \
+                     (python -m compile.aot)"
+                );
+            }
+            Ok(p)
+        };
+        Ok(ArtifactSet {
+            dir: dir.to_path_buf(),
+            project: file(REQUIRED[0])?,
+            splat_pixel: file(REQUIRED[1])?,
+            splat_group: file(REQUIRED[2])?,
+        })
+    }
+
+    /// Quick sanity check that the files parse as HLO text headers.
+    pub fn validate_headers(&self) -> Result<()> {
+        for p in [&self.project, &self.splat_pixel, &self.splat_group] {
+            let head = std::fs::read_to_string(p)
+                .with_context(|| format!("reading {p:?}"))?
+                .chars()
+                .take(200)
+                .collect::<String>();
+            if !head.contains("HloModule") {
+                bail!("{p:?} does not look like HLO text (missing HloModule)");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The repo-relative default artifact directory, resolved from the
+/// current dir or `SLTARCH_ARTIFACTS` env var.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SLTARCH_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // Walk up from cwd looking for an `artifacts/` directory.
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    for _ in 0..4 {
+        let cand = cur.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !cur.pop() {
+            break;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discover_fails_cleanly_on_missing_dir() {
+        let err = ArtifactSet::discover(Path::new("/nonexistent-xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn discover_finds_real_artifacts_if_built() {
+        // Soft test: only asserts when artifacts exist (CI runs
+        // `make artifacts` first; unit tests shouldn't hard-require it).
+        let dir = default_artifacts_dir();
+        if dir.join("project_n256.hlo.txt").is_file() {
+            let set = ArtifactSet::discover(&dir).unwrap();
+            set.validate_headers().unwrap();
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! The PJRT engine: one CPU client + the compiled executables.
+
+use super::artifacts::ArtifactSet;
+use anyhow::{Context, Result};
+
+/// Compiled-and-ready PJRT state. Construct once, render many frames.
+pub struct PjrtEngine {
+    pub client: xla::PjRtClient,
+    pub project: xla::PjRtLoadedExecutable,
+    pub splat_pixel: xla::PjRtLoadedExecutable,
+    pub splat_group: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtEngine {
+    /// Load HLO text artifacts and compile them on the CPU client.
+    pub fn load(set: &ArtifactSet) -> Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |path: &std::path::Path| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path:?}"))
+        };
+        Ok(PjrtEngine {
+            project: compile(&set.project)?,
+            splat_pixel: compile(&set.splat_pixel)?,
+            splat_group: compile(&set.splat_group)?,
+            client,
+        })
+    }
+
+    /// Execute one compiled entry point on literal inputs and unpack the
+    /// `return_tuple=True` output into its component literals.
+    pub fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}

@@ -1,0 +1,137 @@
+//! Typed wrappers over the PJRT executables: padding, literal packing
+//! and output unpacking. This is the only place raw `xla::Literal`
+//! plumbing appears.
+
+use super::engine::PjrtEngine;
+use super::{K_CHUNK, PROJECT_N, TILE_PIXELS};
+use crate::gaussian::{Gaussians, Splat2D};
+use crate::math::{Camera, Vec2};
+use anyhow::Result;
+
+fn lit2(data: &[f32], d0: usize, d1: usize) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(&[d0 as i64, d1 as i64])?)
+}
+
+fn lit1(data: &[f32]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data))
+}
+
+/// Batched projection through the `project_n256` artifact.
+pub struct ProjectBatch;
+
+impl ProjectBatch {
+    /// Project all of `g` through `cam`, chunking/padding to
+    /// [`PROJECT_N`]. Returns one `Splat2D` per input Gaussian (colour,
+    /// opacity and id are filled from the store).
+    pub fn run(engine: &PjrtEngine, g: &Gaussians, cam: &Camera) -> Result<Vec<Splat2D>> {
+        let viewmat = lit2(&cam.view.to_flat(), 4, 4)?;
+        let intr = lit1(&cam.intr.to_array())?;
+        let mut out = Vec::with_capacity(g.len());
+
+        let mut start = 0usize;
+        while start < g.len() {
+            let end = (start + PROJECT_N).min(g.len());
+            let idx: Vec<u32> = (start as u32..end as u32).collect();
+            let batch = g.gather(&idx);
+            let flat = batch.to_flat_padded(PROJECT_N);
+
+            let outputs = PjrtEngine::run(
+                &engine.project,
+                &[
+                    lit2(&flat.means, PROJECT_N, 3)?,
+                    lit2(&flat.scales, PROJECT_N, 3)?,
+                    lit2(&flat.quats, PROJECT_N, 4)?,
+                    viewmat.clone(),
+                    intr.clone(),
+                ],
+            )?;
+            let mean2d = outputs[0].to_vec::<f32>()?;
+            let conic = outputs[1].to_vec::<f32>()?;
+            let depth = outputs[2].to_vec::<f32>()?;
+            let radius = outputs[3].to_vec::<f32>()?;
+
+            for i in 0..flat.n_real {
+                let gi = start + i;
+                out.push(Splat2D {
+                    mean: Vec2::new(mean2d[i * 2], mean2d[i * 2 + 1]),
+                    conic: [conic[i * 3], conic[i * 3 + 1], conic[i * 3 + 2]],
+                    depth: depth[i],
+                    radius: radius[i],
+                    color: g.colors[gi],
+                    opacity: g.opacity[gi],
+                    id: gi as u32,
+                });
+            }
+            start = end;
+        }
+        Ok(out)
+    }
+}
+
+/// Per-tile accumulation state carried across splat chunks.
+#[derive(Clone, Debug)]
+pub struct SplatState {
+    pub rgb: Vec<f32>, // 256 x 3
+    pub t: Vec<f32>,   // 256
+}
+
+impl SplatState {
+    pub fn fresh() -> SplatState {
+        SplatState { rgb: vec![0.0; TILE_PIXELS * 3], t: vec![1.0; TILE_PIXELS] }
+    }
+
+    /// Max remaining transmittance (early-termination test).
+    pub fn t_max(&self) -> f32 {
+        self.t.iter().cloned().fold(0.0, f32::max)
+    }
+}
+
+/// One K_CHUNK-sized splat call on a 16x16 tile.
+pub struct SplatChunk;
+
+impl SplatChunk {
+    /// Blend up to [`K_CHUNK`] splats (already depth-sorted) into the
+    /// tile state. `group` selects the SLTarch group-alpha artifact.
+    pub fn run(
+        engine: &PjrtEngine,
+        splats: &[Splat2D],
+        origin: (f32, f32),
+        state: &SplatState,
+        group: bool,
+    ) -> Result<SplatState> {
+        assert!(splats.len() <= K_CHUNK, "chunk too large: {}", splats.len());
+        let mut mean2d = vec![0.0f32; K_CHUNK * 2];
+        let mut conic = vec![0.0f32; K_CHUNK * 3];
+        // Padding conics must be SPD-ish to keep the kernel maths finite.
+        for i in splats.len()..K_CHUNK {
+            conic[i * 3] = 1.0;
+            conic[i * 3 + 2] = 1.0;
+        }
+        let mut color = vec![0.0f32; K_CHUNK * 3];
+        let mut opacity = vec![0.0f32; K_CHUNK]; // 0 => inert padding row
+        for (i, s) in splats.iter().enumerate() {
+            mean2d[i * 2] = s.mean.x;
+            mean2d[i * 2 + 1] = s.mean.y;
+            conic[i * 3..i * 3 + 3].copy_from_slice(&s.conic);
+            color[i * 3..i * 3 + 3].copy_from_slice(&s.color);
+            opacity[i] = s.opacity;
+        }
+        let exe = if group { &engine.splat_group } else { &engine.splat_pixel };
+        let outputs = PjrtEngine::run(
+            exe,
+            &[
+                lit2(&mean2d, K_CHUNK, 2)?,
+                lit2(&conic, K_CHUNK, 3)?,
+                lit2(&color, K_CHUNK, 3)?,
+                lit1(&opacity)?,
+                lit1(&[origin.0, origin.1])?,
+                lit2(&state.rgb, TILE_PIXELS, 3)?,
+                lit1(&state.t)?,
+            ],
+        )?;
+        Ok(SplatState {
+            rgb: outputs[0].to_vec::<f32>()?,
+            t: outputs[1].to_vec::<f32>()?,
+        })
+    }
+}

@@ -1,0 +1,23 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `python/compile/aot.py` lowers each entry point in `model.ENTRY_POINTS`
+//! to HLO **text** under `artifacts/`; this module loads those files via
+//! the `xla` crate (PJRT CPU client), compiles them once at startup, and
+//! exposes typed wrappers over the raw literal plumbing. Python never
+//! runs at render time — the rust binary is self-contained once
+//! `make artifacts` has produced the files.
+
+mod artifacts;
+mod engine;
+mod exec;
+
+pub use artifacts::{default_artifacts_dir, ArtifactSet};
+pub use engine::PjrtEngine;
+pub use exec::{ProjectBatch, SplatChunk, SplatState};
+
+/// Batch size of the projection artifact (`project_n256`).
+pub const PROJECT_N: usize = 256;
+/// Gaussian chunk size of the splat artifacts (`splat_*_k64`).
+pub const K_CHUNK: usize = 64;
+/// Pixels per tile (16 x 16).
+pub const TILE_PIXELS: usize = 256;

@@ -1,0 +1,319 @@
+//! Bottom-up LoD-tree construction over generated leaf Gaussians.
+//!
+//! Mirrors how HierarchicalGS builds its hierarchy: leaves are the
+//! trained Gaussians; each interior node is a *merged* Gaussian standing
+//! in for its children at coarser detail. Fan-out is deliberately
+//! heavy-tailed (`Rng::heavy_tail`) — the paper's trees have parents
+//! with >10^3 children, and that irregularity is precisely what SLTree
+//! has to tame. Spatial grouping uses a Morton order so siblings are
+//! spatially coherent.
+//!
+//! The finished tree is re-ordered to BFS (parents before children,
+//! siblings contiguous) and the Gaussian store is permuted along with it
+//! so that node id == Gaussian id.
+
+use crate::gaussian::Gaussians;
+use crate::lod::tree::{LodTree, Node, NONE};
+use crate::math::{Aabb, Quat, Vec3};
+use crate::util::Rng;
+
+/// Construction statistics (reported by `sltarch partition --stats`).
+#[derive(Clone, Debug, Default)]
+pub struct BuildStats {
+    pub leaves: usize,
+    pub interior: usize,
+    pub height: u32,
+    pub max_fanout: u32,
+    pub mean_fanout: f64,
+}
+
+/// Morton (Z-order) key from a quantized 3D position.
+fn morton3(p: Vec3, lo: Vec3, inv_extent: Vec3) -> u64 {
+    #[inline]
+    fn spread(x: u32) -> u64 {
+        // Spread the low 21 bits of x so consecutive bits are 3 apart.
+        let mut v = x as u64 & 0x1F_FFFF;
+        v = (v | (v << 32)) & 0x1F00000000FFFF;
+        v = (v | (v << 16)) & 0x1F0000FF0000FF;
+        v = (v | (v << 8)) & 0x100F00F00F00F00F;
+        v = (v | (v << 4)) & 0x10C30C30C30C30C3;
+        v = (v | (v << 2)) & 0x1249249249249249;
+        v
+    }
+    let q = |v: f32, lo: f32, inv: f32| -> u32 {
+        (((v - lo) * inv).clamp(0.0, 1.0) * ((1 << 21) - 1) as f32) as u32
+    };
+    spread(q(p.x, lo.x, inv_extent.x))
+        | (spread(q(p.y, lo.y, inv_extent.y)) << 1)
+        | (spread(q(p.z, lo.z, inv_extent.z)) << 2)
+}
+
+/// Merge a sibling group into one coarser parent Gaussian.
+fn merge_group(g: &Gaussians, children: &[u32]) -> (Vec3, Vec3, Quat, [f32; 3], f32) {
+    let n = children.len() as f32;
+    let mut mean = Vec3::ZERO;
+    let mut color = [0.0f32; 3];
+    let mut opacity = 0.0;
+    for &c in children {
+        mean += g.mean(c as usize);
+        for k in 0..3 {
+            color[k] += g.colors[c as usize][k];
+        }
+        opacity += g.opacity[c as usize];
+    }
+    mean = mean / n;
+    for k in &mut color {
+        *k /= n;
+    }
+    opacity /= n;
+    // Parent extent: spread of child centres plus the mean child scale,
+    // so the parent visually covers the set it stands in for.
+    let mut var = Vec3::ZERO;
+    let mut child_scale = Vec3::ZERO;
+    for &c in children {
+        let d = g.mean(c as usize) - mean;
+        var += d * d;
+        child_scale += g.scale(c as usize);
+    }
+    var = var / n;
+    child_scale = child_scale / n;
+    let scale = Vec3::new(
+        (var.x.sqrt() + child_scale.x).max(1e-4),
+        (var.y.sqrt() + child_scale.y).max(1e-4),
+        (var.z.sqrt() + child_scale.z).max(1e-4),
+    );
+    (mean, scale, Quat::IDENTITY, color, opacity)
+}
+
+/// Build the LoD tree over `leaves`, permuting the store to BFS order.
+///
+/// `mean_fanout` sets the centre of the heavy-tailed sibling-group size
+/// distribution (the paper's trees are irregular; 4-8 reproduces the
+/// HierarchicalGS skew); `max_fanout` caps it (paper observes ~10^3).
+pub fn build_lod_tree(
+    leaves: Gaussians,
+    seed: u64,
+    mean_fanout: f32,
+    max_fanout: usize,
+) -> (Gaussians, LodTree, BuildStats) {
+    assert!(!leaves.is_empty(), "cannot build a tree over zero leaves");
+    // Seed-mix so the builder's stream is independent of the generator's.
+    let mut rng = Rng::new(seed ^ 0x7AEE_5EED_0000_0001);
+    let n_leaves = leaves.len();
+
+    // Working store: starts as the leaves; interior nodes appended.
+    let mut store = leaves;
+    // parent link per working node (NONE until assigned).
+    let mut parent: Vec<u32> = vec![NONE; n_leaves];
+    // children lists per interior node (indexed by working id).
+    let mut children_of: Vec<Vec<u32>> = vec![Vec::new(); n_leaves];
+
+    // Scene bounds for Morton keys.
+    let mut bounds = Aabb::EMPTY;
+    for i in 0..store.len() {
+        bounds.grow(store.mean(i));
+    }
+    let ext = bounds.max - bounds.min;
+    let inv = Vec3::new(
+        1.0 / ext.x.max(1e-6),
+        1.0 / ext.y.max(1e-6),
+        1.0 / ext.z.max(1e-6),
+    );
+
+    let mut level: Vec<u32> = (0..n_leaves as u32).collect();
+    let mut levels_up = 0u32;
+    let mut max_fan = 0u32;
+    let mut fan_sum = 0u64;
+    let mut fan_cnt = 0u64;
+
+    while level.len() > 1 {
+        // Spatial order within the level.
+        level.sort_by_key(|&i| morton3(store.mean(i as usize), bounds.min, inv));
+        let mut next = Vec::with_capacity(level.len() / 2 + 1);
+        let mut pos = 0usize;
+        while pos < level.len() {
+            let want = rng.heavy_tail(mean_fanout, max_fanout);
+            let take = want.min(level.len() - pos).max(1);
+            // Never leave a singleton remainder group at the level end
+            // unless the level itself is a singleton.
+            let take = if level.len() - pos - take == 1 { take + 1 } else { take };
+            let group = &level[pos..pos + take];
+            pos += take;
+            if group.len() == 1 && level.len() == 1 {
+                next.push(group[0]);
+                continue;
+            }
+            let (mean, scale, quat, color, opacity) = merge_group(&store, group);
+            let pid = store.push(mean, scale, quat, color, opacity) as u32;
+            parent.push(NONE);
+            children_of.push(group.to_vec());
+            for &c in group {
+                parent[c as usize] = pid;
+            }
+            max_fan = max_fan.max(group.len() as u32);
+            fan_sum += group.len() as u64;
+            fan_cnt += 1;
+            next.push(pid);
+        }
+        level = next;
+        levels_up += 1;
+        debug_assert!(levels_up < 64, "tree build diverged");
+    }
+    let root_working = level[0];
+
+    // ---- BFS reorder: working ids -> final ids --------------------------
+    let total = store.len();
+    let mut order = Vec::with_capacity(total); // final order: working ids
+    let mut queue = std::collections::VecDeque::new();
+    queue.push_back(root_working);
+    while let Some(w) = queue.pop_front() {
+        order.push(w);
+        for &c in &children_of[w as usize] {
+            queue.push_back(c);
+        }
+    }
+    assert_eq!(order.len(), total, "disconnected nodes in tree build");
+    let mut new_id = vec![0u32; total];
+    for (fid, &w) in order.iter().enumerate() {
+        new_id[w as usize] = fid as u32;
+    }
+
+    // Permute the Gaussian store into BFS order.
+    let gaussians = store.gather(&order);
+
+    // Build the final node array.
+    let mut nodes = Vec::with_capacity(total);
+    for &w in &order {
+        let kids = &children_of[w as usize];
+        let first_child = kids.iter().map(|&c| new_id[c as usize]).min().unwrap_or(0);
+        // BFS layout makes siblings contiguous: verify in debug builds.
+        #[cfg(debug_assertions)]
+        if !kids.is_empty() {
+            let mut ids: Vec<u32> = kids.iter().map(|&c| new_id[c as usize]).collect();
+            ids.sort_unstable();
+            for (a, b) in ids.iter().zip(ids.iter().skip(1)) {
+                debug_assert_eq!(b - a, 1, "siblings not contiguous");
+            }
+        }
+        nodes.push(Node {
+            parent: if parent[w as usize] == NONE {
+                NONE
+            } else {
+                new_id[parent[w as usize] as usize]
+            },
+            first_child,
+            child_count: kids.len() as u32,
+            level: 0, // filled below
+        });
+    }
+    // Levels: root 0, child = parent + 1 (BFS order => single pass).
+    for i in 1..total {
+        let p = nodes[i].parent as usize;
+        nodes[i].level = nodes[p].level + 1;
+    }
+    let height = nodes.iter().map(|n| n.level as u32).max().unwrap_or(0) + 1;
+
+    // AABBs bottom-up + world sizes.
+    let mut aabbs = vec![Aabb::EMPTY; total];
+    let mut world_size = vec![0.0f32; total];
+    for i in (0..total).rev() {
+        let own = gaussians.aabb(i, 3.0);
+        aabbs[i] = aabbs[i].union(&own);
+        world_size[i] = own.longest_edge();
+        let p = nodes[i].parent;
+        if p != NONE {
+            aabbs[p as usize] = aabbs[p as usize].union(&aabbs[i]);
+        }
+    }
+
+    let tree = LodTree { nodes, aabbs, world_size, height };
+    let stats = BuildStats {
+        leaves: n_leaves,
+        interior: total - n_leaves,
+        height,
+        max_fanout: max_fan,
+        mean_fanout: if fan_cnt > 0 { fan_sum as f64 / fan_cnt as f64 } else { 0.0 },
+    };
+    (gaussians, tree, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::generator::{GeneratorKind, SceneSpec};
+
+    fn small() -> (Gaussians, LodTree, BuildStats) {
+        let spec = SceneSpec { kind: GeneratorKind::Room, leaves: 3_000, extent: 10.0 };
+        build_lod_tree(spec.generate(42), 42, 6.0, 512)
+    }
+
+    #[test]
+    fn tree_invariants() {
+        let (g, tree, stats) = small();
+        assert_eq!(g.len(), tree.len());
+        tree.check_invariants().unwrap();
+        assert_eq!(stats.leaves + stats.interior, tree.len());
+        assert!(stats.height >= 3, "height {}", stats.height);
+    }
+
+    #[test]
+    fn fanout_is_heavy_tailed() {
+        let (_, tree, stats) = small();
+        assert!(stats.max_fanout as f64 > stats.mean_fanout * 4.0,
+            "max {} vs mean {}", stats.max_fanout, stats.mean_fanout);
+        // Unfixed child counts: at least 3 distinct fanouts must occur.
+        let mut distinct = std::collections::HashSet::new();
+        for n in &tree.nodes {
+            if n.child_count > 0 {
+                distinct.insert(n.child_count);
+            }
+        }
+        assert!(distinct.len() >= 3, "fanouts too regular: {distinct:?}");
+    }
+
+    #[test]
+    fn interior_nodes_are_coarser() {
+        let (_, tree, _) = small();
+        // A parent's world_size should generally exceed its children's
+        // (coarser detail higher up). Check on average.
+        let mut coarser = 0u32;
+        let mut total = 0u32;
+        for (i, n) in tree.nodes.iter().enumerate() {
+            for c in tree.children(i as u32) {
+                total += 1;
+                if tree.world_size[i] >= tree.world_size[c as usize] {
+                    coarser += 1;
+                }
+            }
+            let _ = n;
+        }
+        assert!(coarser as f64 / total as f64 > 0.85,
+            "hierarchy not coarsening: {coarser}/{total}");
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let (g1, t1, _) = small();
+        let (g2, t2, _) = small();
+        assert_eq!(g1.means, g2.means);
+        assert_eq!(t1.len(), t2.len());
+        for (a, b) in t1.nodes.iter().zip(t2.nodes.iter()) {
+            assert_eq!(a.parent, b.parent);
+            assert_eq!(a.child_count, b.child_count);
+        }
+    }
+
+    #[test]
+    fn leaves_survive_into_tree() {
+        let (g, tree, stats) = small();
+        let leaf_count = tree.nodes.iter().filter(|n| n.is_leaf()).count();
+        assert_eq!(leaf_count, stats.leaves);
+        let _ = g;
+    }
+
+    #[test]
+    #[should_panic(expected = "zero leaves")]
+    fn empty_input_panics() {
+        build_lod_tree(Gaussians::default(), 1, 4.0, 64);
+    }
+}

@@ -1,0 +1,118 @@
+//! Evaluation camera scenarios.
+//!
+//! The HierarchicalGS dataset pairs each scene with six rendering
+//! scenarios; we reproduce the *sweep structure* the paper's figures
+//! rely on: scenarios 0..5 move the camera progressively farther out
+//! (and orbit), so the LoD cut migrates upward and the Fig. 2 bottleneck
+//! shift (splatting-bound -> LoD-search-bound) appears naturally.
+
+use crate::math::{Camera, Intrinsics, Vec3};
+
+/// Six scenario cameras for a scene of half-extent `extent`, orbiting
+/// the origin at increasing range and elevation.
+pub fn scenario_cameras(extent: f32, width: u32, height: u32) -> Vec<Camera> {
+    let intr = Intrinsics::from_fov(width, height, 60f32.to_radians());
+    // Near interior view -> far aerial view.
+    let ranges = [0.35, 0.6, 0.9, 1.3, 1.9, 2.6];
+    let angles = [0.0f32, 0.9, 1.9, 2.9, 4.1, 5.3];
+    let heights = [0.08, 0.15, 0.3, 0.5, 0.8, 1.1];
+    ranges
+        .iter()
+        .zip(angles.iter())
+        .zip(heights.iter())
+        .map(|((&r, &a), &h)| {
+            let eye = Vec3::new(
+                extent * r * a.cos(),
+                extent * h,
+                extent * r * a.sin(),
+            );
+            Camera::look_at(eye, Vec3::ZERO, Vec3::new(0.0, 1.0, 0.0), intr)
+        })
+        .collect()
+}
+
+/// A smooth orbital path of `n` cameras at fixed range (ablation sweeps).
+pub fn orbit_cameras(extent: f32, range: f32, n: usize, width: u32, height: u32) -> Vec<Camera> {
+    let intr = Intrinsics::from_fov(width, height, 60f32.to_radians());
+    (0..n)
+        .map(|i| {
+            let a = i as f32 / n as f32 * std::f32::consts::TAU;
+            let eye = Vec3::new(
+                extent * range * a.cos(),
+                extent * 0.3,
+                extent * range * a.sin(),
+            );
+            Camera::look_at(eye, Vec3::ZERO, Vec3::new(0.0, 1.0, 0.0), intr)
+        })
+        .collect()
+}
+
+/// A VR-walkthrough trajectory: dolly in from afar, swing through the
+/// scene centre, and pull back out — `n` frames covering near and far
+/// regimes (used by `examples/vr_walkthrough.rs`).
+pub fn walkthrough(extent: f32, n: usize, width: u32, height: u32) -> Vec<Camera> {
+    let intr = Intrinsics::from_fov(width, height, 60f32.to_radians());
+    (0..n)
+        .map(|i| {
+            let t = i as f32 / (n - 1).max(1) as f32; // 0..1
+            // Range: far -> near -> far (cosine ease).
+            let range = 0.35 + 1.8 * (std::f32::consts::PI * (t * 2.0 - 1.0)).cos().mul_add(-0.5, 0.5).max(0.0);
+            let a = t * std::f32::consts::TAU * 0.75;
+            let eye = Vec3::new(
+                extent * range * a.cos(),
+                extent * (0.12 + 0.5 * t),
+                extent * range * a.sin(),
+            );
+            let target = Vec3::new(0.0, extent * 0.05, 0.0);
+            Camera::look_at(eye, target, Vec3::new(0.0, 1.0, 0.0), intr)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_scenarios_increasing_range() {
+        let cams = scenario_cameras(100.0, 256, 256);
+        assert_eq!(cams.len(), 6);
+        let mut last = 0.0;
+        for c in &cams {
+            let r = c.eye().length();
+            assert!(r > last, "ranges must increase: {r} <= {last}");
+            last = r;
+        }
+    }
+
+    #[test]
+    fn cameras_look_at_origin() {
+        for c in scenario_cameras(50.0, 256, 256) {
+            // Origin should project near the principal point.
+            let d = c.depth(Vec3::ZERO);
+            assert!(d > 0.0, "origin must be in front of the camera");
+        }
+    }
+
+    #[test]
+    fn walkthrough_covers_near_and_far() {
+        let cams = walkthrough(80.0, 32, 256, 256);
+        assert_eq!(cams.len(), 32);
+        let ranges: Vec<f32> = cams.iter().map(|c| c.eye().length()).collect();
+        let min = ranges.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = ranges.iter().cloned().fold(0.0f32, f32::max);
+        assert!(max / min > 2.0, "trajectory too flat: {min}..{max}");
+    }
+
+    #[test]
+    fn orbit_is_closed_loop() {
+        let cams = orbit_cameras(50.0, 1.0, 8, 128, 128);
+        assert_eq!(cams.len(), 8);
+        for c in &cams {
+            assert!((c.eye().length()
+                - (50.0f32.powi(2) + 15.0f32.powi(2)).sqrt())
+            .abs()
+                < 1.0);
+        }
+    }
+}

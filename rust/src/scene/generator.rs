@@ -1,0 +1,245 @@
+//! Procedural leaf-Gaussian generators.
+//!
+//! Three generators cover the workload regimes of the paper's scenes:
+//! `Room` (small-scale indoor: dense, near geometry), `City` (large-scale
+//! urban: street grid of building blocks, the HierarchicalGS "large
+//! scene" analogue) and `Terrain` (height-field with scattered clutter,
+//! exercising wide flat cuts).
+
+use crate::gaussian::Gaussians;
+use crate::math::{Quat, Vec3};
+use crate::util::Rng;
+
+/// Which procedural world to build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GeneratorKind {
+    Room,
+    City,
+    Terrain,
+}
+
+/// Scene recipe: generator + leaf budget + world extent.
+#[derive(Clone, Debug)]
+pub struct SceneSpec {
+    pub kind: GeneratorKind,
+    /// Number of *leaf* Gaussians (interior LoD nodes come on top).
+    pub leaves: usize,
+    /// World half-extent in metres.
+    pub extent: f32,
+}
+
+impl SceneSpec {
+    pub fn generate(&self, seed: u64) -> Gaussians {
+        let mut rng = Rng::new(seed);
+        match self.kind {
+            GeneratorKind::Room => room(&mut rng, self.leaves, self.extent),
+            GeneratorKind::City => city(&mut rng, self.leaves, self.extent),
+            GeneratorKind::Terrain => terrain(&mut rng, self.leaves, self.extent),
+        }
+    }
+}
+
+fn rand_quat(rng: &mut Rng) -> Quat {
+    Quat::new(rng.normal(), rng.normal(), rng.normal(), rng.normal())
+}
+
+fn push_leaf(g: &mut Gaussians, rng: &mut Rng, p: Vec3, size: f32, color: [f32; 3]) {
+    let scale = Vec3::new(
+        size * rng.range(0.5, 1.5),
+        size * rng.range(0.5, 1.5),
+        size * rng.range(0.5, 1.5),
+    );
+    let quat = rand_quat(rng);
+    let mut jitter = |c: f32| (c + rng.range(-0.1, 0.1)).clamp(0.0, 1.0);
+    let color = [jitter(color[0]), jitter(color[1]), jitter(color[2])];
+    let opacity = rng.range(0.35, 0.95);
+    g.push(p, scale, quat, color, opacity);
+}
+
+/// Indoor room: walls/floor shells plus furniture-like clusters.
+fn room(rng: &mut Rng, leaves: usize, extent: f32) -> Gaussians {
+    let mut g = Gaussians::with_capacity(leaves);
+    let e = extent;
+    // Leaf size tracks the surface sampling spacing so the Gaussians
+    // tile surfaces like trained 3DGS leaves do (keeps the LoD-tree
+    // parent/child size ratio scale-invariant).
+    let unit = e / (leaves as f32).sqrt();
+    // 60% surfaces (walls, floor, ceiling), 40% object clusters.
+    let n_surface = leaves * 6 / 10;
+    for _ in 0..n_surface {
+        let wall = rng.below(5);
+        let (p, color) = match wall {
+            0 => (Vec3::new(rng.range(-e, e), -e, rng.range(-e, e)), [0.55, 0.45, 0.35]),
+            1 => (Vec3::new(rng.range(-e, e), e, rng.range(-e, e)), [0.9, 0.9, 0.85]),
+            2 => (Vec3::new(-e, rng.range(-e, e), rng.range(-e, e)), [0.75, 0.7, 0.6]),
+            3 => (Vec3::new(e, rng.range(-e, e), rng.range(-e, e)), [0.75, 0.7, 0.6]),
+            _ => (Vec3::new(rng.range(-e, e), rng.range(-e, e), e), [0.7, 0.72, 0.75]),
+        };
+        push_leaf(&mut g, rng, p, 1.8 * unit, color);
+    }
+    // Object clusters.
+    let n_clusters = 24.max(leaves / 4000);
+    let cluster_centers: Vec<Vec3> = (0..n_clusters)
+        .map(|_| {
+            Vec3::new(
+                rng.range(-e * 0.8, e * 0.8),
+                rng.range(-e * 0.9, -e * 0.2),
+                rng.range(-e * 0.8, e * 0.8),
+            )
+        })
+        .collect();
+    let palette = [[0.8, 0.2, 0.2], [0.2, 0.5, 0.8], [0.3, 0.7, 0.3], [0.85, 0.7, 0.2]];
+    while g.len() < leaves {
+        let ci = rng.below(cluster_centers.len());
+        let c = cluster_centers[ci];
+        let p = c + Vec3::new(rng.normal(), rng.normal(), rng.normal()) * (e * 0.05);
+        push_leaf(&mut g, rng, p, 1.5 * unit, palette[ci % palette.len()]);
+    }
+    g
+}
+
+/// Urban grid: building blocks along streets, ground plane, canopy trees.
+/// The density varies strongly block-to-block, which is what makes the
+/// large-scale LoD cut view-dependent and imbalanced.
+fn city(rng: &mut Rng, leaves: usize, extent: f32) -> Gaussians {
+    let mut g = Gaussians::with_capacity(leaves);
+    let e = extent;
+    // See `room`: leaf size tracks sampling spacing.
+    let unit = e / (leaves as f32).sqrt();
+    let blocks = 8; // 8x8 street grid
+    let block_w = 2.0 * e / blocks as f32;
+
+    // Per-block density weights: heavy-tailed (downtown vs suburbs).
+    let mut weights = Vec::with_capacity(blocks * blocks);
+    for _ in 0..blocks * blocks {
+        weights.push(rng.heavy_tail(4.0, 400) as f32);
+    }
+    let wsum: f32 = weights.iter().sum();
+
+    // 20% ground, 70% buildings, 10% canopy.
+    let n_ground = leaves / 5;
+    for _ in 0..n_ground {
+        let p = Vec3::new(rng.range(-e, e), 0.0, rng.range(-e, e));
+        push_leaf(&mut g, rng, p, 2.0 * unit, [0.4, 0.4, 0.42]);
+    }
+    let n_buildings = leaves * 7 / 10;
+    for _ in 0..n_buildings {
+        // Pick a block by weight.
+        let mut pick = rng.f32() * wsum;
+        let mut bi = 0;
+        for (i, w) in weights.iter().enumerate() {
+            pick -= w;
+            if pick <= 0.0 {
+                bi = i;
+                break;
+            }
+        }
+        let bx = (bi % blocks) as f32;
+        let bz = (bi / blocks) as f32;
+        let cx = -e + (bx + 0.5) * block_w;
+        let cz = -e + (bz + 0.5) * block_w;
+        let height = e * 0.05 + weights[bi] / wsum * e * 4.0;
+        // Points on the building shell.
+        let u = rng.range(-0.35, 0.35) * block_w;
+        let v = rng.range(-0.35, 0.35) * block_w;
+        let y = rng.range(0.0, height);
+        let face = rng.below(4);
+        let (px, pz) = match face {
+            0 => (cx + u, cz - 0.35 * block_w),
+            1 => (cx + u, cz + 0.35 * block_w),
+            2 => (cx - 0.35 * block_w, cz + v),
+            _ => (cx + 0.35 * block_w, cz + v),
+        };
+        let shade = rng.range(0.5, 0.85);
+        push_leaf(&mut g, rng, Vec3::new(px, y, pz), 1.5 * unit, [shade, shade * 0.95, shade * 0.9]);
+    }
+    while g.len() < leaves {
+        // Canopy: clumps along streets.
+        let p = Vec3::new(
+            rng.range(-e, e),
+            rng.range(e * 0.01, e * 0.04),
+            rng.range(-e, e),
+        );
+        push_leaf(&mut g, rng, p, 2.5 * unit, [0.2, 0.55, 0.25]);
+    }
+    g
+}
+
+/// Rolling terrain with scattered rocks/bushes.
+fn terrain(rng: &mut Rng, leaves: usize, extent: f32) -> Gaussians {
+    let mut g = Gaussians::with_capacity(leaves);
+    let e = extent;
+    // See `room`: leaf size tracks sampling spacing.
+    let unit = e / (leaves as f32).sqrt();
+    let height = |x: f32, z: f32| -> f32 {
+        let fx = x / e * 3.0;
+        let fz = z / e * 3.0;
+        (fx.sin() * fz.cos() + (fx * 2.3).sin() * 0.4 + (fz * 1.7).cos() * 0.3)
+            * e
+            * 0.08
+    };
+    let n_ground = leaves * 8 / 10;
+    for _ in 0..n_ground {
+        let x = rng.range(-e, e);
+        let z = rng.range(-e, e);
+        let y = height(x, z);
+        let green = rng.range(0.35, 0.6);
+        push_leaf(&mut g, rng, Vec3::new(x, y, z), 1.8 * unit, [0.25, green, 0.2]);
+    }
+    while g.len() < leaves {
+        let x = rng.range(-e, e);
+        let z = rng.range(-e, e);
+        let y = height(x, z) + rng.range(0.0, e * 0.02);
+        push_leaf(&mut g, rng, Vec3::new(x, y, z), 2.5 * unit, [0.5, 0.45, 0.4]);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_hit_leaf_budget() {
+        for kind in [GeneratorKind::Room, GeneratorKind::City, GeneratorKind::Terrain] {
+            let spec = SceneSpec { kind, leaves: 5_000, extent: 20.0 };
+            let g = spec.generate(1);
+            assert_eq!(g.len(), 5_000, "{kind:?}");
+            // All attributes in sane ranges.
+            for i in 0..g.len() {
+                assert!(g.opacity[i] > 0.0 && g.opacity[i] <= 1.0);
+                let s = g.scale(i);
+                assert!(s.x > 0.0 && s.y > 0.0 && s.z > 0.0);
+                for c in g.colors[i] {
+                    assert!((0.0..=1.0).contains(&c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = SceneSpec { kind: GeneratorKind::City, leaves: 2_000, extent: 50.0 };
+        let a = spec.generate(7);
+        let b = spec.generate(7);
+        assert_eq!(a.means, b.means);
+        assert_eq!(a.opacity, b.opacity);
+    }
+
+    #[test]
+    fn city_blocks_have_skewed_density() {
+        let spec = SceneSpec { kind: GeneratorKind::City, leaves: 20_000, extent: 100.0 };
+        let g = spec.generate(3);
+        // Histogram leaves into the 8x8 block grid; expect strong skew.
+        let mut hist = [0u32; 64];
+        for i in 0..g.len() {
+            let m = g.mean(i);
+            let bx = (((m.x + 100.0) / 25.0) as usize).min(7);
+            let bz = (((m.z + 100.0) / 25.0) as usize).min(7);
+            hist[bz * 8 + bx] += 1;
+        }
+        let max = *hist.iter().max().unwrap() as f64;
+        let min = *hist.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) > 3.0, "density not skewed: {max} vs {min}");
+    }
+}

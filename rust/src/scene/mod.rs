@@ -1,0 +1,42 @@
+//! Synthetic scene substrate.
+//!
+//! The paper evaluates on the HierarchicalGS dataset (two scenes × six
+//! scenarios) which is not available here; this module builds procedural
+//! stand-ins that reproduce the *structural* properties the experiments
+//! depend on (DESIGN.md §2):
+//!
+//! * heavy-tailed LoD-tree fan-out (single parents with up to 10^3
+//!   children, tree height >= ~10) — the source of workload imbalance,
+//! * spatially clustered geometry (streets/rooms) — the source of
+//!   view-dependent cuts,
+//! * scenario cameras sweeping near->far — the source of the Fig. 2
+//!   bottleneck shift.
+
+mod builder;
+mod camera_path;
+mod generator;
+
+pub use builder::{build_lod_tree, BuildStats};
+pub use camera_path::{orbit_cameras, scenario_cameras, walkthrough};
+pub use generator::{GeneratorKind, SceneSpec};
+
+use crate::gaussian::Gaussians;
+use crate::lod::LodTree;
+use crate::math::Camera;
+
+/// A complete renderable scene: Gaussians, their LoD tree (node i ==
+/// Gaussian i) and the evaluation cameras.
+#[derive(Clone, Debug)]
+pub struct Scene {
+    pub name: String,
+    pub gaussians: Gaussians,
+    pub tree: LodTree,
+    pub cameras: Vec<Camera>,
+}
+
+impl Scene {
+    /// The i-th evaluation scenario camera (wraps around).
+    pub fn scenario_camera(&self, i: usize) -> Camera {
+        self.cameras[i % self.cameras.len()]
+    }
+}

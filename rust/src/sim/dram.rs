@@ -1,0 +1,93 @@
+//! DRAM / SRAM traffic accounting.
+//!
+//! Distinguishes the two access patterns the paper's energy argument
+//! rests on: *streaming* bursts (whole subtrees, whole attribute
+//! slabs — what SLTree guarantees) and *random* row-activating accesses
+//! (pointer-chasing tree walks — what canonical LoD trees cause).
+
+use crate::config::DramConfig;
+
+/// Accumulated memory traffic for one simulated stage.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Traffic {
+    pub dram_stream_bytes: u64,
+    pub dram_random_bytes: u64,
+    pub sram_bytes: u64,
+}
+
+impl Traffic {
+    pub fn stream(bytes: u64) -> Traffic {
+        Traffic { dram_stream_bytes: bytes, ..Default::default() }
+    }
+
+    pub fn random(bytes: u64) -> Traffic {
+        Traffic { dram_random_bytes: bytes, ..Default::default() }
+    }
+
+    pub fn sram(bytes: u64) -> Traffic {
+        Traffic { sram_bytes: bytes, ..Default::default() }
+    }
+
+    pub fn add(&mut self, o: Traffic) {
+        self.dram_stream_bytes += o.dram_stream_bytes;
+        self.dram_random_bytes += o.dram_random_bytes;
+        self.sram_bytes += o.sram_bytes;
+    }
+
+    #[inline]
+    pub fn dram_total(&self) -> u64 {
+        self.dram_stream_bytes + self.dram_random_bytes
+    }
+
+    /// Energy in pJ under the config's per-byte costs.
+    pub fn energy_pj(&self, cfg: &DramConfig) -> f64 {
+        self.dram_stream_bytes as f64 * cfg.stream_pj_per_byte
+            + self.dram_random_bytes as f64 * cfg.random_pj_per_byte()
+            + self.sram_bytes as f64 * cfg.sram_pj_per_byte
+    }
+
+    /// Cycles the DRAM needs to move this traffic (bandwidth bound;
+    /// random accesses additionally pay the row-activation latency
+    /// amortized per 64 B transaction).
+    pub fn dram_cycles(&self, cfg: &DramConfig) -> u64 {
+        let bw = cfg.peak_bytes_per_cycle();
+        let stream = self.dram_stream_bytes as f64 / bw;
+        let txns = self.dram_random_bytes.div_ceil(64);
+        let random = self.dram_random_bytes as f64 / bw
+            + (txns * cfg.random_latency_cycles) as f64 / cfg.channels as f64;
+        (stream + random).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_ratios_respect_config() {
+        let cfg = DramConfig::default();
+        let s = Traffic::stream(1000).energy_pj(&cfg);
+        let r = Traffic::random(1000).energy_pj(&cfg);
+        let m = Traffic::sram(1000).energy_pj(&cfg);
+        assert!((r / s - 3.0).abs() < 1e-9, "non-stream:stream must be 3:1");
+        assert!((r / m - 25.0).abs() < 1e-9, "random DRAM:SRAM must be 25:1");
+    }
+
+    #[test]
+    fn random_costs_more_cycles_than_streaming() {
+        let cfg = DramConfig::default();
+        let s = Traffic::stream(1 << 20).dram_cycles(&cfg);
+        let r = Traffic::random(1 << 20).dram_cycles(&cfg);
+        assert!(r > 2 * s, "random {r} vs stream {s}");
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut t = Traffic::default();
+        t.add(Traffic::stream(10));
+        t.add(Traffic::random(20));
+        t.add(Traffic::sram(30));
+        assert_eq!(t.dram_total(), 30);
+        assert_eq!(t.sram_bytes, 30);
+    }
+}

@@ -1,0 +1,109 @@
+//! Energy accounting.
+//!
+//! Two regimes, as in the paper's Fig. 10 analysis:
+//!
+//! * the **GPU** is power-modelled (board watts x busy seconds, scaled
+//!   to 16 nm a la DeepScaleTool) — "GPU power is the primary energy
+//!   contributor";
+//! * the **accelerators** are op-energy-modelled: pJ per unit operation
+//!   (16 nm-scale constants) plus the SRAM/DRAM traffic from
+//!   [`super::dram::Traffic`].
+
+use super::dram::Traffic;
+use crate::config::{DramConfig, GpuConfig};
+
+/// 16 nm-scale per-op energies (pJ). Constants are in line with
+/// published per-op numbers for FinFET-class accelerators (a fused MADD
+/// ~0.5-1 pJ, a transcendental several pJ, SRAM per-byte ~0.1-0.3 pJ —
+/// the DRAM side carries the ratios the paper states explicitly).
+pub mod op_pj {
+    /// AABB-frustum + LoD compare in an LT unit.
+    pub const NODE_TEST: f64 = 1.2;
+    /// Projection of one Gaussian (EWA: ~60 MADDs).
+    pub const PROJECT: f64 = 30.0;
+    /// One comparator exchange in a sorting network.
+    pub const SORT_CMP: f64 = 0.4;
+    /// Full alpha evaluation with exp (GSCore VR unit / GPU lane).
+    pub const ALPHA_EXP: f64 = 4.0;
+    /// Exponent-power compare (SP-unit alpha check; no exp).
+    pub const ALPHA_CHECK: f64 = 0.8;
+    /// One blend MADD chain (colour accumulate + T update).
+    pub const BLEND: f64 = 1.5;
+    /// kd-tree stack push/pop (QuickNN/Crescent traceback).
+    pub const STACK_OP: f64 = 0.6;
+}
+
+/// Energy tally in pJ with a breakdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Energy {
+    pub compute_pj: f64,
+    pub memory_pj: f64,
+    pub gpu_pj: f64,
+}
+
+impl Energy {
+    pub fn total_pj(&self) -> f64 {
+        self.compute_pj + self.memory_pj + self.gpu_pj
+    }
+
+    pub fn total_mj(&self) -> f64 {
+        self.total_pj() * 1e-9
+    }
+
+    pub fn add(&mut self, o: Energy) {
+        self.compute_pj += o.compute_pj;
+        self.memory_pj += o.memory_pj;
+        self.gpu_pj += o.gpu_pj;
+    }
+
+    /// Accelerator-side energy: op counts x per-op pJ + traffic.
+    pub fn accel(compute_pj: f64, traffic: &Traffic, dram: &DramConfig) -> Energy {
+        Energy {
+            compute_pj,
+            memory_pj: traffic.energy_pj(dram),
+            gpu_pj: 0.0,
+        }
+    }
+
+    /// GPU-side energy: busy seconds x board power (+ its DRAM traffic,
+    /// which is already part of board power — kept separate at 0 to
+    /// avoid double counting).
+    pub fn gpu(busy_seconds: f64, cfg: &GpuConfig) -> Energy {
+        Energy {
+            compute_pj: 0.0,
+            memory_pj: 0.0,
+            gpu_pj: busy_seconds * cfg.power_w * 1e12,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_energy_scales_with_time() {
+        let cfg = GpuConfig::default();
+        let e1 = Energy::gpu(0.01, &cfg);
+        let e2 = Energy::gpu(0.02, &cfg);
+        assert!((e2.total_pj() / e1.total_pj() - 2.0).abs() < 1e-12);
+        // 10 ms at 15 W = 150 mJ.
+        assert!((e1.total_mj() - 150.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accel_energy_combines_compute_and_memory() {
+        let dram = DramConfig::default();
+        let t = Traffic::stream(1_000_000);
+        let e = Energy::accel(5e6, &t, &dram);
+        assert!(e.compute_pj > 0.0 && e.memory_pj > 0.0);
+        assert_eq!(e.gpu_pj, 0.0);
+        assert!((e.total_pj() - (5e6 + 8e6)).abs() < 1.0);
+    }
+
+    #[test]
+    fn alpha_check_is_much_cheaper_than_exp() {
+        // The SP unit's reason to exist.
+        assert!(op_pj::ALPHA_EXP / op_pj::ALPHA_CHECK >= 4.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Mobile-Ampere SIMT timing/energy model (the paper's GPU baseline).
+//!
+//! Trace-driven: replays the frame workloads through a lockstep-warp
+//! machine with divergence masking, an exhaustive LoD search (what
+//! HierarchicalGS ships to sidestep GPU tree imbalance — Sec. II-B),
+//! and a sustained-issue-efficiency factor calibrated to Orin-class
+//! parts. Energy is power x busy-time, as the paper measures via the
+//! Nvidia power monitor API (then DeepScale-scaled).
+
+use super::dram::Traffic;
+use super::energy::Energy;
+use super::report::StageResult;
+use super::workload::{LodWorkload, SplatWorkload, NODE_BYTES};
+
+/// Bytes per node the GPU's exhaustive search reads: unlike LTCore's
+/// preprocessed 36 B cache entries, the GPU kernel loads the raw
+/// Gaussian attributes (mean 12 + scale 12 + quat 16 + hierarchy 20)
+/// and recomputes the projected dimension per node.
+pub const GPU_NODE_BYTES: u64 = 60;
+use crate::config::{DramConfig, GpuConfig};
+
+/// Effective parallel lanes the GPU sustains.
+fn effective_lanes(cfg: &GpuConfig) -> f64 {
+    (cfg.sms * cfg.warp_lanes * cfg.warps_per_sm) as f64 * cfg.issue_efficiency
+}
+
+/// Effective warp-issue slots per cycle.
+fn effective_warp_slots(cfg: &GpuConfig) -> f64 {
+    (cfg.sms * cfg.warps_per_sm) as f64 * cfg.issue_efficiency
+}
+
+/// Exhaustive LoD search on the GPU: every tree node is streamed and
+/// tested (perfectly balanced, massively wasteful — the baseline's
+/// trade). Memory-bound on large scenes, which is exactly the paper's
+/// "LoD search dominates at scale" observation.
+pub fn lod_exhaustive(
+    w: &LodWorkload,
+    cfg: &GpuConfig,
+    dram: &DramConfig,
+) -> StageResult {
+    let compute =
+        (w.total_nodes * cfg.node_test_cycles) as f64 / effective_lanes(cfg);
+    let traffic = Traffic::stream(w.total_nodes * GPU_NODE_BYTES);
+    let mem = traffic.dram_cycles(dram) as f64;
+    let cycles = compute.max(mem).ceil() as u64;
+    let seconds = cycles as f64 / (cfg.clock_ghz * 1e9);
+    StageResult {
+        cycles,
+        seconds,
+        traffic,
+        energy: Energy::gpu(seconds, cfg),
+    }
+}
+
+/// Hierarchical LoD search on the GPU with the naive static
+/// one-thread-per-subtree schedule: the makespan is the slowest
+/// thread's walk, with irregular pointer-chase misses stalling it
+/// (Fig. 3's regime; used by the Fig. 11 comparison axis).
+pub fn lod_hierarchical(
+    w: &LodWorkload,
+    cfg: &GpuConfig,
+    dram: &DramConfig,
+) -> StageResult {
+    let max_load = w.naive_thread_loads.iter().copied().max().unwrap_or(0);
+    let visited: u64 = w.naive_thread_loads.iter().sum();
+    // The slowest thread serializes the kernel; each of its node visits
+    // pays the test plus an expected irregular-miss stall.
+    let per_node = cfg.node_test_cycles as f64
+        + cfg.tree_miss_rate * cfg.irregular_miss_cycles as f64;
+    let cycles = (max_load as f64 * per_node).ceil() as u64;
+    let random_bytes = (visited as f64 * cfg.tree_miss_rate) as u64 * NODE_BYTES;
+    let sram_bytes = visited * NODE_BYTES - random_bytes;
+    let mut traffic = Traffic::random(random_bytes);
+    traffic.add(Traffic::sram(sram_bytes));
+    let _ = dram;
+    let seconds = cycles as f64 / (cfg.clock_ghz * 1e9);
+    StageResult {
+        cycles,
+        seconds,
+        traffic,
+        energy: Energy::gpu(seconds, cfg),
+    }
+}
+
+/// Splatting on the GPU: projection + radix sort + divergent per-pixel
+/// blending. Warp time follows the lane-occupancy trace: a warp issues
+/// the blend body iff any lane is active; masked lanes waste slots.
+pub fn splat(w: &SplatWorkload, cfg: &GpuConfig, dram: &DramConfig) -> StageResult {
+    let lanes = effective_lanes(cfg);
+    let proj = w.queue_len as f64 * cfg.proj_cycles as f64 / lanes;
+    let sort = w.pairs as f64 * cfg.sort_cycles_per_pair as f64 / lanes;
+    // Blending: every issued warp runs the full alpha+blend body.
+    let warp_body = (cfg.alpha_cycles + cfg.blend_cycles) as f64;
+    let blend = w.pixel.divergence.warps_issued as f64 * warp_body
+        / effective_warp_slots(cfg);
+    let compute = proj + sort + blend;
+
+    let mut traffic = Traffic::stream(w.queue_bytes() + w.image_bytes);
+    // Tile lists are built with atomics and read back scattered.
+    traffic.add(Traffic::random(w.pairs * 8));
+    let mem = traffic.dram_cycles(dram) as f64;
+
+    let cycles = compute.max(mem).ceil() as u64;
+    let seconds = cycles as f64 / (cfg.clock_ghz * 1e9);
+    StageResult {
+        cycles,
+        seconds,
+        traffic,
+        energy: Energy::gpu(seconds, cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::splat::BlendStats;
+
+    fn dram() -> DramConfig {
+        DramConfig::default()
+    }
+
+    #[test]
+    fn exhaustive_scales_with_tree_size() {
+        let cfg = GpuConfig::default();
+        let mk = |n: u64| LodWorkload { total_nodes: n, ..Default::default() };
+        let small = lod_exhaustive(&mk(10_000), &cfg, &dram());
+        let large = lod_exhaustive(&mk(1_000_000), &cfg, &dram());
+        assert!(large.cycles > 50 * small.cycles);
+        // Large trees are memory-bound: traffic grows linearly.
+        assert_eq!(large.traffic.dram_stream_bytes, 1_000_000 * GPU_NODE_BYTES);
+    }
+
+    #[test]
+    fn hierarchical_makespan_follows_slowest_thread() {
+        let cfg = GpuConfig::default();
+        let balanced = LodWorkload {
+            naive_thread_loads: vec![1000; 8],
+            ..Default::default()
+        };
+        let skewed = LodWorkload {
+            naive_thread_loads: vec![100, 100, 100, 100, 100, 100, 100, 7300],
+            ..Default::default()
+        };
+        let b = lod_hierarchical(&balanced, &cfg, &dram());
+        let s = lod_hierarchical(&skewed, &cfg, &dram());
+        // Same total work, ~7x worse makespan under skew.
+        assert!(s.cycles > 5 * b.cycles, "{} vs {}", s.cycles, b.cycles);
+    }
+
+    #[test]
+    fn divergence_inflates_splat_time() {
+        let cfg = GpuConfig::default();
+        let mut uniform = SplatWorkload::default();
+        let mut divergent = SplatWorkload::default();
+        // Same number of active lanes; divergent issues 2x the warps.
+        uniform.pixel = BlendStats::default();
+        uniform.pixel.divergence.warps_issued = 1000;
+        uniform.pixel.divergence.active_lanes = 32_000;
+        divergent.pixel.divergence.warps_issued = 2000;
+        divergent.pixel.divergence.active_lanes = 32_000;
+        let u = splat(&uniform, &cfg, &dram());
+        let d = splat(&divergent, &cfg, &dram());
+        assert!(d.cycles > u.cycles);
+    }
+
+    #[test]
+    fn gpu_energy_tracks_time() {
+        let cfg = GpuConfig::default();
+        let w = LodWorkload { total_nodes: 500_000, ..Default::default() };
+        let r = lod_exhaustive(&w, &cfg, &dram());
+        let want = r.seconds * cfg.power_w * 1e12;
+        assert!((r.energy.total_pj() - want).abs() < 1.0);
+    }
+}

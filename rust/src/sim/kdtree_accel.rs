@@ -1,0 +1,192 @@
+//! QuickNN and Crescent — kd-tree traversal accelerators re-targeted at
+//! LoD search for the Fig. 11 comparison.
+//!
+//! Structural differences vs LTCore that the paper's argument rests on
+//! (Sec. V-D):
+//!
+//! 1. **Binary expansion** — a kd-tree is binary; representing the
+//!    LoD tree's f-ary nodes costs extra internal nodes, so the same
+//!    cut requires visiting more nodes.
+//! 2. **Traceback stacks** — kd-tree traversal needs a per-PE stack
+//!    with push/pop on every descent/backtrack; LoD search never
+//!    backtracks, so those are pure overhead.
+//! 3. **Offline scheduling** — both accelerators statically partition
+//!    the tree across PEs, so the view-dependent imbalance of the LoD
+//!    cut hits their makespan directly.
+//! 4. **Memory** — QuickNN's node accesses are cache-banked but
+//!    irregular (random DRAM on misses); Crescent's schedule-aware
+//!    reordering recovers mostly-streaming behaviour (its paper's
+//!    contribution), at the price of extra visits.
+
+use super::dram::Traffic;
+use super::energy::{op_pj, Energy};
+use super::report::StageResult;
+use super::workload::{LodWorkload, NODE_BYTES};
+use crate::config::DramConfig;
+
+/// Parameters of one kd-tree-accelerator model.
+#[derive(Clone, Copy, Debug)]
+pub struct KdAccelConfig {
+    pub name: &'static str,
+    pub clock_ghz: f64,
+    /// Processing elements (set equal to LTCore's LT units for the
+    /// paper's "same number of PEs" comparison).
+    pub pes: usize,
+    /// Cycles per node test.
+    pub node_test_cycles: u64,
+    /// Stack push/pop cycles per visited node (traceback overhead).
+    pub stack_cycles: u64,
+    /// Visited-node multiplier from binary expansion of the f-ary tree.
+    pub expansion: f64,
+    /// Fraction of node fetches that go to DRAM as random accesses.
+    pub random_fetch_rate: f64,
+    /// Average stall cycles per random fetch.
+    pub miss_stall_cycles: u64,
+}
+
+impl KdAccelConfig {
+    /// QuickNN (HPCA'20): kd-tree NN accelerator; banked node cache,
+    /// but pointer-chasing DRAM behaviour on deep trees and a static
+    /// subtree split across PEs.
+    pub fn quicknn() -> Self {
+        KdAccelConfig {
+            name: "QuickNN",
+            clock_ghz: 1.0,
+            pes: 4,
+            node_test_cycles: 1,
+            stack_cycles: 2,
+            expansion: 1.8,
+            random_fetch_rate: 0.30,
+            miss_stall_cycles: 40,
+        }
+    }
+
+    /// Crescent (ISCA'22): tames memory irregularity by schedule-aware
+    /// reordering — mostly streaming DRAM — but keeps the stack
+    /// dataflow and offline schedule, and pays extra visits for the
+    /// reordering windows.
+    pub fn crescent() -> Self {
+        KdAccelConfig {
+            name: "Crescent",
+            clock_ghz: 1.0,
+            pes: 4,
+            node_test_cycles: 1,
+            stack_cycles: 2,
+            expansion: 2.0,
+            random_fetch_rate: 0.04,
+            miss_stall_cycles: 40,
+        }
+    }
+}
+
+/// Run the LoD-search stage on a kd-tree accelerator.
+pub fn search(w: &LodWorkload, cfg: &KdAccelConfig, dram: &DramConfig) -> StageResult {
+    let visited = (w.canonical_visited as f64 * cfg.expansion).ceil() as u64;
+
+    // Static scheduling: the makespan inherits the naive partition's
+    // imbalance. Re-bucket the per-thread loads onto this accelerator's
+    // PE count (round-robin, offline — what QuickNN/Crescent do) and
+    // take max/mean over the PEs.
+    let imbalance = {
+        let n_pes = cfg.pes.max(1);
+        let mut pe_loads = vec![0u64; n_pes];
+        for (i, &l) in w.naive_thread_loads.iter().enumerate() {
+            pe_loads[i % n_pes] += l;
+        }
+        let max = pe_loads.iter().copied().max().unwrap_or(1) as f64;
+        let mean = (pe_loads.iter().sum::<u64>() as f64 / pe_loads.len() as f64)
+            .max(1.0);
+        (max / mean).max(1.0)
+    };
+
+    let per_node = (cfg.node_test_cycles + cfg.stack_cycles) as f64
+        + cfg.random_fetch_rate * cfg.miss_stall_cycles as f64;
+    let balanced = visited as f64 / cfg.pes as f64 * per_node;
+    let cycles = (balanced * imbalance).ceil() as u64;
+
+    let random_bytes = (visited as f64 * cfg.random_fetch_rate) as u64 * NODE_BYTES;
+    let stream_bytes = visited * NODE_BYTES - random_bytes;
+    let mut traffic = Traffic::random(random_bytes);
+    traffic.add(Traffic::stream(stream_bytes));
+    // Stack spills live in PE-local SRAM.
+    traffic.add(Traffic::sram(visited * 8));
+
+    let seconds = cycles as f64 / (cfg.clock_ghz * 1e9);
+    let compute_pj = visited as f64 * (op_pj::NODE_TEST + op_pj::STACK_OP);
+    StageResult {
+        cycles,
+        seconds,
+        traffic,
+        energy: Energy::accel(compute_pj, &traffic, dram),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LtCoreConfig;
+    use crate::lod::TraversalTrace;
+
+    fn workload() -> LodWorkload {
+        LodWorkload {
+            total_nodes: 300_000,
+            canonical_visited: 40_000,
+            cut_len: 20_000,
+            naive_thread_loads: {
+                // Skewed static loads (city-like imbalance).
+                let mut v = vec![2_000u64; 16];
+                v[0] = 18_000;
+                v
+            },
+            trace: TraversalTrace {
+                visited: 40_000,
+                selected: 20_000,
+                activations: 1_400,
+                activation_sizes: vec![29; 1_400],
+                activation_sids: (0..1_400).collect(),
+                subtree_bytes: vec![32 * 36; 1_400],
+                bytes_streamed: 1_400 * 32 * 36,
+                subtree_fetches: 1_400,
+                per_thread_nodes: vec![10_000; 4],
+                queue_peak: 64,
+            },
+        }
+    }
+
+    #[test]
+    fn ltcore_beats_both_kdtree_accels() {
+        let w = workload();
+        let dram = DramConfig::default();
+        let lt = super::super::ltcore::search_workload(&w, &LtCoreConfig::default(), &dram);
+        let qn = search(&w, &KdAccelConfig::quicknn(), &dram);
+        let cr = search(&w, &KdAccelConfig::crescent(), &dram);
+        assert!(
+            lt.stage.cycles < cr.cycles && lt.stage.cycles < qn.cycles,
+            "LT {} vs QuickNN {} / Crescent {}",
+            lt.stage.cycles,
+            qn.cycles,
+            cr.cycles
+        );
+    }
+
+    #[test]
+    fn crescent_has_less_random_traffic_than_quicknn() {
+        let w = workload();
+        let dram = DramConfig::default();
+        let qn = search(&w, &KdAccelConfig::quicknn(), &dram);
+        let cr = search(&w, &KdAccelConfig::crescent(), &dram);
+        assert!(cr.traffic.dram_random_bytes < qn.traffic.dram_random_bytes);
+    }
+
+    #[test]
+    fn static_imbalance_hurts_makespan() {
+        let mut balanced = workload();
+        balanced.naive_thread_loads = vec![3_000; 16];
+        let skewed = workload();
+        let dram = DramConfig::default();
+        let cfg = KdAccelConfig::quicknn();
+        let b = search(&balanced, &cfg, &dram);
+        let s = search(&skewed, &cfg, &dram);
+        assert!(s.cycles as f64 > 1.5 * b.cycles as f64);
+    }
+}

@@ -1,0 +1,55 @@
+//! Cycle-approximate, trace-driven models of every piece of hardware
+//! the paper evaluates (DESIGN.md §2 explains the substitution fidelity).
+//!
+//! All models consume the *same* workload traces produced by the actual
+//! rust pipeline (`coordinator::workload`), so comparisons are
+//! apples-to-apples: the LoD traces come from real SLTree traversals and
+//! the splat traces from real tile blending over the same frames.
+//!
+//! * [`gpu`] — mobile-Ampere SIMT baseline (lockstep warps, divergence
+//!   masking, exhaustive LoD search, irregular-access penalties).
+//! * [`ltcore`] — the paper's LoD-search accelerator: LT-unit array +
+//!   two-segment subtree queue + set-associative subtree cache.
+//! * [`spcore`] — the paper's splatting accelerator: GSCore front end +
+//!   2x2 SP units (group alpha check, divergence-free blend).
+//! * [`gscore`] — the GSCore baseline (per-pixel VR units + OBB tests).
+//! * [`kdtree_accel`] — QuickNN / Crescent kd-tree traversal
+//!   accelerators re-targeted at LoD search (Fig. 11).
+//! * [`dram`] / [`energy`] — LPDDR4 + SRAM traffic and energy
+//!   accounting with the paper's 25:1 and 3:1 ratios.
+//! * [`variants`] — the five hardware variants of Fig. 9/10 assembled
+//!   from the pieces above.
+
+pub mod dram;
+pub mod energy;
+pub mod gpu;
+pub mod gscore;
+pub mod kdtree_accel;
+pub mod ltcore;
+pub mod report;
+pub mod spcore;
+pub mod variants;
+pub mod workload;
+
+pub use report::SimReport;
+pub use variants::{simulate_variant, HwVariant, VariantResult};
+
+/// Simulated time in cycles at the unit's own clock.
+pub type Cycles = u64;
+
+/// Convert cycles at `clock_ghz` to seconds.
+#[inline]
+pub fn cycles_to_seconds(cycles: Cycles, clock_ghz: f64) -> f64 {
+    cycles as f64 / (clock_ghz * 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_conversion() {
+        assert!((cycles_to_seconds(1_000_000_000, 1.0) - 1.0).abs() < 1e-12);
+        assert!((cycles_to_seconds(930_000_000, 0.93) - 1.0).abs() < 1e-9);
+    }
+}

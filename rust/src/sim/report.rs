@@ -1,0 +1,109 @@
+//! Result containers shared by all hardware models.
+
+use super::dram::Traffic;
+use super::energy::Energy;
+
+/// One pipeline stage on one piece of hardware.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageResult {
+    /// Cycles at the unit's own clock.
+    pub cycles: u64,
+    /// Wall-clock seconds (cycles / clock).
+    pub seconds: f64,
+    /// Memory traffic attributed to the stage.
+    pub traffic: Traffic,
+    /// Energy attributed to the stage.
+    pub energy: Energy,
+}
+
+impl StageResult {
+    pub fn combine(&self, o: &StageResult) -> StageResult {
+        let mut traffic = self.traffic;
+        traffic.add(o.traffic);
+        let mut energy = self.energy;
+        energy.add(o.energy);
+        StageResult {
+            cycles: self.cycles + o.cycles,
+            seconds: self.seconds + o.seconds,
+            traffic,
+            energy,
+        }
+    }
+}
+
+/// A full-frame simulation report for one hardware variant.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    pub variant: String,
+    pub lod: StageResult,
+    pub splat: StageResult,
+    /// "Others" (paper Fig. 2): projection/duplication/sorting overhead
+    /// is folded into `splat` by every model; `other` holds frame setup.
+    pub other: StageResult,
+}
+
+impl SimReport {
+    pub fn total_seconds(&self) -> f64 {
+        self.lod.seconds + self.splat.seconds + self.other.seconds
+    }
+
+    pub fn total_energy_mj(&self) -> f64 {
+        self.lod.energy.total_mj()
+            + self.splat.energy.total_mj()
+            + self.other.energy.total_mj()
+    }
+
+    pub fn total_dram_bytes(&self) -> u64 {
+        self.lod.traffic.dram_total()
+            + self.splat.traffic.dram_total()
+            + self.other.traffic.dram_total()
+    }
+
+    /// Fraction of frame time spent in LoD search (Fig. 2's quantity).
+    pub fn lod_fraction(&self) -> f64 {
+        let t = self.total_seconds();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.lod.seconds / t
+        }
+    }
+
+    /// One human-readable summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<10} total {:>9.3} ms (lod {:>6.1}% ) energy {:>9.3} mJ dram {:>8.2} MB",
+            self.variant,
+            self.total_seconds() * 1e3,
+            self.lod_fraction() * 100.0,
+            self.total_energy_mj(),
+            self.total_dram_bytes() as f64 / 1e6
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_accumulate() {
+        let mut r = SimReport { variant: "x".into(), ..Default::default() };
+        r.lod.seconds = 0.25;
+        r.splat.seconds = 0.75;
+        r.lod.energy.compute_pj = 1e9;
+        r.splat.energy.gpu_pj = 3e9;
+        assert!((r.total_seconds() - 1.0).abs() < 1e-12);
+        assert!((r.lod_fraction() - 0.25).abs() < 1e-12);
+        assert!((r.total_energy_mj() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stage_combine() {
+        let a = StageResult { cycles: 10, seconds: 1.0, ..Default::default() };
+        let b = StageResult { cycles: 5, seconds: 0.5, ..Default::default() };
+        let c = a.combine(&b);
+        assert_eq!(c.cycles, 15);
+        assert!((c.seconds - 1.5).abs() < 1e-12);
+    }
+}

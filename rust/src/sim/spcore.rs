@@ -1,0 +1,146 @@
+//! SPCore — the paper's splatting accelerator (Sec. IV-C, Fig. 8).
+//!
+//! Front end (projection, duplication, sorting) is GSCore's — the paper
+//! claims no contribution there and simplifies intersection to the
+//! basic 3-sigma test. The contribution is the **SP unit**: one
+//! alpha-check unit (exponent-power compare, no exp) gating four
+//! blending lanes that process a 2x2 pixel group in lockstep with zero
+//! divergence.
+//!
+//! Stages are pipelined tile-to-tile through the double-buffered global
+//! buffer, so stage time is `max(projection, sorting, splatting,
+//! memory)` plus a fill term.
+
+use super::dram::Traffic;
+use super::energy::{op_pj, Energy};
+use super::report::StageResult;
+use super::workload::SplatWorkload;
+use crate::config::{DramConfig, SpCoreConfig};
+use crate::splat::sort::bitonic_compare_ops;
+
+/// Detailed SPCore result.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpCoreResult {
+    pub stage: StageResult,
+    pub proj_cycles: u64,
+    pub sort_cycles: u64,
+    pub splat_cycles: u64,
+    pub memory_cycles: u64,
+}
+
+/// Run the splatting stage on SPCore by replaying the group-dataflow
+/// blending counters.
+pub fn splat(w: &SplatWorkload, cfg: &SpCoreConfig, dram: &DramConfig) -> SpCoreResult {
+    // Projection units: pipelined, `proj_units` in parallel.
+    let proj_cycles =
+        (w.queue_len * cfg.proj_cycles).div_ceil(cfg.proj_units as u64);
+
+    // Sorting units: bitonic networks over each tile list.
+    let cmp_ops: u64 = w.tile_lens.iter().map(|&n| bitonic_compare_ops(n)).sum();
+    let sort_cycles = (cmp_ops as f64
+        / (cfg.sort_units as f64 * cfg.sort_elems_per_cycle))
+        .ceil() as u64;
+
+    // SP units: the wide-and-cheap check array gates groups; surviving
+    // groups' pixels run the full alpha (exp) + blend on the blending
+    // lanes. Non-surviving groups cost nothing downstream — that is the
+    // divergence-free win over per-pixel dataflows.
+    let check_cycles = (w.group.group_checks * cfg.alpha_check_cycles)
+        .div_ceil((cfg.sp_units * cfg.check_width) as u64);
+    let lanes = (cfg.sp_units * cfg.blend_lanes) as u64;
+    let blend_cycles = (w.group.alpha_evals * cfg.alpha_exp_cycles
+        + w.group.blends * cfg.blend_cycles)
+        .div_ceil(lanes);
+    let splat_cycles = check_cycles + blend_cycles;
+
+    // Memory: rendering queue streamed in; image written back; tile
+    // working set bounces through the global buffer (SRAM).
+    let mut traffic = Traffic::stream(w.queue_bytes() + w.image_bytes);
+    traffic.add(Traffic::sram(
+        // Each (gaussian, tile) pair re-reads its attributes from the
+        // global buffer; each blend touches the pixel accumulator.
+        w.pairs * super::workload::SPLAT_BYTES + w.group.blends * 16,
+    ));
+    let memory_cycles = traffic.dram_cycles(dram);
+
+    let cycles = proj_cycles
+        .max(sort_cycles)
+        .max(splat_cycles)
+        .max(memory_cycles)
+        + 64; // pipeline fill
+    let seconds = cycles as f64 / (cfg.clock_ghz * 1e9);
+
+    let compute_pj = w.queue_len as f64 * op_pj::PROJECT
+        + cmp_ops as f64 * op_pj::SORT_CMP
+        + w.group.group_checks as f64 * op_pj::ALPHA_CHECK
+        + w.group.alpha_evals as f64 * op_pj::ALPHA_EXP
+        + w.group.blends as f64 * op_pj::BLEND;
+
+    SpCoreResult {
+        stage: StageResult {
+            cycles,
+            seconds,
+            traffic,
+            energy: Energy::accel(compute_pj, &traffic, dram),
+        },
+        proj_cycles,
+        sort_cycles,
+        splat_cycles,
+        memory_cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::splat::BlendStats;
+
+    fn workload(gaussian_tiles: u64) -> SplatWorkload {
+        let mut w = SplatWorkload {
+            queue_len: gaussian_tiles / 4,
+            pairs: gaussian_tiles,
+            tile_lens: vec![gaussian_tiles / 16; 16],
+            image_bytes: 256 * 256 * 12,
+            ..Default::default()
+        };
+        w.group = BlendStats {
+            gaussians: gaussian_tiles,
+            group_checks: gaussian_tiles * 64,
+            alpha_evals: gaussian_tiles * 64, // ~25% of groups survive x4 px
+            blends: gaussian_tiles * 64,
+            ..Default::default()
+        };
+        w
+    }
+
+    #[test]
+    fn stage_time_is_pipelined_max() {
+        let r = splat(&workload(10_000), &SpCoreConfig::default(), &DramConfig::default());
+        let max = r
+            .proj_cycles
+            .max(r.sort_cycles)
+            .max(r.splat_cycles)
+            .max(r.memory_cycles);
+        assert_eq!(r.stage.cycles, max + 64);
+    }
+
+    #[test]
+    fn work_scales_roughly_linearly() {
+        let cfg = SpCoreConfig::default();
+        let d = DramConfig::default();
+        let a = splat(&workload(10_000), &cfg, &d).stage.cycles;
+        let b = splat(&workload(100_000), &cfg, &d).stage.cycles;
+        assert!(b > 5 * a, "{b} vs {a}");
+    }
+
+    #[test]
+    fn group_check_price_is_cheap() {
+        // Energy of checks must be well under the blend energy when
+        // most groups survive — the SP unit premise.
+        let w = workload(50_000);
+        let check = w.group.group_checks as f64 * op_pj::ALPHA_CHECK;
+        let blend = w.group.blends as f64 * op_pj::BLEND
+            + w.group.alpha_evals as f64 * op_pj::ALPHA_EXP;
+        assert!(check < blend);
+    }
+}

@@ -1,0 +1,222 @@
+//! The five hardware variants of Fig. 9/10, assembled from the unit
+//! models. Within a frame the LoD-search and splatting stages run
+//! back-to-back (the cut feeds splatting), so frame time is the sum of
+//! stage times on whichever hardware owns each stage.
+
+use super::gpu;
+use super::gscore;
+use super::kdtree_accel::{self, KdAccelConfig};
+use super::ltcore;
+use super::report::{SimReport, StageResult};
+use super::spcore;
+use super::workload::{LodWorkload, SplatWorkload};
+use crate::config::ArchConfig;
+
+/// Hardware variant (paper Sec. V-A "Baselines").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HwVariant {
+    /// Mobile Ampere GPU for both stages.
+    Gpu,
+    /// GPU splatting + LTCore LoD search.
+    GpuLt,
+    /// GPU LoD search + GSCore splatting.
+    GpuGs,
+    /// LTCore LoD search + GSCore splatting.
+    LtGs,
+    /// Full SLTarch: LTCore + SPCore.
+    SlTarch,
+    /// Fig. 11 axis: GPU splatting + QuickNN LoD search.
+    GpuQuickNn,
+    /// Fig. 11 axis: GPU splatting + Crescent LoD search.
+    GpuCrescent,
+}
+
+impl HwVariant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HwVariant::Gpu => "GPU",
+            HwVariant::GpuLt => "GPU+LT",
+            HwVariant::GpuGs => "GPU+GS",
+            HwVariant::LtGs => "LT+GS",
+            HwVariant::SlTarch => "SLTARCH",
+            HwVariant::GpuQuickNn => "GPU+QuickNN",
+            HwVariant::GpuCrescent => "GPU+Crescent",
+        }
+    }
+
+    /// The five Fig. 9/10 variants.
+    pub fn fig9() -> [HwVariant; 5] {
+        [
+            HwVariant::Gpu,
+            HwVariant::GpuLt,
+            HwVariant::GpuGs,
+            HwVariant::LtGs,
+            HwVariant::SlTarch,
+        ]
+    }
+
+    /// The Fig. 11 tree-accelerator comparison set.
+    pub fn fig11() -> [HwVariant; 4] {
+        [
+            HwVariant::Gpu,
+            HwVariant::GpuQuickNn,
+            HwVariant::GpuCrescent,
+            HwVariant::GpuLt,
+        ]
+    }
+}
+
+/// Result of simulating one variant over one frame.
+#[derive(Clone, Debug)]
+pub struct VariantResult {
+    pub variant: HwVariant,
+    pub report: SimReport,
+}
+
+/// Simulate one frame on one hardware variant.
+pub fn simulate_variant(
+    variant: HwVariant,
+    lod_w: &LodWorkload,
+    splat_w: &SplatWorkload,
+    arch: &ArchConfig,
+) -> VariantResult {
+    let dram = &arch.dram;
+    let lod: StageResult = match variant {
+        HwVariant::Gpu | HwVariant::GpuGs => gpu::lod_exhaustive(lod_w, &arch.gpu, dram),
+        HwVariant::GpuLt | HwVariant::LtGs | HwVariant::SlTarch => {
+            ltcore::search_workload(lod_w, &arch.ltcore, dram).stage
+        }
+        HwVariant::GpuQuickNn => {
+            kdtree_accel::search(lod_w, &KdAccelConfig::quicknn(), dram)
+        }
+        HwVariant::GpuCrescent => {
+            kdtree_accel::search(lod_w, &KdAccelConfig::crescent(), dram)
+        }
+    };
+    let splat: StageResult = match variant {
+        HwVariant::Gpu
+        | HwVariant::GpuLt
+        | HwVariant::GpuQuickNn
+        | HwVariant::GpuCrescent => gpu::splat(splat_w, &arch.gpu, dram),
+        HwVariant::GpuGs | HwVariant::LtGs => {
+            gscore::splat(splat_w, &arch.gscore, dram).stage
+        }
+        HwVariant::SlTarch => spcore::splat(splat_w, &arch.spcore, dram).stage,
+    };
+    VariantResult {
+        variant,
+        report: SimReport {
+            variant: variant.name().to_string(),
+            lod,
+            splat,
+            other: StageResult::default(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lod::TraversalTrace;
+    use crate::splat::BlendStats;
+
+    fn workloads() -> (LodWorkload, SplatWorkload) {
+        let lod = LodWorkload {
+            total_nodes: 280_000,
+            canonical_visited: 45_000,
+            cut_len: 22_000,
+            naive_thread_loads: {
+                let mut v = vec![1_500u64; 32];
+                v[3] = 14_000;
+                v
+            },
+            trace: TraversalTrace {
+                visited: 45_000,
+                selected: 22_000,
+                activations: 1_500,
+                activation_sizes: vec![30; 1_500],
+                activation_sids: (0..1_500).collect(),
+                subtree_bytes: vec![32 * 36; 1_500],
+                bytes_streamed: 1_500 * 32 * 36,
+                subtree_fetches: 1_500,
+                per_thread_nodes: vec![11_250; 4],
+                queue_peak: 40,
+            },
+        };
+        let gaussian_tiles = 70_000u64;
+        let mut splat = SplatWorkload {
+            queue_len: 22_000,
+            pairs: gaussian_tiles,
+            tile_lens: vec![gaussian_tiles / 256; 256],
+            image_bytes: 256 * 256 * 12,
+            ..Default::default()
+        };
+        splat.pixel = BlendStats {
+            gaussians: gaussian_tiles,
+            alpha_evals: gaussian_tiles * 256,
+            blends: gaussian_tiles * 70,
+            ..Default::default()
+        };
+        splat.pixel.divergence.warps_issued = gaussian_tiles * 6;
+        splat.pixel.divergence.issued_lane_slots = gaussian_tiles * 6 * 32;
+        splat.pixel.divergence.active_lanes = gaussian_tiles * 70;
+        splat.pixel.divergence.warps_total = gaussian_tiles * 8;
+        splat.group = BlendStats {
+            gaussians: gaussian_tiles,
+            group_checks: gaussian_tiles * 64,
+            alpha_evals: gaussian_tiles * 24,
+            blends: gaussian_tiles * 24,
+            ..Default::default()
+        };
+        (lod, splat)
+    }
+
+    #[test]
+    fn fig9_ordering_holds() {
+        let (lod, splat) = workloads();
+        let arch = ArchConfig::default();
+        let t = |v| {
+            simulate_variant(v, &lod, &splat, &arch)
+                .report
+                .total_seconds()
+        };
+        let gpu = t(HwVariant::Gpu);
+        let gpu_lt = t(HwVariant::GpuLt);
+        let gpu_gs = t(HwVariant::GpuGs);
+        let sltarch = t(HwVariant::SlTarch);
+        let lt_gs = t(HwVariant::LtGs);
+        // The paper's large-scale ordering: every variant beats GPU and
+        // SLTARCH beats all partial variants.
+        assert!(gpu_lt < gpu, "GPU+LT {gpu_lt} !< GPU {gpu}");
+        assert!(gpu_gs < gpu, "GPU+GS {gpu_gs} !< GPU {gpu}");
+        assert!(sltarch < gpu_lt, "SLTARCH {sltarch} !< GPU+LT {gpu_lt}");
+        assert!(sltarch < gpu_gs, "SLTARCH {sltarch} !< GPU+GS {gpu_gs}");
+        assert!(sltarch <= lt_gs, "SLTARCH {sltarch} !<= LT+GS {lt_gs}");
+    }
+
+    #[test]
+    fn sltarch_saves_most_energy() {
+        let (lod, splat) = workloads();
+        let arch = ArchConfig::default();
+        let e = |v| {
+            simulate_variant(v, &lod, &splat, &arch)
+                .report
+                .total_energy_mj()
+        };
+        let gpu = e(HwVariant::Gpu);
+        let sltarch = e(HwVariant::SlTarch);
+        let savings = 1.0 - sltarch / gpu;
+        assert!(savings > 0.9, "savings {savings}");
+    }
+
+    #[test]
+    fn fig11_lt_beats_kdtree_accelerators() {
+        let (lod, splat) = workloads();
+        let arch = ArchConfig::default();
+        let lt = simulate_variant(HwVariant::GpuLt, &lod, &splat, &arch);
+        let qn = simulate_variant(HwVariant::GpuQuickNn, &lod, &splat, &arch);
+        let cr = simulate_variant(HwVariant::GpuCrescent, &lod, &splat, &arch);
+        assert!(lt.report.lod.seconds < qn.report.lod.seconds);
+        assert!(lt.report.lod.seconds < cr.report.lod.seconds);
+    }
+}

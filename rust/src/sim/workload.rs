@@ -1,0 +1,76 @@
+//! The workload descriptors every hardware model replays.
+//!
+//! Produced by `coordinator::workload::frame_workload` from an *actual*
+//! pipeline execution (real SLTree traversal, real tile blending), so
+//! all five Fig. 9 variants are compared on identical work.
+
+use crate::lod::TraversalTrace;
+use crate::splat::BlendStats;
+
+/// Bytes of one LoD-tree node record in DRAM (AABB 24 + world size 4 +
+/// skip/child metadata 8 — same figure `Subtree::bytes` uses).
+pub const NODE_BYTES: u64 = 36;
+
+/// Bytes of one rendering-queue entry streamed to the splatting stage
+/// (mean2d 8 + conic 12 + colour 12 + opacity 4 + depth 4 + id 4).
+pub const SPLAT_BYTES: u64 = 44;
+
+/// LoD-search workload for one frame.
+#[derive(Clone, Debug, Default)]
+pub struct LodWorkload {
+    /// Total tree nodes (the exhaustive-search cost).
+    pub total_nodes: u64,
+    /// Canonical hierarchical search visit count (same as SLTree's).
+    pub canonical_visited: u64,
+    /// Cut size (rendering-queue length).
+    pub cut_len: u64,
+    /// Full SLTree traversal trace (activations, fetches, balance).
+    pub trace: TraversalTrace,
+    /// Per-thread node counts under the naive static one-thread-per-
+    /// subtree GPU schedule (Fig. 3).
+    pub naive_thread_loads: Vec<u64>,
+}
+
+/// Splatting workload for one frame.
+#[derive(Clone, Debug, Default)]
+pub struct SplatWorkload {
+    /// Rendering-queue length (projection work).
+    pub queue_len: u64,
+    /// (gaussian, tile) duplication pairs (sorting + blending work).
+    pub pairs: u64,
+    /// Per-tile sorted-list lengths (sorting-network work).
+    pub tile_lens: Vec<u64>,
+    /// Aggregated blending counters under the per-pixel dataflow
+    /// (GPU and GSCore replay these).
+    pub pixel: BlendStats,
+    /// Aggregated blending counters under the 2x2 group dataflow
+    /// (SPCore replays these).
+    pub group: BlendStats,
+    /// Output image bytes (written back once per frame).
+    pub image_bytes: u64,
+}
+
+impl SplatWorkload {
+    /// DRAM bytes streamed in for the rendering queue.
+    pub fn queue_bytes(&self) -> u64 {
+        self.queue_len * SPLAT_BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_constants_are_consistent() {
+        // NODE_BYTES must match Subtree::bytes' per-node figure.
+        let st = crate::lod::Subtree { nodes: vec![0, 1, 2], ..Default::default() };
+        assert_eq!(st.bytes(), 3 * NODE_BYTES);
+    }
+
+    #[test]
+    fn queue_bytes_scale() {
+        let w = SplatWorkload { queue_len: 100, ..Default::default() };
+        assert_eq!(w.queue_bytes(), 4400);
+    }
+}

@@ -1,0 +1,23 @@
+//! The splatting stage: tile binning, depth sorting and alpha blending,
+//! in both dataflows the paper contrasts (Sec. IV-C):
+//!
+//! * **per-pixel** alpha check — the canonical 3DGS rasterizer, which
+//!   diverges on SIMT hardware (different lanes integrate different
+//!   Gaussian subsets), and
+//! * **2x2 pixel-group** alpha check — SLTarch's divergence-free
+//!   approximation (one alpha-check per group, decision broadcast to
+//!   all four pixels).
+//!
+//! The CPU implementations here mirror the L1 Pallas kernels exactly and
+//! also emit the per-warp lane-occupancy statistics the GPU/SPCore
+//! timing models replay ([`divergence`]).
+
+pub mod blend;
+pub mod divergence;
+pub mod sort;
+pub mod tiling;
+
+pub use blend::{blend_tile, BlendMode, BlendStats};
+pub use divergence::DivergenceStats;
+pub use sort::sort_tile_by_depth;
+pub use tiling::{bin_splats, TileBins, TILE};

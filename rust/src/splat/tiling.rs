@@ -1,0 +1,131 @@
+//! Screen tiling and Gaussian-to-tile binning (the "duplication" stage
+//! of the SPCore/GSCore front end).
+//!
+//! Uses the basic 3-sigma bounding-square intersection test the paper
+//! adopts for SPCore ("we simplify the design of the projection unit by
+//! using the basic 3-σ Gaussian-tile intersection test") — precise
+//! AABB/OBB refinement is deliberately *not* done: the group alpha check
+//! in the SP unit performs the finer-grained filtering for free.
+
+use crate::gaussian::Splat2D;
+
+/// Tile side in pixels — fixed at 16 to match the splat HLO artifacts.
+pub const TILE: u32 = 16;
+
+/// Per-tile lists of indices into the projected-splat array.
+#[derive(Clone, Debug)]
+pub struct TileBins {
+    pub tiles_x: u32,
+    pub tiles_y: u32,
+    /// `per_tile[ty * tiles_x + tx]` = splat indices touching that tile.
+    pub per_tile: Vec<Vec<u32>>,
+    /// Total (gaussian, tile) pairs — the duplication factor the sorting
+    /// hardware has to chew through.
+    pub pairs: u64,
+}
+
+impl TileBins {
+    #[inline]
+    pub fn tile_count(&self) -> usize {
+        (self.tiles_x * self.tiles_y) as usize
+    }
+
+    #[inline]
+    pub fn tile_origin(&self, idx: usize) -> (f32, f32) {
+        let tx = idx as u32 % self.tiles_x;
+        let ty = idx as u32 / self.tiles_x;
+        ((tx * TILE) as f32, (ty * TILE) as f32)
+    }
+}
+
+/// Bin projected splats into tiles covering a `width x height` screen.
+/// Culled splats (radius 0) never generate pairs.
+pub fn bin_splats(splats: &[Splat2D], width: u32, height: u32) -> TileBins {
+    let tiles_x = width.div_ceil(TILE);
+    let tiles_y = height.div_ceil(TILE);
+    let mut per_tile = vec![Vec::new(); (tiles_x * tiles_y) as usize];
+    let mut pairs = 0u64;
+    for (i, s) in splats.iter().enumerate() {
+        if !s.visible() {
+            continue;
+        }
+        let r = s.radius;
+        // 3-sigma bounding square, clamped to the screen tile grid.
+        let x0 = ((s.mean.x - r) / TILE as f32).floor().max(0.0) as u32;
+        let y0 = ((s.mean.y - r) / TILE as f32).floor().max(0.0) as u32;
+        let x1 = ((s.mean.x + r) / TILE as f32).floor() as i64;
+        let y1 = ((s.mean.y + r) / TILE as f32).floor() as i64;
+        if x1 < 0 || y1 < 0 {
+            continue;
+        }
+        let x1 = (x1 as u32).min(tiles_x - 1);
+        let y1 = (y1 as u32).min(tiles_y - 1);
+        if x0 > x1 || y0 > y1 {
+            continue;
+        }
+        for ty in y0..=y1 {
+            for tx in x0..=x1 {
+                per_tile[(ty * tiles_x + tx) as usize].push(i as u32);
+                pairs += 1;
+            }
+        }
+    }
+    TileBins { tiles_x, tiles_y, per_tile, pairs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Vec2;
+
+    fn splat_at(x: f32, y: f32, r: f32) -> Splat2D {
+        Splat2D {
+            mean: Vec2::new(x, y),
+            conic: [0.1, 0.0, 0.1],
+            depth: 1.0,
+            radius: r,
+            color: [1.0, 1.0, 1.0],
+            opacity: 0.5,
+            id: 0,
+        }
+    }
+
+    #[test]
+    fn small_splat_hits_one_tile() {
+        let bins = bin_splats(&[splat_at(8.0, 8.0, 3.0)], 64, 64);
+        assert_eq!(bins.tiles_x, 4);
+        assert_eq!(bins.pairs, 1);
+        assert_eq!(bins.per_tile[0], vec![0]);
+    }
+
+    #[test]
+    fn large_splat_hits_many_tiles() {
+        let bins = bin_splats(&[splat_at(32.0, 32.0, 20.0)], 64, 64);
+        // Covers tiles 0..=3 in both axes partially: (12..52) -> tiles 0..3.
+        assert_eq!(bins.pairs, 16);
+    }
+
+    #[test]
+    fn culled_and_offscreen_generate_no_pairs() {
+        let culled = splat_at(8.0, 8.0, 0.0);
+        let offscreen = splat_at(-100.0, -100.0, 5.0);
+        let bins = bin_splats(&[culled, offscreen], 64, 64);
+        assert_eq!(bins.pairs, 0);
+    }
+
+    #[test]
+    fn edge_splat_is_clamped() {
+        let bins = bin_splats(&[splat_at(63.0, 63.0, 10.0)], 64, 64);
+        assert!(bins.pairs > 0);
+        // Bottom-right tile must contain it.
+        assert!(bins.per_tile[15].contains(&0));
+    }
+
+    #[test]
+    fn non_multiple_screen_sizes() {
+        let bins = bin_splats(&[splat_at(70.0, 5.0, 4.0)], 72, 40);
+        assert_eq!(bins.tiles_x, 5);
+        assert_eq!(bins.tiles_y, 3);
+        assert!(bins.per_tile[4].contains(&0));
+    }
+}

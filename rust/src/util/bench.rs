@@ -1,0 +1,125 @@
+//! Minimal bench harness (criterion is not vendored in this image).
+//!
+//! Usage from a `harness = false` bench target:
+//!
+//! ```no_run
+//! use sltarch::util::bench::Bench;
+//! let mut b = Bench::new("fig9_speedup");
+//! b.iter("gpu_baseline", 10, || { /* workload */ });
+//! b.report();
+//! ```
+//!
+//! Reports mean / std / min over timed iterations after warmup, in
+//! criterion-like formatting, and never optimizes the workload away
+//! (uses `std::hint::black_box`).
+
+use super::stats::summarize;
+use std::time::Instant;
+
+/// One named measurement series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+/// Bench context: collects named measurements and prints a report.
+pub struct Bench {
+    pub group: String,
+    measurements: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        Bench { group: group.to_string(), measurements: Vec::new() }
+    }
+
+    /// Time `f` for `iters` measured iterations (plus 1 warmup); the
+    /// closure's return value is black-boxed so work is not elided.
+    pub fn iter<T>(&mut self, name: &str, iters: usize, mut f: impl FnMut() -> T) {
+        std::hint::black_box(f()); // warmup
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            samples_ns: samples,
+        });
+    }
+
+    /// Record an externally computed scalar (e.g. simulated cycles) so
+    /// model-level results appear in the same report as wall-clock ones.
+    pub fn record(&mut self, name: &str, value: f64) {
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            samples_ns: vec![value],
+        });
+    }
+
+    /// Human-readable report to stdout.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        for m in &self.measurements {
+            let s = summarize(&m.samples_ns).unwrap();
+            if s.n == 1 {
+                println!("  {:<42} {:>14.1}", m.name, s.mean);
+            } else {
+                println!(
+                    "  {:<42} mean {:>11} std {:>10} min {:>11}  (n={})",
+                    m.name,
+                    fmt_ns(s.mean),
+                    fmt_ns(s.std),
+                    fmt_ns(s.min),
+                    s.n
+                );
+            }
+        }
+    }
+
+    pub fn measurements(&self) -> &[Measurement] {
+        &self.measurements
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut b = Bench::new("test");
+        let mut counter = 0u64;
+        b.iter("noop", 5, || {
+            counter += 1;
+            counter
+        });
+        assert_eq!(b.measurements().len(), 1);
+        assert_eq!(b.measurements()[0].samples_ns.len(), 5);
+        // 1 warmup + 5 measured.
+        assert_eq!(counter, 6);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(12_000_000_000.0).ends_with('s'));
+    }
+}

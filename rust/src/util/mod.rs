@@ -1,0 +1,12 @@
+//! In-tree substitutes for crates that are not vendored in this offline
+//! image: a deterministic PRNG (`rand`), a statistics-reporting bench
+//! harness (`criterion`), and a seeded property-testing loop (`proptest`).
+//! All deterministic by construction — experiment outputs are exactly
+//! reproducible run-to-run.
+
+pub mod bench;
+pub mod prop;
+mod rng;
+pub mod stats;
+
+pub use rng::Rng;

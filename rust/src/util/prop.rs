@@ -1,0 +1,75 @@
+//! Seeded property-testing loop (proptest is not vendored).
+//!
+//! `forall(cases, |rng| ...)` runs the closure over `cases` independent
+//! deterministic RNG streams; on failure it reports the failing case
+//! seed so the case can be replayed exactly:
+//!
+//! ```no_run
+//! use sltarch::util::prop::forall;
+//! forall(256, |rng| {
+//!     let x = rng.range(0.0, 10.0);
+//!     assert!(x >= 0.0, "negative sample");
+//! });
+//! ```
+
+use super::Rng;
+
+/// Base seed for all property tests; change to explore a new universe.
+pub const PROP_SEED: u64 = 0x5175_AC47;
+
+/// Run `body` over `cases` deterministic RNG streams; panics with the
+/// failing case index + seed on the first violation.
+pub fn forall(cases: u64, mut body: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = PROP_SEED ^ case.wrapping_mul(0xA24B_AED4_963E_E407);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng)
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay(seed: u64, mut body: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    body(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(64, |rng| {
+            let x = rng.f32();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn forall_reports_failing_seed() {
+        let caught = std::panic::catch_unwind(|| {
+            forall(64, |rng| {
+                // Fails eventually with overwhelming probability.
+                assert!(rng.f32() < 0.5, "coin landed heads");
+            });
+        });
+        let err = caught.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("replay seed"), "missing replay info: {msg}");
+    }
+}

@@ -1,0 +1,79 @@
+//! Small statistics helpers shared by the bench harness, the workload
+//! imbalance study (Fig. 3) and the experiment reports.
+
+/// Summary statistics over a sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p95: f64,
+}
+
+/// Compute summary statistics; returns `None` on an empty sample.
+pub fn summarize(xs: &[f64]) -> Option<Summary> {
+    if xs.is_empty() {
+        return None;
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        let idx = (p * (n - 1) as f64).round() as usize;
+        sorted[idx.min(n - 1)]
+    };
+    Some(Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        median: pct(0.5),
+        p95: pct(0.95),
+    })
+}
+
+/// Coefficient of variation (std/mean) — the imbalance measure used by
+/// Fig. 3 and the Fig. 12 utilization ablation. 0 for an empty/zero set.
+pub fn cov(xs: &[f64]) -> f64 {
+    match summarize(xs) {
+        Some(s) if s.mean.abs() > 1e-12 => s.std / s.mean,
+        _ => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.median, 3.0);
+        assert!((s.std - 2.0f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_is_none() {
+        assert!(summarize(&[]).is_none());
+        assert_eq!(cov(&[]), 0.0);
+    }
+
+    #[test]
+    fn cov_balanced_vs_imbalanced() {
+        let balanced = vec![10.0; 64];
+        let mut imbalanced = vec![1.0; 63];
+        imbalanced.push(1000.0);
+        assert!(cov(&balanced) < 1e-9);
+        assert!(cov(&imbalanced) > 1.0);
+    }
+}

@@ -1,0 +1,94 @@
+//! End-to-end integration over the full L3 stack (CPU path): scene ->
+//! SLTree -> frame pipeline -> image + simulation, plus experiment
+//! smoke runs.
+
+use sltarch::config::{ArchConfig, RenderConfig, SceneConfig};
+use sltarch::coordinator::renderer::AlphaMode;
+use sltarch::coordinator::FramePipeline;
+use sltarch::metrics::psnr;
+use sltarch::sim::HwVariant;
+
+fn quick_pipeline(seed: u64) -> FramePipeline {
+    FramePipeline::new(
+        SceneConfig::small_scale().quick().build(seed),
+        RenderConfig::default(),
+        ArchConfig::default(),
+    )
+}
+
+#[test]
+fn render_every_scenario_produces_stable_images() {
+    let p = quick_pipeline(31);
+    for i in 0..6 {
+        let cam = p.scene.scenario_camera(i);
+        let a = p.render(&cam, AlphaMode::Group).unwrap();
+        let b = p.render(&cam, AlphaMode::Group).unwrap();
+        // Determinism: bit-identical across runs.
+        assert_eq!(a.data, b.data, "scenario {i} not deterministic");
+        let mean: f32 =
+            a.data.iter().map(|p| p[0] + p[1] + p[2]).sum::<f32>() / a.data.len() as f32;
+        assert!(mean > 0.005, "scenario {i} black image");
+    }
+}
+
+#[test]
+fn simulation_is_deterministic_across_runs() {
+    let p = quick_pipeline(32);
+    let cam = p.scene.scenario_camera(2);
+    let a = p.simulate(&cam, &HwVariant::fig9());
+    let b = p.simulate(&cam, &HwVariant::fig9());
+    for (x, y) in a.sims.iter().zip(b.sims.iter()) {
+        assert_eq!(x.report.lod.cycles, y.report.lod.cycles);
+        assert_eq!(x.report.splat.cycles, y.report.splat.cycles);
+    }
+}
+
+#[test]
+fn subtree_size_sweep_preserves_results_and_shifts_cost() {
+    // The cut is invariant under tau_s; the traversal cost profile moves.
+    let scene = SceneConfig::small_scale().quick().build(33);
+    let arch = ArchConfig::default();
+    let mut cuts = Vec::new();
+    for tau_s in [8u32, 32, 128] {
+        let rcfg = RenderConfig { subtree_size: tau_s, ..Default::default() };
+        let p = FramePipeline::new(scene.clone(), rcfg, arch);
+        let cam = p.scene.scenario_camera(1);
+        cuts.push(p.search(&cam));
+    }
+    assert_eq!(cuts[0], cuts[1]);
+    assert_eq!(cuts[1], cuts[2]);
+}
+
+#[test]
+fn lod_tau_controls_quality_cost_tradeoff() {
+    let scene = SceneConfig::small_scale().quick().build(34);
+    let arch = ArchConfig::default();
+    let cam_idx = 3;
+    let render = |tau: f32| {
+        let rcfg = RenderConfig { lod_tau: tau, ..Default::default() };
+        let p = FramePipeline::new(scene.clone(), rcfg, arch);
+        let cam = p.scene.scenario_camera(cam_idx);
+        let cut_len = p.search(&cam).len();
+        (cut_len, p.render(&cam, AlphaMode::Pixel).unwrap())
+    };
+    let (n_fine, img_fine) = render(2.0);
+    let (n_mid, img_mid) = render(16.0);
+    let (n_coarse, img_coarse) = render(64.0);
+    assert!(n_fine > n_mid && n_mid > n_coarse,
+        "cut must shrink with tau: {n_fine} {n_mid} {n_coarse}");
+    // Quality degrades monotonically-ish with coarseness.
+    let p_mid = psnr(&img_fine, &img_mid);
+    let p_coarse = psnr(&img_fine, &img_coarse);
+    assert!(p_mid > p_coarse, "psnr: mid {p_mid} coarse {p_coarse}");
+}
+
+#[test]
+fn experiments_smoke_quick() {
+    // Every registered experiment must run to completion in quick mode.
+    for name in sltarch::experiments::ALL {
+        assert!(
+            sltarch::experiments::run_by_name(name, true),
+            "experiment {name} failed to run"
+        );
+    }
+}

@@ -1,0 +1,96 @@
+//! Integration: the PJRT path (AOT JAX/Pallas artifacts executed via the
+//! xla crate) must agree numerically with the rust CPU mirror — the
+//! cross-layer correctness contract of the three-layer architecture.
+//!
+//! Requires `make artifacts` (skips with a loud message otherwise so
+//! plain `cargo test` works on a fresh checkout).
+
+use sltarch::config::{RenderConfig, SceneConfig};
+use sltarch::coordinator::renderer::{AlphaMode, CpuRenderer, PjrtRenderer};
+use sltarch::gaussian::project;
+use sltarch::lod::SlTree;
+use sltarch::runtime::{default_artifacts_dir, ArtifactSet, PjrtEngine, ProjectBatch};
+
+fn engine_or_skip() -> Option<(ArtifactSet, PjrtEngine)> {
+    match ArtifactSet::discover(&default_artifacts_dir()) {
+        Ok(set) => {
+            let engine = PjrtEngine::load(&set).expect("compiling artifacts");
+            Some((set, engine))
+        }
+        Err(e) => {
+            eprintln!("SKIP pjrt_roundtrip: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn projection_artifact_matches_cpu_mirror() {
+    let Some((_, engine)) = engine_or_skip() else { return };
+    let scene = SceneConfig::small_scale().quick().build(21);
+    let cam = scene.scenario_camera(0);
+    // Take a modest prefix so the test stays fast.
+    let idx: Vec<u32> = (0..600u32).collect();
+    let queue = scene.gaussians.gather(&idx);
+
+    let got = ProjectBatch::run(&engine, &queue, &cam).expect("pjrt projection");
+    let want = project(&queue, &cam);
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(want.iter()) {
+        assert!(
+            (g.depth - w.depth).abs() <= 1e-3 * w.depth.abs().max(1.0),
+            "depth mismatch: {} vs {}",
+            g.depth,
+            w.depth
+        );
+        if w.visible() {
+            assert!((g.mean.x - w.mean.x).abs() < 0.05, "{:?} vs {:?}", g.mean, w.mean);
+            assert!((g.mean.y - w.mean.y).abs() < 0.05);
+            for c in 0..3 {
+                let rel = (g.conic[c] - w.conic[c]).abs()
+                    / w.conic[c].abs().max(1e-3);
+                assert!(rel < 2e-2, "conic[{c}]: {:?} vs {:?}", g.conic, w.conic);
+            }
+            assert!((g.radius - w.radius).abs() <= 1.0);
+        } else {
+            assert!(!g.visible(), "visibility mismatch at id {}", w.id);
+        }
+    }
+}
+
+#[test]
+fn full_render_pjrt_matches_cpu() {
+    let Some((_, engine)) = engine_or_skip() else { return };
+    let scene = SceneConfig::small_scale().quick().build(22);
+    let cam = scene.scenario_camera(1);
+    let rcfg = RenderConfig::default();
+    let slt = SlTree::partition(&scene.tree, rcfg.subtree_size);
+    let cut = slt.traverse(&scene.tree, &cam, rcfg.lod_tau);
+    let queue = scene.gaussians.gather(&cut);
+
+    for mode in [AlphaMode::Pixel, AlphaMode::Group] {
+        let cpu = CpuRenderer::render(&queue, &cam, mode, &rcfg);
+        let pjrt = PjrtRenderer::render(&engine, &queue, &cam, mode, &rcfg)
+            .expect("pjrt render");
+        let mad = cpu.mad(&pjrt);
+        // Early-termination boundaries may differ by one chunk; the
+        // images must still agree to well under one grey level.
+        assert!(mad < 2e-3, "{mode:?}: CPU vs PJRT mad {mad}");
+    }
+}
+
+#[test]
+fn pjrt_group_mode_differs_from_pixel_mode_but_slightly() {
+    let Some((_, engine)) = engine_or_skip() else { return };
+    let scene = SceneConfig::small_scale().quick().build(23);
+    let cam = scene.scenario_camera(0);
+    let rcfg = RenderConfig::default();
+    let slt = SlTree::partition(&scene.tree, rcfg.subtree_size);
+    let cut = slt.traverse(&scene.tree, &cam, rcfg.lod_tau);
+    let queue = scene.gaussians.gather(&cut);
+    let px = PjrtRenderer::render(&engine, &queue, &cam, AlphaMode::Pixel, &rcfg).unwrap();
+    let gp = PjrtRenderer::render(&engine, &queue, &cam, AlphaMode::Group, &rcfg).unwrap();
+    let mad = px.mad(&gp);
+    assert!(mad > 0.0, "group mode must actually differ");
+    assert!(mad < 0.02, "group approximation too lossy through PJRT: {mad}");
+}

@@ -1,0 +1,145 @@
+//! Property-based tests (seeded, in-tree harness — see util::prop) over
+//! the coordinator-level invariants: SLTree partitioning, traversal
+//! bit-accuracy, and blending conservation laws, on randomized scenes,
+//! cameras and parameters.
+
+use sltarch::config::SceneConfig;
+use sltarch::gaussian::Splat2D;
+use sltarch::lod::{traverse_sltree, SlTree};
+use sltarch::math::{Camera, Intrinsics, Vec2, Vec3};
+use sltarch::scene::{build_lod_tree, GeneratorKind, SceneSpec};
+use sltarch::splat::blend::PIXELS;
+use sltarch::splat::{blend_tile, BlendMode};
+use sltarch::util::prop::forall;
+use sltarch::util::Rng;
+
+fn random_scene(rng: &mut Rng) -> (sltarch::gaussian::Gaussians, sltarch::lod::LodTree) {
+    let kinds = [GeneratorKind::Room, GeneratorKind::City, GeneratorKind::Terrain];
+    let spec = SceneSpec {
+        kind: kinds[rng.below(3)],
+        leaves: 500 + rng.below(3_000),
+        extent: rng.range(5.0, 60.0),
+    };
+    let seed = rng.next_u64();
+    let mean_fanout = rng.range(2.0, 8.0);
+    let max_fanout = 16 + rng.below(512);
+    let (g, tree, _) = build_lod_tree(spec.generate(seed), seed, mean_fanout, max_fanout);
+    (g, tree)
+}
+
+fn random_camera(rng: &mut Rng, extent: f32) -> Camera {
+    let a = rng.range(0.0, std::f32::consts::TAU);
+    let r = rng.range(0.3, 3.0) * extent;
+    Camera::look_at(
+        Vec3::new(r * a.cos(), rng.range(0.05, 1.2) * extent, r * a.sin()),
+        Vec3::ZERO,
+        Vec3::new(0.0, 1.0, 0.0),
+        Intrinsics::from_fov(128, 128, 60f32.to_radians()),
+    )
+}
+
+#[test]
+fn prop_partition_is_exact_cover_for_any_tree_and_tau() {
+    forall(12, |rng| {
+        let (_, tree) = random_scene(rng);
+        let tau_s = 4 + rng.below(96) as u32;
+        for slt in [
+            SlTree::partition(&tree, tau_s),
+            SlTree::partition_unmerged(&tree, tau_s),
+        ] {
+            slt.check_invariants(&tree).unwrap();
+            assert_eq!(slt.sizes().iter().sum::<usize>(), tree.len());
+        }
+    });
+}
+
+#[test]
+fn prop_traversal_bit_accurate_for_any_camera_and_tau() {
+    forall(10, |rng| {
+        let (_, tree) = random_scene(rng);
+        let extent = tree.aabbs[0].half_extent().max_component();
+        let tau_s = 8 + rng.below(56) as u32;
+        let slt = SlTree::partition(&tree, tau_s);
+        for _ in 0..3 {
+            let cam = random_camera(rng, extent.max(1.0));
+            let tau = rng.range(0.5, 64.0);
+            let (want, _) = tree.canonical_search(&cam, tau);
+            let (got, trace) = traverse_sltree(&tree, &slt, &cam, tau, 1 + rng.below(8));
+            assert_eq!(got, want, "cut mismatch (tau={tau}, tau_s={tau_s})");
+            // The traversal never does more node tests than canonical.
+            assert!(trace.visited <= {
+                let (_, t) = tree.canonical_search(&cam, tau);
+                t.visited
+            });
+        }
+    });
+}
+
+#[test]
+fn prop_merging_never_increases_subtree_count_or_variance() {
+    forall(12, |rng| {
+        let (_, tree) = random_scene(rng);
+        let tau_s = 8 + rng.below(56) as u32;
+        let merged = SlTree::partition(&tree, tau_s);
+        let unmerged = SlTree::partition_unmerged(&tree, tau_s);
+        assert!(merged.len() <= unmerged.len());
+        let cov = |s: &SlTree| {
+            let xs: Vec<f64> = s.sizes().iter().map(|&x| x as f64).collect();
+            sltarch::util::stats::cov(&xs)
+        };
+        // Greedy merging targets variance; allow equality for trees that
+        // are already balanced.
+        assert!(cov(&merged) <= cov(&unmerged) + 1e-9);
+    });
+}
+
+#[test]
+fn prop_blend_conserves_energy_and_bounds() {
+    forall(24, |rng| {
+        // Random splats over one tile; T in [0,1] decreasing, rgb bounded
+        // by 1 - T (with unit colors).
+        let k = 1 + rng.below(48);
+        let splats: Vec<Splat2D> = (0..k)
+            .map(|i| {
+                let s = rng.range(0.02, 1.0);
+                Splat2D {
+                    mean: Vec2::new(rng.range(-4.0, 20.0), rng.range(-4.0, 20.0)),
+                    conic: [s, 0.0, s],
+                    depth: rng.range(0.5, 10.0),
+                    radius: 3.0,
+                    color: [1.0, 1.0, 1.0],
+                    opacity: rng.range(0.0, 1.0),
+                    id: i as u32,
+                }
+            })
+            .collect();
+        let order: Vec<u32> = (0..k as u32).collect();
+        for mode in [BlendMode::PerPixel, BlendMode::PixelGroup] {
+            let mut rgb = [[0.0f32; 3]; PIXELS];
+            let mut t = [1.0f32; PIXELS];
+            blend_tile(&order, &splats, (0.0, 0.0), mode, &mut rgb, &mut t, 0.0);
+            for p in 0..PIXELS {
+                assert!((0.0..=1.0).contains(&t[p]), "T out of range: {}", t[p]);
+                // With unit colours, accumulated rgb == 1 - T exactly.
+                assert!(
+                    (rgb[p][0] - (1.0 - t[p])).abs() < 1e-4,
+                    "energy not conserved: rgb {} vs 1-T {}",
+                    rgb[p][0],
+                    1.0 - t[p]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_scene_presets_build_valid_pipelines() {
+    forall(4, |rng| {
+        let mut cfg = SceneConfig::small_scale().quick();
+        cfg.leaves = 1_000 + rng.below(2_000);
+        let scene = cfg.build(rng.next_u64());
+        scene.tree.check_invariants().unwrap();
+        let slt = SlTree::partition(&scene.tree, 32);
+        slt.check_invariants(&scene.tree).unwrap();
+    });
+}
