@@ -6,7 +6,9 @@
 //! Run: `cargo run --release --example city_scale [-- --quick]`
 
 use sltarch::config::{ArchConfig, RenderConfig, SceneConfig};
+use sltarch::coordinator::renderer::{default_threads, AlphaMode};
 use sltarch::coordinator::FramePipeline;
+use sltarch::scene::orbit_cameras;
 use sltarch::sim::workload::NODE_BYTES;
 use sltarch::sim::HwVariant;
 
@@ -53,5 +55,27 @@ fn main() -> anyhow::Result<()> {
          not the scene: that is the paper's scalability argument, and why\n\
          the GPU baseline's exhaustive search loses at scale."
     );
+
+    // Batched many-camera traffic: an orbital sweep through the city via
+    // `render_path` (scratch reused across frames, dynamic tile
+    // scheduler), at serial vs full parallelism.
+    pipeline.rcfg.lod_tau = 16.0;
+    let frames = if quick { 8 } else { 60 };
+    let cams = orbit_cameras(cfg.extent, 0.9, frames, 256, 256);
+    let threads = default_threads();
+    println!("\nbatched render_path over {frames} orbit cameras:");
+    for t in [1usize, threads] {
+        let (_, report) = pipeline.render_path_cpu(&cams, AlphaMode::Group, t);
+        println!(
+            "  {:>2} thread(s): {:>7.2} FPS  ({:.1} ms/frame, {:.1}k pairs/frame)",
+            report.threads,
+            report.fps(),
+            report.wall_seconds / frames as f64 * 1e3,
+            report.pairs_total as f64 / frames as f64 / 1e3,
+        );
+        if t == threads && threads == 1 {
+            break;
+        }
+    }
     Ok(())
 }

@@ -107,5 +107,18 @@ fn main() -> anyhow::Result<()> {
         sim_gpu / sim_slt
     );
     println!("worst group-vs-pixel PSNR: {worst_psnr:.2} dB (approximation cost)");
+
+    // Many-camera traffic through the batched API: replay the whole
+    // trajectory with `render_path_cpu` (front-end scratch reused across
+    // frames, dynamic-greedy tile scheduler) for the aggregate
+    // CPU-mirror throughput the serving story cares about.
+    let threads = sltarch::coordinator::renderer::default_threads();
+    let (_, batch) = pipeline.render_path_cpu(&cams, AlphaMode::Group, threads);
+    println!(
+        "batched CPU replay   : {:.1} ms/frame ({:.1} FPS on {} tile-scheduler threads)",
+        batch.wall_seconds / batch.frames as f64 * 1e3,
+        batch.fps(),
+        batch.threads
+    );
     Ok(())
 }

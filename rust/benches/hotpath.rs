@@ -1,11 +1,18 @@
 //! Bench: the L3 hot paths in isolation — SLTree partitioning, the
-//! streaming traversal, tile binning, depth sort and the blend loop.
-//! This is the harness the §Perf optimization pass iterates against.
-use sltarch::config::{RenderConfig, SceneConfig};
-use sltarch::coordinator::renderer::{AlphaMode, CpuRenderer};
-use sltarch::gaussian::project;
+//! streaming traversal, CSR tile binning, the radix depth sort, the
+//! blend loop (serial vs the dynamic multi-threaded tile scheduler) and
+//! the batched `render_path` API. This is the harness the §Perf
+//! optimization pass iterates against; it also dumps
+//! `BENCH_hotpath.json` so CI can accumulate the perf trajectory.
+use sltarch::config::{ArchConfig, RenderConfig, SceneConfig};
+use sltarch::coordinator::renderer::{default_threads, AlphaMode, CpuRenderer};
+use sltarch::coordinator::FramePipeline;
+use sltarch::gaussian::{project, project_into};
 use sltarch::lod::{traverse_sltree, SlTree};
-use sltarch::splat::{bin_splats, sort_tile_by_depth};
+use sltarch::scene::orbit_cameras;
+use sltarch::splat::{
+    bin_splats, bin_splats_into, sort_bins_with, DepthSortScratch, TileBins,
+};
 use sltarch::util::bench::Bench;
 
 fn main() {
@@ -18,8 +25,10 @@ fn main() {
         c.leaves = 300_000; // keep the full bench under a minute
         c
     };
+    let extent = cfg.extent;
     let scene = cfg.build(42);
     let rcfg = RenderConfig::default();
+    let threads = default_threads();
     let mut b = Bench::new("hotpath");
 
     b.iter("sltree_partition(tau_s=32)", 3, || {
@@ -35,23 +44,60 @@ fn main() {
     let cut = slt.traverse(&scene.tree, &cam, rcfg.lod_tau);
     let queue = scene.gaussians.gather(&cut);
     b.iter("project(cut)", 5, || project(&queue, &cam));
+    let mut proj_buf = Vec::new();
+    b.iter("project_into(reused)", 5, || {
+        project_into(&queue, &cam, &mut proj_buf);
+        proj_buf.len()
+    });
     let splats = project(&queue, &cam);
     b.iter("bin_splats", 5, || bin_splats(&splats, 256, 256));
-    let bins = bin_splats(&splats, 256, 256);
-    b.iter("sort_all_tiles", 5, || {
-        let mut total = 0usize;
-        for idx in 0..bins.tile_count() {
-            let mut order = bins.per_tile[idx].clone();
-            sort_tile_by_depth(&mut order, &splats);
-            total += order.len();
-        }
-        total
+    let mut bins_buf = TileBins::default();
+    b.iter("bin_splats_into(reused)", 5, || {
+        bin_splats_into(&splats, 256, 256, &mut bins_buf);
+        bins_buf.pairs
     });
+
+    // Zero-clone CSR radix sort: restore the unsorted index order with a
+    // flat memcpy, then re-sort every tile slice in place.
+    let pristine = bin_splats(&splats, 256, 256);
+    let mut bins = pristine.clone();
+    let mut sort_scratch = DepthSortScratch::new();
+    b.iter("sort_all_tiles", 5, || {
+        bins.indices.copy_from_slice(&pristine.indices);
+        sort_bins_with(&mut bins, &splats, &mut sort_scratch);
+        bins.indices.len()
+    });
+
+    b.iter("cpu_render(group, serial)", 2, || {
+        CpuRenderer::render_threaded(&queue, &cam, AlphaMode::Group, &rcfg, 1)
+    });
+    // `cpu_render(group)` / `(pixel)` keep their historical names so the
+    // perf trajectory stays comparable; they now run the dynamic tile
+    // scheduler at `threads` workers.
     b.iter("cpu_render(group)", 2, || {
-        CpuRenderer::render(&queue, &cam, AlphaMode::Group, &rcfg)
+        CpuRenderer::render_threaded(&queue, &cam, AlphaMode::Group, &rcfg, threads)
     });
     b.iter("cpu_render(pixel)", 2, || {
-        CpuRenderer::render(&queue, &cam, AlphaMode::Pixel, &rcfg)
+        CpuRenderer::render_threaded(&queue, &cam, AlphaMode::Pixel, &rcfg, threads)
     });
+    b.record("tile_scheduler_threads", threads as f64);
+
+    // Batched many-camera throughput through the frame pipeline.
+    let path_frames = if quick { 12 } else { 60 };
+    let cams = orbit_cameras(extent, 0.9, path_frames, 256, 256);
+    let pipeline = FramePipeline::new(scene, rcfg, ArchConfig::default());
+    let mut path_fps = 0.0f64;
+    b.iter(&format!("render_path({path_frames} cams, group)"), 2, || {
+        let (_, report) = pipeline.render_path_cpu(&cams, AlphaMode::Group, threads);
+        path_fps = report.fps();
+        report.frames
+    });
+    b.record("render_path fps", path_fps);
+
     b.report();
+    let json = std::path::Path::new("BENCH_hotpath.json");
+    match b.write_json(json) {
+        Ok(()) => println!("\nwrote {}", json.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", json.display()),
+    }
 }

@@ -13,5 +13,5 @@ pub mod pipeline;
 pub mod renderer;
 pub mod workload;
 
-pub use pipeline::{FramePipeline, FrameReport};
-pub use renderer::{AlphaMode, CpuRenderer};
+pub use pipeline::{FramePipeline, FrameReport, PathReport};
+pub use renderer::{AlphaMode, CpuRenderer, FrameScratch};

@@ -2,7 +2,9 @@
 //! config and (optionally) the PJRT engine, and turns cameras into
 //! images + simulation reports.
 
-use super::renderer::{AlphaMode, CpuRenderer, PjrtRenderer};
+use super::renderer::{
+    default_threads, AlphaMode, CpuRenderer, FrameScratch, PjrtRenderer,
+};
 use super::workload::{frame_workload, lod_workload};
 use crate::config::{ArchConfig, RenderConfig};
 use crate::lod::SlTree;
@@ -33,6 +35,33 @@ impl FrameReport {
             .iter()
             .find(|r| r.variant == v)
             .map(|r| r.report.total_seconds())
+    }
+}
+
+/// Aggregate report for a batched camera-path render
+/// ([`FramePipeline::render_path`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PathReport {
+    /// Frames rendered.
+    pub frames: usize,
+    /// Wall-clock seconds for the whole batch (search + render).
+    pub wall_seconds: f64,
+    /// Total rendering-queue length across frames.
+    pub cut_total: u64,
+    /// Total (gaussian, tile) pairs across frames.
+    pub pairs_total: u64,
+    /// Tile-scheduler worker count used (0 = PJRT path).
+    pub threads: usize,
+}
+
+impl PathReport {
+    /// Aggregate throughput in frames per second.
+    pub fn fps(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.frames as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
     }
 }
 
@@ -75,6 +104,68 @@ impl FramePipeline {
             }
             None => Ok(CpuRenderer::render(&queue, cam, mode, &self.rcfg)),
         }
+    }
+
+    /// Render a whole camera path as one batch. Uses the PJRT artifacts
+    /// when an engine is attached, otherwise the parallel CPU renderer
+    /// with front-end scratch (projection buffer, CSR bins, sort keys)
+    /// reused across frames — zero steady-state allocation per frame.
+    /// Returns the frames plus an aggregate throughput report.
+    pub fn render_path(
+        &self,
+        cams: &[Camera],
+        mode: AlphaMode,
+    ) -> Result<(Vec<Image>, PathReport)> {
+        match &self.engine {
+            Some(engine) => {
+                let t0 = std::time::Instant::now();
+                let mut scratch = FrameScratch::new();
+                let mut report = PathReport { frames: cams.len(), ..Default::default() };
+                let mut images = Vec::with_capacity(cams.len());
+                for cam in cams {
+                    let cut = self.search(cam);
+                    report.cut_total += cut.len() as u64;
+                    let queue = self.scene.gaussians.gather(&cut);
+                    images.push(PjrtRenderer::render_with_scratch(
+                        engine, &queue, cam, mode, &self.rcfg, &mut scratch,
+                    )?);
+                    report.pairs_total += scratch.bins.pairs;
+                }
+                report.wall_seconds = t0.elapsed().as_secs_f64();
+                Ok((images, report))
+            }
+            None => Ok(self.render_path_cpu(cams, mode, default_threads())),
+        }
+    }
+
+    /// The CPU batched path with an explicit tile-scheduler worker
+    /// count, regardless of any attached engine (the examples use this
+    /// for apples-to-apples CPU throughput numbers).
+    pub fn render_path_cpu(
+        &self,
+        cams: &[Camera],
+        mode: AlphaMode,
+        threads: usize,
+    ) -> (Vec<Image>, PathReport) {
+        let t0 = std::time::Instant::now();
+        let mut scratch = FrameScratch::new();
+        let mut report = PathReport {
+            frames: cams.len(),
+            threads: threads.max(1),
+            ..Default::default()
+        };
+        let mut images = Vec::with_capacity(cams.len());
+        for cam in cams {
+            let cut = self.search(cam);
+            report.cut_total += cut.len() as u64;
+            let queue = self.scene.gaussians.gather(&cut);
+            images.push(CpuRenderer::render_with_scratch(
+                &queue, cam, mode, &self.rcfg, threads, &mut scratch,
+            ));
+            report.pairs_total += scratch.bins.pairs;
+        }
+        report.wall_seconds = t0.elapsed().as_secs_f64();
+        (images, report)
     }
 
     /// Run the workload extraction + all five Fig. 9 variants for one
@@ -125,6 +216,34 @@ mod tests {
         let gpu = report.sim_seconds(HwVariant::Gpu).unwrap();
         let slt = report.sim_seconds(HwVariant::SlTarch).unwrap();
         assert!(slt < gpu, "SLTARCH {slt} !< GPU {gpu}");
+    }
+
+    #[test]
+    fn render_path_matches_per_frame_renders() {
+        let p = pipeline();
+        let cams: Vec<Camera> = (0..3).map(|i| p.scene.scenario_camera(i)).collect();
+        let (images, report) = p.render_path(&cams, AlphaMode::Group).unwrap();
+        assert_eq!(images.len(), 3);
+        assert_eq!(report.frames, 3);
+        assert!(report.cut_total > 0);
+        assert!(report.pairs_total > 0);
+        assert!(report.fps() > 0.0);
+        for (i, (img, cam)) in images.iter().zip(cams.iter()).enumerate() {
+            let per_frame = p.render(cam, AlphaMode::Group).unwrap();
+            assert_eq!(img.data, per_frame.data, "frame {i} diverged from render()");
+        }
+    }
+
+    #[test]
+    fn render_path_cpu_thread_counts_agree() {
+        let p = pipeline();
+        let cams: Vec<Camera> = (0..2).map(|i| p.scene.scenario_camera(i)).collect();
+        let (a, ra) = p.render_path_cpu(&cams, AlphaMode::Pixel, 1);
+        let (b, rb) = p.render_path_cpu(&cams, AlphaMode::Pixel, 8);
+        assert_eq!(ra.pairs_total, rb.pairs_total);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.data, y.data);
+        }
     }
 
     #[test]

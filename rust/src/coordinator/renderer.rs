@@ -1,17 +1,30 @@
 //! Image production: a pure-CPU renderer (mirrors the L1 kernels) and a
 //! PJRT renderer (executes the AOT artifacts). Both share the same
-//! front end (projection -> binning -> sorting) and differ only in who
-//! runs the blending maths — the integration test
+//! front end (projection -> CSR binning -> in-place radix depth sort)
+//! and differ only in who runs the blending maths — the integration test
 //! `rust/tests/pjrt_roundtrip.rs` asserts they agree.
+//!
+//! The CPU renderer splats tiles with a **dynamic-greedy multi-threaded
+//! scheduler**: workers pull non-empty tiles one at a time from a shared
+//! atomic queue — the software mirror of the LT-unit dynamic dequeue in
+//! `lod/traversal.rs`, applied to the splatting stage's tile workload
+//! (the paper's other imbalance source). Each worker owns reusable
+//! `rgb`/`t` scratch and writes its finished tiles straight into the
+//! frame image; tiles are disjoint, so the output is bit-identical to
+//! the serial schedule regardless of thread count.
 
 use crate::config::RenderConfig;
-use crate::gaussian::{project, Gaussians, Splat2D};
+use crate::gaussian::{project_into, Gaussians, Splat2D};
 use crate::math::Camera;
 use crate::metrics::Image;
 use crate::runtime::{PjrtEngine, SplatChunk, SplatState, K_CHUNK};
 use crate::splat::blend::PIXELS;
-use crate::splat::{bin_splats, blend_tile, sort_tile_by_depth, BlendMode, TILE};
+use crate::splat::{
+    bin_splats_into, blend_tile, sort_bins_with, BlendMode, DepthSortScratch,
+    TileBins, TILE,
+};
 use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Which alpha dataflow to render with.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -31,71 +44,250 @@ impl AlphaMode {
     }
 }
 
-/// Shared front end: project the queue, bin, and depth-sort each tile.
-fn front_end(
-    queue: &Gaussians,
-    cam: &Camera,
-) -> (Vec<Splat2D>, crate::splat::TileBins, Vec<Vec<u32>>) {
-    let splats = project(queue, cam);
-    let bins = bin_splats(&splats, cam.intr.width, cam.intr.height);
-    let mut orders = Vec::with_capacity(bins.tile_count());
-    for idx in 0..bins.tile_count() {
-        let mut order = bins.per_tile[idx].clone();
-        sort_tile_by_depth(&mut order, &splats);
-        orders.push(order);
-    }
-    (splats, bins, orders)
+/// Reusable front-end state: the projection buffer, the CSR tile bins
+/// and the radix-sort key buffers. One instance per render loop — after
+/// the first frame warms it up, a frame's front end allocates nothing.
+#[derive(Debug, Default)]
+pub struct FrameScratch {
+    pub splats: Vec<Splat2D>,
+    pub bins: TileBins,
+    pub sort: DepthSortScratch,
+    /// Work list of non-empty tile indices (the scheduler's queue).
+    work: Vec<u32>,
 }
 
-/// Write one tile's accumulated RGB into the frame image.
+impl FrameScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Shared front end: project the queue, bin into CSR, and depth-sort
+/// every tile slice in place.
+fn front_end_into(queue: &Gaussians, cam: &Camera, scratch: &mut FrameScratch) {
+    project_into(queue, cam, &mut scratch.splats);
+    bin_splats_into(
+        &scratch.splats,
+        cam.intr.width,
+        cam.intr.height,
+        &mut scratch.bins,
+    );
+    sort_bins_with(&mut scratch.bins, &scratch.splats, &mut scratch.sort);
+    scratch.work.clear();
+    scratch.work.extend(
+        (0..scratch.bins.tile_count() as u32).filter(|&t| scratch.bins.tile_len(t as usize) > 0),
+    );
+}
+
+/// Write one tile's accumulated RGB into the frame image (exclusive
+/// access — delegates to the same store the scheduler workers use so
+/// serial and parallel schedules share one clipping/indexing path).
 fn store_tile(img: &mut Image, origin: (f32, f32), rgb: &[[f32; 3]]) {
-    let ox = origin.0 as u32;
-    let oy = origin.1 as u32;
-    for py in 0..TILE {
-        for px in 0..TILE {
-            let x = ox + px;
+    let shared = SharedImage::new(img);
+    // SAFETY: `img` is exclusively borrowed, so no concurrent writes.
+    unsafe { shared.store_tile(origin, rgb) };
+}
+
+/// Raw view of the frame image that lets scheduler workers store
+/// *disjoint* tiles concurrently without locking.
+struct SharedImage {
+    data: *mut [f32; 3],
+    width: u32,
+    height: u32,
+}
+
+// SAFETY: workers only ever write through `store_tile`, and the atomic
+// work queue hands each tile index to exactly one worker, so concurrent
+// writes never alias.
+unsafe impl Send for SharedImage {}
+unsafe impl Sync for SharedImage {}
+
+impl SharedImage {
+    fn new(img: &mut Image) -> SharedImage {
+        SharedImage {
+            data: img.data.as_mut_ptr(),
+            width: img.width,
+            height: img.height,
+        }
+    }
+
+    /// Store one tile's pixels.
+    ///
+    /// # Safety
+    /// No two concurrent calls may cover overlapping pixels, and the
+    /// backing image must outlive every call (both guaranteed by the
+    /// scoped-thread scheduler: unique tile ids, join before return).
+    unsafe fn store_tile(&self, origin: (f32, f32), rgb: &[[f32; 3]]) {
+        let ox = origin.0 as u32;
+        let oy = origin.1 as u32;
+        for py in 0..TILE {
             let y = oy + py;
-            if x < img.width && y < img.height {
-                img.set(x, y, rgb[(py * TILE + px) as usize]);
+            if y >= self.height {
+                break;
+            }
+            for px in 0..TILE {
+                let x = ox + px;
+                if x >= self.width {
+                    break;
+                }
+                unsafe {
+                    *self.data.add((y * self.width + x) as usize) =
+                        rgb[(py * TILE + px) as usize];
+                }
             }
         }
     }
+}
+
+/// Reset the accumulation scratch and blend one tile into it.
+#[inline]
+fn blend_one_tile(
+    order: &[u32],
+    splats: &[Splat2D],
+    origin: (f32, f32),
+    mode: BlendMode,
+    rgb: &mut [[f32; 3]; PIXELS],
+    t: &mut [f32; PIXELS],
+    t_min: f32,
+) {
+    rgb.iter_mut().for_each(|p| *p = [0.0; 3]);
+    t.iter_mut().for_each(|v| *v = 1.0);
+    blend_tile(order, splats, origin, mode, rgb, t, t_min);
+}
+
+/// Splat every non-empty tile of `scratch` into `img`, using `threads`
+/// workers over a dynamic-greedy shared queue (1 = serial reference).
+fn blend_tiles(
+    scratch: &FrameScratch,
+    mode: BlendMode,
+    t_min: f32,
+    threads: usize,
+    img: &mut Image,
+) {
+    let bins = &scratch.bins;
+    let splats = &scratch.splats[..];
+    let work = &scratch.work[..];
+    if threads <= 1 || work.len() <= 1 {
+        let mut rgb = [[0.0f32; 3]; PIXELS];
+        let mut t = [0.0f32; PIXELS];
+        for &idx in work {
+            let origin = bins.tile_origin(idx as usize);
+            blend_one_tile(
+                bins.tile(idx as usize),
+                splats,
+                origin,
+                mode,
+                &mut rgb,
+                &mut t,
+                t_min,
+            );
+            store_tile(img, origin, &rgb);
+        }
+        return;
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let target = SharedImage::new(img);
+    // Never spawn more workers than there are tiles to hand out (also
+    // bounds a runaway SLTARCH_THREADS setting to the tile count).
+    let workers = threads.min(work.len());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                // Per-worker reusable accumulation scratch.
+                let mut rgb = [[0.0f32; 3]; PIXELS];
+                let mut t = [0.0f32; PIXELS];
+                loop {
+                    // Dynamic greedy dequeue: whoever finishes a tile
+                    // first grabs the next one, soaking up the per-tile
+                    // workload imbalance (cf. the LT-unit dequeue).
+                    let w = cursor.fetch_add(1, Ordering::Relaxed);
+                    if w >= work.len() {
+                        break;
+                    }
+                    let idx = work[w] as usize;
+                    let origin = bins.tile_origin(idx);
+                    blend_one_tile(
+                        bins.tile(idx),
+                        splats,
+                        origin,
+                        mode,
+                        &mut rgb,
+                        &mut t,
+                        t_min,
+                    );
+                    // SAFETY: `w` (hence `idx`) is claimed by exactly
+                    // one worker and tiles never overlap; the image
+                    // outlives the scope.
+                    unsafe { target.store_tile(origin, &rgb) };
+                }
+            });
+        }
+    });
+}
+
+/// Worker count for the tile scheduler: `SLTARCH_THREADS` env override,
+/// else the machine's available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("SLTARCH_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 /// Pure-CPU renderer.
 pub struct CpuRenderer;
 
 impl CpuRenderer {
-    /// Render the gathered rendering queue (a cut of the LoD tree).
+    /// Render the gathered rendering queue (a cut of the LoD tree) with
+    /// the dynamic tile scheduler on [`default_threads`] workers.
     pub fn render(
         queue: &Gaussians,
         cam: &Camera,
         mode: AlphaMode,
         rcfg: &RenderConfig,
     ) -> Image {
-        let (splats, bins, orders) = front_end(queue, cam);
+        Self::render_threaded(queue, cam, mode, rcfg, default_threads())
+    }
+
+    /// Serial reference schedule (the scheduler's ground truth).
+    pub fn render_serial(
+        queue: &Gaussians,
+        cam: &Camera,
+        mode: AlphaMode,
+        rcfg: &RenderConfig,
+    ) -> Image {
+        Self::render_threaded(queue, cam, mode, rcfg, 1)
+    }
+
+    /// Render with an explicit worker count. Output is bit-identical
+    /// across all `threads` values: tiles are independent and disjoint.
+    pub fn render_threaded(
+        queue: &Gaussians,
+        cam: &Camera,
+        mode: AlphaMode,
+        rcfg: &RenderConfig,
+        threads: usize,
+    ) -> Image {
+        let mut scratch = FrameScratch::new();
+        Self::render_with_scratch(queue, cam, mode, rcfg, threads, &mut scratch)
+    }
+
+    /// Render reusing caller-owned front-end scratch (the batched
+    /// `FramePipeline::render_path` hot loop).
+    pub fn render_with_scratch(
+        queue: &Gaussians,
+        cam: &Camera,
+        mode: AlphaMode,
+        rcfg: &RenderConfig,
+        threads: usize,
+        scratch: &mut FrameScratch,
+    ) -> Image {
+        front_end_into(queue, cam, scratch);
         let mut img = Image::new(cam.intr.width, cam.intr.height);
-        let mut rgb = [[0.0f32; 3]; PIXELS];
-        let mut t = [0.0f32; PIXELS];
-        for idx in 0..bins.tile_count() {
-            let order = &orders[idx];
-            if order.is_empty() {
-                continue;
-            }
-            rgb.iter_mut().for_each(|p| *p = [0.0; 3]);
-            t.iter_mut().for_each(|v| *v = 1.0);
-            let origin = bins.tile_origin(idx);
-            blend_tile(
-                order,
-                &splats,
-                origin,
-                mode.blend_mode(),
-                &mut rgb,
-                &mut t,
-                rcfg.t_min,
-            );
-            store_tile(&mut img, origin, &rgb);
-        }
+        blend_tiles(scratch, mode.blend_mode(), rcfg.t_min, threads, &mut img);
         img
     }
 }
@@ -112,12 +304,29 @@ impl PjrtRenderer {
         mode: AlphaMode,
         rcfg: &RenderConfig,
     ) -> Result<Image> {
+        let mut scratch = FrameScratch::new();
+        Self::render_with_scratch(engine, queue, cam, mode, rcfg, &mut scratch)
+    }
+
+    /// Render reusing caller-owned front-end scratch (the batched
+    /// `FramePipeline::render_path` loop threads one scratch through
+    /// every frame on this path too).
+    pub fn render_with_scratch(
+        engine: &PjrtEngine,
+        queue: &Gaussians,
+        cam: &Camera,
+        mode: AlphaMode,
+        rcfg: &RenderConfig,
+        scratch: &mut FrameScratch,
+    ) -> Result<Image> {
         // Front end on CPU (binning/sorting is L3 work); blending on PJRT.
-        let (splats, bins, orders) = front_end(queue, cam);
+        front_end_into(queue, cam, scratch);
+        let splats = &scratch.splats;
+        let bins = &scratch.bins;
         let mut img = Image::new(cam.intr.width, cam.intr.height);
         let group = mode == AlphaMode::Group;
         for idx in 0..bins.tile_count() {
-            let order = &orders[idx];
+            let order = bins.tile(idx);
             if order.is_empty() {
                 continue;
             }
@@ -164,6 +373,41 @@ mod tests {
         let mean: f32 = img.data.iter().map(|p| p[0] + p[1] + p[2]).sum::<f32>()
             / (img.data.len() as f32 * 3.0);
         assert!(mean > 0.01, "image is black: mean {mean}");
+    }
+
+    #[test]
+    fn parallel_render_is_bit_identical_to_serial() {
+        let (scene, cut, cam) = setup();
+        let queue = scene.gaussians.gather(&cut);
+        let rcfg = RenderConfig::default();
+        for mode in [AlphaMode::Pixel, AlphaMode::Group] {
+            let serial = CpuRenderer::render_serial(&queue, &cam, mode, &rcfg);
+            for threads in [1usize, 2, 8] {
+                let par = CpuRenderer::render_threaded(&queue, &cam, mode, &rcfg, threads);
+                assert_eq!(
+                    serial.data, par.data,
+                    "{mode:?} diverged at {threads} threads"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_frames_is_bit_identical() {
+        let (scene, cut, cam) = setup();
+        let queue = scene.gaussians.gather(&cut);
+        let rcfg = RenderConfig::default();
+        let mut scratch = FrameScratch::new();
+        // Two different cameras through one scratch, checked against
+        // fresh-scratch renders.
+        for cam_i in 0..3 {
+            let cam = if cam_i == 0 { cam } else { scene.scenario_camera(cam_i) };
+            let reused = CpuRenderer::render_with_scratch(
+                &queue, &cam, AlphaMode::Group, &rcfg, 4, &mut scratch,
+            );
+            let fresh = CpuRenderer::render_threaded(&queue, &cam, AlphaMode::Group, &rcfg, 4);
+            assert_eq!(reused.data, fresh.data, "camera {cam_i}");
+        }
     }
 
     #[test]

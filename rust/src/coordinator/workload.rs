@@ -8,7 +8,7 @@ use crate::lod::{naive_static_workloads, traverse_sltree, SlTree};
 use crate::math::Camera;
 use crate::scene::Scene;
 use crate::sim::workload::{LodWorkload, SplatWorkload};
-use crate::splat::{bin_splats, blend_tile, sort_tile_by_depth, BlendMode, BlendStats};
+use crate::splat::{bin_splats, blend_tile, sort_bins_by_depth, BlendMode, BlendStats};
 use crate::splat::blend::PIXELS;
 
 /// Build the LoD-search workload for one frame.
@@ -42,7 +42,9 @@ pub fn splat_workload(
 ) -> SplatWorkload {
     let queue = scene.gaussians.gather(cut);
     let splats = project(&queue, cam);
-    let bins = bin_splats(&splats, cam.intr.width, cam.intr.height);
+    let mut bins = bin_splats(&splats, cam.intr.width, cam.intr.height);
+    // Depth-sort every CSR slice in place — no per-tile clones.
+    sort_bins_by_depth(&mut bins, &splats);
 
     let mut pixel = BlendStats::default();
     let mut group = BlendStats::default();
@@ -51,18 +53,17 @@ pub fn splat_workload(
     let mut t = [0.0f32; PIXELS];
 
     for idx in 0..bins.tile_count() {
-        let mut order = bins.per_tile[idx].clone();
+        let order = bins.tile(idx);
         tile_lens.push(order.len() as u64);
         if order.is_empty() {
             continue;
         }
-        sort_tile_by_depth(&mut order, &splats);
         let origin = bins.tile_origin(idx);
         // Per-pixel pass.
         rgb.iter_mut().for_each(|p| *p = [0.0; 3]);
         t.iter_mut().for_each(|v| *v = 1.0);
         let sp = blend_tile(
-            &order, &splats, origin, BlendMode::PerPixel, &mut rgb, &mut t,
+            order, &splats, origin, BlendMode::PerPixel, &mut rgb, &mut t,
             rcfg.t_min,
         );
         pixel.merge(&sp);
@@ -70,7 +71,7 @@ pub fn splat_workload(
         rgb.iter_mut().for_each(|p| *p = [0.0; 3]);
         t.iter_mut().for_each(|v| *v = 1.0);
         let sg = blend_tile(
-            &order, &splats, origin, BlendMode::PixelGroup, &mut rgb, &mut t,
+            order, &splats, origin, BlendMode::PixelGroup, &mut rgb, &mut t,
             rcfg.t_min,
         );
         group.merge(&sg);

@@ -116,7 +116,17 @@ pub fn project_one(g: &Gaussians, i: usize, cam: &Camera) -> Splat2D {
 /// Project a whole batch (CPU path; the PJRT path goes through
 /// `runtime::exec::ProjectExe`).
 pub fn project(g: &Gaussians, cam: &Camera) -> Vec<Splat2D> {
-    (0..g.len()).map(|i| project_one(g, i, cam)).collect()
+    let mut out = Vec::new();
+    project_into(g, cam, &mut out);
+    out
+}
+
+/// Project into a reusable buffer — the allocation-lean path the batched
+/// frame pipeline uses (no per-frame projection allocation once warm).
+pub fn project_into(g: &Gaussians, cam: &Camera, out: &mut Vec<Splat2D>) {
+    out.clear();
+    out.reserve(g.len());
+    out.extend((0..g.len()).map(|i| project_one(g, i, cam)));
 }
 
 #[cfg(test)]

@@ -19,6 +19,33 @@
 //! * [`experiments`] — one module per paper table/figure; each prints the
 //!   rows the paper reports (see DESIGN.md §5 for the index).
 //!
+//! ## Pipeline parallelism (software mirror of the paper's scheduling)
+//!
+//! The frame front end is flat and allocation-lean by construction:
+//!
+//! * **CSR tile bins** — [`splat::TileBins`] stores every tile's splat
+//!   list in one flat index array plus an offset table, built
+//!   count -> prefix-sum -> scatter ([`splat::bin_splats_into`] reuses
+//!   the buffers across frames).
+//! * **In-place radix depth sort** — [`splat::sort_bins_with`] orders
+//!   each CSR slice front-to-back via 64-bit `(sortable-depth, id)`
+//!   keys, bit-identical to the comparison reference
+//!   [`splat::sort_tile_by_depth`] including the id tie-break.
+//! * **Dynamic tile scheduler** — the CPU renderer splats tiles with
+//!   `std::thread::scope` workers pulling non-empty tiles greedily from
+//!   a shared atomic queue (the software analogue of the LT-unit
+//!   dynamic dequeue); output is bit-identical to the serial schedule
+//!   at any thread count.
+//! * **Batched path rendering** —
+//!   [`coordinator::pipeline::FramePipeline::render_path`] renders a
+//!   whole camera path reusing one front-end scratch, reporting
+//!   aggregate frames/sec ([`coordinator::pipeline::PathReport`]).
+//!
+//! Measure the hot paths with
+//! `cargo bench --bench hotpath` (add `-- --quick` for a smoke pass);
+//! it prints a report and dumps `BENCH_hotpath.json` for CI. Use
+//! `SLTARCH_THREADS=N` to pin the scheduler width.
+//!
 //! Quickstart (see `examples/quickstart.rs`):
 //!
 //! ```no_run
@@ -46,8 +73,8 @@ pub mod util;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::config::{ArchConfig, RenderConfig, SceneConfig};
-    pub use crate::coordinator::pipeline::{FramePipeline, FrameReport};
-    pub use crate::coordinator::renderer::{AlphaMode, CpuRenderer};
+    pub use crate::coordinator::pipeline::{FramePipeline, FrameReport, PathReport};
+    pub use crate::coordinator::renderer::{AlphaMode, CpuRenderer, FrameScratch};
     pub use crate::gaussian::Gaussians;
     pub use crate::lod::sltree::SlTree;
     pub use crate::lod::tree::LodTree;

@@ -289,11 +289,21 @@ mod tests {
         let (_, t) = traverse_sltree(&scene.tree, &slt, &cam, 8.0, 4);
         assert!(t.subtree_fetches <= slt.len() as u64);
         assert!(t.activations >= t.subtree_fetches);
-        assert_eq!(
-            t.bytes_streamed,
-            // Every fetch streams whole subtrees; recompute from sizes.
-            t.bytes_streamed // tautology guard replaced below
-        );
+        // Every fetch streams one whole subtree, and only the *first*
+        // activation of a subtree fetches it: recompute the expected
+        // byte count by summing `subtree_bytes` over first-touch sids.
+        let mut fetched = vec![false; slt.len()];
+        let mut expected_bytes = 0u64;
+        let mut expected_fetches = 0u64;
+        for &sid in &t.activation_sids {
+            if !fetched[sid as usize] {
+                fetched[sid as usize] = true;
+                expected_fetches += 1;
+                expected_bytes += t.subtree_bytes[sid as usize] as u64;
+            }
+        }
+        assert_eq!(t.subtree_fetches, expected_fetches);
+        assert_eq!(t.bytes_streamed, expected_bytes);
         assert!(t.bytes_streamed > 0);
     }
 }

@@ -4,7 +4,19 @@
 //! by camera depth. Ties break on splat id so results are deterministic
 //! across runs and platforms (floats compare totally here because
 //! projection never emits NaN depths for visible splats).
+//!
+//! Two implementations:
+//!
+//! * [`sort_tile_by_depth`] — the reference comparison sort (kept as
+//!   ground truth; the radix path is asserted identical against it).
+//! * [`radix_sort_tile`] / [`sort_bins_with`] — the production path: an
+//!   LSD radix sort over 64-bit `(sortable-depth, splat-id)` keys that
+//!   works directly inside the CSR bin slices with reusable key buffers,
+//!   so a whole frame's worth of tile sorts allocates nothing in steady
+//!   state. The key layout makes the id tie-break fall out of the
+//!   numeric order for free, exactly matching the comparison sort.
 
+use super::tiling::TileBins;
 use crate::gaussian::Splat2D;
 
 /// Sort one tile's splat indices front-to-back (ascending depth).
@@ -16,6 +28,152 @@ pub fn sort_tile_by_depth(indices: &mut [u32], splats: &[Splat2D]) {
             .unwrap_or(std::cmp::Ordering::Equal)
             .then_with(|| a.cmp(&b))
     });
+}
+
+/// Map a float to a `u32` whose unsigned order equals the float's
+/// numeric order (the classic sign-flip trick radix sorters use):
+/// negative floats get all bits inverted, non-negative floats get the
+/// sign bit set.
+#[inline]
+pub fn float_to_sortable_uint(f: f32) -> u32 {
+    let v = f.to_bits();
+    if v & 0x8000_0000 != 0 {
+        !v
+    } else {
+        v | 0x8000_0000
+    }
+}
+
+/// 64-bit radix key: sortable depth in the high half, splat index in the
+/// low half — ascending key order is exactly (depth asc, id asc).
+/// `-0.0` is canonicalised to `+0.0` so the key order agrees with the
+/// comparison sort's `partial_cmp` (which treats them as equal and falls
+/// through to the id tie-break).
+#[inline]
+fn depth_key(depth: f32, idx: u32) -> u64 {
+    let depth = if depth == 0.0 { 0.0 } else { depth };
+    ((float_to_sortable_uint(depth) as u64) << 32) | idx as u64
+}
+
+/// Reusable buffers for the radix tile sorter. One instance serves any
+/// number of tiles/frames; buffers grow to the largest tile seen.
+#[derive(Clone, Debug, Default)]
+pub struct DepthSortScratch {
+    keys: Vec<u64>,
+    tmp: Vec<u64>,
+}
+
+impl DepthSortScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Below this many elements a binary-insertion-style pass beats the
+/// 256-bucket histogram setup cost of a radix pass.
+const RADIX_CUTOFF: usize = 48;
+
+fn insertion_sort_keys(keys: &mut [u64]) {
+    for i in 1..keys.len() {
+        let k = keys[i];
+        let mut j = i;
+        while j > 0 && keys[j - 1] > k {
+            keys[j] = keys[j - 1];
+            j -= 1;
+        }
+        keys[j] = k;
+    }
+}
+
+/// LSD radix sort (8-bit digits) over `keys`, using `tmp` as the
+/// ping-pong buffer. Histograms for all 8 digit positions are gathered
+/// in a single pre-pass, and any digit position where every key shares
+/// the same byte is skipped entirely — in practice a tile's depth keys
+/// share high bytes, so most of the 8 passes vanish.
+fn radix_sort_keys(keys: &mut [u64], tmp: &mut Vec<u64>) {
+    let n = keys.len();
+    if n <= 1 {
+        return;
+    }
+    if n < RADIX_CUTOFF {
+        insertion_sort_keys(keys);
+        return;
+    }
+    let mut hist = [[0u32; 256]; 8];
+    for &k in keys.iter() {
+        for (b, h) in hist.iter_mut().enumerate() {
+            h[((k >> (b * 8)) & 0xFF) as usize] += 1;
+        }
+    }
+    tmp.clear();
+    tmp.resize(n, 0);
+    let mut in_keys = true; // does `keys` currently hold the data?
+    for (b, h) in hist.iter().enumerate() {
+        let shift = b * 8;
+        let probe = if in_keys { keys[0] } else { tmp[0] };
+        if h[((probe >> shift) & 0xFF) as usize] as usize == n {
+            continue; // every key shares this byte: pass is a no-op
+        }
+        let mut cursors = [0u32; 256];
+        let mut acc = 0u32;
+        for (c, &count) in cursors.iter_mut().zip(h.iter()) {
+            *c = acc;
+            acc += count;
+        }
+        let (src, dst): (&[u64], &mut [u64]) = if in_keys {
+            (&keys[..], &mut tmp[..])
+        } else {
+            (&tmp[..], &mut keys[..])
+        };
+        for &k in src {
+            let d = ((k >> shift) & 0xFF) as usize;
+            dst[cursors[d] as usize] = k;
+            cursors[d] += 1;
+        }
+        in_keys = !in_keys;
+    }
+    if !in_keys {
+        keys.copy_from_slice(&tmp[..n]);
+    }
+}
+
+/// Radix-sort one tile's splat indices front-to-back in place. Produces
+/// bit-identical order to [`sort_tile_by_depth`] for NaN-free depths
+/// (the only depths projection emits), including the id tie-break.
+pub fn radix_sort_tile(
+    indices: &mut [u32],
+    splats: &[Splat2D],
+    scratch: &mut DepthSortScratch,
+) {
+    if indices.len() <= 1 {
+        return;
+    }
+    scratch.keys.clear();
+    scratch
+        .keys
+        .extend(indices.iter().map(|&i| depth_key(splats[i as usize].depth, i)));
+    radix_sort_keys(&mut scratch.keys, &mut scratch.tmp);
+    for (slot, &k) in indices.iter_mut().zip(scratch.keys.iter()) {
+        *slot = k as u32;
+    }
+}
+
+/// Depth-sort every CSR tile slice of `bins` in place, reusing one
+/// scratch across all tiles (the zero-clone front-end sort path).
+pub fn sort_bins_with(
+    bins: &mut TileBins,
+    splats: &[Splat2D],
+    scratch: &mut DepthSortScratch,
+) {
+    for idx in 0..bins.tile_count() {
+        radix_sort_tile(bins.tile_mut(idx), splats, scratch);
+    }
+}
+
+/// Convenience wrapper over [`sort_bins_with`] with a throwaway scratch.
+pub fn sort_bins_by_depth(bins: &mut TileBins, splats: &[Splat2D]) {
+    let mut scratch = DepthSortScratch::new();
+    sort_bins_with(bins, splats, &mut scratch);
 }
 
 /// Comparator-network cost model used by the sorting-unit simulators:
@@ -33,6 +191,7 @@ pub fn bitonic_compare_ops(n: u64) -> u64 {
 mod tests {
     use super::*;
     use crate::math::Vec2;
+    use crate::util::Rng;
 
     fn splat(depth: f32, id: u32) -> Splat2D {
         Splat2D {
@@ -52,6 +211,9 @@ mod tests {
         let mut idx = vec![0u32, 1, 2];
         sort_tile_by_depth(&mut idx, &splats);
         assert_eq!(idx, vec![1, 2, 0]);
+        let mut ridx = vec![0u32, 1, 2];
+        radix_sort_tile(&mut ridx, &splats, &mut DepthSortScratch::new());
+        assert_eq!(ridx, idx);
     }
 
     #[test]
@@ -60,6 +222,81 @@ mod tests {
         let mut idx = vec![2u32, 0, 1];
         sort_tile_by_depth(&mut idx, &splats);
         assert_eq!(idx, vec![0, 1, 2]);
+        let mut ridx = vec![2u32, 0, 1];
+        radix_sort_tile(&mut ridx, &splats, &mut DepthSortScratch::new());
+        assert_eq!(ridx, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sortable_uint_preserves_float_order() {
+        let xs = [
+            f32::NEG_INFINITY,
+            -1e30,
+            -2.5,
+            -0.0,
+            0.0,
+            1e-20,
+            0.5,
+            2.5,
+            1e30,
+            f32::INFINITY,
+        ];
+        for w in xs.windows(2) {
+            assert!(
+                float_to_sortable_uint(w[0]) <= float_to_sortable_uint(w[1]),
+                "{} !<= {}",
+                w[0],
+                w[1]
+            );
+        }
+        assert!(float_to_sortable_uint(-1.0) < float_to_sortable_uint(1.0));
+    }
+
+    #[test]
+    fn radix_matches_reference_on_random_inputs() {
+        let mut rng = Rng::new(0x5027_D47A);
+        let mut scratch = DepthSortScratch::new();
+        for case in 0..48 {
+            // Mix of sizes straddling the insertion/radix cutoff, with
+            // heavy depth duplication to stress the id tie-break.
+            let n = 1 + rng.below(300);
+            let splats: Vec<Splat2D> = (0..n)
+                .map(|i| {
+                    let d = if rng.below(3) == 0 {
+                        [0.5f32, 1.0, 2.0, 1e9][rng.below(4)]
+                    } else {
+                        rng.range(0.2, 1e6)
+                    };
+                    splat(d, i as u32)
+                })
+                .collect();
+            // A shuffled index multiset (indices unique, random order).
+            let mut idx: Vec<u32> = (0..n as u32).collect();
+            for i in (1..idx.len()).rev() {
+                idx.swap(i, rng.below(i + 1));
+            }
+            let mut want = idx.clone();
+            sort_tile_by_depth(&mut want, &splats);
+            let mut got = idx;
+            radix_sort_tile(&mut got, &splats, &mut scratch);
+            assert_eq!(got, want, "case {case} (n={n})");
+        }
+    }
+
+    #[test]
+    fn scratch_is_reusable_across_tiles() {
+        let splats: Vec<Splat2D> =
+            (0..200).map(|i| splat((i * 7 % 31) as f32, i as u32)).collect();
+        let mut scratch = DepthSortScratch::new();
+        // A big tile warms the buffers, then a small one must not read
+        // stale keys from the previous sort.
+        let mut big: Vec<u32> = (0..200).rev().collect();
+        radix_sort_tile(&mut big, &splats, &mut scratch);
+        let mut small = vec![9u32, 3, 6];
+        radix_sort_tile(&mut small, &splats, &mut scratch);
+        let mut want = vec![9u32, 3, 6];
+        sort_tile_by_depth(&mut want, &splats);
+        assert_eq!(small, want);
     }
 
     #[test]

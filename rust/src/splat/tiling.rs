@@ -6,22 +6,73 @@
 //! using the basic 3-σ Gaussian-tile intersection test") — precise
 //! AABB/OBB refinement is deliberately *not* done: the group alpha check
 //! in the SP unit performs the finer-grained filtering for free.
+//!
+//! The bins live in a **CSR layout**: one flat index array plus a
+//! per-tile offset table, built count -> prefix-sum -> scatter (the same
+//! shape GPU duplication kernels use with atomics + a prefix scan).
+//! Compared to the old `Vec<Vec<u32>>` this removes per-tile heap churn,
+//! keeps every tile's list contiguous — the depth sorter works in place
+//! on the CSR slices — and lets the whole structure be reused across
+//! frames with zero steady-state allocation.
 
 use crate::gaussian::Splat2D;
 
 /// Tile side in pixels — fixed at 16 to match the splat HLO artifacts.
 pub const TILE: u32 = 16;
 
-/// Per-tile lists of indices into the projected-splat array.
-#[derive(Clone, Debug)]
+/// A splat's clamped tile-space bounding rectangle (inclusive).
+#[derive(Clone, Copy, Debug)]
+struct TileRect {
+    x0: u32,
+    y0: u32,
+    x1: u32,
+    y1: u32,
+}
+
+/// Compute the 3-sigma bounding square of `s` clamped to the tile grid;
+/// `None` when the splat is culled or entirely off-screen.
+#[inline]
+fn tile_rect(s: &Splat2D, tiles_x: u32, tiles_y: u32) -> Option<TileRect> {
+    if !s.visible() {
+        return None;
+    }
+    let r = s.radius;
+    let x0 = ((s.mean.x - r) / TILE as f32).floor().max(0.0) as u32;
+    let y0 = ((s.mean.y - r) / TILE as f32).floor().max(0.0) as u32;
+    let x1 = ((s.mean.x + r) / TILE as f32).floor() as i64;
+    let y1 = ((s.mean.y + r) / TILE as f32).floor() as i64;
+    if x1 < 0 || y1 < 0 {
+        return None;
+    }
+    let x1 = (x1 as u32).min(tiles_x - 1);
+    let y1 = (y1 as u32).min(tiles_y - 1);
+    if x0 > x1 || y0 > y1 {
+        return None;
+    }
+    Some(TileRect { x0, y0, x1, y1 })
+}
+
+/// CSR tile bins: indices of splats touching tile `t` live in
+/// `indices[offsets[t] as usize .. offsets[t + 1] as usize]`.
+#[derive(Clone, Debug, Default)]
 pub struct TileBins {
     pub tiles_x: u32,
     pub tiles_y: u32,
-    /// `per_tile[ty * tiles_x + tx]` = splat indices touching that tile.
-    pub per_tile: Vec<Vec<u32>>,
+    /// CSR offset table, length `tile_count() + 1`; `offsets[0] == 0`
+    /// and `offsets[tile_count()] as u64 == pairs`.
+    pub offsets: Vec<u32>,
+    /// Flat splat-index array, grouped by tile, ascending splat index
+    /// within each tile until a depth sort reorders the slices in place.
+    pub indices: Vec<u32>,
     /// Total (gaussian, tile) pairs — the duplication factor the sorting
-    /// hardware has to chew through.
+    /// hardware has to chew through. (The CSR offsets are `u32`, so one
+    /// frame is capped at 2^32 - 1 pairs — far beyond any screen here.)
     pub pairs: u64,
+    /// Scratch: cached per-splat tile rectangles `(splat index, rect)`
+    /// from the count pass, replayed by the scatter pass.
+    rects: Vec<(u32, TileRect)>,
+    /// Scratch: per-tile write cursors for the scatter pass.
+    cursor: Vec<u32>,
 }
 
 impl TileBins {
@@ -36,47 +87,129 @@ impl TileBins {
         let ty = idx as u32 / self.tiles_x;
         ((tx * TILE) as f32, (ty * TILE) as f32)
     }
+
+    /// Splat indices binned into tile `idx`.
+    #[inline]
+    pub fn tile(&self, idx: usize) -> &[u32] {
+        &self.indices[self.offsets[idx] as usize..self.offsets[idx + 1] as usize]
+    }
+
+    /// Mutable view of tile `idx` (the depth sorter reorders in place).
+    #[inline]
+    pub fn tile_mut(&mut self, idx: usize) -> &mut [u32] {
+        let lo = self.offsets[idx] as usize;
+        let hi = self.offsets[idx + 1] as usize;
+        &mut self.indices[lo..hi]
+    }
+
+    /// Number of splats binned into tile `idx`.
+    #[inline]
+    pub fn tile_len(&self, idx: usize) -> usize {
+        (self.offsets[idx + 1] - self.offsets[idx]) as usize
+    }
 }
 
 /// Bin projected splats into tiles covering a `width x height` screen.
 /// Culled splats (radius 0) never generate pairs.
 pub fn bin_splats(splats: &[Splat2D], width: u32, height: u32) -> TileBins {
+    let mut bins = TileBins::default();
+    bin_splats_into(splats, width, height, &mut bins);
+    bins
+}
+
+/// Bin into a reusable [`TileBins`]: after the first frame warms the
+/// buffers up, rebinning allocates nothing. Three passes over flat
+/// arrays: count per-tile overlaps, exclusive prefix-sum into the offset
+/// table, scatter the splat indices through per-tile cursors.
+pub fn bin_splats_into(splats: &[Splat2D], width: u32, height: u32, bins: &mut TileBins) {
+    let tiles_x = width.div_ceil(TILE);
+    let tiles_y = height.div_ceil(TILE);
+    let tiles = (tiles_x * tiles_y) as usize;
+    bins.tiles_x = tiles_x;
+    bins.tiles_y = tiles_y;
+
+    // Count pass: overlap counts accumulate in offsets[t + 1] so the
+    // in-place inclusive scan below lands the exclusive offsets.
+    bins.offsets.clear();
+    bins.offsets.resize(tiles + 1, 0);
+    bins.rects.clear();
+    let mut total_pairs = 0u64;
+    for (i, s) in splats.iter().enumerate() {
+        let Some(rect) = tile_rect(s, tiles_x, tiles_y) else {
+            continue;
+        };
+        bins.rects.push((i as u32, rect));
+        total_pairs += (rect.x1 - rect.x0 + 1) as u64 * (rect.y1 - rect.y0 + 1) as u64;
+        for ty in rect.y0..=rect.y1 {
+            let row = (ty * tiles_x) as usize;
+            for tx in rect.x0..=rect.x1 {
+                bins.offsets[row + tx as usize + 1] += 1;
+            }
+        }
+    }
+    assert!(
+        total_pairs <= u32::MAX as u64,
+        "tile-pair count {total_pairs} overflows the u32 CSR offsets"
+    );
+
+    // Prefix sum: offsets[t + 1] becomes the end of tile t's slice.
+    let mut acc = 0u32;
+    for o in bins.offsets.iter_mut() {
+        acc += *o;
+        *o = acc;
+    }
+    bins.pairs = bins.offsets[tiles] as u64;
+
+    // Scatter pass: replay the cached rects through per-tile cursors.
+    // Splats are replayed in ascending index order, so each tile's slice
+    // comes out ascending — exactly the nested-Vec push order.
+    bins.indices.clear();
+    bins.indices.resize(bins.pairs as usize, 0);
+    bins.cursor.clear();
+    bins.cursor.extend_from_slice(&bins.offsets[..tiles]);
+    let TileBins { ref rects, ref mut cursor, ref mut indices, .. } = *bins;
+    for &(i, rect) in rects {
+        for ty in rect.y0..=rect.y1 {
+            let row = (ty * tiles_x) as usize;
+            for tx in rect.x0..=rect.x1 {
+                let t = row + tx as usize;
+                indices[cursor[t] as usize] = i;
+                cursor[t] += 1;
+            }
+        }
+    }
+}
+
+/// Reference nested-Vec binning (the pre-CSR implementation), kept for
+/// equivalence testing: returns per-tile index lists and the pair count.
+pub fn bin_splats_nested(
+    splats: &[Splat2D],
+    width: u32,
+    height: u32,
+) -> (Vec<Vec<u32>>, u64) {
     let tiles_x = width.div_ceil(TILE);
     let tiles_y = height.div_ceil(TILE);
     let mut per_tile = vec![Vec::new(); (tiles_x * tiles_y) as usize];
     let mut pairs = 0u64;
     for (i, s) in splats.iter().enumerate() {
-        if !s.visible() {
+        let Some(rect) = tile_rect(s, tiles_x, tiles_y) else {
             continue;
-        }
-        let r = s.radius;
-        // 3-sigma bounding square, clamped to the screen tile grid.
-        let x0 = ((s.mean.x - r) / TILE as f32).floor().max(0.0) as u32;
-        let y0 = ((s.mean.y - r) / TILE as f32).floor().max(0.0) as u32;
-        let x1 = ((s.mean.x + r) / TILE as f32).floor() as i64;
-        let y1 = ((s.mean.y + r) / TILE as f32).floor() as i64;
-        if x1 < 0 || y1 < 0 {
-            continue;
-        }
-        let x1 = (x1 as u32).min(tiles_x - 1);
-        let y1 = (y1 as u32).min(tiles_y - 1);
-        if x0 > x1 || y0 > y1 {
-            continue;
-        }
-        for ty in y0..=y1 {
-            for tx in x0..=x1 {
+        };
+        for ty in rect.y0..=rect.y1 {
+            for tx in rect.x0..=rect.x1 {
                 per_tile[(ty * tiles_x + tx) as usize].push(i as u32);
                 pairs += 1;
             }
         }
     }
-    TileBins { tiles_x, tiles_y, per_tile, pairs }
+    (per_tile, pairs)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::math::Vec2;
+    use crate::util::Rng;
 
     fn splat_at(x: f32, y: f32, r: f32) -> Splat2D {
         Splat2D {
@@ -95,7 +228,7 @@ mod tests {
         let bins = bin_splats(&[splat_at(8.0, 8.0, 3.0)], 64, 64);
         assert_eq!(bins.tiles_x, 4);
         assert_eq!(bins.pairs, 1);
-        assert_eq!(bins.per_tile[0], vec![0]);
+        assert_eq!(bins.tile(0), &[0]);
     }
 
     #[test]
@@ -111,6 +244,7 @@ mod tests {
         let offscreen = splat_at(-100.0, -100.0, 5.0);
         let bins = bin_splats(&[culled, offscreen], 64, 64);
         assert_eq!(bins.pairs, 0);
+        assert!(bins.indices.is_empty());
     }
 
     #[test]
@@ -118,7 +252,7 @@ mod tests {
         let bins = bin_splats(&[splat_at(63.0, 63.0, 10.0)], 64, 64);
         assert!(bins.pairs > 0);
         // Bottom-right tile must contain it.
-        assert!(bins.per_tile[15].contains(&0));
+        assert!(bins.tile(15).contains(&0));
     }
 
     #[test]
@@ -126,6 +260,67 @@ mod tests {
         let bins = bin_splats(&[splat_at(70.0, 5.0, 4.0)], 72, 40);
         assert_eq!(bins.tiles_x, 5);
         assert_eq!(bins.tiles_y, 3);
-        assert!(bins.per_tile[4].contains(&0));
+        assert!(bins.tile(4).contains(&0));
+    }
+
+    #[test]
+    fn offsets_are_a_valid_csr_table() {
+        let splats: Vec<Splat2D> = (0..64)
+            .map(|i| splat_at(3.0 * i as f32, 2.0 * i as f32, 5.0))
+            .collect();
+        let bins = bin_splats(&splats, 128, 96);
+        assert_eq!(bins.offsets.len(), bins.tile_count() + 1);
+        assert_eq!(bins.offsets[0], 0);
+        assert!(bins.offsets.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(bins.offsets[bins.tile_count()] as u64, bins.pairs);
+        assert_eq!(bins.indices.len() as u64, bins.pairs);
+    }
+
+    fn random_splats(rng: &mut Rng, n: usize, w: f32, h: f32) -> Vec<Splat2D> {
+        (0..n)
+            .map(|i| {
+                // Include off-screen and culled splats on purpose.
+                let r = if rng.below(8) == 0 { 0.0 } else { rng.range(0.5, 40.0) };
+                let mut s = splat_at(
+                    rng.range(-60.0, w + 60.0),
+                    rng.range(-60.0, h + 60.0),
+                    r,
+                );
+                s.id = i as u32;
+                s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn csr_matches_nested_reference() {
+        let mut rng = Rng::new(0xC5A0_71E5);
+        for case in 0..24 {
+            let n = 1 + rng.below(400);
+            let (w, h) = ([64u32, 72, 256][rng.below(3)], [64u32, 40, 256][rng.below(3)]);
+            let splats = random_splats(&mut rng, n, w as f32, h as f32);
+            let bins = bin_splats(&splats, w, h);
+            let (nested, pairs) = bin_splats_nested(&splats, w, h);
+            assert_eq!(bins.pairs, pairs, "case {case}: pair count");
+            assert_eq!(bins.tile_count(), nested.len(), "case {case}: tile count");
+            for t in 0..nested.len() {
+                assert_eq!(bins.tile(t), nested[t].as_slice(), "case {case}: tile {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn reused_bins_match_fresh_bins() {
+        let mut rng = Rng::new(0xBEEF);
+        let mut reused = TileBins::default();
+        for _ in 0..8 {
+            let n = 1 + rng.below(200);
+            let splats = random_splats(&mut rng, n, 256.0, 256.0);
+            bin_splats_into(&splats, 256, 256, &mut reused);
+            let fresh = bin_splats(&splats, 256, 256);
+            assert_eq!(reused.offsets, fresh.offsets);
+            assert_eq!(reused.indices, fresh.indices);
+            assert_eq!(reused.pairs, fresh.pairs);
+        }
     }
 }

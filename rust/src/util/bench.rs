@@ -82,6 +82,35 @@ impl Bench {
     pub fn measurements(&self) -> &[Measurement] {
         &self.measurements
     }
+
+    /// Machine-readable dump so the perf trajectory can accumulate in
+    /// CI: `{"group": ..., "entries": [{name, n, mean_ns, std_ns,
+    /// min_ns}, ...]}`. Hand-rolled JSON (serde is not vendored).
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "{{")?;
+        writeln!(f, "  \"group\": \"{}\",", esc(&self.group))?;
+        writeln!(f, "  \"entries\": [")?;
+        for (i, m) in self.measurements.iter().enumerate() {
+            let s = summarize(&m.samples_ns).unwrap();
+            writeln!(
+                f,
+                "    {{\"name\": \"{}\", \"n\": {}, \"mean_ns\": {:.1}, \
+                 \"std_ns\": {:.1}, \"min_ns\": {:.1}}}{}",
+                esc(&m.name),
+                s.n,
+                s.mean,
+                s.std,
+                s.min,
+                if i + 1 == self.measurements.len() { "" } else { "," }
+            )?;
+        }
+        writeln!(f, "  ]")?;
+        writeln!(f, "}}")?;
+        Ok(())
+    }
 }
 
 /// Format nanoseconds with an adaptive unit.
@@ -113,6 +142,22 @@ mod tests {
         assert_eq!(b.measurements()[0].samples_ns.len(), 5);
         // 1 warmup + 5 measured.
         assert_eq!(counter, 6);
+    }
+
+    #[test]
+    fn json_dump_has_group_and_entries() {
+        let mut b = Bench::new("jsontest");
+        b.iter("op(a)", 3, || 1 + 1);
+        b.record("scalar", 42.0);
+        let dir = std::env::temp_dir().join("sltarch_bench_json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_jsontest.json");
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"group\": \"jsontest\""));
+        assert!(text.contains("\"name\": \"op(a)\""));
+        assert!(text.contains("\"mean_ns\": 42.0"));
+        assert!(text.trim_end().ends_with('}'));
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! smoke runs.
 
 use sltarch::config::{ArchConfig, RenderConfig, SceneConfig};
-use sltarch::coordinator::renderer::AlphaMode;
+use sltarch::coordinator::renderer::{AlphaMode, CpuRenderer};
 use sltarch::coordinator::FramePipeline;
 use sltarch::metrics::psnr;
 use sltarch::sim::HwVariant;
@@ -28,6 +28,24 @@ fn render_every_scenario_produces_stable_images() {
         let mean: f32 =
             a.data.iter().map(|p| p[0] + p[1] + p[2]).sum::<f32>() / a.data.len() as f32;
         assert!(mean > 0.005, "scenario {i} black image");
+    }
+}
+
+#[test]
+fn parallel_tile_scheduler_is_bit_identical_across_thread_counts() {
+    let p = quick_pipeline(34);
+    for (cam_i, mode) in [(0, AlphaMode::Group), (3, AlphaMode::Pixel)] {
+        let cam = p.scene.scenario_camera(cam_i);
+        let cut = p.search(&cam);
+        let queue = p.scene.gaussians.gather(&cut);
+        let serial = CpuRenderer::render_serial(&queue, &cam, mode, &p.rcfg);
+        for threads in [1usize, 2, 8] {
+            let par = CpuRenderer::render_threaded(&queue, &cam, mode, &p.rcfg, threads);
+            assert_eq!(
+                serial.data, par.data,
+                "scenario {cam_i} {mode:?} diverged at {threads} threads"
+            );
+        }
     }
 }
 

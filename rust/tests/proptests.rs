@@ -9,7 +9,10 @@ use sltarch::lod::{traverse_sltree, SlTree};
 use sltarch::math::{Camera, Intrinsics, Vec2, Vec3};
 use sltarch::scene::{build_lod_tree, GeneratorKind, SceneSpec};
 use sltarch::splat::blend::PIXELS;
-use sltarch::splat::{blend_tile, BlendMode};
+use sltarch::splat::{
+    bin_splats, bin_splats_nested, blend_tile, radix_sort_tile, sort_tile_by_depth,
+    BlendMode, DepthSortScratch,
+};
 use sltarch::util::prop::forall;
 use sltarch::util::Rng;
 
@@ -128,6 +131,66 @@ fn prop_blend_conserves_energy_and_bounds() {
                     1.0 - t[p]
                 );
             }
+        }
+    });
+}
+
+fn random_screen_splats(rng: &mut Rng) -> Vec<Splat2D> {
+    let n = 1 + rng.below(500);
+    (0..n)
+        .map(|i| {
+            let s = rng.range(0.02, 1.0);
+            Splat2D {
+                // Deliberately includes off-screen and culled splats.
+                mean: Vec2::new(rng.range(-80.0, 340.0), rng.range(-80.0, 340.0)),
+                conic: [s, 0.0, s],
+                depth: if rng.below(4) == 0 {
+                    [0.5f32, 1.0, 7.25][rng.below(3)] // force depth ties
+                } else {
+                    rng.range(0.2, 1e5)
+                },
+                radius: if rng.below(10) == 0 { 0.0 } else { rng.range(0.5, 64.0) },
+                color: [1.0; 3],
+                opacity: 0.5,
+                id: i as u32,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_csr_bins_match_nested_reference() {
+    forall(32, |rng| {
+        let splats = random_screen_splats(rng);
+        let (w, h) = (16 + rng.below(300) as u32, 16 + rng.below(300) as u32);
+        let bins = bin_splats(&splats, w, h);
+        let (nested, pairs) = bin_splats_nested(&splats, w, h);
+        assert_eq!(bins.pairs, pairs);
+        assert_eq!(bins.tile_count(), nested.len());
+        for t in 0..nested.len() {
+            assert_eq!(bins.tile(t), nested[t].as_slice(), "tile {t}");
+        }
+    });
+}
+
+#[test]
+fn prop_radix_order_equals_comparison_sort() {
+    forall(48, |rng| {
+        let splats = random_screen_splats(rng);
+        let mut scratch = DepthSortScratch::new();
+        // Random subsets in random order, as tile bins would hold.
+        for _ in 0..4 {
+            let k = 1 + rng.below(splats.len());
+            let mut idx: Vec<u32> = (0..splats.len() as u32).collect();
+            for i in (1..idx.len()).rev() {
+                idx.swap(i, rng.below(i + 1));
+            }
+            idx.truncate(k);
+            let mut want = idx.clone();
+            sort_tile_by_depth(&mut want, &splats);
+            let mut got = idx;
+            radix_sort_tile(&mut got, &splats, &mut scratch);
+            assert_eq!(got, want);
         }
     });
 }
