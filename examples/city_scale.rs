@@ -5,9 +5,8 @@
 //!
 //! Run: `cargo run --release --example city_scale [-- --quick]`
 
-use sltarch::config::{ArchConfig, RenderConfig, SceneConfig};
-use sltarch::coordinator::renderer::{default_threads, AlphaMode};
-use sltarch::coordinator::FramePipeline;
+use sltarch::config::SceneConfig;
+use sltarch::coordinator::{CpuBackend, FramePipeline};
 use sltarch::scene::orbit_cameras;
 use sltarch::sim::workload::NODE_BYTES;
 use sltarch::sim::HwVariant;
@@ -21,21 +20,20 @@ fn main() -> anyhow::Result<()> {
         cfg.leaves = 500_000;
     }
     println!("building `{}` with {} leaves...", cfg.name, cfg.leaves);
-    let mut pipeline = FramePipeline::new(
-        cfg.build(42),
-        RenderConfig::default(),
-        ArchConfig::default(),
+    let mut pipeline = FramePipeline::builder(cfg.build(42)).build();
+    let cam = pipeline.scene().scenario_camera(4);
+    let total_nodes = pipeline.scene().tree.len();
+    println!(
+        "LoD tree: {total_nodes} nodes, height {}",
+        pipeline.scene().tree.height
     );
-    let cam = pipeline.scene.scenario_camera(4);
-    let total_nodes = pipeline.scene.tree.len();
-    println!("LoD tree: {total_nodes} nodes, height {}", pipeline.scene.tree.height);
 
     println!(
         "\n{:>9} {:>9} {:>10} {:>12} {:>12} {:>12} {:>9}",
         "tau (px)", "cut", "visited", "lod DRAM", "exh DRAM", "SLT ms", "speedup"
     );
     for tau in [4.0f32, 8.0, 16.0, 32.0, 64.0, 128.0] {
-        pipeline.rcfg.lod_tau = tau;
+        pipeline.set_lod_tau(tau);
         let (_, lod_w) = pipeline.lod_only(&cam);
         let report = pipeline.simulate(&cam, &[HwVariant::Gpu, HwVariant::SlTarch]);
         let gpu = report.sim_seconds(HwVariant::Gpu).unwrap();
@@ -57,22 +55,29 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Batched many-camera traffic: an orbital sweep through the city via
-    // `render_path` (scratch reused across frames, dynamic tile
+    // a render session (scratch reused across frames, dynamic tile
     // scheduler), at serial vs full parallelism.
-    pipeline.rcfg.lod_tau = 16.0;
+    pipeline.set_lod_tau(16.0);
     let frames = if quick { 8 } else { 60 };
     let cams = orbit_cameras(cfg.extent, 0.9, frames, 256, 256);
-    let threads = default_threads();
-    println!("\nbatched render_path over {frames} orbit cameras:");
+    let threads = CpuBackend::new().threads;
+    println!("\nbatched session render over {frames} orbit cameras:");
     for t in [1usize, threads] {
-        let (_, report) = pipeline.render_path_cpu(&cams, AlphaMode::Group, t);
-        println!(
-            "  {:>2} thread(s): {:>7.2} FPS  ({:.1} ms/frame, {:.1}k pairs/frame)",
-            report.threads,
-            report.fps(),
-            report.wall_seconds / frames as f64 * 1e3,
-            report.pairs_total as f64 / frames as f64 / 1e3,
+        let backend = CpuBackend::with_threads(t);
+        let mut session = pipeline.session_on(&backend, pipeline.default_options());
+        let _ = session.render_path(&cams)?;
+        let stats = session.stats();
+        print!(
+            "  {:>2} thread(s): {:>7.2} FPS  ({:.1} ms/frame, {:.1}k pairs/frame |",
+            stats.threads,
+            stats.fps(),
+            stats.ms_per_frame(),
+            stats.pairs_total as f64 / frames as f64 / 1e3,
         );
+        for (name, ms) in stats.stages.rows_ms_per_frame(stats.frames) {
+            print!(" {name} {ms:.2}");
+        }
+        println!(" ms/frame)");
         if t == threads && threads == 1 {
             break;
         }

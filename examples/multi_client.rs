@@ -1,0 +1,122 @@
+//! Multi-client serving surface: N concurrent camera streams over ONE
+//! shared, immutable `FramePipeline` (scene + SLTree partitioned once),
+//! each client thread owning its private `RenderSession` (options,
+//! front-end scratch, unified stats). This is the serving shape the
+//! ROADMAP north star asks for: session setup amortized across frames,
+//! zero cross-client locking, aggregate throughput reported via
+//! `RenderStats`.
+//!
+//! Run: `cargo run --release --example multi_client [-- --quick]
+//!       [-- --clients N] [-- --frames N]`
+
+use sltarch::config::SceneConfig;
+use sltarch::coordinator::renderer::AlphaMode;
+use sltarch::coordinator::{CpuBackend, FramePipeline, RenderOptions, RenderStats};
+use sltarch::scene::orbit_cameras;
+
+fn arg_usize(args: &[String], key: &str, default: usize) -> usize {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let clients = arg_usize(&args, "--clients", 4).max(1);
+    let frames = arg_usize(&args, "--frames", if quick { 6 } else { 24 }).max(1);
+
+    let mut cfg = SceneConfig::large_scale();
+    if quick {
+        cfg = cfg.quick();
+    } else {
+        cfg.leaves = 200_000;
+    }
+    let extent = cfg.extent;
+    println!(
+        "building `{}` ({} leaves) for {clients} concurrent clients x {frames} frames...",
+        cfg.name, cfg.leaves
+    );
+
+    // One pipeline for everyone. Per-client scheduler width 2 so the
+    // clients share the machine instead of oversubscribing it.
+    let pipeline = FramePipeline::builder(cfg.build(42))
+        .tau(16.0)
+        .backend(CpuBackend::with_threads(2))
+        .build();
+
+    // Every client gets its own trajectory (different orbit band) and
+    // alternates alpha dataflows, proving per-session options really
+    // are per-session.
+    let t0 = std::time::Instant::now();
+    let per_client: Vec<RenderStats> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let pipeline = &pipeline;
+                s.spawn(move || {
+                    let alpha = if c % 2 == 0 { AlphaMode::Group } else { AlphaMode::Pixel };
+                    let mut session = pipeline.session_with(RenderOptions {
+                        alpha,
+                        ..pipeline.default_options()
+                    });
+                    let range = 0.5 + 0.4 * (c as f32 + 1.0) / clients as f32;
+                    let cams = orbit_cameras(extent, range, frames, 256, 256);
+                    let images = session.render_path(&cams).expect("client render");
+                    // Sanity: every client stream produced real content.
+                    let mean: f32 = images
+                        .iter()
+                        .flat_map(|img| img.data.iter())
+                        .map(|p| p[0] + p[1] + p[2])
+                        .sum::<f32>()
+                        / (images.len() * images[0].data.len() * 3) as f32;
+                    assert!(mean > 1e-4, "client {c} rendered black frames");
+                    *session.stats()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let span = t0.elapsed().as_secs_f64();
+
+    println!("\n client  alpha   frames     fps   ms/frame      cut/frame   pairs/frame");
+    for (c, st) in per_client.iter().enumerate() {
+        println!(
+            "{c:>7} {:>6} {:>8} {:>7.2} {:>10.1} {:>14.0} {:>13.1}k",
+            if c % 2 == 0 { "group" } else { "pixel" },
+            st.frames,
+            st.fps(),
+            st.ms_per_frame(),
+            st.cut_total as f64 / st.frames as f64,
+            st.pairs_total as f64 / st.frames as f64 / 1e3,
+        );
+    }
+
+    // Aggregate serving report: merge the per-client stats, then score
+    // throughput against the measured concurrent span.
+    let mut total = RenderStats::default();
+    for st in &per_client {
+        total.merge(st);
+    }
+    let busy = total.wall_seconds; // summed per-client render time
+    total.wall_seconds = span;
+    println!("\n=== aggregate ({clients} clients sharing one pipeline) ===");
+    println!("frames             : {}", total.frames);
+    println!("wall-clock span    : {:.2} s", span);
+    println!(
+        "aggregate fps      : {:.2} ({:.1} ms/frame effective)",
+        total.fps(),
+        total.ms_per_frame()
+    );
+    println!(
+        "concurrency        : {:.2}x (client-seconds / span)",
+        busy / span.max(1e-12)
+    );
+    print!("per-stage (s, all clients):");
+    for (name, secs) in total.stages.rows() {
+        print!(" {name} {secs:.2}");
+    }
+    println!();
+    Ok(())
+}

@@ -1,6 +1,7 @@
-//! Quickstart: build a scene, partition its LoD tree into an SLTree,
-//! run the LoD search, render a frame, and simulate the paper's five
-//! hardware variants — the whole public API in ~40 lines.
+//! Quickstart: build a scene, build the frame pipeline (which
+//! partitions the SLTree exactly once), run the LoD search, render a
+//! frame through a session, and simulate the paper's five hardware
+//! variants — the whole public API in ~50 lines.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -17,24 +18,34 @@ fn main() -> anyhow::Result<()> {
         scene.tree.height
     );
 
-    // 2. Offline SLTree partitioning (paper Sec. III-B, tau_s = 32).
-    let sltree = SlTree::partition(&scene.tree, 32);
-    println!("SLTree: {} subtrees (size limit 32)", sltree.len());
+    // 2. Build the pipeline: offline SLTree partitioning (paper
+    //    Sec. III-B, tau_s = 32) happens exactly once, inside build().
+    let pipeline = FramePipeline::builder(scene)
+        .tau(16.0)
+        .subtree_size(32)
+        .build();
+    println!("SLTree: {} subtrees (size limit 32)", pipeline.sltree().len());
 
-    // 3. LoD search: the streaming subtree traversal finds the cut.
-    let cam = scene.scenario_camera(0);
-    let cut = sltree.traverse(&scene.tree, &cam, 16.0);
+    // 3. LoD search against the pipeline's own tree: the streaming
+    //    subtree traversal finds the cut.
+    let cam = pipeline.scene().scenario_camera(0);
+    let cut = pipeline.search(&cam);
     println!("cut: {} Gaussians selected for rendering", cut.len());
 
-    // 4. Render with the divergence-free group-alpha dataflow.
-    let pipeline = FramePipeline::new(
-        scene,
-        RenderConfig::default(),
-        ArchConfig::default(),
-    );
-    let img = pipeline.render(&cam, AlphaMode::Group)?;
+    // 4. Render with the divergence-free group-alpha dataflow through a
+    //    session (owns the reusable scratch + unified stats).
+    let mut session = pipeline.session();
+    let img = session.render(&cam)?;
     img.write_ppm(std::path::Path::new("quickstart.ppm"))?;
-    println!("wrote quickstart.ppm ({}x{})", img.width, img.height);
+    let stats = session.stats();
+    println!(
+        "wrote quickstart.ppm ({}x{}) in {:.1} ms (search {:.1} / blend {:.1})",
+        img.width,
+        img.height,
+        stats.wall_seconds * 1e3,
+        stats.stages.search * 1e3,
+        stats.stages.blend * 1e3,
+    );
 
     // 5. Simulate the Fig. 9 hardware variants on this frame.
     let report = pipeline.simulate(&cam, &HwVariant::fig9());

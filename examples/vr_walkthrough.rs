@@ -8,9 +8,9 @@
 //! Run: `make artifacts && cargo run --release --example vr_walkthrough`
 //! (add `-- --quick` for a fast smoke pass; `-- --frames N` to resize)
 
-use sltarch::config::{ArchConfig, RenderConfig, SceneConfig};
+use sltarch::config::SceneConfig;
 use sltarch::coordinator::renderer::AlphaMode;
-use sltarch::coordinator::FramePipeline;
+use sltarch::coordinator::{CpuBackend, FramePipeline, RenderOptions};
 use sltarch::metrics::psnr;
 use sltarch::runtime::{default_artifacts_dir, ArtifactSet, PjrtEngine};
 use sltarch::scene::walkthrough;
@@ -41,26 +41,29 @@ fn main() -> anyhow::Result<()> {
     println!("compiling PJRT artifacts from {} ...", set.dir.display());
     let engine = PjrtEngine::load(&set)?;
 
-    let pipeline = FramePipeline::new(scene, RenderConfig::default(), ArchConfig::default())
-        .with_engine(engine);
+    let pipeline = FramePipeline::builder(scene).engine(engine).build();
+
+    // Two long-lived PJRT sessions: the production group-alpha stream
+    // and the canonical per-pixel stream used as accuracy telemetry.
+    let mut group_sess = pipeline.session();
+    let mut pixel_sess = pipeline
+        .session_with(RenderOptions { alpha: AlphaMode::Pixel, ..pipeline.default_options() });
 
     let cams = walkthrough(extent, frames, 256, 256);
     let mut cut_total = 0usize;
-    let mut wall_total = 0.0f64;
     let mut sim_gpu = 0.0f64;
     let mut sim_slt = 0.0f64;
     let mut worst_psnr = f64::INFINITY;
 
     println!("\n frame    cut      wall(ms)  sim GPU(ms)  sim SLT(ms)   PSNR(group vs pixel)");
     for (i, cam) in cams.iter().enumerate() {
-        let t0 = std::time::Instant::now();
         // The production path: PJRT artifacts, group-alpha dataflow.
-        let img = pipeline.render(cam, AlphaMode::Group)?;
-        let wall = t0.elapsed().as_secs_f64();
-        wall_total += wall;
+        let wall_before = group_sess.stats().wall_seconds;
+        let img = group_sess.render(cam)?;
+        let wall = group_sess.stats().wall_seconds - wall_before;
 
         // Accuracy telemetry: compare against the canonical dataflow.
-        let org = pipeline.render(cam, AlphaMode::Pixel)?;
+        let org = pixel_sess.render(cam)?;
         let p = psnr(&org, &img).min(99.0);
         worst_psnr = worst_psnr.min(p);
 
@@ -88,13 +91,19 @@ fn main() -> anyhow::Result<()> {
     }
 
     let n = frames as f64;
+    let stats = group_sess.stats();
     println!("\n=== walkthrough summary ({frames} frames) ===");
     println!("avg cut            : {:.0} Gaussians", cut_total as f64 / n);
     println!(
         "rust+PJRT pipeline : {:.1} ms/frame ({:.1} FPS testbed wall-clock)",
-        wall_total / n * 1e3,
-        n / wall_total
+        stats.ms_per_frame(),
+        stats.fps()
     );
+    print!("per-stage (ms/frame):");
+    for (name, ms) in stats.stages.rows_ms_per_frame(stats.frames) {
+        print!(" {name} {ms:.2}");
+    }
+    println!();
     println!(
         "simulated GPU      : {:.2} ms/frame ({:.1} FPS)",
         sim_gpu / n * 1e3,
@@ -109,14 +118,16 @@ fn main() -> anyhow::Result<()> {
     println!("worst group-vs-pixel PSNR: {worst_psnr:.2} dB (approximation cost)");
 
     // Many-camera traffic through the batched API: replay the whole
-    // trajectory with `render_path_cpu` (front-end scratch reused across
-    // frames, dynamic-greedy tile scheduler) for the aggregate
+    // trajectory on a CPU-backend session (front-end scratch reused
+    // across frames, dynamic-greedy tile scheduler) for the aggregate
     // CPU-mirror throughput the serving story cares about.
-    let threads = sltarch::coordinator::renderer::default_threads();
-    let (_, batch) = pipeline.render_path_cpu(&cams, AlphaMode::Group, threads);
+    let cpu = CpuBackend::new();
+    let mut replay = pipeline.session_on(&cpu, pipeline.default_options());
+    let _ = replay.render_path(&cams)?;
+    let batch = replay.stats();
     println!(
         "batched CPU replay   : {:.1} ms/frame ({:.1} FPS on {} tile-scheduler threads)",
-        batch.wall_seconds / batch.frames as f64 * 1e3,
+        batch.ms_per_frame(),
         batch.fps(),
         batch.threads
     );

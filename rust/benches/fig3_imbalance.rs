@@ -7,11 +7,11 @@ fn main() {
         || std::env::var("SLTARCH_BENCH_QUICK").is_ok();
     let cfg = sltarch::experiments::eval_scenes(quick).remove(1);
     let p = sltarch::experiments::build_pipeline(&cfg, 42);
-    let cam = p.scene.scenario_camera(1);
+    let cam = p.scene().scenario_camera(1);
     let mut b = Bench::new("fig3_imbalance");
     for threads in [64usize, 256] {
         b.iter(&format!("naive_static_workloads({threads})"), 5, || {
-            sltarch::lod::naive_static_workloads(&p.scene.tree, &cam, p.rcfg.lod_tau, threads)
+            sltarch::lod::naive_static_workloads(&p.scene().tree, &cam, p.rcfg().lod_tau, threads)
         });
     }
     b.report();

@@ -4,9 +4,9 @@
 //! the batched `render_path` API. This is the harness the §Perf
 //! optimization pass iterates against; it also dumps
 //! `BENCH_hotpath.json` so CI can accumulate the perf trajectory.
-use sltarch::config::{ArchConfig, RenderConfig, SceneConfig};
+use sltarch::config::{RenderConfig, SceneConfig};
 use sltarch::coordinator::renderer::{default_threads, AlphaMode, CpuRenderer};
-use sltarch::coordinator::FramePipeline;
+use sltarch::coordinator::{CpuBackend, FramePipeline};
 use sltarch::gaussian::{project, project_into};
 use sltarch::lod::{traverse_sltree, SlTree};
 use sltarch::scene::orbit_cameras;
@@ -82,17 +82,30 @@ fn main() {
     });
     b.record("tile_scheduler_threads", threads as f64);
 
-    // Batched many-camera throughput through the frame pipeline.
+    // Batched many-camera throughput through a render session (the
+    // historical `render_path` row name is kept so the perf trajectory
+    // stays comparable).
     let path_frames = if quick { 12 } else { 60 };
     let cams = orbit_cameras(extent, 0.9, path_frames, 256, 256);
-    let pipeline = FramePipeline::new(scene, rcfg, ArchConfig::default());
+    let pipeline = FramePipeline::builder(scene)
+        .render_config(rcfg)
+        .backend(CpuBackend::with_threads(threads))
+        .build();
+    let mut session = pipeline.session();
     let mut path_fps = 0.0f64;
     b.iter(&format!("render_path({path_frames} cams, group)"), 2, || {
-        let (_, report) = pipeline.render_path_cpu(&cams, AlphaMode::Group, threads);
-        path_fps = report.fps();
-        report.frames
+        session.reset_stats();
+        let images = session.render_path(&cams).expect("session render");
+        path_fps = session.stats().fps();
+        images.len()
     });
     b.record("render_path fps", path_fps);
+    // Per-stage breakdown of the last batch (the session API's unified
+    // stats) — ms/frame rows for the perf trajectory.
+    let stats = session.stats();
+    for (name, ms) in stats.stages.rows_ms_per_frame(stats.frames) {
+        b.record(&format!("stage {name} ms/frame"), ms);
+    }
 
     b.report();
     let json = std::path::Path::new("BENCH_hotpath.json");

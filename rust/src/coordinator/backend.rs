@@ -1,0 +1,178 @@
+//! Rendering backends: where the blending maths runs.
+//!
+//! The frame *front end* (LoD search -> projection -> CSR binning ->
+//! radix depth sort) is backend-agnostic and runs in
+//! [`super::session::RenderSession`]; a [`RenderBackend`] consumes the
+//! prepared, depth-sorted [`FrameScratch`] and produces pixels. Both
+//! built-in backends therefore see bit-identical sorted bins — the
+//! cross-backend correctness contract `rust/tests/pjrt_roundtrip.rs`
+//! asserts.
+
+use super::renderer::{
+    blend_tiles, blend_tiles_pjrt, default_threads, AlphaMode, FrameScratch,
+};
+use crate::config::RenderConfig;
+use crate::metrics::Image;
+use crate::runtime::PjrtEngine;
+use anyhow::Result;
+
+/// Typed per-session render knobs (replaces the per-call `AlphaMode`
+/// argument and the `SLTARCH_THREADS` hot-path env read of the old API).
+#[derive(Clone, Copy, Debug)]
+pub struct RenderOptions {
+    /// Alpha dataflow: canonical per-pixel or SLTarch 2x2 group.
+    pub alpha: AlphaMode,
+    /// LoD granularity in projected pixels (the paper's tau).
+    pub lod_tau: f32,
+    /// Tile-scheduler worker count; 0 defers to the backend's width
+    /// (which itself falls back to `SLTARCH_THREADS` / the machine).
+    pub threads: usize,
+}
+
+impl Default for RenderOptions {
+    fn default() -> Self {
+        RenderOptions { alpha: AlphaMode::Group, lod_tau: 32.0, threads: 0 }
+    }
+}
+
+/// A rendering backend: blends a prepared (projected, binned,
+/// depth-sorted) frame into an image. `Send + Sync` so one pipeline can
+/// serve concurrent sessions from multiple client threads.
+pub trait RenderBackend: Send + Sync {
+    /// Short backend name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Tile-scheduler worker count a session with `opts` will use
+    /// (0 = not a threaded backend).
+    fn threads(&self, opts: &RenderOptions) -> usize;
+
+    /// Blend `scratch` (already projected, binned and depth-sorted)
+    /// into `img`.
+    fn blend(
+        &self,
+        scratch: &FrameScratch,
+        opts: &RenderOptions,
+        rcfg: &RenderConfig,
+        img: &mut Image,
+    ) -> Result<()>;
+}
+
+/// The pure-CPU backend: the dynamic-greedy multi-threaded tile
+/// scheduler (bit-identical to the serial schedule at any width).
+#[derive(Clone, Copy, Debug)]
+pub struct CpuBackend {
+    /// Default tile-scheduler width for sessions that don't override it.
+    pub threads: usize,
+}
+
+impl CpuBackend {
+    /// Width from `SLTARCH_THREADS` / available parallelism.
+    pub fn new() -> Self {
+        CpuBackend { threads: default_threads() }
+    }
+
+    /// Explicit scheduler width (clamped to >= 1).
+    pub fn with_threads(threads: usize) -> Self {
+        CpuBackend { threads: threads.max(1) }
+    }
+}
+
+impl Default for CpuBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RenderBackend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn threads(&self, opts: &RenderOptions) -> usize {
+        if opts.threads > 0 {
+            opts.threads
+        } else {
+            self.threads
+        }
+    }
+
+    fn blend(
+        &self,
+        scratch: &FrameScratch,
+        opts: &RenderOptions,
+        rcfg: &RenderConfig,
+        img: &mut Image,
+    ) -> Result<()> {
+        blend_tiles(
+            scratch,
+            opts.alpha.blend_mode(),
+            rcfg.t_min,
+            self.threads(opts),
+            img,
+        );
+        Ok(())
+    }
+}
+
+/// The PJRT backend: blending via the AOT-compiled JAX/Pallas artifacts
+/// in K_CHUNK batches with early termination between chunks.
+///
+/// The engine sits behind a `Mutex`: PJRT dispatch is serialized, so
+/// concurrent sessions over a PJRT pipeline are safe (they time-share
+/// the artifacts) without asserting `Sync` for the raw `xla` wrapper
+/// types. Multi-client *parallelism* is the CPU backend's job.
+pub struct PjrtBackend {
+    engine: std::sync::Mutex<PjrtEngine>,
+}
+
+impl PjrtBackend {
+    pub fn new(engine: PjrtEngine) -> Self {
+        PjrtBackend { engine: std::sync::Mutex::new(engine) }
+    }
+}
+
+impl RenderBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn threads(&self, _opts: &RenderOptions) -> usize {
+        0
+    }
+
+    fn blend(
+        &self,
+        scratch: &FrameScratch,
+        opts: &RenderOptions,
+        rcfg: &RenderConfig,
+        img: &mut Image,
+    ) -> Result<()> {
+        // A panicked blend can't leave the engine in a bad state (each
+        // SplatChunk::run is self-contained), so ride through poison.
+        let engine = self.engine.lock().unwrap_or_else(|e| e.into_inner());
+        blend_tiles_pjrt(
+            &engine,
+            scratch,
+            opts.alpha == AlphaMode::Group,
+            rcfg.t_min,
+            img,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_backend_resolves_threads() {
+        let b = CpuBackend::with_threads(6);
+        let defaults = RenderOptions::default();
+        assert_eq!(b.threads(&defaults), 6);
+        let pinned = RenderOptions { threads: 2, ..defaults };
+        assert_eq!(b.threads(&pinned), 2);
+        assert_eq!(CpuBackend::with_threads(0).threads, 1);
+        assert!(CpuBackend::new().threads >= 1);
+        assert_eq!(b.name(), "cpu");
+    }
+}

@@ -2,16 +2,29 @@
 //! binning -> depth sort -> chunked splatting -> image, plus the
 //! workload extraction the simulators replay.
 //!
+//! * [`pipeline`] — the immutable [`FramePipeline`] (scene + SLTree +
+//!   config + backend) and its builder.
+//! * [`session`] — [`RenderSession`]: per-client mutable state (options,
+//!   front-end scratch, unified stats); N sessions over one
+//!   `&FramePipeline` form the multi-client serving surface.
+//! * [`backend`] — the [`RenderBackend`] trait with the pure-CPU
+//!   ([`CpuBackend`]) and AOT-artifact ([`PjrtBackend`]) blenders.
+//! * [`stats`] — [`RenderStats`] / [`StageTimings`]: one report type
+//!   for frames, paths and serving sessions.
+//! * [`renderer`] — the shared front end, the blend loops, and the
+//!   stateless reference renderers the equivalence tests pin against.
 //! * [`workload`] — runs the real pipeline once per (scene, camera,
 //!   tau) and distils the traces every hardware model consumes.
-//! * [`renderer`] — produces actual images: a pure-CPU path (mirrors
-//!   the kernels) and a PJRT path (executes the AOT artifacts).
-//! * [`pipeline`] — the frame loop tying it together, with per-frame
-//!   reports (`sltarch render` / the examples drive this).
 
+pub mod backend;
 pub mod pipeline;
 pub mod renderer;
+pub mod session;
+pub mod stats;
 pub mod workload;
 
-pub use pipeline::{FramePipeline, FrameReport, PathReport};
+pub use backend::{CpuBackend, PjrtBackend, RenderBackend, RenderOptions};
+pub use pipeline::{FramePipeline, FramePipelineBuilder, SimulationReport};
 pub use renderer::{AlphaMode, CpuRenderer, FrameScratch};
+pub use session::RenderSession;
+pub use stats::{RenderStats, StageTimings};

@@ -1,23 +1,27 @@
 //! The frame pipeline: owns the scene, the SLTree, the architecture
-//! config and (optionally) the PJRT engine, and turns cameras into
-//! images + simulation reports.
+//! config and the rendering backend, and hands out [`RenderSession`]s
+//! that turn cameras into images + statistics.
+//!
+//! Construction goes through [`FramePipeline::builder`]; the pipeline
+//! itself is immutable at render time (sessions own all mutable state),
+//! so one `&FramePipeline` safely serves many concurrent client
+//! sessions.
 
-use super::renderer::{
-    default_threads, AlphaMode, CpuRenderer, FrameScratch, PjrtRenderer,
-};
+use super::backend::{CpuBackend, PjrtBackend, RenderBackend, RenderOptions};
+use super::session::RenderSession;
 use super::workload::{frame_workload, lod_workload};
 use crate::config::{ArchConfig, RenderConfig};
 use crate::lod::SlTree;
 use crate::math::Camera;
-use crate::metrics::Image;
 use crate::runtime::PjrtEngine;
 use crate::scene::Scene;
 use crate::sim::{simulate_variant, HwVariant};
-use anyhow::Result;
 
-/// Per-frame output.
+/// Hardware-simulation output for one frame (the Fig. 9/10 rows).
+/// Rendering statistics live in [`super::stats::RenderStats`]; this
+/// report only covers the cycle-approximate models.
 #[derive(Debug, Default)]
-pub struct FrameReport {
+pub struct SimulationReport {
     /// Rendering-queue length (cut size).
     pub cut_len: usize,
     /// Nodes visited during LoD search.
@@ -28,7 +32,7 @@ pub struct FrameReport {
     pub wall_seconds: f64,
 }
 
-impl FrameReport {
+impl SimulationReport {
     /// Simulated seconds for a named variant, if simulated.
     pub fn sim_seconds(&self, v: HwVariant) -> Option<f64> {
         self.sims
@@ -38,146 +42,219 @@ impl FrameReport {
     }
 }
 
-/// Aggregate report for a batched camera-path render
-/// ([`FramePipeline::render_path`]).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct PathReport {
-    /// Frames rendered.
-    pub frames: usize,
-    /// Wall-clock seconds for the whole batch (search + render).
-    pub wall_seconds: f64,
-    /// Total rendering-queue length across frames.
-    pub cut_total: u64,
-    /// Total (gaussian, tile) pairs across frames.
-    pub pairs_total: u64,
-    /// Tile-scheduler worker count used (0 = PJRT path).
-    pub threads: usize,
+/// Builder for [`FramePipeline`]: typed options in, immutable pipeline
+/// out (the SLTree is partitioned once, at `build`).
+pub struct FramePipelineBuilder {
+    scene: Scene,
+    rcfg: RenderConfig,
+    arch: ArchConfig,
+    defaults: RenderOptions,
+    tau_set: bool,
+    tau_s_set: bool,
+    backend: Option<Box<dyn RenderBackend>>,
 }
 
-impl PathReport {
-    /// Aggregate throughput in frames per second.
-    pub fn fps(&self) -> f64 {
-        if self.wall_seconds > 0.0 {
-            self.frames as f64 / self.wall_seconds
-        } else {
-            0.0
+impl FramePipelineBuilder {
+    /// Replace the whole render config. Explicit
+    /// [`FramePipelineBuilder::tau`] / [`FramePipelineBuilder::subtree_size`]
+    /// calls win over the corresponding `rcfg` fields regardless of
+    /// call order, so the pipeline config and the session defaults can
+    /// never desynchronize.
+    pub fn render_config(mut self, rcfg: RenderConfig) -> Self {
+        let (tau, tau_s) = (self.rcfg.lod_tau, self.rcfg.subtree_size);
+        self.rcfg = rcfg;
+        if self.tau_set {
+            self.rcfg.lod_tau = tau;
         }
-    }
-}
-
-/// The long-lived pipeline state.
-pub struct FramePipeline {
-    pub scene: Scene,
-    pub sltree: SlTree,
-    pub rcfg: RenderConfig,
-    pub arch: ArchConfig,
-    pub engine: Option<PjrtEngine>,
-}
-
-impl FramePipeline {
-    /// Build from a scene (partitioning the SLTree offline, as the
-    /// paper prescribes — zero render-time cost).
-    pub fn new(scene: Scene, rcfg: RenderConfig, arch: ArchConfig) -> Self {
-        let sltree = SlTree::partition(&scene.tree, rcfg.subtree_size);
-        FramePipeline { scene, sltree, rcfg, arch, engine: None }
-    }
-
-    /// Attach a PJRT engine (renders then execute the AOT artifacts).
-    pub fn with_engine(mut self, engine: PjrtEngine) -> Self {
-        self.engine = Some(engine);
+        if self.tau_s_set {
+            self.rcfg.subtree_size = tau_s;
+        }
         self
     }
 
-    /// LoD search only: the cut for a camera.
+    /// Replace the architecture config used by `simulate`.
+    pub fn arch_config(mut self, arch: ArchConfig) -> Self {
+        self.arch = arch;
+        self
+    }
+
+    /// Default alpha dataflow for sessions.
+    pub fn alpha(mut self, alpha: super::renderer::AlphaMode) -> Self {
+        self.defaults.alpha = alpha;
+        self
+    }
+
+    /// LoD granularity tau (projected pixels) — sets both the pipeline
+    /// config and the session default.
+    pub fn tau(mut self, tau: f32) -> Self {
+        self.rcfg.lod_tau = tau;
+        self.defaults.lod_tau = tau;
+        self.tau_set = true;
+        self
+    }
+
+    /// SLTree subtree size limit (the paper's tau_s).
+    pub fn subtree_size(mut self, tau_s: u32) -> Self {
+        self.rcfg.subtree_size = tau_s;
+        self.tau_s_set = true;
+        self
+    }
+
+    /// Default tile-scheduler width for sessions (0 = backend default,
+    /// which falls back to `SLTARCH_THREADS` / machine parallelism).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.defaults.threads = threads;
+        self
+    }
+
+    /// Use an explicit rendering backend.
+    pub fn backend(mut self, backend: impl RenderBackend + 'static) -> Self {
+        self.backend = Some(Box::new(backend));
+        self
+    }
+
+    /// Sugar: blend through the AOT PJRT artifacts.
+    pub fn engine(self, engine: PjrtEngine) -> Self {
+        self.backend(PjrtBackend::new(engine))
+    }
+
+    /// Partition the SLTree and assemble the pipeline (CPU backend
+    /// unless one was chosen).
+    pub fn build(self) -> FramePipeline {
+        let FramePipelineBuilder {
+            scene,
+            rcfg,
+            arch,
+            mut defaults,
+            tau_set,
+            tau_s_set: _,
+            backend,
+        } = self;
+        if !tau_set {
+            defaults.lod_tau = rcfg.lod_tau;
+        }
+        let sltree = SlTree::partition(&scene.tree, rcfg.subtree_size);
+        FramePipeline {
+            scene,
+            sltree,
+            rcfg,
+            arch,
+            defaults,
+            backend: backend.unwrap_or_else(|| Box::new(CpuBackend::new())),
+        }
+    }
+}
+
+/// The long-lived, render-time-immutable pipeline state.
+pub struct FramePipeline {
+    scene: Scene,
+    sltree: SlTree,
+    rcfg: RenderConfig,
+    arch: ArchConfig,
+    defaults: RenderOptions,
+    backend: Box<dyn RenderBackend>,
+}
+
+impl FramePipeline {
+    /// Start building a pipeline around a scene.
+    pub fn builder(scene: Scene) -> FramePipelineBuilder {
+        FramePipelineBuilder {
+            scene,
+            rcfg: RenderConfig::default(),
+            arch: ArchConfig::default(),
+            defaults: RenderOptions::default(),
+            tau_set: false,
+            tau_s_set: false,
+            backend: None,
+        }
+    }
+
+    /// Shorthand constructor (CPU backend, session defaults from
+    /// `rcfg`). Equivalent to
+    /// `builder(scene).render_config(rcfg).arch_config(arch).build()`.
+    pub fn new(scene: Scene, rcfg: RenderConfig, arch: ArchConfig) -> Self {
+        Self::builder(scene).render_config(rcfg).arch_config(arch).build()
+    }
+
+    /// The scene this pipeline renders.
+    pub fn scene(&self) -> &Scene {
+        &self.scene
+    }
+
+    /// The pipeline's own SLTree (partitioned once at build — reuse it
+    /// instead of re-partitioning the scene's LoD tree by hand).
+    pub fn sltree(&self) -> &SlTree {
+        &self.sltree
+    }
+
+    /// Render-time configuration.
+    pub fn rcfg(&self) -> &RenderConfig {
+        &self.rcfg
+    }
+
+    /// Architecture configuration for the hardware models.
+    pub fn arch(&self) -> &ArchConfig {
+        &self.arch
+    }
+
+    /// The backend blending this pipeline's frames.
+    pub fn backend(&self) -> &dyn RenderBackend {
+        self.backend.as_ref()
+    }
+
+    /// Default options new sessions start from.
+    pub fn default_options(&self) -> RenderOptions {
+        self.defaults
+    }
+
+    /// Re-target the LoD granularity (tau sweeps between frames; this
+    /// is the one sanctioned mutation — everything else is fixed at
+    /// build).
+    pub fn set_lod_tau(&mut self, tau: f32) {
+        self.rcfg.lod_tau = tau;
+        self.defaults.lod_tau = tau;
+    }
+
+    /// Open a session with the pipeline's default options.
+    pub fn session(&self) -> RenderSession<'_> {
+        self.session_with(self.defaults)
+    }
+
+    /// Open a session with explicit options.
+    pub fn session_with(&self, opts: RenderOptions) -> RenderSession<'_> {
+        RenderSession::new(self, self.backend.as_ref(), opts)
+    }
+
+    /// Open a session on a caller-owned backend (e.g. a CPU replay of a
+    /// PJRT pipeline, or per-client scheduler widths).
+    pub fn session_on<'p>(
+        &'p self,
+        backend: &'p dyn RenderBackend,
+        opts: RenderOptions,
+    ) -> RenderSession<'p> {
+        RenderSession::new(self, backend, opts)
+    }
+
+    /// LoD search only: the cut for a camera at the pipeline's tau.
     pub fn search(&self, cam: &Camera) -> Vec<u32> {
-        self.sltree.traverse(&self.scene.tree, cam, self.rcfg.lod_tau)
+        self.search_with_tau(cam, self.rcfg.lod_tau)
     }
 
-    /// Render one frame to an image. Uses the PJRT artifacts when an
-    /// engine is attached, the CPU mirror otherwise.
-    pub fn render(&self, cam: &Camera, mode: AlphaMode) -> Result<Image> {
-        let cut = self.search(cam);
-        let queue = self.scene.gaussians.gather(&cut);
-        match &self.engine {
-            Some(engine) => {
-                PjrtRenderer::render(engine, &queue, cam, mode, &self.rcfg)
-            }
-            None => Ok(CpuRenderer::render(&queue, cam, mode, &self.rcfg)),
-        }
+    /// LoD search at an explicit tau (per-session granularity).
+    pub fn search_with_tau(&self, cam: &Camera, tau: f32) -> Vec<u32> {
+        self.sltree.traverse(&self.scene.tree, cam, tau)
     }
 
-    /// Render a whole camera path as one batch. Uses the PJRT artifacts
-    /// when an engine is attached, otherwise the parallel CPU renderer
-    /// with front-end scratch (projection buffer, CSR bins, sort keys)
-    /// reused across frames — zero steady-state allocation per frame.
-    /// Returns the frames plus an aggregate throughput report.
-    pub fn render_path(
-        &self,
-        cams: &[Camera],
-        mode: AlphaMode,
-    ) -> Result<(Vec<Image>, PathReport)> {
-        match &self.engine {
-            Some(engine) => {
-                let t0 = std::time::Instant::now();
-                let mut scratch = FrameScratch::new();
-                let mut report = PathReport { frames: cams.len(), ..Default::default() };
-                let mut images = Vec::with_capacity(cams.len());
-                for cam in cams {
-                    let cut = self.search(cam);
-                    report.cut_total += cut.len() as u64;
-                    let queue = self.scene.gaussians.gather(&cut);
-                    images.push(PjrtRenderer::render_with_scratch(
-                        engine, &queue, cam, mode, &self.rcfg, &mut scratch,
-                    )?);
-                    report.pairs_total += scratch.bins.pairs;
-                }
-                report.wall_seconds = t0.elapsed().as_secs_f64();
-                Ok((images, report))
-            }
-            None => Ok(self.render_path_cpu(cams, mode, default_threads())),
-        }
-    }
-
-    /// The CPU batched path with an explicit tile-scheduler worker
-    /// count, regardless of any attached engine (the examples use this
-    /// for apples-to-apples CPU throughput numbers).
-    pub fn render_path_cpu(
-        &self,
-        cams: &[Camera],
-        mode: AlphaMode,
-        threads: usize,
-    ) -> (Vec<Image>, PathReport) {
-        let t0 = std::time::Instant::now();
-        let mut scratch = FrameScratch::new();
-        let mut report = PathReport {
-            frames: cams.len(),
-            threads: threads.max(1),
-            ..Default::default()
-        };
-        let mut images = Vec::with_capacity(cams.len());
-        for cam in cams {
-            let cut = self.search(cam);
-            report.cut_total += cut.len() as u64;
-            let queue = self.scene.gaussians.gather(&cut);
-            images.push(CpuRenderer::render_with_scratch(
-                &queue, cam, mode, &self.rcfg, threads, &mut scratch,
-            ));
-            report.pairs_total += scratch.bins.pairs;
-        }
-        report.wall_seconds = t0.elapsed().as_secs_f64();
-        (images, report)
-    }
-
-    /// Run the workload extraction + all five Fig. 9 variants for one
-    /// camera.
-    pub fn simulate(&self, cam: &Camera, variants: &[HwVariant]) -> FrameReport {
+    /// Run the workload extraction + the given hardware variants for
+    /// one camera.
+    pub fn simulate(&self, cam: &Camera, variants: &[HwVariant]) -> SimulationReport {
         let t0 = std::time::Instant::now();
         let (lod_w, splat_w) = frame_workload(&self.scene, &self.sltree, cam, &self.rcfg);
         let sims = variants
             .iter()
             .map(|&v| simulate_variant(v, &lod_w, &splat_w, &self.arch))
             .collect();
-        FrameReport {
+        SimulationReport {
             cut_len: lod_w.cut_len as usize,
             lod_visited: lod_w.trace.visited,
             sims,
@@ -195,65 +272,135 @@ impl FramePipeline {
 mod tests {
     use super::*;
     use crate::config::SceneConfig;
+    use crate::coordinator::renderer::{AlphaMode, CpuRenderer};
 
     fn pipeline() -> FramePipeline {
-        FramePipeline::new(
-            SceneConfig::small_scale().quick().build(9),
-            RenderConfig::default(),
-            ArchConfig::default(),
-        )
+        FramePipeline::builder(SceneConfig::small_scale().quick().build(9)).build()
     }
 
     #[test]
-    fn render_and_simulate_roundtrip() {
+    fn session_render_and_simulate_roundtrip() {
         let p = pipeline();
-        let cam = p.scene.scenario_camera(0);
-        let img = p.render(&cam, AlphaMode::Group).unwrap();
+        let cam = p.scene().scenario_camera(0);
+        let mut session = p.session();
+        let img = session.render(&cam).unwrap();
         assert_eq!(img.dims(), (256, 256));
+        let stats = session.stats();
+        assert_eq!(stats.frames, 1);
+        assert!(stats.cut_total > 0);
+        assert!(stats.pairs_total > 0);
         let report = p.simulate(&cam, &HwVariant::fig9());
         assert_eq!(report.sims.len(), 5);
         assert!(report.cut_len > 0);
+        assert_eq!(report.cut_len as u64, stats.cut_total);
         let gpu = report.sim_seconds(HwVariant::Gpu).unwrap();
         let slt = report.sim_seconds(HwVariant::SlTarch).unwrap();
         assert!(slt < gpu, "SLTARCH {slt} !< GPU {gpu}");
     }
 
     #[test]
-    fn render_path_matches_per_frame_renders() {
+    fn session_path_matches_per_frame_renders() {
         let p = pipeline();
-        let cams: Vec<Camera> = (0..3).map(|i| p.scene.scenario_camera(i)).collect();
-        let (images, report) = p.render_path(&cams, AlphaMode::Group).unwrap();
+        let cams: Vec<Camera> = (0..3).map(|i| p.scene().scenario_camera(i)).collect();
+        let mut session = p.session();
+        let images = session.render_path(&cams).unwrap();
+        let stats = *session.stats();
         assert_eq!(images.len(), 3);
-        assert_eq!(report.frames, 3);
-        assert!(report.cut_total > 0);
-        assert!(report.pairs_total > 0);
-        assert!(report.fps() > 0.0);
+        assert_eq!(stats.frames, 3);
+        assert!(stats.cut_total > 0);
+        assert!(stats.pairs_total > 0);
+        assert!(stats.fps() > 0.0);
         for (i, (img, cam)) in images.iter().zip(cams.iter()).enumerate() {
-            let per_frame = p.render(cam, AlphaMode::Group).unwrap();
-            assert_eq!(img.data, per_frame.data, "frame {i} diverged from render()");
+            let per_frame = p.session().render(cam).unwrap();
+            assert_eq!(img.data, per_frame.data, "frame {i} diverged from a fresh session");
         }
     }
 
     #[test]
-    fn render_path_cpu_thread_counts_agree() {
+    fn sessions_agree_across_thread_counts() {
         let p = pipeline();
-        let cams: Vec<Camera> = (0..2).map(|i| p.scene.scenario_camera(i)).collect();
-        let (a, ra) = p.render_path_cpu(&cams, AlphaMode::Pixel, 1);
-        let (b, rb) = p.render_path_cpu(&cams, AlphaMode::Pixel, 8);
-        assert_eq!(ra.pairs_total, rb.pairs_total);
+        let cams: Vec<Camera> = (0..2).map(|i| p.scene().scenario_camera(i)).collect();
+        let opts = RenderOptions { alpha: AlphaMode::Pixel, ..p.default_options() };
+        let serial = CpuBackend::with_threads(1);
+        let wide = CpuBackend::with_threads(8);
+        let a = p.session_on(&serial, opts).render_path(&cams).unwrap();
+        let b = p.session_on(&wide, opts).render_path(&cams).unwrap();
         for (x, y) in a.iter().zip(b.iter()) {
             assert_eq!(x.data, y.data);
         }
     }
 
     #[test]
+    fn session_matches_reference_renderer() {
+        let p = pipeline();
+        let cam = p.scene().scenario_camera(1);
+        let cut = p.search(&cam);
+        let queue = p.scene().gaussians.gather(&cut);
+        for alpha in [AlphaMode::Pixel, AlphaMode::Group] {
+            let mut session =
+                p.session_with(RenderOptions { alpha, ..p.default_options() });
+            let got = session.render(&cam).unwrap();
+            let want = CpuRenderer::render(&queue, &cam, alpha, p.rcfg());
+            assert_eq!(got.data, want.data, "{alpha:?}");
+        }
+    }
+
+    #[test]
     fn search_respects_tau() {
-        let mut p = pipeline();
-        let cam = p.scene.scenario_camera(2);
-        p.rcfg.lod_tau = 2.0;
-        let fine = p.search(&cam).len();
-        p.rcfg.lod_tau = 32.0;
-        let coarse = p.search(&cam).len();
+        let p = pipeline();
+        let cam = p.scene().scenario_camera(2);
+        let fine = p.search_with_tau(&cam, 2.0).len();
+        let coarse = p.search_with_tau(&cam, 32.0).len();
         assert!(coarse < fine);
+    }
+
+    #[test]
+    fn builder_wires_options_and_tree() {
+        let scene = SceneConfig::small_scale().quick().build(9);
+        let tree_len = scene.tree.len();
+        let p = FramePipeline::builder(scene)
+            .tau(8.0)
+            .subtree_size(16)
+            .alpha(AlphaMode::Pixel)
+            .threads(2)
+            .backend(CpuBackend::with_threads(4))
+            .build();
+        assert_eq!(p.rcfg().lod_tau, 8.0);
+        assert_eq!(p.rcfg().subtree_size, 16);
+        let opts = p.default_options();
+        assert_eq!(opts.alpha, AlphaMode::Pixel);
+        assert_eq!(opts.lod_tau, 8.0);
+        assert_eq!(opts.threads, 2);
+        assert_eq!(p.backend().threads(&opts), 2);
+        assert_eq!(p.sltree().sizes().iter().sum::<usize>(), tree_len);
+        // render_config after-the-fact tau still seeds session defaults.
+        let q = FramePipeline::builder(SceneConfig::small_scale().quick().build(9))
+            .render_config(RenderConfig { lod_tau: 12.0, ..Default::default() })
+            .build();
+        assert_eq!(q.default_options().lod_tau, 12.0);
+        // Explicit tau/subtree_size win regardless of call order: the
+        // pipeline config and session defaults never desynchronize.
+        let r = FramePipeline::builder(SceneConfig::small_scale().quick().build(9))
+            .tau(8.0)
+            .subtree_size(16)
+            .render_config(RenderConfig::default())
+            .build();
+        assert_eq!(r.rcfg().lod_tau, 8.0);
+        assert_eq!(r.rcfg().subtree_size, 16);
+        assert_eq!(r.default_options().lod_tau, 8.0);
+    }
+
+    #[test]
+    fn stats_reset_opens_a_fresh_window() {
+        let p = pipeline();
+        let cam = p.scene().scenario_camera(0);
+        let mut session = p.session();
+        session.render(&cam).unwrap();
+        let first = session.reset_stats();
+        assert_eq!(first.frames, 1);
+        assert_eq!(session.stats().frames, 0);
+        session.render(&cam).unwrap();
+        assert_eq!(session.stats().frames, 1);
+        assert_eq!(session.stats().cut_total, first.cut_total);
     }
 }

@@ -1,8 +1,11 @@
-//! Image production: a pure-CPU renderer (mirrors the L1 kernels) and a
-//! PJRT renderer (executes the AOT artifacts). Both share the same
-//! front end (projection -> CSR binning -> in-place radix depth sort)
-//! and differ only in who runs the blending maths — the integration test
-//! `rust/tests/pjrt_roundtrip.rs` asserts they agree.
+//! Image production internals: the shared front end (projection -> CSR
+//! binning -> in-place radix depth sort), the CPU and PJRT blend loops
+//! that the [`super::backend`] implementations drive, and the stateless
+//! reference renderers (`CpuRenderer` / `PjrtRenderer`) the equivalence
+//! tests compare the session API against. Both blend paths consume the
+//! identical sorted bins and differ only in who runs the blending maths
+//! — the integration test `rust/tests/pjrt_roundtrip.rs` asserts they
+//! agree.
 //!
 //! The CPU renderer splats tiles with a **dynamic-greedy multi-threaded
 //! scheduler**: workers pull non-empty tiles one at a time from a shared
@@ -23,8 +26,11 @@ use crate::splat::{
     bin_splats_into, blend_tile, sort_bins_with, BlendMode, DepthSortScratch,
     TileBins, TILE,
 };
+use super::stats::StageTimings;
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
 
 /// Which alpha dataflow to render with.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -36,7 +42,7 @@ pub enum AlphaMode {
 }
 
 impl AlphaMode {
-    fn blend_mode(self) -> BlendMode {
+    pub(crate) fn blend_mode(self) -> BlendMode {
         match self {
             AlphaMode::Pixel => BlendMode::PerPixel,
             AlphaMode::Group => BlendMode::PixelGroup,
@@ -63,20 +69,39 @@ impl FrameScratch {
 }
 
 /// Shared front end: project the queue, bin into CSR, and depth-sort
-/// every tile slice in place.
-fn front_end_into(queue: &Gaussians, cam: &Camera, scratch: &mut FrameScratch) {
+/// every tile slice in place, accumulating per-stage wall-clock into
+/// `stages` (the session API's unified stats).
+pub(crate) fn front_end_timed(
+    queue: &Gaussians,
+    cam: &Camera,
+    scratch: &mut FrameScratch,
+    stages: &mut StageTimings,
+) {
+    let t = Instant::now();
     project_into(queue, cam, &mut scratch.splats);
+    stages.project += t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
     bin_splats_into(
         &scratch.splats,
         cam.intr.width,
         cam.intr.height,
         &mut scratch.bins,
     );
+    stages.bin += t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
     sort_bins_with(&mut scratch.bins, &scratch.splats, &mut scratch.sort);
     scratch.work.clear();
     scratch.work.extend(
         (0..scratch.bins.tile_count() as u32).filter(|&t| scratch.bins.tile_len(t as usize) > 0),
     );
+    stages.sort += t.elapsed().as_secs_f64();
+}
+
+/// Untimed front end for the stateless reference renderers.
+fn front_end_into(queue: &Gaussians, cam: &Camera, scratch: &mut FrameScratch) {
+    front_end_timed(queue, cam, scratch, &mut StageTimings::default());
 }
 
 /// Write one tile's accumulated RGB into the frame image (exclusive
@@ -157,7 +182,7 @@ fn blend_one_tile(
 
 /// Splat every non-empty tile of `scratch` into `img`, using `threads`
 /// workers over a dynamic-greedy shared queue (1 = serial reference).
-fn blend_tiles(
+pub(crate) fn blend_tiles(
     scratch: &FrameScratch,
     mode: BlendMode,
     t_min: f32,
@@ -226,15 +251,23 @@ fn blend_tiles(
     });
 }
 
-/// Worker count for the tile scheduler: `SLTARCH_THREADS` env override,
-/// else the machine's available parallelism.
+static DEFAULT_THREADS: OnceLock<usize> = OnceLock::new();
+
+/// Default worker count for the tile scheduler: the `SLTARCH_THREADS`
+/// env override if set, else the machine's available parallelism. The
+/// env var is a deployment fallback — prefer `CpuBackend::with_threads`
+/// / `RenderOptions::threads` — and is read and parsed exactly once per
+/// process, never on the per-frame hot path.
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("SLTARCH_THREADS") {
-        if let Ok(n) = v.trim().parse::<usize>() {
-            return n.max(1);
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    *DEFAULT_THREADS.get_or_init(|| {
+        std::env::var("SLTARCH_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .map(|n| n.max(1))
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
 }
 
 /// Pure-CPU renderer.
@@ -321,34 +354,47 @@ impl PjrtRenderer {
     ) -> Result<Image> {
         // Front end on CPU (binning/sorting is L3 work); blending on PJRT.
         front_end_into(queue, cam, scratch);
-        let splats = &scratch.splats;
-        let bins = &scratch.bins;
         let mut img = Image::new(cam.intr.width, cam.intr.height);
-        let group = mode == AlphaMode::Group;
-        for idx in 0..bins.tile_count() {
-            let order = bins.tile(idx);
-            if order.is_empty() {
-                continue;
-            }
-            let origin = bins.tile_origin(idx);
-            let mut state = SplatState::fresh();
-            for chunk in order.chunks(K_CHUNK) {
-                let chunk_splats: Vec<Splat2D> =
-                    chunk.iter().map(|&i| splats[i as usize]).collect();
-                state = SplatChunk::run(engine, &chunk_splats, origin, &state, group)?;
-                if state.t_max() < rcfg.t_min {
-                    break; // tile saturated: skip remaining chunks
-                }
-            }
-            let rgb: Vec<[f32; 3]> = state
-                .rgb
-                .chunks_exact(3)
-                .map(|c| [c[0], c[1], c[2]])
-                .collect();
-            store_tile(&mut img, origin, &rgb);
-        }
+        blend_tiles_pjrt(engine, scratch, mode == AlphaMode::Group, rcfg.t_min, &mut img)?;
         Ok(img)
     }
+}
+
+/// Blend every non-empty tile of `scratch` through the PJRT splat
+/// artifacts in [`K_CHUNK`] batches, with early termination between
+/// chunks (the `PjrtBackend` blend path).
+pub(crate) fn blend_tiles_pjrt(
+    engine: &PjrtEngine,
+    scratch: &FrameScratch,
+    group: bool,
+    t_min: f32,
+    img: &mut Image,
+) -> Result<()> {
+    let splats = &scratch.splats;
+    let bins = &scratch.bins;
+    for idx in 0..bins.tile_count() {
+        let order = bins.tile(idx);
+        if order.is_empty() {
+            continue;
+        }
+        let origin = bins.tile_origin(idx);
+        let mut state = SplatState::fresh();
+        for chunk in order.chunks(K_CHUNK) {
+            let chunk_splats: Vec<Splat2D> =
+                chunk.iter().map(|&i| splats[i as usize]).collect();
+            state = SplatChunk::run(engine, &chunk_splats, origin, &state, group)?;
+            if state.t_max() < t_min {
+                break; // tile saturated: skip remaining chunks
+            }
+        }
+        let rgb: Vec<[f32; 3]> = state
+            .rgb
+            .chunks_exact(3)
+            .map(|c| [c[0], c[1], c[2]])
+            .collect();
+        store_tile(img, origin, &rgb);
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -1,0 +1,117 @@
+//! Long-lived render sessions: one per client camera stream.
+//!
+//! A [`RenderSession`] borrows an immutable [`FramePipeline`] (scene +
+//! SLTree + config + backend) and owns everything mutable a stream
+//! needs: its [`RenderOptions`], its front-end [`FrameScratch`] (so
+//! single-frame renders are as allocation-lean as batched paths) and a
+//! unified [`RenderStats`] accumulator with per-stage timings. Sessions
+//! are independent, so N clients over one `&FramePipeline` form a
+//! thread-safe serving surface (see `examples/multi_client.rs`).
+
+use super::backend::{RenderBackend, RenderOptions};
+use super::pipeline::FramePipeline;
+use super::renderer::{front_end_timed, FrameScratch};
+use super::stats::{RenderStats, StageTimings};
+use crate::math::Camera;
+use crate::metrics::Image;
+use anyhow::Result;
+use std::time::Instant;
+
+/// One client's rendering state over a shared pipeline.
+pub struct RenderSession<'p> {
+    pipeline: &'p FramePipeline,
+    backend: &'p dyn RenderBackend,
+    opts: RenderOptions,
+    scratch: FrameScratch,
+    stats: RenderStats,
+}
+
+impl<'p> RenderSession<'p> {
+    pub(crate) fn new(
+        pipeline: &'p FramePipeline,
+        backend: &'p dyn RenderBackend,
+        opts: RenderOptions,
+    ) -> Self {
+        RenderSession {
+            pipeline,
+            backend,
+            opts,
+            scratch: FrameScratch::new(),
+            stats: RenderStats::default(),
+        }
+    }
+
+    /// The pipeline this session renders from.
+    pub fn pipeline(&self) -> &'p FramePipeline {
+        self.pipeline
+    }
+
+    /// The backend blending this session's frames.
+    pub fn backend(&self) -> &'p dyn RenderBackend {
+        self.backend
+    }
+
+    /// Current render options.
+    pub fn options(&self) -> &RenderOptions {
+        &self.opts
+    }
+
+    /// Mutable render options (e.g. a tau sweep mid-stream).
+    pub fn options_mut(&mut self) -> &mut RenderOptions {
+        &mut self.opts
+    }
+
+    /// Statistics accumulated since creation / the last reset.
+    pub fn stats(&self) -> &RenderStats {
+        &self.stats
+    }
+
+    /// Return the accumulated statistics and start a fresh window.
+    pub fn reset_stats(&mut self) -> RenderStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    /// Render one frame. Reuses this session's front-end scratch, so a
+    /// steady-state frame allocates only its output image; output is
+    /// bit-identical to the stateless reference renderer
+    /// (`CpuRenderer`) at any thread count.
+    pub fn render(&mut self, cam: &Camera) -> Result<Image> {
+        let frame_t0 = Instant::now();
+        // Accumulate the frame locally and commit to `self.stats` only
+        // once the whole frame succeeded, so a blend error can never
+        // leave the counters mutually inconsistent (cut_total counting
+        // a frame that `frames`/`pairs_total` do not).
+        let mut stages = StageTimings::default();
+
+        let t = Instant::now();
+        let cut = self.pipeline.search_with_tau(cam, self.opts.lod_tau);
+        let queue = self.pipeline.scene().gaussians.gather(&cut);
+        stages.search = t.elapsed().as_secs_f64();
+
+        front_end_timed(&queue, cam, &mut self.scratch, &mut stages);
+
+        let mut img = Image::new(cam.intr.width, cam.intr.height);
+        let t = Instant::now();
+        self.backend
+            .blend(&self.scratch, &self.opts, self.pipeline.rcfg(), &mut img)?;
+        stages.blend = t.elapsed().as_secs_f64();
+
+        self.stats.stages.accumulate(&stages);
+        self.stats.cut_total += cut.len() as u64;
+        self.stats.pairs_total += self.scratch.bins.pairs;
+        self.stats.frames += 1;
+        self.stats.threads = self.backend.threads(&self.opts);
+        self.stats.wall_seconds += frame_t0.elapsed().as_secs_f64();
+        Ok(img)
+    }
+
+    /// Render a whole camera path through this session (scratch and
+    /// stats carry across frames, as in the old `render_path`).
+    pub fn render_path(&mut self, cams: &[Camera]) -> Result<Vec<Image>> {
+        let mut images = Vec::with_capacity(cams.len());
+        for cam in cams {
+            images.push(self.render(cam)?);
+        }
+        Ok(images)
+    }
+}

@@ -1,0 +1,151 @@
+//! Unified render statistics: one report type for single frames, camera
+//! paths and whole serving sessions, with per-stage wall-clock
+//! accumulators. Replaces the PR-1 `FrameReport`/`PathReport` split.
+
+/// Per-stage wall-clock seconds, accumulated across every frame a
+/// [`super::session::RenderSession`] renders. The stages mirror the
+/// pipeline order: LoD search (+ queue gather), projection, CSR tile
+/// binning, radix depth sort, tile blending.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageTimings {
+    /// SLTree traversal + rendering-queue gather.
+    pub search: f64,
+    /// 3D -> 2D splat projection.
+    pub project: f64,
+    /// CSR tile binning (count -> prefix-sum -> scatter).
+    pub bin: f64,
+    /// In-place radix depth sort + work-list build.
+    pub sort: f64,
+    /// Tile blending (CPU scheduler or PJRT artifacts).
+    pub blend: f64,
+}
+
+impl StageTimings {
+    /// Sum of all stage accumulators. Always <= the wall-clock time of
+    /// the renders that produced them (per-frame overhead — image
+    /// allocation, stats bookkeeping — lands outside the stages).
+    pub fn staged_total(&self) -> f64 {
+        self.search + self.project + self.bin + self.sort + self.blend
+    }
+
+    /// Add another set of accumulators into this one.
+    pub fn accumulate(&mut self, other: &StageTimings) {
+        self.search += other.search;
+        self.project += other.project;
+        self.bin += other.bin;
+        self.sort += other.sort;
+        self.blend += other.blend;
+    }
+
+    /// `(name, seconds)` rows in pipeline order — for reports/benches.
+    pub fn rows(&self) -> [(&'static str, f64); 5] {
+        [
+            ("search", self.search),
+            ("project", self.project),
+            ("bin", self.bin),
+            ("sort", self.sort),
+            ("blend", self.blend),
+        ]
+    }
+
+    /// `(name, ms/frame)` rows over `frames` frames — the one shared
+    /// derivation every report (CLI, examples, hotpath bench) prints.
+    pub fn rows_ms_per_frame(&self, frames: usize) -> [(&'static str, f64); 5] {
+        let scale = 1e3 / frames.max(1) as f64;
+        self.rows().map(|(name, secs)| (name, secs * scale))
+    }
+}
+
+/// Unified rendering statistics. A [`super::session::RenderSession`]
+/// accumulates one of these across every frame it renders; merge several
+/// (one per client) for an aggregate serving report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RenderStats {
+    /// Frames rendered.
+    pub frames: usize,
+    /// Wall-clock seconds across those frames (search + render).
+    pub wall_seconds: f64,
+    /// Total rendering-queue length across frames.
+    pub cut_total: u64,
+    /// Total (gaussian, tile) pairs across frames.
+    pub pairs_total: u64,
+    /// Tile-scheduler worker count in effect (0 = offload backend).
+    pub threads: usize,
+    /// Per-stage wall-clock breakdown.
+    pub stages: StageTimings,
+}
+
+impl RenderStats {
+    /// Aggregate throughput in frames per second.
+    pub fn fps(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.frames as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean wall-clock milliseconds per frame.
+    pub fn ms_per_frame(&self) -> f64 {
+        if self.frames > 0 {
+            self.wall_seconds / self.frames as f64 * 1e3
+        } else {
+            0.0
+        }
+    }
+
+    /// Fold another session's stats into this one. Sums every counter
+    /// including `wall_seconds`; when aggregating *concurrent* sessions,
+    /// overwrite `wall_seconds` with the measured span afterwards so
+    /// [`RenderStats::fps`] reports true aggregate throughput.
+    pub fn merge(&mut self, other: &RenderStats) {
+        self.frames += other.frames;
+        self.wall_seconds += other.wall_seconds;
+        self.cut_total += other.cut_total;
+        self.pairs_total += other.pairs_total;
+        self.threads = self.threads.max(other.threads);
+        self.stages.accumulate(&other.stages);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fps_and_ms_are_consistent() {
+        let s = RenderStats { frames: 10, wall_seconds: 2.0, ..Default::default() };
+        assert!((s.fps() - 5.0).abs() < 1e-12);
+        assert!((s.ms_per_frame() - 200.0).abs() < 1e-9);
+        assert_eq!(RenderStats::default().fps(), 0.0);
+        assert_eq!(RenderStats::default().ms_per_frame(), 0.0);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_stages() {
+        let mut a = RenderStats {
+            frames: 2,
+            wall_seconds: 1.0,
+            cut_total: 10,
+            pairs_total: 100,
+            threads: 4,
+            stages: StageTimings { search: 0.1, blend: 0.2, ..Default::default() },
+        };
+        let b = RenderStats {
+            frames: 3,
+            wall_seconds: 2.0,
+            cut_total: 5,
+            pairs_total: 50,
+            threads: 2,
+            stages: StageTimings { search: 0.3, sort: 0.1, ..Default::default() },
+        };
+        a.merge(&b);
+        assert_eq!(a.frames, 5);
+        assert_eq!(a.cut_total, 15);
+        assert_eq!(a.pairs_total, 150);
+        assert_eq!(a.threads, 4);
+        assert!((a.wall_seconds - 3.0).abs() < 1e-12);
+        assert!((a.stages.search - 0.4).abs() < 1e-12);
+        assert!((a.stages.staged_total() - 0.7).abs() < 1e-12);
+    }
+}

@@ -14,10 +14,10 @@ pub struct DramResult {
 
 pub fn evaluate(cfg: &crate::config::SceneConfig, seed: u64) -> DramResult {
     let p = build_pipeline(cfg, seed);
-    let exhaustive = p.scene.tree.len() as u64 * NODE_BYTES;
+    let exhaustive = p.scene().tree.len() as u64 * NODE_BYTES;
     let mut reductions = Vec::new();
-    for i in 0..p.scene.cameras.len() {
-        let cam = p.scene.scenario_camera(i);
+    for i in 0..p.scene().cameras.len() {
+        let cam = p.scene().scenario_camera(i);
         let (_, w) = p.lod_only(&cam);
         let ours = w.trace.bytes_streamed;
         reductions.push(1.0 - ours as f64 / exhaustive as f64);

@@ -19,8 +19,8 @@ pub fn evaluate(cfg: &crate::config::SceneConfig, seed: u64) -> Fig10Result {
     let p = build_pipeline(cfg, seed);
     let variants = HwVariant::fig9().to_vec();
     let mut ratios = vec![Vec::new(); variants.len()];
-    for i in 0..p.scene.cameras.len() {
-        let cam = p.scene.scenario_camera(i);
+    for i in 0..p.scene().cameras.len() {
+        let cam = p.scene().scenario_camera(i);
         let r = p.simulate(&cam, &variants);
         let gpu = r
             .sims

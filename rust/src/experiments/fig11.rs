@@ -20,8 +20,8 @@ pub fn evaluate(cfg: &crate::config::SceneConfig, seed: u64) -> Fig11Result {
     let p = build_pipeline(cfg, seed);
     let variants = HwVariant::fig11().to_vec();
     let mut ratios = vec![Vec::new(); variants.len()];
-    for i in 0..p.scene.cameras.len() {
-        let cam = p.scene.scenario_camera(i);
+    for i in 0..p.scene().cameras.len() {
+        let cam = p.scene().scenario_camera(i);
         let r = p.simulate(&cam, &variants);
         let gpu_lod = r
             .sims

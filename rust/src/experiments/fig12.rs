@@ -19,23 +19,23 @@ pub struct Fig12Row {
 
 pub fn evaluate(cfg: &crate::config::SceneConfig, seed: u64) -> Fig12Row {
     let p = build_pipeline(cfg, seed);
-    let merged = &p.sltree;
-    let unmerged = SlTree::partition_unmerged(&p.scene.tree, p.rcfg.subtree_size);
+    let merged = p.sltree();
+    let unmerged = SlTree::partition_unmerged(&p.scene().tree, p.rcfg().subtree_size);
 
     let mut s_m = Vec::new();
     let mut s_u = Vec::new();
     let mut u_m = Vec::new();
     let mut u_u = Vec::new();
-    for i in 0..p.scene.cameras.len() {
-        let cam = p.scene.scenario_camera(i);
+    for i in 0..p.scene().cameras.len() {
+        let cam = p.scene().scenario_camera(i);
         let (_, lod_w) = p.lod_only(&cam);
-        let gpu_lod = gpu::lod_exhaustive(&lod_w, &p.arch.gpu, &p.arch.dram);
+        let gpu_lod = gpu::lod_exhaustive(&lod_w, &p.arch().gpu, &p.arch().dram);
         for (slt, speeds, utils) in
             [(merged, &mut s_m, &mut u_m), (&unmerged, &mut s_u, &mut u_u)]
         {
             let (_, trace) =
-                traverse_sltree(&p.scene.tree, slt, &cam, p.rcfg.lod_tau, 4);
-            let r = ltcore::search(&trace, &p.arch.ltcore, &p.arch.dram);
+                traverse_sltree(&p.scene().tree, slt, &cam, p.rcfg().lod_tau, 4);
+            let r = ltcore::search(&trace, &p.arch().ltcore, &p.arch().dram);
             speeds.push(gpu_lod.seconds / r.stage.seconds);
             utils.push(r.utilization());
         }

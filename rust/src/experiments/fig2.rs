@@ -18,10 +18,10 @@ pub const TAUS: [f32; 5] = [4.0, 8.0, 16.0, 32.0, 64.0];
 pub fn evaluate(cfg: &crate::config::SceneConfig, seed: u64) -> Vec<(f64, f64, f64)> {
     let mut p = build_pipeline(cfg, seed);
     // Fixed wide view: scenario 3 captures most of the scene.
-    let cam = p.scene.scenario_camera(3);
+    let cam = p.scene().scenario_camera(3);
     let mut rows = Vec::new();
     for &tau in &TAUS {
-        p.rcfg.lod_tau = tau;
+        p.set_lod_tau(tau);
         let r = p.simulate(&cam, &[HwVariant::Gpu]);
         let rep = &r.sims[0].report;
         let total = rep.total_seconds();

@@ -12,16 +12,16 @@ pub fn run(quick: bool) {
     println!("\n=== Fig. 3: static workload imbalance across GPU threads ===\n");
     let cfg = &eval_scenes(quick)[1];
     let p = build_pipeline(cfg, 42);
-    let cam = p.scene.scenario_camera(1);
+    let cam = p.scene().scenario_camera(1);
     println!(
         "{:>8} {:>12} {:>12} {:>10} {:>10}",
         "threads", "mean", "std", "std/mean", "max/mean"
     );
     for threads in [8usize, 16, 32, 64, 128, 256, 512] {
         let loads = crate::lod::naive_static_workloads(
-            &p.scene.tree,
+            &p.scene().tree,
             &cam,
-            p.rcfg.lod_tau,
+            p.rcfg().lod_tau,
             threads,
         );
         let xs: Vec<f64> = loads.iter().map(|&x| x as f64).collect();
@@ -46,9 +46,9 @@ mod tests {
     fn static_partition_is_imbalanced_at_64_threads() {
         let cfg = &eval_scenes(true)[1];
         let p = build_pipeline(cfg, 42);
-        let cam = p.scene.scenario_camera(1);
+        let cam = p.scene().scenario_camera(1);
         let loads =
-            crate::lod::naive_static_workloads(&p.scene.tree, &cam, p.rcfg.lod_tau, 64);
+            crate::lod::naive_static_workloads(&p.scene().tree, &cam, p.rcfg().lod_tau, 64);
         let xs: Vec<f64> = loads.iter().map(|&x| x as f64).collect();
         let s = summarize(&xs).unwrap();
         // The paper's regime: std within the order of the mean.

@@ -18,8 +18,8 @@ pub fn evaluate(cfg: &crate::config::SceneConfig, seed: u64) -> Fig9Result {
     let p = build_pipeline(cfg, seed);
     let variants = HwVariant::fig9().to_vec();
     let mut speedups = vec![Vec::new(); variants.len()];
-    for i in 0..p.scene.cameras.len() {
-        let cam = p.scene.scenario_camera(i);
+    for i in 0..p.scene().cameras.len() {
+        let cam = p.scene().scenario_camera(i);
         let r = p.simulate(&cam, &variants);
         let gpu = r.sim_seconds(HwVariant::Gpu).unwrap();
         for (vi, v) in variants.iter().enumerate() {

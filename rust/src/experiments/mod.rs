@@ -63,7 +63,10 @@ pub fn eval_scenes(quick: bool) -> Vec<SceneConfig> {
 
 /// Standard pipeline construction for experiments.
 pub fn build_pipeline(cfg: &SceneConfig, seed: u64) -> FramePipeline {
-    FramePipeline::new(cfg.build(seed), RenderConfig::default(), ArchConfig::default())
+    FramePipeline::builder(cfg.build(seed))
+        .render_config(RenderConfig::default())
+        .arch_config(ArchConfig::default())
+        .build()
 }
 
 /// Geometric mean (speedup aggregation, as the paper reports).

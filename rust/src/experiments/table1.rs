@@ -6,8 +6,9 @@
 //! claim: SLTARCH matches Org. within noise (ΔPSNR ~= -0.01 dB).
 
 use super::{build_pipeline, eval_scenes};
-use crate::coordinator::renderer::{AlphaMode, CpuRenderer};
-use crate::metrics::{lpips_proxy, psnr, ssim, Image};
+use crate::coordinator::backend::RenderOptions;
+use crate::coordinator::renderer::AlphaMode;
+use crate::metrics::{lpips_proxy, psnr, ssim};
 
 /// One scene's averaged metrics.
 #[derive(Debug, Default, Clone, Copy)]
@@ -23,18 +24,24 @@ pub struct QualityRow {
 pub fn evaluate_scene(cfg: &crate::config::SceneConfig, seed: u64) -> QualityRow {
     let p = build_pipeline(cfg, seed);
     let mut row = QualityRow::default();
-    let n = p.scene.cameras.len() as f64;
-    for i in 0..p.scene.cameras.len() {
-        let cam = p.scene.scenario_camera(i);
-        // GT: finest cut, canonical dataflow.
-        let finest = p.sltree.traverse(&p.scene.tree, &cam, 1.0);
-        let gt_queue = p.scene.gaussians.gather(&finest);
-        let gt: Image = CpuRenderer::render(&gt_queue, &cam, AlphaMode::Pixel, &p.rcfg);
-        // Org / SLTARCH: default-tau cut, per-pixel vs group alpha.
-        let cut = p.search(&cam);
-        let queue = p.scene.gaussians.gather(&cut);
-        let org = CpuRenderer::render(&queue, &cam, AlphaMode::Pixel, &p.rcfg);
-        let slt = CpuRenderer::render(&queue, &cam, AlphaMode::Group, &p.rcfg);
+    let n = p.scene().cameras.len() as f64;
+    // Three long-lived sessions over one pipeline: ground truth renders
+    // the *finest* cut (per-session tau = 1.0, canonical dataflow);
+    // Org / SLTARCH render the default-tau cut per-pixel vs group.
+    let mut gt_sess = p.session_with(RenderOptions {
+        alpha: AlphaMode::Pixel,
+        lod_tau: 1.0,
+        ..p.default_options()
+    });
+    let mut org_sess =
+        p.session_with(RenderOptions { alpha: AlphaMode::Pixel, ..p.default_options() });
+    let mut slt_sess =
+        p.session_with(RenderOptions { alpha: AlphaMode::Group, ..p.default_options() });
+    for i in 0..p.scene().cameras.len() {
+        let cam = p.scene().scenario_camera(i);
+        let gt = gt_sess.render(&cam).expect("gt render");
+        let org = org_sess.render(&cam).expect("org render");
+        let slt = slt_sess.render(&cam).expect("sltarch render");
         row.psnr_org += psnr(&gt, &org) / n;
         row.psnr_slt += psnr(&gt, &slt) / n;
         row.ssim_org += ssim(&gt, &org) / n;

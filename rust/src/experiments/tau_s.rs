@@ -30,18 +30,18 @@ pub fn evaluate(cfg: &crate::config::SceneConfig, seed: u64) -> Vec<TauSRow> {
     let p = build_pipeline(cfg, seed);
     let mut rows = Vec::new();
     for &tau_s in &TAU_S_SWEEP {
-        let slt = SlTree::partition(&p.scene.tree, tau_s);
+        let slt = SlTree::partition(&p.scene().tree, tau_s);
         let mut secs = Vec::new();
         let mut bytes = 0.0;
         let mut refetches = 0u64;
         let mut misses = 0u64;
-        for i in 0..p.scene.cameras.len() {
-            let cam = p.scene.scenario_camera(i);
+        for i in 0..p.scene().cameras.len() {
+            let cam = p.scene().scenario_camera(i);
             let (_, trace) =
-                traverse_sltree(&p.scene.tree, &slt, &cam, p.rcfg.lod_tau, 4);
-            let r = ltcore::search(&trace, &p.arch.ltcore, &p.arch.dram);
+                traverse_sltree(&p.scene().tree, &slt, &cam, p.rcfg().lod_tau, 4);
+            let r = ltcore::search(&trace, &p.arch().ltcore, &p.arch().dram);
             secs.push(r.stage.seconds);
-            bytes += trace.bytes_streamed as f64 / p.scene.cameras.len() as f64;
+            bytes += trace.bytes_streamed as f64 / p.scene().cameras.len() as f64;
             refetches += r.cache.refetches;
             misses += r.cache.misses;
         }
@@ -86,11 +86,11 @@ mod tests {
     fn cut_is_invariant_under_tau_s() {
         let cfg = eval_scenes(true).remove(0);
         let p = build_pipeline(&cfg, 42);
-        let cam = p.scene.scenario_camera(2);
+        let cam = p.scene().scenario_camera(2);
         let mut cuts = Vec::new();
         for &tau_s in &TAU_S_SWEEP {
-            let slt = SlTree::partition(&p.scene.tree, tau_s);
-            cuts.push(slt.traverse(&p.scene.tree, &cam, p.rcfg.lod_tau));
+            let slt = SlTree::partition(&p.scene().tree, tau_s);
+            cuts.push(slt.traverse(&p.scene().tree, &cam, p.rcfg().lod_tau));
         }
         for w in cuts.windows(2) {
             assert_eq!(w[0], w[1], "tau_s must not change search semantics");

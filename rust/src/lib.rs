@@ -19,42 +19,71 @@
 //! * [`experiments`] — one module per paper table/figure; each prints the
 //!   rows the paper reports (see DESIGN.md §5 for the index).
 //!
-//! ## Pipeline parallelism (software mirror of the paper's scheduling)
+//! ## Sessions, backends and pipeline parallelism
 //!
-//! The frame front end is flat and allocation-lean by construction:
+//! The public rendering API is built around three pieces:
 //!
-//! * **CSR tile bins** — [`splat::TileBins`] stores every tile's splat
-//!   list in one flat index array plus an offset table, built
-//!   count -> prefix-sum -> scatter ([`splat::bin_splats_into`] reuses
-//!   the buffers across frames).
-//! * **In-place radix depth sort** — [`splat::sort_bins_with`] orders
-//!   each CSR slice front-to-back via 64-bit `(sortable-depth, id)`
-//!   keys, bit-identical to the comparison reference
-//!   [`splat::sort_tile_by_depth`] including the id tie-break.
-//! * **Dynamic tile scheduler** — the CPU renderer splats tiles with
-//!   `std::thread::scope` workers pulling non-empty tiles greedily from
-//!   a shared atomic queue (the software analogue of the LT-unit
-//!   dynamic dequeue); output is bit-identical to the serial schedule
-//!   at any thread count.
-//! * **Batched path rendering** —
-//!   [`coordinator::pipeline::FramePipeline::render_path`] renders a
-//!   whole camera path reusing one front-end scratch, reporting
-//!   aggregate frames/sec ([`coordinator::pipeline::PathReport`]).
+//! * **[`coordinator::FramePipeline`]** — immutable serving state
+//!   (scene + SLTree + configs + backend), built once via
+//!   [`coordinator::FramePipeline::builder`]. The SLTree is partitioned
+//!   at `build()` and exposed through
+//!   [`coordinator::FramePipeline::sltree`] — never re-partition by
+//!   hand.
+//! * **[`coordinator::RenderSession`]** — per-client mutable state:
+//!   typed [`coordinator::RenderOptions`] (alpha dataflow, tau,
+//!   scheduler width), the reusable front-end scratch (steady-state
+//!   frames allocate only their output image), and unified
+//!   [`coordinator::RenderStats`] with per-stage timings
+//!   (search / project / bin / sort / blend). N sessions over one
+//!   `&FramePipeline` are a thread-safe multi-client serving surface
+//!   (see `examples/multi_client.rs`).
+//! * **[`coordinator::RenderBackend`]** — who runs the blending maths:
+//!   [`coordinator::CpuBackend`] (dynamic-greedy multi-threaded tile
+//!   scheduler, bit-identical to serial at any width) or
+//!   [`coordinator::PjrtBackend`] (the AOT JAX/Pallas artifacts). The
+//!   front end (projection -> CSR binning -> radix depth sort) is
+//!   hoisted out of the backends, so both consume identical sorted
+//!   bins.
+//!
+//! Migration from the pre-session API:
+//!
+//! | old call | new call |
+//! |---|---|
+//! | `FramePipeline::new(scene, rcfg, arch)` | `FramePipeline::builder(scene).render_config(rcfg).arch_config(arch).build()` |
+//! | `pipeline.with_engine(engine)` | `FramePipeline::builder(scene).engine(engine).build()` |
+//! | `pipeline.render(&cam, AlphaMode::Group)` | `pipeline.session().render(&cam)` |
+//! | `pipeline.render(&cam, AlphaMode::Pixel)` | `pipeline.session_with(RenderOptions { alpha: AlphaMode::Pixel, ..pipeline.default_options() }).render(&cam)` |
+//! | `pipeline.render_path(&cams, mode)` | `session.render_path(&cams)` then `session.stats()` |
+//! | `pipeline.render_path_cpu(&cams, mode, threads)` | `pipeline.session_on(&CpuBackend::with_threads(threads), opts).render_path(&cams)` |
+//! | `pipeline.rcfg.lod_tau = tau` | `pipeline.set_lod_tau(tau)` or per-session `RenderOptions::lod_tau` |
+//! | `FrameReport` (render half) / `PathReport` | [`coordinator::RenderStats`] |
+//! | `pipeline.simulate(..)` -> `FrameReport` | `pipeline.simulate(..)` -> [`coordinator::SimulationReport`] |
+//!
+//! The underlying machinery is unchanged from PR 1 and stays
+//! bit-identical (asserted by `rust/tests/proptests.rs`): CSR tile bins
+//! ([`splat::bin_splats_into`]), the in-place radix depth sort
+//! ([`splat::sort_bins_with`]), and the `std::thread::scope` tile
+//! scheduler mirroring the LT-unit dynamic dequeue.
 //!
 //! Measure the hot paths with
 //! `cargo bench --bench hotpath` (add `-- --quick` for a smoke pass);
-//! it prints a report and dumps `BENCH_hotpath.json` for CI. Use
-//! `SLTARCH_THREADS=N` to pin the scheduler width.
+//! it prints a report (now including per-stage ms/frame rows from
+//! [`coordinator::RenderStats`]) and dumps `BENCH_hotpath.json` for CI.
+//! `SLTARCH_THREADS=N` remains a deployment fallback for the scheduler
+//! width — parsed once per process; prefer `CpuBackend::with_threads` /
+//! `RenderOptions::threads`.
 //!
 //! Quickstart (see `examples/quickstart.rs`):
 //!
 //! ```no_run
 //! use sltarch::prelude::*;
-//! let scene = SceneConfig::small_scale().build(42);
-//! let sltree = SlTree::partition(&scene.tree, 32);
-//! let cam = scene.scenario_camera(0);
-//! let cut = sltree.traverse(&scene.tree, &cam, 1.0);
-//! println!("{} Gaussians selected", cut.len());
+//! let pipeline = FramePipeline::builder(SceneConfig::small_scale().build(42))
+//!     .tau(16.0)
+//!     .build();
+//! let cam = pipeline.scene().scenario_camera(0);
+//! let mut session = pipeline.session();
+//! let img = session.render(&cam).unwrap();
+//! println!("{} Gaussians -> {:?} px", session.stats().cut_total, img.dims());
 //! ```
 
 pub mod config;
@@ -73,13 +102,20 @@ pub mod util;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::config::{ArchConfig, RenderConfig, SceneConfig};
-    pub use crate::coordinator::pipeline::{FramePipeline, FrameReport, PathReport};
+    pub use crate::coordinator::backend::{
+        CpuBackend, PjrtBackend, RenderBackend, RenderOptions,
+    };
+    pub use crate::coordinator::pipeline::{
+        FramePipeline, FramePipelineBuilder, SimulationReport,
+    };
     pub use crate::coordinator::renderer::{AlphaMode, CpuRenderer, FrameScratch};
+    pub use crate::coordinator::session::RenderSession;
+    pub use crate::coordinator::stats::{RenderStats, StageTimings};
     pub use crate::gaussian::Gaussians;
     pub use crate::lod::sltree::SlTree;
     pub use crate::lod::tree::LodTree;
     pub use crate::math::{Camera, Mat4, Vec3};
-    pub use crate::metrics::{psnr, ssim, lpips_proxy};
+    pub use crate::metrics::{lpips_proxy, psnr, ssim};
     pub use crate::scene::Scene;
     pub use crate::sim::report::SimReport;
 }

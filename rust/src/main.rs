@@ -11,9 +11,9 @@
 //! Argument parsing is hand-rolled (clap is not vendored offline).
 
 use anyhow::{bail, Context, Result};
-use sltarch::config::{ArchConfig, ConfigDoc, RenderConfig, SceneConfig};
+use sltarch::config::{ConfigDoc, RenderConfig, SceneConfig};
 use sltarch::coordinator::renderer::AlphaMode;
-use sltarch::coordinator::FramePipeline;
+use sltarch::coordinator::{CpuBackend, FramePipeline};
 use sltarch::lod::SlTree;
 use sltarch::runtime::{default_artifacts_dir, ArtifactSet, PjrtEngine};
 use sltarch::sim::HwVariant;
@@ -154,31 +154,50 @@ fn cmd_partition(args: &Args) -> Result<()> {
 fn cmd_render(args: &Args) -> Result<()> {
     let cfg = scene_config(args)?;
     let scene = cfg.build(args.get_usize("seed", 42) as u64);
-    let rcfg = render_config(args);
     let mode = match args.get("mode").unwrap_or("group") {
         "pixel" | "org" => AlphaMode::Pixel,
         _ => AlphaMode::Group,
     };
-    let mut pipeline = FramePipeline::new(scene, rcfg, ArchConfig::default());
+    let mut builder = FramePipeline::builder(scene)
+        .render_config(render_config(args))
+        .alpha(mode);
+    let threads: Option<usize> = args.get("threads").and_then(|v| v.parse().ok());
     if args.get_bool("pjrt") {
+        if threads.is_some() {
+            eprintln!("note: --threads is a CPU tile-scheduler knob; the PJRT backend ignores it");
+        }
         let set = ArtifactSet::discover(&default_artifacts_dir())?;
-        pipeline = pipeline.with_engine(PjrtEngine::load(&set)?);
+        builder = builder.engine(PjrtEngine::load(&set)?);
         println!("renderer: PJRT artifacts ({})", set.dir.display());
     } else {
+        if let Some(threads) = threads {
+            builder = builder.backend(CpuBackend::with_threads(threads));
+        }
         println!("renderer: CPU mirror");
     }
+    let pipeline = builder.build();
     let scenario = args.get_usize("scenario", 0);
-    let cam = pipeline.scene.scenario_camera(scenario);
-    let t0 = std::time::Instant::now();
-    let img = pipeline.render(&cam, mode)?;
-    let dt = t0.elapsed().as_secs_f64();
+    let cam = pipeline.scene().scenario_camera(scenario);
+    let mut session = pipeline.session();
+    let img = session.render(&cam)?;
+    let stats = session.stats();
     let out = args.get("out").unwrap_or("frame.ppm");
     img.write_ppm(std::path::Path::new(out))?;
     println!(
         "rendered scenario {scenario} ({}x{}) in {:.1} ms -> {out}",
         img.width,
         img.height,
-        dt * 1e3
+        stats.wall_seconds * 1e3
+    );
+    print!("stages (ms):");
+    for (name, ms) in stats.stages.rows_ms_per_frame(stats.frames) {
+        print!(" {name} {ms:.2}");
+    }
+    println!(
+        "  | cut {} | {:.1}k pairs | backend {}",
+        stats.cut_total,
+        stats.pairs_total as f64 / 1e3,
+        pipeline.backend().name()
     );
     Ok(())
 }
@@ -186,15 +205,17 @@ fn cmd_render(args: &Args) -> Result<()> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = scene_config(args)?;
     let scene = cfg.build(args.get_usize("seed", 42) as u64);
-    let pipeline = FramePipeline::new(scene, render_config(args), ArchConfig::default());
+    let pipeline = FramePipeline::builder(scene)
+        .render_config(render_config(args))
+        .build();
     let scenario = args.get_usize("scenario", 0);
-    let cam = pipeline.scene.scenario_camera(scenario);
+    let cam = pipeline.scene().scenario_camera(scenario);
     if args.get_bool("debug") {
         let (lod_w, splat_w) = sltarch::coordinator::workload::frame_workload(
-            &pipeline.scene,
-            &pipeline.sltree,
+            pipeline.scene(),
+            pipeline.sltree(),
             &cam,
-            &pipeline.rcfg,
+            pipeline.rcfg(),
         );
         eprintln!("LOD: total_nodes {} visited {} cut {} fetches {} bytes {} activations {}",
             lod_w.total_nodes, lod_w.trace.visited, lod_w.cut_len,
@@ -204,7 +225,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             let cut = pipeline.search(&cam);
             let mut hist: std::collections::BTreeMap<u16, u32> = Default::default();
             for &n in &cut {
-                *hist.entry(pipeline.scene.tree.nodes[n as usize].level).or_default() += 1;
+                *hist.entry(pipeline.scene().tree.nodes[n as usize].level).or_default() += 1;
             }
             eprintln!("CUT levels: {:?}", hist);
         }
@@ -258,7 +279,8 @@ fn usage() -> ! {
            info        --scene small|large|terrain [--quick] [--tau-s N]\n\
            partition   --scene ... [--tau-s N] [--quick]\n\
            render      --scene ... [--scenario I] [--mode pixel|group]\n\
-                       [--pjrt] [--out frame.ppm] [--tau F] [--quick]\n\
+                       [--pjrt] [--threads N] [--out frame.ppm] [--tau F]\n\
+                       [--quick]\n\
            simulate    --scene ... [--scenario I] [--quick]\n\
            experiment  <fig2|fig3|table1|fig9|fig10|dram|fig11|fig12|area|all>\n\
                        [--quick]\n"

@@ -4,12 +4,27 @@ use super::artifacts::ArtifactSet;
 use anyhow::{Context, Result};
 
 /// Compiled-and-ready PJRT state. Construct once, render many frames.
+///
+/// Fields are crate-private on purpose: the `Send` assertion below is
+/// only sound because no handle to the client/executables can escape
+/// this crate and alias the engine from another thread.
 pub struct PjrtEngine {
-    pub client: xla::PjRtClient,
-    pub project: xla::PjRtLoadedExecutable,
-    pub splat_pixel: xla::PjRtLoadedExecutable,
-    pub splat_group: xla::PjRtLoadedExecutable,
+    pub(crate) client: xla::PjRtClient,
+    pub(crate) project: xla::PjRtLoadedExecutable,
+    pub(crate) splat_pixel: xla::PjRtLoadedExecutable,
+    pub(crate) splat_group: xla::PjRtLoadedExecutable,
 }
+
+// SAFETY: `Send` (ownership/borrow transfer between threads) is the
+// only marker asserted — deliberately NOT `Sync`. The coordinator's
+// `PjrtBackend` wraps the engine in a `Mutex`, so at most one thread
+// touches the client/executables at a time; all we rely on is that the
+// PJRT CPU client has no thread-affinity (it may be driven from a
+// thread other than the one that created it), which the PJRT C API
+// contract guarantees. If a future `xla` wrapper adds non-atomic
+// shared ownership internally, serialized single-thread access through
+// the mutex remains the required discipline.
+unsafe impl Send for PjrtEngine {}
 
 impl PjrtEngine {
     /// Load HLO text artifacts and compile them on the CPU client.

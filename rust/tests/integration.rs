@@ -1,46 +1,47 @@
 //! End-to-end integration over the full L3 stack (CPU path): scene ->
-//! SLTree -> frame pipeline -> image + simulation, plus experiment
-//! smoke runs.
+//! SLTree -> frame pipeline -> sessions -> image + simulation, plus
+//! experiment smoke runs.
 
-use sltarch::config::{ArchConfig, RenderConfig, SceneConfig};
+use sltarch::config::{RenderConfig, SceneConfig};
 use sltarch::coordinator::renderer::{AlphaMode, CpuRenderer};
-use sltarch::coordinator::FramePipeline;
+use sltarch::coordinator::{CpuBackend, FramePipeline, RenderOptions, RenderStats};
 use sltarch::metrics::psnr;
 use sltarch::sim::HwVariant;
 
 fn quick_pipeline(seed: u64) -> FramePipeline {
-    FramePipeline::new(
-        SceneConfig::small_scale().quick().build(seed),
-        RenderConfig::default(),
-        ArchConfig::default(),
-    )
+    FramePipeline::builder(SceneConfig::small_scale().quick().build(seed)).build()
 }
 
 #[test]
 fn render_every_scenario_produces_stable_images() {
     let p = quick_pipeline(31);
+    let mut session = p.session();
     for i in 0..6 {
-        let cam = p.scene.scenario_camera(i);
-        let a = p.render(&cam, AlphaMode::Group).unwrap();
-        let b = p.render(&cam, AlphaMode::Group).unwrap();
-        // Determinism: bit-identical across runs.
+        let cam = p.scene().scenario_camera(i);
+        let a = session.render(&cam).unwrap();
+        // Determinism: bit-identical across runs and across sessions
+        // (one long-lived session vs a fresh one per frame).
+        let b = p.session().render(&cam).unwrap();
         assert_eq!(a.data, b.data, "scenario {i} not deterministic");
         let mean: f32 =
             a.data.iter().map(|p| p[0] + p[1] + p[2]).sum::<f32>() / a.data.len() as f32;
         assert!(mean > 0.005, "scenario {i} black image");
     }
+    assert_eq!(session.stats().frames, 6);
 }
 
 #[test]
 fn parallel_tile_scheduler_is_bit_identical_across_thread_counts() {
     let p = quick_pipeline(34);
     for (cam_i, mode) in [(0, AlphaMode::Group), (3, AlphaMode::Pixel)] {
-        let cam = p.scene.scenario_camera(cam_i);
+        let cam = p.scene().scenario_camera(cam_i);
         let cut = p.search(&cam);
-        let queue = p.scene.gaussians.gather(&cut);
-        let serial = CpuRenderer::render_serial(&queue, &cam, mode, &p.rcfg);
+        let queue = p.scene().gaussians.gather(&cut);
+        let serial = CpuRenderer::render_serial(&queue, &cam, mode, p.rcfg());
         for threads in [1usize, 2, 8] {
-            let par = CpuRenderer::render_threaded(&queue, &cam, mode, &p.rcfg, threads);
+            let backend = CpuBackend::with_threads(threads);
+            let mut session = backend_session(&p, &backend, mode);
+            let par = session.render(&cam).unwrap();
             assert_eq!(
                 serial.data, par.data,
                 "scenario {cam_i} {mode:?} diverged at {threads} threads"
@@ -49,10 +50,85 @@ fn parallel_tile_scheduler_is_bit_identical_across_thread_counts() {
     }
 }
 
+fn backend_session<'p>(
+    p: &'p FramePipeline,
+    backend: &'p CpuBackend,
+    alpha: AlphaMode,
+) -> sltarch::coordinator::RenderSession<'p> {
+    p.session_on(backend, RenderOptions { alpha, ..p.default_options() })
+}
+
+#[test]
+fn session_stats_match_legacy_report_counters() {
+    // The unified RenderStats must agree with the old PathReport
+    // arithmetic: frames, cut_total and pairs_total recomputed from the
+    // seed per-frame path, and the per-stage timings must sum to no
+    // more than the recorded wall time.
+    let p = quick_pipeline(35);
+    let cams: Vec<_> = (0..3).map(|i| p.scene().scenario_camera(i)).collect();
+    let mut session = p.session();
+    let images = session.render_path(&cams).unwrap();
+    let stats: RenderStats = *session.stats();
+
+    let mut cut_total = 0u64;
+    let mut pairs_total = 0u64;
+    let mut scratch = sltarch::coordinator::FrameScratch::new();
+    for (img, cam) in images.iter().zip(cams.iter()) {
+        let cut = p.search(cam);
+        cut_total += cut.len() as u64;
+        let queue = p.scene().gaussians.gather(&cut);
+        let want =
+            CpuRenderer::render_with_scratch(&queue, cam, AlphaMode::Group, p.rcfg(), 4, &mut scratch);
+        pairs_total += scratch.bins.pairs;
+        assert_eq!(img.data, want.data, "session diverged from the seed path");
+    }
+    assert_eq!(stats.frames, cams.len());
+    assert_eq!(stats.cut_total, cut_total);
+    assert_eq!(stats.pairs_total, pairs_total);
+    assert!(stats.wall_seconds > 0.0);
+    assert!(
+        stats.stages.staged_total() <= stats.wall_seconds + 1e-9,
+        "stage sum {} > wall {}",
+        stats.stages.staged_total(),
+        stats.wall_seconds
+    );
+    // Every stage actually ran and was timed.
+    for (name, secs) in stats.stages.rows() {
+        assert!(secs >= 0.0, "stage {name} negative: {secs}");
+    }
+    assert!(stats.stages.blend > 0.0, "blend stage untimed");
+    assert!(stats.fps() > 0.0);
+}
+
+#[test]
+fn concurrent_sessions_share_one_pipeline() {
+    // The multi-client serving contract: N sessions over one
+    // &FramePipeline from separate threads, bit-identical to serial use.
+    let p = quick_pipeline(36);
+    let reference: Vec<_> = (0..4)
+        .map(|i| p.session().render(&p.scene().scenario_camera(i)).unwrap())
+        .collect();
+    let rendered: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let p = &p;
+                s.spawn(move || {
+                    let mut session = p.session();
+                    session.render(&p.scene().scenario_camera(i)).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (i, (a, b)) in reference.iter().zip(rendered.iter()).enumerate() {
+        assert_eq!(a.data, b.data, "client {i} diverged under concurrency");
+    }
+}
+
 #[test]
 fn simulation_is_deterministic_across_runs() {
     let p = quick_pipeline(32);
-    let cam = p.scene.scenario_camera(2);
+    let cam = p.scene().scenario_camera(2);
     let a = p.simulate(&cam, &HwVariant::fig9());
     let b = p.simulate(&cam, &HwVariant::fig9());
     for (x, y) in a.sims.iter().zip(b.sims.iter()) {
@@ -65,12 +141,10 @@ fn simulation_is_deterministic_across_runs() {
 fn subtree_size_sweep_preserves_results_and_shifts_cost() {
     // The cut is invariant under tau_s; the traversal cost profile moves.
     let scene = SceneConfig::small_scale().quick().build(33);
-    let arch = ArchConfig::default();
     let mut cuts = Vec::new();
     for tau_s in [8u32, 32, 128] {
-        let rcfg = RenderConfig { subtree_size: tau_s, ..Default::default() };
-        let p = FramePipeline::new(scene.clone(), rcfg, arch);
-        let cam = p.scene.scenario_camera(1);
+        let p = FramePipeline::builder(scene.clone()).subtree_size(tau_s).build();
+        let cam = p.scene().scenario_camera(1);
         cuts.push(p.search(&cam));
     }
     assert_eq!(cuts[0], cuts[1]);
@@ -80,14 +154,18 @@ fn subtree_size_sweep_preserves_results_and_shifts_cost() {
 #[test]
 fn lod_tau_controls_quality_cost_tradeoff() {
     let scene = SceneConfig::small_scale().quick().build(34);
-    let arch = ArchConfig::default();
-    let cam_idx = 3;
+    let p = FramePipeline::builder(scene)
+        .render_config(RenderConfig::default())
+        .build();
+    let cam = p.scene().scenario_camera(3);
     let render = |tau: f32| {
-        let rcfg = RenderConfig { lod_tau: tau, ..Default::default() };
-        let p = FramePipeline::new(scene.clone(), rcfg, arch);
-        let cam = p.scene.scenario_camera(cam_idx);
-        let cut_len = p.search(&cam).len();
-        (cut_len, p.render(&cam, AlphaMode::Pixel).unwrap())
+        let cut_len = p.search_with_tau(&cam, tau).len();
+        let mut session = p.session_with(RenderOptions {
+            alpha: AlphaMode::Pixel,
+            lod_tau: tau,
+            ..p.default_options()
+        });
+        (cut_len, session.render(&cam).unwrap())
     };
     let (n_fine, img_fine) = render(2.0);
     let (n_mid, img_mid) = render(16.0);

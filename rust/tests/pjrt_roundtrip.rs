@@ -7,6 +7,7 @@
 
 use sltarch::config::{RenderConfig, SceneConfig};
 use sltarch::coordinator::renderer::{AlphaMode, CpuRenderer, PjrtRenderer};
+use sltarch::coordinator::{FramePipeline, RenderOptions};
 use sltarch::gaussian::project;
 use sltarch::lod::SlTree;
 use sltarch::runtime::{default_artifacts_dir, ArtifactSet, PjrtEngine, ProjectBatch};
@@ -76,6 +77,29 @@ fn full_render_pjrt_matches_cpu() {
         // Early-termination boundaries may differ by one chunk; the
         // images must still agree to well under one grey level.
         assert!(mad < 2e-3, "{mode:?}: CPU vs PJRT mad {mad}");
+    }
+}
+
+#[test]
+fn pjrt_session_matches_stateless_pjrt_renderer() {
+    // The backend-agnostic session front end must feed the PJRT blend
+    // path the same sorted bins the stateless reference does.
+    let Some((_, engine)) = engine_or_skip() else { return };
+    let scene = SceneConfig::small_scale().quick().build(24);
+    let pipeline = FramePipeline::builder(scene).engine(engine).build();
+    let cam = pipeline.scene().scenario_camera(1);
+    let cut = pipeline.search(&cam);
+    let queue = pipeline.scene().gaussians.gather(&cut);
+    for alpha in [AlphaMode::Pixel, AlphaMode::Group] {
+        let mut session =
+            pipeline.session_with(RenderOptions { alpha, ..pipeline.default_options() });
+        let got = session.render(&cam).expect("session render");
+        // The session really went through the PJRT backend.
+        assert_eq!(pipeline.backend().name(), "pjrt");
+        let want = CpuRenderer::render(&queue, &cam, alpha, pipeline.rcfg());
+        let mad = got.mad(&want);
+        assert!(mad < 2e-3, "{alpha:?}: session-PJRT vs CPU mad {mad}");
+        assert_eq!(session.stats().threads, 0, "PJRT sessions report 0 threads");
     }
 }
 

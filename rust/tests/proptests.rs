@@ -4,6 +4,8 @@
 //! cameras and parameters.
 
 use sltarch::config::SceneConfig;
+use sltarch::coordinator::renderer::{AlphaMode, CpuRenderer};
+use sltarch::coordinator::{CpuBackend, FramePipeline, RenderOptions};
 use sltarch::gaussian::Splat2D;
 use sltarch::lod::{traverse_sltree, SlTree};
 use sltarch::math::{Camera, Intrinsics, Vec2, Vec3};
@@ -191,6 +193,43 @@ fn prop_radix_order_equals_comparison_sort() {
             let mut got = idx;
             radix_sort_tile(&mut got, &splats, &mut scratch);
             assert_eq!(got, want);
+        }
+    });
+}
+
+#[test]
+fn prop_session_render_is_bit_identical_to_seed_per_frame_path() {
+    // The api_redesign acceptance bar: RenderSession::render must be
+    // bit-identical to the pre-session per-frame path (the stateless
+    // CpuRenderer over pipeline.search) for both alpha dataflows and
+    // tile-scheduler widths 1/4/8, on randomized scenes and cameras.
+    forall(6, |rng| {
+        let mut cfg = SceneConfig::small_scale().quick();
+        cfg.leaves = 2_000 + rng.below(2_000);
+        let pipeline = FramePipeline::builder(cfg.build(rng.next_u64())).build();
+        let cam = pipeline.scene().scenario_camera(rng.below(6));
+        let cut = pipeline.search(&cam);
+        let queue = pipeline.scene().gaussians.gather(&cut);
+        for alpha in [AlphaMode::Pixel, AlphaMode::Group] {
+            for threads in [1usize, 4, 8] {
+                let backend = CpuBackend::with_threads(threads);
+                let mut session = pipeline.session_on(
+                    &backend,
+                    RenderOptions { alpha, ..pipeline.default_options() },
+                );
+                let got = session.render(&cam).unwrap();
+                let want =
+                    CpuRenderer::render_threaded(&queue, &cam, alpha, pipeline.rcfg(), threads);
+                assert_eq!(
+                    got.data, want.data,
+                    "session diverged from seed path ({alpha:?}, {threads} threads)"
+                );
+                let stats = session.stats();
+                assert_eq!(stats.frames, 1);
+                assert_eq!(stats.cut_total, cut.len() as u64);
+                assert_eq!(stats.threads, threads);
+                assert!(stats.stages.staged_total() <= stats.wall_seconds + 1e-9);
+            }
         }
     });
 }
