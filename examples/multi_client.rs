@@ -41,7 +41,9 @@ fn main() -> anyhow::Result<()> {
     );
 
     // One pipeline for everyone. Per-client scheduler width 2 so the
-    // clients share the machine instead of oversubscribing it.
+    // clients share the machine instead of oversubscribing it; the one
+    // knob drives each session's parallel front end (project -> CSR
+    // bin -> tile sort) and its blend-stage tile scheduler together.
     let pipeline = FramePipeline::builder(cfg.build(42))
         .tau(16.0)
         .backend(CpuBackend::with_threads(2))
@@ -103,6 +105,10 @@ fn main() -> anyhow::Result<()> {
     total.wall_seconds = span;
     println!("\n=== aggregate ({clients} clients sharing one pipeline) ===");
     println!("frames             : {}", total.frames);
+    println!(
+        "scheduler width    : {} (front end + blend, per client)",
+        total.front_end_threads
+    );
     println!("wall-clock span    : {:.2} s", span);
     println!(
         "aggregate fps      : {:.2} ({:.1} ms/frame effective)",

@@ -7,11 +7,12 @@
 use sltarch::config::{RenderConfig, SceneConfig};
 use sltarch::coordinator::renderer::{default_threads, AlphaMode, CpuRenderer};
 use sltarch::coordinator::{CpuBackend, FramePipeline};
-use sltarch::gaussian::{project, project_into};
+use sltarch::gaussian::{project, project_into, project_into_threaded, Splat2D};
 use sltarch::lod::{traverse_sltree, SlTree};
 use sltarch::scene::orbit_cameras;
 use sltarch::splat::{
-    bin_splats, bin_splats_into, sort_bins_with, DepthSortScratch, TileBins,
+    bin_splats, bin_splats_into, bin_splats_into_threaded, sort_bins_threaded,
+    sort_bins_with, DepthSortScratch, TileBins,
 };
 use sltarch::util::bench::Bench;
 
@@ -68,6 +69,37 @@ fn main() {
         bins.indices.len()
     });
 
+    // The parallel front end (PR 3): the same three stages at scheduler
+    // width 1 vs the machine width. The combined rows are the headline
+    // numbers — project + CSR bin + tile sort ms/frame must shrink as
+    // the width grows (the Amdahl bottleneck the tentpole attacks).
+    let widths: &[usize] = if threads > 1 { &[1, threads] } else { &[1] };
+    for &w in widths {
+        b.iter(&format!("project_into({w} threads)"), 5, || {
+            project_into_threaded(&queue, &cam, &mut proj_buf, w);
+            proj_buf.len()
+        });
+        b.iter(&format!("bin_splats_into({w} threads)"), 5, || {
+            bin_splats_into_threaded(&splats, 256, 256, &mut bins_buf, w);
+            bins_buf.pairs
+        });
+        let mut pool: Vec<DepthSortScratch> = Vec::new();
+        b.iter(&format!("sort_all_tiles({w} threads)"), 5, || {
+            bins.indices.copy_from_slice(&pristine.indices);
+            sort_bins_threaded(&mut bins, &splats, &mut pool, w);
+            bins.indices.len()
+        });
+        let mut fe_splats: Vec<Splat2D> = Vec::new();
+        let mut fe_bins = TileBins::default();
+        let mut fe_pool: Vec<DepthSortScratch> = Vec::new();
+        b.iter(&format!("front_end(project+bin+sort, {w} threads)"), 5, || {
+            project_into_threaded(&queue, &cam, &mut fe_splats, w);
+            bin_splats_into_threaded(&fe_splats, 256, 256, &mut fe_bins, w);
+            sort_bins_threaded(&mut fe_bins, &fe_splats, &mut fe_pool, w);
+            fe_bins.pairs
+        });
+    }
+
     b.iter("cpu_render(group, serial)", 2, || {
         CpuRenderer::render_threaded(&queue, &cam, AlphaMode::Group, &rcfg, 1)
     });
@@ -101,11 +133,14 @@ fn main() {
     });
     b.record("render_path fps", path_fps);
     // Per-stage breakdown of the last batch (the session API's unified
-    // stats) — ms/frame rows for the perf trajectory.
+    // stats — search/project/bin/sort now run the parallel front end at
+    // the session's scheduler width) — ms/frame rows for the perf
+    // trajectory.
     let stats = session.stats();
     for (name, ms) in stats.stages.rows_ms_per_frame(stats.frames) {
         b.record(&format!("stage {name} ms/frame"), ms);
     }
+    b.record("front_end_threads", stats.front_end_threads as f64);
 
     b.report();
     let json = std::path::Path::new("BENCH_hotpath.json");

@@ -24,8 +24,11 @@ pub struct RenderOptions {
     pub alpha: AlphaMode,
     /// LoD granularity in projected pixels (the paper's tau).
     pub lod_tau: f32,
-    /// Tile-scheduler worker count; 0 defers to the backend's width
-    /// (which itself falls back to `SLTARCH_THREADS` / the machine).
+    /// Unified scheduler width: drives the chunked projection, the
+    /// parallel CSR binning, the parallel tile sort AND the CPU blend
+    /// tile scheduler (`RenderSession::scheduler_width`). 0 defers to
+    /// the backend's width (which itself falls back to
+    /// `SLTARCH_THREADS` / the machine).
     pub threads: usize,
 }
 

@@ -289,6 +289,9 @@ mod tests {
         assert_eq!(stats.frames, 1);
         assert!(stats.cut_total > 0);
         assert!(stats.pairs_total > 0);
+        // The unified scheduler width drove the front end.
+        assert_eq!(stats.front_end_threads, session.scheduler_width());
+        assert!(stats.front_end_threads >= 1);
         let report = p.simulate(&cam, &HwVariant::fig9());
         assert_eq!(report.sims.len(), 5);
         assert!(report.cut_len > 0);

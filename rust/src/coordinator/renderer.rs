@@ -1,5 +1,7 @@
-//! Image production internals: the shared front end (projection -> CSR
-//! binning -> in-place radix depth sort), the CPU and PJRT blend loops
+//! Image production internals: the shared front end (chunked parallel
+//! projection -> per-worker-histogram CSR binning -> dynamic-cursor
+//! parallel radix depth sort, each byte-identical to its serial
+//! reference at any scheduler width), the CPU and PJRT blend loops
 //! that the [`super::backend`] implementations drive, and the stateless
 //! reference renderers (`CpuRenderer` / `PjrtRenderer`) the equivalence
 //! tests compare the session API against. Both blend paths consume the
@@ -17,14 +19,14 @@
 //! the serial schedule regardless of thread count.
 
 use crate::config::RenderConfig;
-use crate::gaussian::{project_into, Gaussians, Splat2D};
+use crate::gaussian::{project_into_threaded, Gaussians, Splat2D};
 use crate::math::Camera;
 use crate::metrics::Image;
 use crate::runtime::{PjrtEngine, SplatChunk, SplatState, K_CHUNK};
 use crate::splat::blend::PIXELS;
 use crate::splat::{
-    bin_splats_into, blend_tile, sort_bins_with, BlendMode, DepthSortScratch,
-    TileBins, TILE,
+    bin_splats_into_threaded, blend_tile, sort_bins_threaded, BlendMode,
+    DepthSortScratch, TileBins, TILE,
 };
 use super::stats::StageTimings;
 use anyhow::Result;
@@ -57,7 +59,9 @@ impl AlphaMode {
 pub struct FrameScratch {
     pub splats: Vec<Splat2D>,
     pub bins: TileBins,
-    pub sort: DepthSortScratch,
+    /// Per-worker radix-sort scratches (grown to the scheduler width on
+    /// first use; index 0 serves the serial path).
+    pub sort: Vec<DepthSortScratch>,
     /// Work list of non-empty tile indices (the scheduler's queue).
     work: Vec<u32>,
 }
@@ -69,39 +73,51 @@ impl FrameScratch {
 }
 
 /// Shared front end: project the queue, bin into CSR, and depth-sort
-/// every tile slice in place, accumulating per-stage wall-clock into
-/// `stages` (the session API's unified stats).
+/// every tile slice in place — all three stages on `threads` scoped
+/// workers (1 = the serial reference path; output is byte-identical at
+/// any width) — accumulating per-stage wall-clock into `stages` (the
+/// session API's unified stats).
 pub(crate) fn front_end_timed(
     queue: &Gaussians,
     cam: &Camera,
     scratch: &mut FrameScratch,
     stages: &mut StageTimings,
+    threads: usize,
 ) {
+    let threads = threads.max(1);
     let t = Instant::now();
-    project_into(queue, cam, &mut scratch.splats);
+    project_into_threaded(queue, cam, &mut scratch.splats, threads);
     stages.project += t.elapsed().as_secs_f64();
 
     let t = Instant::now();
-    bin_splats_into(
+    bin_splats_into_threaded(
         &scratch.splats,
         cam.intr.width,
         cam.intr.height,
         &mut scratch.bins,
+        threads,
     );
-    stages.bin += t.elapsed().as_secs_f64();
-
-    let t = Instant::now();
-    sort_bins_with(&mut scratch.bins, &scratch.splats, &mut scratch.sort);
+    // The scheduler work list only needs the finished offset table, so
+    // it is built (and timed) with the binning stage.
     scratch.work.clear();
     scratch.work.extend(
         (0..scratch.bins.tile_count() as u32).filter(|&t| scratch.bins.tile_len(t as usize) > 0),
     );
+    stages.bin += t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
+    sort_bins_threaded(&mut scratch.bins, &scratch.splats, &mut scratch.sort, threads);
     stages.sort += t.elapsed().as_secs_f64();
 }
 
 /// Untimed front end for the stateless reference renderers.
-fn front_end_into(queue: &Gaussians, cam: &Camera, scratch: &mut FrameScratch) {
-    front_end_timed(queue, cam, scratch, &mut StageTimings::default());
+fn front_end_into(
+    queue: &Gaussians,
+    cam: &Camera,
+    scratch: &mut FrameScratch,
+    threads: usize,
+) {
+    front_end_timed(queue, cam, scratch, &mut StageTimings::default(), threads);
 }
 
 /// Write one tile's accumulated RGB into the frame image (exclusive
@@ -309,7 +325,8 @@ impl CpuRenderer {
     }
 
     /// Render reusing caller-owned front-end scratch (the batched
-    /// `FramePipeline::render_path` hot loop).
+    /// `FramePipeline::render_path` hot loop). One `threads` knob drives
+    /// the parallel front end and the blend-stage tile scheduler.
     pub fn render_with_scratch(
         queue: &Gaussians,
         cam: &Camera,
@@ -318,7 +335,7 @@ impl CpuRenderer {
         threads: usize,
         scratch: &mut FrameScratch,
     ) -> Image {
-        front_end_into(queue, cam, scratch);
+        front_end_into(queue, cam, scratch, threads);
         let mut img = Image::new(cam.intr.width, cam.intr.height);
         blend_tiles(scratch, mode.blend_mode(), rcfg.t_min, threads, &mut img);
         img
@@ -352,8 +369,11 @@ impl PjrtRenderer {
         rcfg: &RenderConfig,
         scratch: &mut FrameScratch,
     ) -> Result<Image> {
-        // Front end on CPU (binning/sorting is L3 work); blending on PJRT.
-        front_end_into(queue, cam, scratch);
+        // Front end on CPU (binning/sorting is L3 work; this stateless
+        // reference path keeps it serial — the session API drives the
+        // parallel front end via its unified scheduler width); blending
+        // on PJRT.
+        front_end_into(queue, cam, scratch, 1);
         let mut img = Image::new(cam.intr.width, cam.intr.height);
         blend_tiles_pjrt(engine, scratch, mode == AlphaMode::Group, rcfg.t_min, &mut img)?;
         Ok(img)

@@ -10,7 +10,7 @@
 
 use super::backend::{RenderBackend, RenderOptions};
 use super::pipeline::FramePipeline;
-use super::renderer::{front_end_timed, FrameScratch};
+use super::renderer::{default_threads, front_end_timed, FrameScratch};
 use super::stats::{RenderStats, StageTimings};
 use crate::math::Camera;
 use crate::metrics::Image;
@@ -66,6 +66,23 @@ impl<'p> RenderSession<'p> {
         &self.stats
     }
 
+    /// The unified scheduler width for this session: the backend's
+    /// resolved tile-scheduler width when it has one (CPU), else the
+    /// session's `RenderOptions::threads`, else the process default.
+    /// One knob drives the parallel front end (project -> CSR bin ->
+    /// tile sort) and the CPU blend-stage tile scheduler together, so
+    /// offload backends still get a parallel CPU front end.
+    pub fn scheduler_width(&self) -> usize {
+        let backend = self.backend.threads(&self.opts);
+        if backend > 0 {
+            backend
+        } else if self.opts.threads > 0 {
+            self.opts.threads
+        } else {
+            default_threads()
+        }
+    }
+
     /// Return the accumulated statistics and start a fresh window.
     pub fn reset_stats(&mut self) -> RenderStats {
         std::mem::take(&mut self.stats)
@@ -88,7 +105,8 @@ impl<'p> RenderSession<'p> {
         let queue = self.pipeline.scene().gaussians.gather(&cut);
         stages.search = t.elapsed().as_secs_f64();
 
-        front_end_timed(&queue, cam, &mut self.scratch, &mut stages);
+        let width = self.scheduler_width();
+        front_end_timed(&queue, cam, &mut self.scratch, &mut stages, width);
 
         let mut img = Image::new(cam.intr.width, cam.intr.height);
         let t = Instant::now();
@@ -101,6 +119,7 @@ impl<'p> RenderSession<'p> {
         self.stats.pairs_total += self.scratch.bins.pairs;
         self.stats.frames += 1;
         self.stats.threads = self.backend.threads(&self.opts);
+        self.stats.front_end_threads = width;
         self.stats.wall_seconds += frame_t0.elapsed().as_secs_f64();
         Ok(img)
     }

@@ -69,8 +69,12 @@ pub struct RenderStats {
     pub cut_total: u64,
     /// Total (gaussian, tile) pairs across frames.
     pub pairs_total: u64,
-    /// Tile-scheduler worker count in effect (0 = offload backend).
+    /// Blend tile-scheduler worker count in effect (0 = offload backend).
     pub threads: usize,
+    /// Unified scheduler width driving the parallel front end
+    /// (project -> CSR bin -> tile sort); always >= 1 once a frame has
+    /// rendered, even on offload backends (the front end stays on CPU).
+    pub front_end_threads: usize,
     /// Per-stage wall-clock breakdown.
     pub stages: StageTimings,
 }
@@ -104,6 +108,8 @@ impl RenderStats {
         self.cut_total += other.cut_total;
         self.pairs_total += other.pairs_total;
         self.threads = self.threads.max(other.threads);
+        self.front_end_threads =
+            self.front_end_threads.max(other.front_end_threads);
         self.stages.accumulate(&other.stages);
     }
 }

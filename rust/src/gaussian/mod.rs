@@ -8,7 +8,9 @@
 mod projection;
 mod soa;
 
-pub use projection::{project, project_into, project_one, Splat2D};
+pub use projection::{
+    project, project_into, project_into_threaded, project_one, Splat2D,
+};
 pub use soa::Gaussians;
 
 /// Blending constants shared with `python/compile/kernels/ref.py`.

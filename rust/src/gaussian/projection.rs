@@ -33,6 +33,26 @@ impl Splat2D {
     pub fn visible(&self) -> bool {
         self.radius > 0.0
     }
+
+    /// Every field as raw bits, in declaration order — the byte-identity
+    /// fingerprint the parallel-vs-serial equivalence tests compare
+    /// (f32 `==` would conflate `-0.0` and `0.0`; bits do not).
+    pub fn bit_pattern(&self) -> [u32; 12] {
+        [
+            self.mean.x.to_bits(),
+            self.mean.y.to_bits(),
+            self.conic[0].to_bits(),
+            self.conic[1].to_bits(),
+            self.conic[2].to_bits(),
+            self.depth.to_bits(),
+            self.radius.to_bits(),
+            self.color[0].to_bits(),
+            self.color[1].to_bits(),
+            self.color[2].to_bits(),
+            self.opacity.to_bits(),
+            self.id,
+        ]
+    }
 }
 
 /// Project Gaussian `i` of `g` through `cam` (single-Gaussian scalar path).
@@ -129,6 +149,48 @@ pub fn project_into(g: &Gaussians, cam: &Camera, out: &mut Vec<Splat2D>) {
     out.extend((0..g.len()).map(|i| project_one(g, i, cam)));
 }
 
+/// Below this many Gaussians the scoped-thread fan-out costs more than
+/// the projection itself, so the chunked path falls back to serial.
+const PAR_PROJECT_MIN: usize = 1024;
+
+/// Minimum splats per worker chunk: on wide machines a small frame
+/// otherwise fans out into near-empty workers whose spawn cost exceeds
+/// their work (fewer, larger chunks — never different output).
+const PAR_PROJECT_CHUNK: usize = 256;
+
+/// Chunked multi-threaded [`project_into`]: the rendering queue is split
+/// into `threads` contiguous ranges and each range is projected by its
+/// own scoped worker writing a disjoint `Splat2D` slice of `out`.
+/// [`project_one`] is a pure per-splat function, so the output is
+/// byte-identical to the serial path at any thread count.
+pub fn project_into_threaded(
+    g: &Gaussians,
+    cam: &Camera,
+    out: &mut Vec<Splat2D>,
+    threads: usize,
+) {
+    let n = g.len();
+    if threads <= 1 || n < PAR_PROJECT_MIN {
+        project_into(g, cam, out);
+        return;
+    }
+    // Bare resize (no clear): only newly grown tail slots are
+    // initialized, and every slot in 0..n is overwritten by exactly one
+    // worker below.
+    out.resize(n, Splat2D::default());
+    let chunk = n.div_ceil(threads).max(PAR_PROJECT_CHUNK);
+    std::thread::scope(|s| {
+        for (w, slots) in out.chunks_mut(chunk).enumerate() {
+            let base = w * chunk;
+            s.spawn(move || {
+                for (j, slot) in slots.iter_mut().enumerate() {
+                    *slot = project_one(g, base + j, cam);
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,6 +236,34 @@ mod tests {
         assert!((s.conic[0] - s.conic[2]).abs() < 1e-4, "{:?}", s.conic);
         assert!(s.conic[1].abs() < 1e-5);
         assert!(s.radius >= 1.0);
+    }
+
+    #[test]
+    fn chunked_projection_is_bit_identical_to_serial() {
+        // Enough Gaussians to cross PAR_PROJECT_MIN so the scoped
+        // workers really run (including behind-camera culled ones).
+        let mut g = Gaussians::default();
+        for i in 0..2_500u32 {
+            let a = i as f32 * 0.37;
+            g.push(
+                Vec3::new(6.0 * a.cos(), 3.0 * (a * 0.51).sin(), 8.0 * a.sin()),
+                Vec3::splat(0.05 + 0.01 * (i % 17) as f32),
+                Quat::IDENTITY,
+                [0.3, 0.5, 0.7],
+                0.6,
+            );
+        }
+        let cam = cam();
+        let mut serial = Vec::new();
+        project_into(&g, &cam, &mut serial);
+        let mut par = Vec::new();
+        for threads in [1usize, 2, 3, 8] {
+            project_into_threaded(&g, &cam, &mut par, threads);
+            assert_eq!(par.len(), serial.len(), "{threads} threads");
+            for (a, b) in par.iter().zip(serial.iter()) {
+                assert_eq!(a.bit_pattern(), b.bit_pattern(), "{threads} threads");
+            }
+        }
     }
 
     #[test]

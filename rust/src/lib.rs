@@ -45,6 +45,30 @@
 //!   hoisted out of the backends, so both consume identical sorted
 //!   bins.
 //!
+//! ## The unified scheduler-width knob
+//!
+//! One width — `RenderSession::scheduler_width`, resolved from the
+//! backend's width first (the CPU backend itself honors
+//! `RenderOptions::threads`), else `RenderOptions::threads` for
+//! offload backends, else `SLTARCH_THREADS` / machine parallelism —
+//! drives **every** parallel stage of a frame:
+//!
+//! * chunked projection ([`gaussian::project_into_threaded`]): scoped
+//!   workers fill disjoint `Splat2D` ranges;
+//! * parallel CSR binning ([`splat::bin_splats_into_threaded`]):
+//!   per-worker tile histograms merged by one prefix-sum, then an
+//!   ordered scatter into disjoint slots;
+//! * parallel tile depth sort ([`splat::sort_bins_threaded`]): the
+//!   blend scheduler's dynamic atomic-cursor dequeue applied to the
+//!   sorting stage;
+//! * the blend-stage tile scheduler itself.
+//!
+//! Every stage is **byte-identical** to its serial reference at any
+//! width — pinned by `rust/tests/proptests.rs` (per-stage equivalence
+//! across widths {1, 2, 8}) and by the golden-frame harness
+//! `rust/tests/golden.rs`, which FNV-fingerprints three fixed scenes
+//! against checked-in digests so silent output drift fails tier-1.
+//!
 //! Migration from the pre-session API:
 //!
 //! | old call | new call |
@@ -59,11 +83,12 @@
 //! | `FrameReport` (render half) / `PathReport` | [`coordinator::RenderStats`] |
 //! | `pipeline.simulate(..)` -> `FrameReport` | `pipeline.simulate(..)` -> [`coordinator::SimulationReport`] |
 //!
-//! The underlying machinery is unchanged from PR 1 and stays
-//! bit-identical (asserted by `rust/tests/proptests.rs`): CSR tile bins
-//! ([`splat::bin_splats_into`]), the in-place radix depth sort
-//! ([`splat::sort_bins_with`]), and the `std::thread::scope` tile
-//! scheduler mirroring the LT-unit dynamic dequeue.
+//! The serial reference machinery from PR 1 is retained as ground
+//! truth: CSR tile bins ([`splat::bin_splats_into`]), the in-place
+//! radix depth sort ([`splat::sort_bins_with`]), and the
+//! `std::thread::scope` tile scheduler mirroring the LT-unit dynamic
+//! dequeue. The parallel front end above is asserted byte-identical to
+//! it at every width.
 //!
 //! Measure the hot paths with
 //! `cargo bench --bench hotpath` (add `-- --quick` for a smoke pass);

@@ -92,6 +92,33 @@ impl Image {
         Ok(())
     }
 
+    /// Quantize to 8-bit RGBA bytes (opaque alpha), row-major — the
+    /// buffer shape clients and the golden-frame tests consume.
+    pub fn to_rgba8(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for p in &self.data {
+            for c in 0..3 {
+                out.push((p[c].clamp(0.0, 1.0) * 255.0 + 0.5) as u8);
+            }
+            out.push(255);
+        }
+        out
+    }
+
+    /// FNV-1a (64-bit) digest over the frame dimensions plus the
+    /// quantized RGBA bytes — the golden-frame fingerprint that
+    /// `rust/tests/golden.rs` pins against checked-in digests.
+    pub fn fnv1a64(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let dims = self.width.to_le_bytes().into_iter().chain(self.height.to_le_bytes());
+        for b in dims.chain(self.to_rgba8()) {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+        h
+    }
+
     /// Mean absolute difference against another image.
     pub fn mad(&self, o: &Image) -> f64 {
         assert_eq!(self.dims(), o.dims());
@@ -137,6 +164,19 @@ mod tests {
     fn grad_of_flat_image_is_zero() {
         let img = Image::new(8, 8);
         assert!(img.grad_mag().iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn fnv_digest_is_stable_and_sensitive() {
+        let mut img = Image::new(4, 4);
+        let base = img.fnv1a64();
+        assert_eq!(base, img.fnv1a64(), "digest not deterministic");
+        img.set(1, 1, [0.5, 0.0, 0.0]);
+        assert_ne!(base, img.fnv1a64(), "pixel change must move the digest");
+        // Same pixel payload, different shape -> different digest.
+        assert_ne!(Image::new(4, 4).fnv1a64(), Image::new(2, 8).fnv1a64());
+        assert_eq!(img.to_rgba8().len(), 4 * 4 * 4);
+        assert!(img.to_rgba8().chunks(4).all(|px| px[3] == 255));
     }
 
     #[test]

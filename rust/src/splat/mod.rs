@@ -20,7 +20,10 @@ pub mod tiling;
 pub use blend::{blend_tile, BlendMode, BlendStats};
 pub use divergence::DivergenceStats;
 pub use sort::{
-    float_to_sortable_uint, radix_sort_tile, sort_bins_by_depth, sort_bins_with,
-    sort_tile_by_depth, DepthSortScratch,
+    float_to_sortable_uint, radix_sort_tile, sort_bins_by_depth,
+    sort_bins_threaded, sort_bins_with, sort_tile_by_depth, DepthSortScratch,
 };
-pub use tiling::{bin_splats, bin_splats_into, bin_splats_nested, TileBins, TILE};
+pub use tiling::{
+    bin_splats, bin_splats_into, bin_splats_into_threaded, bin_splats_nested,
+    TileBins, TILE,
+};

@@ -15,9 +15,14 @@
 //!   so a whole frame's worth of tile sorts allocates nothing in steady
 //!   state. The key layout makes the id tie-break fall out of the
 //!   numeric order for free, exactly matching the comparison sort.
+//!
+//! [`sort_bins_threaded`] runs the production sorter over all tiles with
+//! scoped workers on a dynamic atomic cursor (the blend scheduler's
+//! dequeue shape), byte-identical to the serial pass at any width.
 
 use super::tiling::TileBins;
 use crate::gaussian::Splat2D;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Sort one tile's splat indices front-to-back (ascending depth).
 pub fn sort_tile_by_depth(indices: &mut [u32], splats: &[Splat2D]) {
@@ -176,6 +181,67 @@ pub fn sort_bins_by_depth(bins: &mut TileBins, splats: &[Splat2D]) {
     sort_bins_with(bins, splats, &mut scratch);
 }
 
+/// Depth-sort every CSR tile slice in place with `threads` scoped
+/// workers pulling tiles from a shared atomic cursor — the same
+/// dynamic-greedy dequeue the blend-stage tile scheduler uses, applied
+/// to the sorting stage (per-tile sort cost is just as imbalanced as
+/// per-tile blend cost). Each worker owns one scratch from `pool`,
+/// which grows to the worker count on first use and is reused frame to
+/// frame. Tiles are independent and sorted in place inside disjoint CSR
+/// slices, so the result is byte-identical to [`sort_bins_with`] at any
+/// thread count.
+pub fn sort_bins_threaded(
+    bins: &mut TileBins,
+    splats: &[Splat2D],
+    pool: &mut Vec<DepthSortScratch>,
+    threads: usize,
+) {
+    let tiles = bins.tile_count();
+    if pool.is_empty() {
+        pool.push(DepthSortScratch::new());
+    }
+    if threads <= 1 || tiles <= 1 || bins.pairs == 0 {
+        sort_bins_with(bins, splats, &mut pool[0]);
+        return;
+    }
+    // Bound the fan-out by the total sort workload too: spawning a
+    // worker per tile for a near-empty frame costs more than sorting.
+    let workers = threads.min(tiles).min(1 + bins.pairs as usize / 1024);
+    if pool.len() < workers {
+        pool.resize_with(workers, DepthSortScratch::default);
+    }
+    let offsets = &bins.offsets[..];
+    let shared = super::tiling::SharedIndices { ptr: bins.indices.as_mut_ptr() };
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let cursor = &cursor;
+        for scratch in pool[..workers].iter_mut() {
+            s.spawn(move || loop {
+                // Dynamic greedy dequeue: whoever finishes a tile first
+                // grabs the next one, soaking up per-tile sort-cost
+                // imbalance exactly like the blend scheduler.
+                let t = cursor.fetch_add(1, Ordering::Relaxed);
+                if t >= tiles {
+                    break;
+                }
+                let lo = offsets[t] as usize;
+                let hi = offsets[t + 1] as usize;
+                if hi <= lo + 1 {
+                    continue;
+                }
+                // SAFETY: CSR tile slices are disjoint (offsets are
+                // monotone), the cursor hands each tile index to
+                // exactly one worker, and `indices` outlives the scope
+                // — so no two workers ever touch the same slots.
+                let tile = unsafe {
+                    std::slice::from_raw_parts_mut(shared.ptr.add(lo), hi - lo)
+                };
+                radix_sort_tile(tile, splats, scratch);
+            });
+        }
+    });
+}
+
 /// Comparator-network cost model used by the sorting-unit simulators:
 /// a bitonic network over n elements does ~n log^2 n / 4 compare-exchange
 /// ops; hardware sorters process `elems_per_cycle` of those per cycle.
@@ -297,6 +363,31 @@ mod tests {
         let mut want = vec![9u32, 3, 6];
         sort_tile_by_depth(&mut want, &splats);
         assert_eq!(small, want);
+    }
+
+    #[test]
+    fn threaded_bin_sort_is_byte_identical_to_serial() {
+        use crate::splat::tiling::bin_splats;
+        let mut rng = Rng::new(0x50CA_7712);
+        let splats: Vec<Splat2D> = (0..1_400)
+            .map(|i| {
+                let mut sp = splat(rng.range(0.2, 1e4), i as u32);
+                sp.mean =
+                    Vec2::new(rng.range(-20.0, 270.0), rng.range(-20.0, 270.0));
+                sp.radius = rng.range(0.5, 24.0);
+                sp
+            })
+            .collect();
+        let mut serial = bin_splats(&splats, 256, 256);
+        let mut scratch = DepthSortScratch::new();
+        sort_bins_with(&mut serial, &splats, &mut scratch);
+        for threads in [1usize, 2, 8, 64] {
+            let mut par = bin_splats(&splats, 256, 256);
+            let mut pool = Vec::new();
+            sort_bins_threaded(&mut par, &splats, &mut pool, threads);
+            assert_eq!(par.indices, serial.indices, "{threads} threads");
+            assert_eq!(par.offsets, serial.offsets, "{threads} threads");
+        }
     }
 
     #[test]

@@ -52,6 +52,19 @@ fn tile_rect(s: &Splat2D, tiles_x: u32, tiles_y: u32) -> Option<TileRect> {
     Some(TileRect { x0, y0, x1, y1 })
 }
 
+/// Visit every tile index covered by `rect`, row-major — the ONE
+/// iteration-order definition all count/scatter passes (serial,
+/// parallel and the nested reference) share, so they can never diverge.
+#[inline]
+fn for_each_covered_tile(rect: TileRect, tiles_x: u32, mut f: impl FnMut(usize)) {
+    for ty in rect.y0..=rect.y1 {
+        let row = (ty * tiles_x) as usize;
+        for tx in rect.x0..=rect.x1 {
+            f(row + tx as usize);
+        }
+    }
+}
+
 /// CSR tile bins: indices of splats touching tile `t` live in
 /// `indices[offsets[t] as usize .. offsets[t + 1] as usize]`.
 #[derive(Clone, Debug, Default)]
@@ -73,6 +86,11 @@ pub struct TileBins {
     rects: Vec<(u32, TileRect)>,
     /// Scratch: per-tile write cursors for the scatter pass.
     cursor: Vec<u32>,
+    /// Scratch: per-worker cached rects (parallel count pass).
+    worker_rects: Vec<Vec<(u32, TileRect)>>,
+    /// Scratch: per-worker per-tile histograms, rewritten in place into
+    /// per-worker write cursors by the merge pass.
+    worker_counts: Vec<Vec<u32>>,
 }
 
 impl TileBins {
@@ -99,6 +117,15 @@ impl TileBins {
     pub fn tile_mut(&mut self, idx: usize) -> &mut [u32] {
         let lo = self.offsets[idx] as usize;
         let hi = self.offsets[idx + 1] as usize;
+        debug_assert!(
+            lo <= hi,
+            "CSR offsets not monotone at tile {idx}: {lo} > {hi}"
+        );
+        debug_assert!(
+            hi <= self.indices.len(),
+            "CSR slice for tile {idx} ends at {hi}, past indices len {}",
+            self.indices.len()
+        );
         &mut self.indices[lo..hi]
     }
 
@@ -106,6 +133,57 @@ impl TileBins {
     #[inline]
     pub fn tile_len(&self, idx: usize) -> usize {
         (self.offsets[idx + 1] - self.offsets[idx]) as usize
+    }
+
+    /// Check every CSR invariant: offset-table shape, `offsets[0] == 0`,
+    /// monotone offsets, terminal offset == `indices.len()` == `pairs`,
+    /// and every stored splat index in `0..n_splats`. Debug builds run
+    /// this after every (serial or parallel) rebuild; tests call it
+    /// directly.
+    pub fn validate_csr(&self, n_splats: usize) -> Result<(), String> {
+        let tiles = self.tile_count();
+        if self.offsets.len() != tiles + 1 {
+            return Err(format!(
+                "offsets len {} != tile count {tiles} + 1",
+                self.offsets.len()
+            ));
+        }
+        if self.offsets[0] != 0 {
+            return Err(format!("offsets[0] == {} != 0", self.offsets[0]));
+        }
+        if let Some(t) = self.offsets.windows(2).position(|w| w[0] > w[1]) {
+            return Err(format!(
+                "offsets not monotone at tile {t}: {} > {}",
+                self.offsets[t],
+                self.offsets[t + 1]
+            ));
+        }
+        if self.offsets[tiles] as usize != self.indices.len()
+            || self.indices.len() as u64 != self.pairs
+        {
+            return Err(format!(
+                "terminal offset {} / indices len {} / pairs {} disagree",
+                self.offsets[tiles],
+                self.indices.len(),
+                self.pairs
+            ));
+        }
+        if let Some(&i) = self.indices.iter().find(|&&i| i as usize >= n_splats) {
+            return Err(format!(
+                "splat index {i} out of bounds (n_splats = {n_splats})"
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Debug-build CSR sanity after a rebuild: panics with the violated
+/// invariant (release builds skip the scan entirely).
+fn debug_validate(bins: &TileBins, n_splats: usize) {
+    if cfg!(debug_assertions) {
+        if let Err(e) = bins.validate_csr(n_splats) {
+            panic!("CSR invariant violated: {e}");
+        }
     }
 }
 
@@ -140,12 +218,8 @@ pub fn bin_splats_into(splats: &[Splat2D], width: u32, height: u32, bins: &mut T
         };
         bins.rects.push((i as u32, rect));
         total_pairs += (rect.x1 - rect.x0 + 1) as u64 * (rect.y1 - rect.y0 + 1) as u64;
-        for ty in rect.y0..=rect.y1 {
-            let row = (ty * tiles_x) as usize;
-            for tx in rect.x0..=rect.x1 {
-                bins.offsets[row + tx as usize + 1] += 1;
-            }
-        }
+        let offsets = &mut bins.offsets;
+        for_each_covered_tile(rect, tiles_x, |t| offsets[t + 1] += 1);
     }
     assert!(
         total_pairs <= u32::MAX as u64,
@@ -169,15 +243,159 @@ pub fn bin_splats_into(splats: &[Splat2D], width: u32, height: u32, bins: &mut T
     bins.cursor.extend_from_slice(&bins.offsets[..tiles]);
     let TileBins { ref rects, ref mut cursor, ref mut indices, .. } = *bins;
     for &(i, rect) in rects {
-        for ty in rect.y0..=rect.y1 {
-            let row = (ty * tiles_x) as usize;
-            for tx in rect.x0..=rect.x1 {
-                let t = row + tx as usize;
-                indices[cursor[t] as usize] = i;
-                cursor[t] += 1;
-            }
+        for_each_covered_tile(rect, tiles_x, |t| {
+            indices[cursor[t] as usize] = i;
+            cursor[t] += 1;
+        });
+    }
+    debug_validate(bins, splats.len());
+}
+
+/// Below this many splats the per-worker histogram merge costs more than
+/// the serial three-pass build, so the threaded path falls back.
+const PAR_BIN_MIN: usize = 1024;
+
+/// Minimum splats per worker chunk: on wide machines a small frame
+/// otherwise fans out into near-empty workers whose spawn + histogram
+/// cost exceeds their work (fewer, larger chunks — never different
+/// output).
+const PAR_BIN_CHUNK: usize = 256;
+
+/// Shared base pointer into the CSR `indices` buffer for scoped workers
+/// that write/sort provably disjoint slots (the parallel scatter here
+/// and the parallel tile sorter in `splat::sort`). Every use site must
+/// carry its own SAFETY argument for disjointness.
+#[derive(Clone, Copy)]
+pub(crate) struct SharedIndices {
+    pub(crate) ptr: *mut u32,
+}
+
+unsafe impl Send for SharedIndices {}
+unsafe impl Sync for SharedIndices {}
+
+/// Multi-threaded [`bin_splats_into`]: scoped workers build per-thread
+/// tile-count histograms over contiguous splat chunks, one serial
+/// prefix-sum merges them into the CSR offset table *and* per-worker
+/// write cursors, then the workers scatter their cached rects into
+/// disjoint `indices` slots. Workers own ascending splat-index ranges
+/// and the merge orders their sub-slices worker-after-worker inside each
+/// tile, so every tile slice comes out in ascending splat order — the
+/// CSR arrays are byte-identical to the serial build at any thread
+/// count.
+pub fn bin_splats_into_threaded(
+    splats: &[Splat2D],
+    width: u32,
+    height: u32,
+    bins: &mut TileBins,
+    threads: usize,
+) {
+    let n = splats.len();
+    if threads <= 1 || n < PAR_BIN_MIN {
+        bin_splats_into(splats, width, height, bins);
+        return;
+    }
+    let tiles_x = width.div_ceil(TILE);
+    let tiles_y = height.div_ceil(TILE);
+    let tiles = (tiles_x * tiles_y) as usize;
+    bins.tiles_x = tiles_x;
+    bins.tiles_y = tiles_y;
+
+    let chunk = n.div_ceil(threads).max(PAR_BIN_CHUNK);
+    let workers = n.div_ceil(chunk);
+    if bins.worker_rects.len() < workers {
+        bins.worker_rects.resize_with(workers, Vec::new);
+    }
+    if bins.worker_counts.len() < workers {
+        bins.worker_counts.resize_with(workers, Vec::new);
+    }
+
+    // Count pass: per-worker per-tile histograms plus cached rects, over
+    // disjoint contiguous splat chunks (chunk w holds splat indices
+    // `w * chunk ..`, so worker order == ascending splat order).
+    let total_pairs: u64 = std::thread::scope(|s| {
+        let handles: Vec<_> = splats
+            .chunks(chunk)
+            .zip(bins.worker_rects.iter_mut().zip(bins.worker_counts.iter_mut()))
+            .enumerate()
+            .map(|(w, (chunk_splats, (rects, counts)))| {
+                let base = (w * chunk) as u32;
+                s.spawn(move || {
+                    rects.clear();
+                    counts.clear();
+                    counts.resize(tiles, 0);
+                    let mut pairs = 0u64;
+                    for (j, sp) in chunk_splats.iter().enumerate() {
+                        let Some(rect) = tile_rect(sp, tiles_x, tiles_y) else {
+                            continue;
+                        };
+                        rects.push((base + j as u32, rect));
+                        pairs += (rect.x1 - rect.x0 + 1) as u64
+                            * (rect.y1 - rect.y0 + 1) as u64;
+                        for_each_covered_tile(rect, tiles_x, |t| {
+                            counts[t] += 1;
+                        });
+                    }
+                    pairs
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("bin count worker panicked"))
+            .sum()
+    });
+    assert!(
+        total_pairs <= u32::MAX as u64,
+        "tile-pair count {total_pairs} overflows the u32 CSR offsets"
+    );
+
+    // Merge pass: one exclusive prefix-sum over (tile, worker) lands the
+    // CSR offset table and, inside each tile's slice, every worker's
+    // private write cursor (rewriting the histograms in place).
+    bins.offsets.clear();
+    bins.offsets.resize(tiles + 1, 0);
+    let mut acc = 0u32;
+    for t in 0..tiles {
+        bins.offsets[t] = acc;
+        for counts in bins.worker_counts[..workers].iter_mut() {
+            let c = counts[t];
+            counts[t] = acc;
+            acc += c;
         }
     }
+    bins.offsets[tiles] = acc;
+    bins.pairs = acc as u64;
+    debug_assert_eq!(bins.pairs, total_pairs);
+
+    // Scatter pass: every worker replays its cached rects through its
+    // own per-tile cursors into disjoint `indices` slots. Bare resize
+    // (no clear): the cursor ranges tile 0..pairs exactly, so every
+    // retained slot is overwritten.
+    bins.indices.resize(bins.pairs as usize, 0);
+    let shared = SharedIndices { ptr: bins.indices.as_mut_ptr() };
+    std::thread::scope(|s| {
+        for (rects, cursors) in bins.worker_rects[..workers]
+            .iter()
+            .zip(bins.worker_counts[..workers].iter_mut())
+        {
+            s.spawn(move || {
+                for &(i, rect) in rects.iter() {
+                    for_each_covered_tile(rect, tiles_x, |t| {
+                        // SAFETY: the merge pass gave each
+                        // (worker, tile) pair a disjoint cursor range
+                        // inside `indices`, every worker only advances
+                        // its own cursors, and `indices` outlives the
+                        // scope — so no two writes alias.
+                        unsafe {
+                            *shared.ptr.add(cursors[t] as usize) = i;
+                        }
+                        cursors[t] += 1;
+                    });
+                }
+            });
+        }
+    });
+    debug_validate(bins, n);
 }
 
 /// Reference nested-Vec binning (the pre-CSR implementation), kept for
@@ -195,12 +413,10 @@ pub fn bin_splats_nested(
         let Some(rect) = tile_rect(s, tiles_x, tiles_y) else {
             continue;
         };
-        for ty in rect.y0..=rect.y1 {
-            for tx in rect.x0..=rect.x1 {
-                per_tile[(ty * tiles_x + tx) as usize].push(i as u32);
-                pairs += 1;
-            }
-        }
+        for_each_covered_tile(rect, tiles_x, |t| {
+            per_tile[t].push(i as u32);
+            pairs += 1;
+        });
     }
     (per_tile, pairs)
 }
@@ -307,6 +523,102 @@ mod tests {
                 assert_eq!(bins.tile(t), nested[t].as_slice(), "case {case}: tile {t}");
             }
         }
+    }
+
+    #[test]
+    fn threaded_bins_are_byte_identical_to_serial() {
+        let mut rng = Rng::new(0x7EAD_B1A5);
+        for &threads in &[2usize, 3, 8] {
+            for case in 0..4 {
+                // Above PAR_BIN_MIN so the scoped workers really run.
+                let n = 1_100 + rng.below(1_500);
+                let splats = random_splats(&mut rng, n, 256.0, 256.0);
+                let serial = bin_splats(&splats, 256, 256);
+                let mut par = TileBins::default();
+                bin_splats_into_threaded(&splats, 256, 256, &mut par, threads);
+                par.validate_csr(splats.len()).unwrap();
+                assert_eq!(par.offsets, serial.offsets, "case {case}/{threads}");
+                assert_eq!(par.indices, serial.indices, "case {case}/{threads}");
+                assert_eq!(par.pairs, serial.pairs, "case {case}/{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_bins_reuse_is_byte_identical() {
+        // One reused TileBins across frames of varying size and thread
+        // count must never read stale worker scratch.
+        let mut rng = Rng::new(0xD0_5E11);
+        let mut reused = TileBins::default();
+        for (i, &threads) in [8usize, 2, 5, 1, 8].iter().enumerate() {
+            let n = 1_050 + rng.below(2_000);
+            let splats = random_splats(&mut rng, n, 192.0, 160.0);
+            bin_splats_into_threaded(&splats, 192, 160, &mut reused, threads);
+            let fresh = bin_splats(&splats, 192, 160);
+            assert_eq!(reused.offsets, fresh.offsets, "frame {i}");
+            assert_eq!(reused.indices, fresh.indices, "frame {i}");
+            assert_eq!(reused.pairs, fresh.pairs, "frame {i}");
+        }
+    }
+
+    #[test]
+    fn degenerate_all_splats_in_one_tile() {
+        // Every splat lands in exactly tile 0 — the pathological
+        // imbalance case for the per-worker histogram merge.
+        let splats: Vec<Splat2D> = (0..1_500)
+            .map(|i| {
+                let mut s = splat_at(8.0, 8.0, 2.0);
+                s.id = i as u32;
+                s
+            })
+            .collect();
+        for threads in [1usize, 8] {
+            let mut bins = TileBins::default();
+            bin_splats_into_threaded(&splats, 64, 64, &mut bins, threads);
+            bins.validate_csr(splats.len()).unwrap();
+            assert_eq!(bins.pairs, splats.len() as u64);
+            assert_eq!(bins.tile_len(0), splats.len());
+            for t in 1..bins.tile_count() {
+                assert_eq!(bins.tile_len(t), 0, "tile {t} not empty");
+            }
+            let want: Vec<u32> = (0..splats.len() as u32).collect();
+            assert_eq!(bins.tile(0), want.as_slice());
+        }
+    }
+
+    #[test]
+    fn degenerate_zero_visible_splat_frame() {
+        // All splats culled: zero pairs, all-zero offsets, empty CSR.
+        let splats: Vec<Splat2D> =
+            (0..1_200).map(|_| splat_at(8.0, 8.0, 0.0)).collect();
+        for threads in [1usize, 8] {
+            let mut bins = TileBins::default();
+            bin_splats_into_threaded(&splats, 64, 64, &mut bins, threads);
+            bins.validate_csr(splats.len()).unwrap();
+            assert_eq!(bins.pairs, 0);
+            assert!(bins.indices.is_empty());
+            assert!(bins.offsets.iter().all(|&o| o == 0));
+        }
+        // And the fully empty frame (no splats at all).
+        let empty: Vec<Splat2D> = Vec::new();
+        let bins = bin_splats(&empty, 64, 64);
+        bins.validate_csr(0).unwrap();
+        assert_eq!(bins.pairs, 0);
+    }
+
+    #[test]
+    fn validate_csr_rejects_corruption() {
+        let splats = vec![splat_at(8.0, 8.0, 3.0)];
+        let mut bins = bin_splats(&splats, 64, 64);
+        bins.validate_csr(1).unwrap();
+        bins.indices[0] = 7; // splat index out of bounds
+        assert!(bins.validate_csr(1).is_err());
+        let mut bad = bin_splats(&splats, 64, 64);
+        bad.offsets[3] = 99; // breaks monotonicity
+        assert!(bad.validate_csr(1).is_err());
+        let mut short = bin_splats(&splats, 64, 64);
+        short.offsets.pop(); // breaks the offset-table shape
+        assert!(short.validate_csr(1).is_err());
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! Golden-frame regression harness: renders three fixed scenes
+//! (quickstart, city orbit, VR walkthrough frame) and compares the
+//! FNV-1a digests of their quantized RGBA buffers against the
+//! checked-in values in `tests/golden_digests.txt`, so any future
+//! pipeline change that silently alters rendered output fails tier-1.
+//!
+//! Every scene is rendered at scheduler widths {1, 2, 8} and the
+//! images must be byte-identical across widths before the digest is
+//! even checked — the parallel front end and tile scheduler may never
+//! change pixels.
+//!
+//! To update the digests after an *intended* output change:
+//! `SLTARCH_BLESS=1 cargo test --test golden` and commit the file.
+//! Digests for scenes missing from the file are bootstrapped (written
+//! and reported, not failed) so a fresh harness run can pin them.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use sltarch::config::SceneConfig;
+use sltarch::coordinator::{CpuBackend, FramePipeline};
+use sltarch::math::Camera;
+use sltarch::scene::{orbit_cameras, walkthrough};
+
+fn digest_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden_digests.txt")
+}
+
+/// The three pinned scenes: name, pipeline, camera.
+fn scenes() -> Vec<(&'static str, FramePipeline, Camera)> {
+    let mut out = Vec::new();
+
+    // 1. The quickstart example's frame (small indoor scene).
+    let cfg = SceneConfig::small_scale().quick();
+    let pipeline = FramePipeline::builder(cfg.build(42))
+        .tau(16.0)
+        .subtree_size(32)
+        .build();
+    let cam = pipeline.scene().scenario_camera(0);
+    out.push(("quickstart", pipeline, cam));
+
+    // 2. A city orbit frame (large-scale scene, mid-orbit camera).
+    let cfg = SceneConfig::large_scale().quick();
+    let cam = orbit_cameras(cfg.extent, 0.9, 12, 256, 256)[4];
+    let pipeline = FramePipeline::builder(cfg.build(7)).tau(16.0).build();
+    out.push(("city_orbit", pipeline, cam));
+
+    // 3. A VR walkthrough frame (terrain scene, walkthrough path).
+    let cfg = SceneConfig::terrain().quick();
+    let cam = walkthrough(cfg.extent, 8, 256, 256)[2];
+    let pipeline = FramePipeline::builder(cfg.build(11)).tau(16.0).build();
+    out.push(("vr_walkthrough", pipeline, cam));
+
+    out
+}
+
+fn read_digests(path: &Path) -> BTreeMap<String, u64> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return BTreeMap::new();
+    };
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        if let (Some(name), Some(hex)) = (it.next(), it.next()) {
+            if let Ok(v) = u64::from_str_radix(hex, 16) {
+                out.insert(name.to_string(), v);
+            }
+        }
+    }
+    out
+}
+
+/// Best-effort rewrite of the digest file (a read-only checkout only
+/// degrades bootstrap/bless to a warning — the equivalence assertions
+/// above have already run either way).
+fn write_digests(path: &Path, digests: &BTreeMap<String, u64>) {
+    let mut text = String::from(
+        "# Golden-frame digests: FNV-1a(64) over each scene's quantized\n\
+         # RGBA buffer (see rust/tests/golden.rs). Regenerate after an\n\
+         # INTENDED output change with:\n\
+         #   SLTARCH_BLESS=1 cargo test --test golden\n",
+    );
+    for (name, v) in digests {
+        writeln!(text, "{name} {v:016x}").unwrap();
+    }
+    if let Err(e) = std::fs::write(path, text) {
+        eprintln!("golden: could not write {}: {e}", path.display());
+    }
+}
+
+#[test]
+fn golden_frames_match_checked_in_digests() {
+    let path = digest_path();
+    let checked = read_digests(&path);
+    let mut computed = BTreeMap::new();
+
+    for (name, pipeline, cam) in scenes() {
+        // Byte-identity across scheduler widths comes first: the
+        // parallel front end / tile scheduler may never change pixels.
+        let mut images = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let backend = CpuBackend::with_threads(threads);
+            let mut session =
+                pipeline.session_on(&backend, pipeline.default_options());
+            let img = session.render(&cam).expect("golden render");
+            assert_eq!(session.stats().front_end_threads, threads, "{name}");
+            images.push(img);
+        }
+        for (img, threads) in images.iter().zip([1usize, 2, 8]).skip(1) {
+            assert_eq!(
+                images[0].data, img.data,
+                "scene `{name}`: width {threads} diverged from serial"
+            );
+        }
+
+        let img = &images[0];
+        let mean: f32 = img.data.iter().map(|p| p[0] + p[1] + p[2]).sum::<f32>()
+            / (img.data.len() as f32 * 3.0);
+        assert!(mean > 1e-3, "scene `{name}` rendered black (mean {mean})");
+        computed.insert(name.to_string(), img.fnv1a64());
+    }
+
+    let bless = std::env::var("SLTARCH_BLESS").is_ok();
+    if !bless {
+        // Verify the pinned scenes BEFORE any bootstrap rewrite, so a
+        // drifted frame can never silently re-bless itself.
+        for (name, &got) in &computed {
+            if let Some(&want) = checked.get(name) {
+                assert_eq!(
+                    got, want,
+                    "scene `{name}`: digest {got:016x} != checked-in \
+                     {want:016x}. If this output change is intended, \
+                     re-bless with `SLTARCH_BLESS=1 cargo test --test \
+                     golden` and commit tests/golden_digests.txt"
+                );
+            }
+        }
+    }
+
+    let missing =
+        computed.keys().filter(|k| !checked.contains_key(*k)).count();
+    if bless || missing > 0 {
+        write_digests(&path, &computed);
+        if !bless {
+            eprintln!(
+                "golden: bootstrapped {missing} digest(s) into {} — commit \
+                 the file to pin them",
+                path.display()
+            );
+        }
+    }
+}

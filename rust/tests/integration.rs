@@ -126,6 +126,47 @@ fn concurrent_sessions_share_one_pipeline() {
 }
 
 #[test]
+fn concurrent_parallel_front_end_matches_sequential_sessions() {
+    // PR 3 extension of the multi-client contract: N concurrent
+    // sessions with the *parallel front end* enabled (scheduler width
+    // 8 -> chunked projection, per-worker-histogram binning, parallel
+    // tile sort all spawn inside each session) must produce exactly
+    // the images N sequential serial-width sessions produce.
+    let p = quick_pipeline(37);
+    let serial = CpuBackend::with_threads(1);
+    let wide = CpuBackend::with_threads(8);
+    let sequential: Vec<_> = (0..4)
+        .map(|i| {
+            p.session_on(&serial, p.default_options())
+                .render(&p.scene().scenario_camera(i))
+                .unwrap()
+        })
+        .collect();
+    let concurrent: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let (p, wide) = (&p, &wide);
+                s.spawn(move || {
+                    let mut session = p.session_on(wide, p.default_options());
+                    let img =
+                        session.render(&p.scene().scenario_camera(i)).unwrap();
+                    assert_eq!(session.stats().front_end_threads, 8);
+                    assert_eq!(session.stats().threads, 8);
+                    img
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (i, (a, b)) in sequential.iter().zip(concurrent.iter()).enumerate() {
+        assert_eq!(
+            a.data, b.data,
+            "client {i} diverged with the concurrent parallel front end"
+        );
+    }
+}
+
+#[test]
 fn simulation_is_deterministic_across_runs() {
     let p = quick_pipeline(32);
     let cam = p.scene().scenario_camera(2);

@@ -6,14 +6,15 @@
 use sltarch::config::SceneConfig;
 use sltarch::coordinator::renderer::{AlphaMode, CpuRenderer};
 use sltarch::coordinator::{CpuBackend, FramePipeline, RenderOptions};
-use sltarch::gaussian::Splat2D;
+use sltarch::gaussian::{project_into, project_into_threaded, Splat2D};
 use sltarch::lod::{traverse_sltree, SlTree};
 use sltarch::math::{Camera, Intrinsics, Vec2, Vec3};
 use sltarch::scene::{build_lod_tree, GeneratorKind, SceneSpec};
 use sltarch::splat::blend::PIXELS;
 use sltarch::splat::{
-    bin_splats, bin_splats_nested, blend_tile, radix_sort_tile, sort_tile_by_depth,
-    BlendMode, DepthSortScratch,
+    bin_splats, bin_splats_into_threaded, bin_splats_nested, blend_tile,
+    radix_sort_tile, sort_bins_threaded, sort_tile_by_depth, BlendMode,
+    DepthSortScratch, TileBins,
 };
 use sltarch::util::prop::forall;
 use sltarch::util::Rng;
@@ -138,7 +139,9 @@ fn prop_blend_conserves_energy_and_bounds() {
 }
 
 fn random_screen_splats(rng: &mut Rng) -> Vec<Splat2D> {
-    let n = 1 + rng.below(500);
+    // Sized to straddle the parallel front end's serial-fallback
+    // threshold (1024), so both code paths see coverage.
+    let n = 1 + rng.below(2_400);
     (0..n)
         .map(|i| {
             let s = rng.range(0.02, 1.0);
@@ -158,6 +161,76 @@ fn random_screen_splats(rng: &mut Rng) -> Vec<Splat2D> {
             }
         })
         .collect()
+}
+
+#[test]
+fn prop_chunked_projection_matches_serial_for_any_scene() {
+    // Tentpole contract 1/3: the chunked multi-threaded projection is
+    // byte-identical to the serial path at widths {1, 2, 8} on
+    // randomized scenes and cameras.
+    forall(8, |rng| {
+        let (g, tree) = random_scene(rng);
+        let extent = tree.aabbs[0].half_extent().max_component();
+        let cam = random_camera(rng, extent.max(1.0));
+        let mut serial = Vec::new();
+        project_into(&g, &cam, &mut serial);
+        let mut par = Vec::new();
+        for threads in [1usize, 2, 8] {
+            project_into_threaded(&g, &cam, &mut par, threads);
+            assert_eq!(par.len(), serial.len(), "{threads} threads");
+            for (a, b) in par.iter().zip(serial.iter()) {
+                assert_eq!(a.bit_pattern(), b.bit_pattern(), "{threads} threads");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_bins_match_nested_reference() {
+    // Tentpole contract 2/3: the per-worker-histogram parallel binning
+    // produces CSR arrays byte-identical to the nested reference (and
+    // therefore to the serial CSR build) at widths {1, 2, 8}.
+    forall(12, |rng| {
+        let splats = random_screen_splats(rng);
+        let (w, h) = (16 + rng.below(300) as u32, 16 + rng.below(300) as u32);
+        let (nested, pairs) = bin_splats_nested(&splats, w, h);
+        for threads in [1usize, 2, 8] {
+            let mut bins = TileBins::default();
+            bin_splats_into_threaded(&splats, w, h, &mut bins, threads);
+            bins.validate_csr(splats.len()).unwrap();
+            assert_eq!(bins.pairs, pairs, "{threads} threads");
+            for t in 0..nested.len() {
+                assert_eq!(
+                    bins.tile(t),
+                    nested[t].as_slice(),
+                    "tile {t} at {threads} threads"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_tile_sort_matches_reference() {
+    // Tentpole contract 3/3: the dynamic-cursor parallel tile sort
+    // equals the comparison reference sort on every tile at widths
+    // {1, 2, 8}.
+    forall(12, |rng| {
+        let splats = random_screen_splats(rng);
+        let (w, h) = (16 + rng.below(300) as u32, 16 + rng.below(300) as u32);
+        let unsorted = bin_splats(&splats, w, h);
+        let mut want = unsorted.clone();
+        for t in 0..want.tile_count() {
+            sort_tile_by_depth(want.tile_mut(t), &splats);
+        }
+        for threads in [1usize, 2, 8] {
+            let mut got = unsorted.clone();
+            let mut pool = Vec::new();
+            sort_bins_threaded(&mut got, &splats, &mut pool, threads);
+            assert_eq!(got.offsets, want.offsets, "{threads} threads");
+            assert_eq!(got.indices, want.indices, "{threads} threads");
+        }
+    });
 }
 
 #[test]
@@ -228,6 +301,8 @@ fn prop_session_render_is_bit_identical_to_seed_per_frame_path() {
                 assert_eq!(stats.frames, 1);
                 assert_eq!(stats.cut_total, cut.len() as u64);
                 assert_eq!(stats.threads, threads);
+                // One knob: the front end ran at the same width.
+                assert_eq!(stats.front_end_threads, threads);
                 assert!(stats.stages.staged_total() <= stats.wall_seconds + 1e-9);
             }
         }
