@@ -77,7 +77,10 @@ fn main() -> anyhow::Result<()> {
         for (name, ms) in stats.stages.rows_ms_per_frame(stats.frames) {
             print!(" {name} {ms:.2}");
         }
-        println!(" ms/frame)");
+        println!(
+            " ms/frame, cut cache {}/{} hits)",
+            stats.cache_hit, stats.frames
+        );
         if t == threads && threads == 1 {
             break;
         }

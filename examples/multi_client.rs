@@ -119,6 +119,11 @@ fn main() -> anyhow::Result<()> {
         "concurrency        : {:.2}x (client-seconds / span)",
         busy / span.max(1e-12)
     );
+    println!(
+        "cut-cache hits     : {}/{} frames (per-stream temporal reuse; \
+         {} frontier nodes revalidated, {} reseeds)",
+        total.cache_hit, total.frames, total.revalidated, total.reseeded
+    );
     print!("per-stage (s, all clients):");
     for (name, secs) in total.stages.rows() {
         print!(" {name} {secs:.2}");

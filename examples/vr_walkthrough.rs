@@ -105,6 +105,11 @@ fn main() -> anyhow::Result<()> {
     }
     println!();
     println!(
+        "cut cache          : {}/{} frames served incrementally \
+         ({} frontier nodes revalidated, {} reseeds)",
+        stats.cache_hit, stats.frames, stats.revalidated, stats.reseeded
+    );
+    println!(
         "simulated GPU      : {:.2} ms/frame ({:.1} FPS)",
         sim_gpu / n * 1e3,
         n / sim_gpu
@@ -126,10 +131,13 @@ fn main() -> anyhow::Result<()> {
     let _ = replay.render_path(&cams)?;
     let batch = replay.stats();
     println!(
-        "batched CPU replay   : {:.1} ms/frame ({:.1} FPS on {} tile-scheduler threads)",
+        "batched CPU replay   : {:.1} ms/frame ({:.1} FPS on {} tile-scheduler \
+         threads, {}/{} cut-cache hits)",
         batch.ms_per_frame(),
         batch.fps(),
-        batch.threads
+        batch.threads,
+        batch.cache_hit,
+        batch.frames
     );
     Ok(())
 }

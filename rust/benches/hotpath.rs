@@ -8,8 +8,8 @@ use sltarch::config::{RenderConfig, SceneConfig};
 use sltarch::coordinator::renderer::{default_threads, AlphaMode, CpuRenderer};
 use sltarch::coordinator::{CpuBackend, FramePipeline};
 use sltarch::gaussian::{project, project_into, project_into_threaded, Splat2D};
-use sltarch::lod::{traverse_sltree, SlTree};
-use sltarch::scene::orbit_cameras;
+use sltarch::lod::{traverse_sltree, CutCache, CutCacheConfig, SlTree};
+use sltarch::scene::{orbit_cameras, walkthrough};
 use sltarch::splat::{
     bin_splats, bin_splats_into, bin_splats_into_threaded, sort_bins_threaded,
     sort_bins_with, DepthSortScratch, TileBins,
@@ -41,6 +41,41 @@ fn main() {
         traverse_sltree(&scene.tree, &slt, &cam, rcfg.lod_tau, 4)
     });
     b.iter("canonical_search", 5, || scene.tree.canonical_search(&cam, rcfg.lod_tau));
+
+    // The PR-4 tentpole: full per-frame searches vs the temporal cut
+    // cache on a vr_walkthrough-style path. Both rows time the same
+    // whole-path loop, so their ratio is the per-frame search speedup
+    // the cache buys on coherent camera streams.
+    let walk_frames = if quick { 8 } else { 24 };
+    let walk = walkthrough(extent, walk_frames, 256, 256);
+    b.iter(&format!("search(cold) [{walk_frames} cams]"), 3, || {
+        let mut selected = 0u64;
+        for wcam in &walk {
+            selected +=
+                traverse_sltree(&scene.tree, &slt, wcam, rcfg.lod_tau, 4).0.len() as u64;
+        }
+        selected
+    });
+    let cache_cfg = CutCacheConfig::default();
+    let mut cache = CutCache::new();
+    let mut cache_counters = (0u64, 0u64, 0u64);
+    b.iter(&format!("search(cached path) [{walk_frames} cams]"), 3, || {
+        cache.invalidate(); // every sample replays cold frame 0 + warm rest
+        cache_counters = (0, 0, 0);
+        let mut selected = 0u64;
+        for wcam in &walk {
+            let (cut, t) =
+                cache.search(&scene.tree, &slt, wcam, rcfg.lod_tau, &cache_cfg);
+            selected += cut.len() as u64;
+            cache_counters.0 += t.cache_hit;
+            cache_counters.1 += t.revalidated;
+            cache_counters.2 += t.reseeded;
+        }
+        selected
+    });
+    b.record("cut_cache hits/path", cache_counters.0 as f64);
+    b.record("cut_cache revalidated/path", cache_counters.1 as f64);
+    b.record("cut_cache reseeded/path", cache_counters.2 as f64);
 
     let cut = slt.traverse(&scene.tree, &cam, rcfg.lod_tau);
     let queue = scene.gaussians.gather(&cut);

@@ -12,6 +12,7 @@ use super::renderer::{
     blend_tiles, blend_tiles_pjrt, default_threads, AlphaMode, FrameScratch,
 };
 use crate::config::RenderConfig;
+use crate::lod::CutCacheConfig;
 use crate::metrics::Image;
 use crate::runtime::PjrtEngine;
 use anyhow::Result;
@@ -30,11 +31,21 @@ pub struct RenderOptions {
     /// the backend's width (which itself falls back to
     /// `SLTARCH_THREADS` / the machine).
     pub threads: usize,
+    /// Temporal cut-cache policy for the session's LoD search: when the
+    /// incremental frame-to-frame revalidation path may run and when it
+    /// must fall back to a full traversal. The cut is bit-identical to
+    /// the full search either way; this only trades search time.
+    pub cut_cache: CutCacheConfig,
 }
 
 impl Default for RenderOptions {
     fn default() -> Self {
-        RenderOptions { alpha: AlphaMode::Group, lod_tau: 32.0, threads: 0 }
+        RenderOptions {
+            alpha: AlphaMode::Group,
+            lod_tau: 32.0,
+            threads: 0,
+            cut_cache: CutCacheConfig::default(),
+        }
     }
 }
 
@@ -129,6 +140,8 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Wrap a loaded [`PjrtEngine`] as a session backend (dispatch is
+    /// serialized through an internal mutex).
     pub fn new(engine: PjrtEngine) -> Self {
         PjrtBackend { engine: std::sync::Mutex::new(engine) }
     }

@@ -5,16 +5,19 @@
 //! * [`pipeline`] — the immutable [`FramePipeline`] (scene + SLTree +
 //!   config + backend) and its builder.
 //! * [`session`] — [`RenderSession`]: per-client mutable state (options,
-//!   front-end scratch, unified stats); N sessions over one
-//!   `&FramePipeline` form the multi-client serving surface.
+//!   front-end scratch, temporal cut cache, unified stats); N sessions
+//!   over one `&FramePipeline` form the multi-client serving surface.
 //! * [`backend`] — the [`RenderBackend`] trait with the pure-CPU
 //!   ([`CpuBackend`]) and AOT-artifact ([`PjrtBackend`]) blenders.
 //! * [`stats`] — [`RenderStats`] / [`StageTimings`]: one report type
-//!   for frames, paths and serving sessions.
+//!   for frames, paths and serving sessions, including the cut cache's
+//!   `cache_hit` / `revalidated` / `reseeded` counters.
 //! * [`renderer`] — the shared front end, the blend loops, and the
 //!   stateless reference renderers the equivalence tests pin against.
 //! * [`workload`] — runs the real pipeline once per (scene, camera,
 //!   tau) and distils the traces every hardware model consumes.
+
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod pipeline;
@@ -23,6 +26,7 @@ pub mod session;
 pub mod stats;
 pub mod workload;
 
+pub use crate::lod::cut_cache::{CutCache, CutCacheConfig};
 pub use backend::{CpuBackend, PjrtBackend, RenderBackend, RenderOptions};
 pub use pipeline::{FramePipeline, FramePipelineBuilder, SimulationReport};
 pub use renderer::{AlphaMode, CpuRenderer, FrameScratch};

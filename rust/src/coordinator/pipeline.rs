@@ -236,11 +236,18 @@ impl FramePipeline {
     }
 
     /// LoD search only: the cut for a camera at the pipeline's tau.
+    ///
+    /// Stateless (always a full traversal). Sessions route their
+    /// searches through a per-stream temporal
+    /// [`CutCache`](crate::lod::CutCache) instead, which reuses the
+    /// previous frame's cut along a camera path while staying
+    /// bit-identical to this reference.
     pub fn search(&self, cam: &Camera) -> Vec<u32> {
         self.search_with_tau(cam, self.rcfg.lod_tau)
     }
 
     /// LoD search at an explicit tau (per-session granularity).
+    /// Stateless full traversal — see [`FramePipeline::search`].
     pub fn search_with_tau(&self, cam: &Camera, tau: f32) -> Vec<u32> {
         self.sltree.traverse(&self.scene.tree, cam, tau)
     }
@@ -317,6 +324,31 @@ mod tests {
             let per_frame = p.session().render(cam).unwrap();
             assert_eq!(img.data, per_frame.data, "frame {i} diverged from a fresh session");
         }
+    }
+
+    #[test]
+    fn session_cut_cache_reports_hits_and_stays_identical() {
+        use crate::lod::CutCacheConfig;
+        let p = pipeline();
+        let cam = p.scene().scenario_camera(1);
+        let mut session = p.session();
+        let first = session.render(&cam).unwrap();
+        let second = session.render(&cam).unwrap();
+        assert_eq!(first.data, second.data);
+        let stats = session.stats();
+        assert_eq!(stats.frames, 2);
+        assert_eq!(stats.cache_hit, 1, "second frame must hit the cut cache");
+        assert!(stats.revalidated > 0);
+        assert!(session.cut_cache().is_warm());
+        // A cache-disabled session renders the identical frame.
+        let mut cold = p.session_with(RenderOptions {
+            cut_cache: CutCacheConfig::disabled(),
+            ..p.default_options()
+        });
+        let cold_img = cold.render(&cam).unwrap();
+        assert_eq!(cold.stats().cache_hit, 0);
+        assert_eq!(cold.stats().revalidated, 0);
+        assert_eq!(cold_img.data, first.data);
     }
 
     #[test]

@@ -57,7 +57,9 @@ impl AlphaMode {
 /// the first frame warms it up, a frame's front end allocates nothing.
 #[derive(Debug, Default)]
 pub struct FrameScratch {
+    /// Projected 2D splats for the current frame's rendering queue.
     pub splats: Vec<Splat2D>,
+    /// CSR tile bins over `splats` (indices + offsets, reused buffers).
     pub bins: TileBins,
     /// Per-worker radix-sort scratches (grown to the scheduler width on
     /// first use; index 0 serves the serial path).
@@ -67,6 +69,7 @@ pub struct FrameScratch {
 }
 
 impl FrameScratch {
+    /// Empty scratch; buffers grow on first use and are reused after.
     pub fn new() -> Self {
         Self::default()
     }
@@ -347,6 +350,8 @@ impl CpuRenderer {
 pub struct PjrtRenderer;
 
 impl PjrtRenderer {
+    /// Render the gathered rendering queue through the PJRT artifacts
+    /// with a fresh front-end scratch.
     pub fn render(
         engine: &PjrtEngine,
         queue: &Gaussians,

@@ -3,7 +3,9 @@
 //! A [`RenderSession`] borrows an immutable [`FramePipeline`] (scene +
 //! SLTree + config + backend) and owns everything mutable a stream
 //! needs: its [`RenderOptions`], its front-end [`FrameScratch`] (so
-//! single-frame renders are as allocation-lean as batched paths) and a
+//! single-frame renders are as allocation-lean as batched paths), its
+//! temporal [`CutCache`] (frame-to-frame LoD search reuse along the
+//! stream's camera path, bit-identical to the full search) and a
 //! unified [`RenderStats`] accumulator with per-stage timings. Sessions
 //! are independent, so N clients over one `&FramePipeline` form a
 //! thread-safe serving surface (see `examples/multi_client.rs`).
@@ -12,6 +14,7 @@ use super::backend::{RenderBackend, RenderOptions};
 use super::pipeline::FramePipeline;
 use super::renderer::{default_threads, front_end_timed, FrameScratch};
 use super::stats::{RenderStats, StageTimings};
+use crate::lod::CutCache;
 use crate::math::Camera;
 use crate::metrics::Image;
 use anyhow::Result;
@@ -23,6 +26,7 @@ pub struct RenderSession<'p> {
     backend: &'p dyn RenderBackend,
     opts: RenderOptions,
     scratch: FrameScratch,
+    cut_cache: CutCache,
     stats: RenderStats,
 }
 
@@ -37,6 +41,7 @@ impl<'p> RenderSession<'p> {
             backend,
             opts,
             scratch: FrameScratch::new(),
+            cut_cache: CutCache::new(),
             stats: RenderStats::default(),
         }
     }
@@ -66,6 +71,13 @@ impl<'p> RenderSession<'p> {
         &self.stats
     }
 
+    /// The session's temporal cut cache (LoD-search frontier reuse
+    /// across this stream's frames). Read-only; the policy knob is
+    /// [`RenderOptions::cut_cache`] via [`RenderSession::options_mut`].
+    pub fn cut_cache(&self) -> &CutCache {
+        &self.cut_cache
+    }
+
     /// The unified scheduler width for this session: the backend's
     /// resolved tile-scheduler width when it has one (CPU), else the
     /// session's `RenderOptions::threads`, else the process default.
@@ -88,10 +100,13 @@ impl<'p> RenderSession<'p> {
         std::mem::take(&mut self.stats)
     }
 
-    /// Render one frame. Reuses this session's front-end scratch, so a
-    /// steady-state frame allocates only its output image; output is
-    /// bit-identical to the stateless reference renderer
-    /// (`CpuRenderer`) at any thread count.
+    /// Render one frame. Reuses this session's front-end scratch and
+    /// temporal cut cache, so a steady-state frame allocates only its
+    /// output image; output is bit-identical to the stateless reference
+    /// renderer (`CpuRenderer`) at any thread count — the cut cache
+    /// reproduces the full LoD search exactly (see
+    /// [`crate::lod::cut_cache`]), it only makes the search stage
+    /// faster on coherent camera paths.
     pub fn render(&mut self, cam: &Camera) -> Result<Image> {
         let frame_t0 = Instant::now();
         // Accumulate the frame locally and commit to `self.stats` only
@@ -101,8 +116,16 @@ impl<'p> RenderSession<'p> {
         let mut stages = StageTimings::default();
 
         let t = Instant::now();
-        let cut = self.pipeline.search_with_tau(cam, self.opts.lod_tau);
-        let queue = self.pipeline.scene().gaussians.gather(&cut);
+        let (cut_len, search_trace, queue) = {
+            let (cut, trace) = self.cut_cache.search(
+                &self.pipeline.scene().tree,
+                self.pipeline.sltree(),
+                cam,
+                self.opts.lod_tau,
+                &self.opts.cut_cache,
+            );
+            (cut.len() as u64, trace, self.pipeline.scene().gaussians.gather(cut))
+        };
         stages.search = t.elapsed().as_secs_f64();
 
         let width = self.scheduler_width();
@@ -115,8 +138,11 @@ impl<'p> RenderSession<'p> {
         stages.blend = t.elapsed().as_secs_f64();
 
         self.stats.stages.accumulate(&stages);
-        self.stats.cut_total += cut.len() as u64;
+        self.stats.cut_total += cut_len;
         self.stats.pairs_total += self.scratch.bins.pairs;
+        self.stats.cache_hit += search_trace.cache_hit;
+        self.stats.revalidated += search_trace.revalidated;
+        self.stats.reseeded += search_trace.reseeded;
         self.stats.frames += 1;
         self.stats.threads = self.backend.threads(&self.opts);
         self.stats.front_end_threads = width;

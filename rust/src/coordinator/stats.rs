@@ -75,6 +75,20 @@ pub struct RenderStats {
     /// (project -> CSR bin -> tile sort); always >= 1 once a frame has
     /// rendered, even on offload backends (the front end stays on CPU).
     pub front_end_threads: usize,
+    /// Frames whose LoD search ran the temporal cut cache's incremental
+    /// revalidation path instead of a full traversal. Invariant:
+    /// `cache_hit <= frames`; the complement counts cold searches
+    /// (first frame, camera jumps, periodic refreshes, tau changes).
+    pub cache_hit: u64,
+    /// Node verdicts re-evaluated by incremental revalidation — cached
+    /// frontier nodes (cut + frustum-culled boundary) plus the interior
+    /// ancestors on their paths, each tested once per frame — summed
+    /// across frames. 0 unless `cache_hit > 0`.
+    pub revalidated: u64,
+    /// Bounded refinement traversals seeded at cached cut nodes that
+    /// stopped meeting the LoD, summed across frames. 0 unless
+    /// `cache_hit > 0`.
+    pub reseeded: u64,
     /// Per-stage wall-clock breakdown.
     pub stages: StageTimings,
 }
@@ -110,6 +124,9 @@ impl RenderStats {
         self.threads = self.threads.max(other.threads);
         self.front_end_threads =
             self.front_end_threads.max(other.front_end_threads);
+        self.cache_hit += other.cache_hit;
+        self.revalidated += other.revalidated;
+        self.reseeded += other.reseeded;
         self.stages.accumulate(&other.stages);
     }
 }
@@ -135,7 +152,11 @@ mod tests {
             cut_total: 10,
             pairs_total: 100,
             threads: 4,
+            cache_hit: 1,
+            revalidated: 200,
+            reseeded: 3,
             stages: StageTimings { search: 0.1, blend: 0.2, ..Default::default() },
+            ..Default::default()
         };
         let b = RenderStats {
             frames: 3,
@@ -143,13 +164,20 @@ mod tests {
             cut_total: 5,
             pairs_total: 50,
             threads: 2,
+            cache_hit: 2,
+            revalidated: 300,
+            reseeded: 1,
             stages: StageTimings { search: 0.3, sort: 0.1, ..Default::default() },
+            ..Default::default()
         };
         a.merge(&b);
         assert_eq!(a.frames, 5);
         assert_eq!(a.cut_total, 15);
         assert_eq!(a.pairs_total, 150);
         assert_eq!(a.threads, 4);
+        assert_eq!(a.cache_hit, 3);
+        assert_eq!(a.revalidated, 500);
+        assert_eq!(a.reseeded, 4);
         assert!((a.wall_seconds - 3.0).abs() < 1e-12);
         assert!((a.stages.search - 0.4).abs() < 1e-12);
         assert!((a.stages.staged_total() - 0.7).abs() < 1e-12);

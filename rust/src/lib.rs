@@ -5,8 +5,10 @@
 //! Workload Imbalance and Memory Irregularity"* (CS.AR 2025):
 //!
 //! * [`lod`] — the paper's algorithmic contribution: the canonical LoD
-//!   tree, **SLTree** partitioning (Algo 1 + subtree merging) and the
-//!   streaming subtree-queue traversal, bit-accurate vs the canonical cut.
+//!   tree, **SLTree** partitioning (Algo 1 + subtree merging), the
+//!   streaming subtree-queue traversal (bit-accurate vs the canonical
+//!   cut), and the temporal [`lod::CutCache`] that reuses the search
+//!   frontier across a camera path's frames.
 //! * [`sim`] — cycle-approximate models of every piece of hardware the
 //!   paper evaluates: the mobile-Ampere GPU baseline, **LTCore** (LT
 //!   units, two-segment subtree queue, 4-way subtree cache), **SPCore**
@@ -31,12 +33,16 @@
 //!   hand.
 //! * **[`coordinator::RenderSession`]** — per-client mutable state:
 //!   typed [`coordinator::RenderOptions`] (alpha dataflow, tau,
-//!   scheduler width), the reusable front-end scratch (steady-state
-//!   frames allocate only their output image), and unified
-//!   [`coordinator::RenderStats`] with per-stage timings
-//!   (search / project / bin / sort / blend). N sessions over one
-//!   `&FramePipeline` are a thread-safe multi-client serving surface
-//!   (see `examples/multi_client.rs`).
+//!   scheduler width, cut-cache policy), the reusable front-end scratch
+//!   (steady-state frames allocate only their output image), the
+//!   temporal [`lod::CutCache`] (the previous frame's LoD cut +
+//!   frustum-culled frontier is revalidated incrementally instead of
+//!   re-searching from the tree top — bit-identical, just faster on
+//!   coherent paths; `cache_hit` / `revalidated` / `reseeded` land in
+//!   the stats), and unified [`coordinator::RenderStats`] with
+//!   per-stage timings (search / project / bin / sort / blend). N
+//!   sessions over one `&FramePipeline` are a thread-safe multi-client
+//!   serving surface (see `examples/multi_client.rs`).
 //! * **[`coordinator::RenderBackend`]** — who runs the blending maths:
 //!   [`coordinator::CpuBackend`] (dynamic-greedy multi-threaded tile
 //!   scheduler, bit-identical to serial at any width) or
@@ -98,6 +104,12 @@
 //! width — parsed once per process; prefer `CpuBackend::with_threads` /
 //! `RenderOptions::threads`.
 //!
+//! Repository-level documentation: `README.md` (build / test / bench
+//! commands and the example tour), `docs/ARCHITECTURE.md` (paper
+//! section -> module map, frame data flow, the cut-cache state machine)
+//! and `docs/TESTING.md` (the golden-frame workflow and the
+//! bit-identity contracts).
+//!
 //! Quickstart (see `examples/quickstart.rs`):
 //!
 //! ```no_run
@@ -137,6 +149,7 @@ pub mod prelude {
     pub use crate::coordinator::session::RenderSession;
     pub use crate::coordinator::stats::{RenderStats, StageTimings};
     pub use crate::gaussian::Gaussians;
+    pub use crate::lod::cut_cache::{CutCache, CutCacheConfig};
     pub use crate::lod::sltree::SlTree;
     pub use crate::lod::tree::LodTree;
     pub use crate::math::{Camera, Mat4, Vec3};

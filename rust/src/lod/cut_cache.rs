@@ -1,0 +1,544 @@
+//! Temporal LoD cut cache: frame-to-frame reuse of the selected cut
+//! along a camera path (the ROADMAP "frame-to-frame cut caching" item).
+//!
+//! The paper's hottest stage re-runs the LoD search from the tree top
+//! every frame, yet consecutive cameras on a walkthrough select nearly
+//! identical cuts. [`CutCache`] keeps the previous frame's search
+//! *frontier* — the cut plus the frustum-culled boundary, which together
+//! form an antichain covering every root-to-leaf path exactly once —
+//! and revalidates it incrementally:
+//!
+//! * **coarsen** — walking up from a cached node, the first ancestor
+//!   that now meets the LoD (or leaves the frustum) becomes the new
+//!   frontier node; everything below it is dropped;
+//! * **refine** — a cached cut node that no longer meets the LoD seeds
+//!   a *bounded* streaming search
+//!   ([`refine_sltree`](super::traversal::refine_sltree)) over its
+//!   subtree slab and boundary activations only;
+//! * **frustum patch** — cached culled nodes re-enter the view the same
+//!   way (their verdict flips to select or refine), and cut nodes that
+//!   leave the view move to the culled frontier.
+//!
+//! Ancestor verdicts are memoized per frame with epoch-stamped marks,
+//! so shared prefixes of the frontier's root paths are tested once.
+//! The result is **bit-identical** to
+//! [`LodTree::canonical_search`](super::tree::LodTree::canonical_search)
+//! at every frame — the verdict at each node is the same pure function
+//! of `(node, camera, tau)` the full search evaluates, only the
+//! *schedule* of evaluations changes. Property tests
+//! (`rust/tests/proptests.rs`) and the golden-frame harness pin this.
+//!
+//! A full traversal still runs on the first frame, whenever the camera
+//! jumps beyond [`CutCacheConfig::max_translation`] /
+//! [`CutCacheConfig::max_rotation`], every
+//! [`CutCacheConfig::refresh_every`] frames, and when `tau` or the tree
+//! changes — the cache is a scheduler, never a semantic override.
+
+use super::sltree::SlTree;
+use super::traversal::{
+    refine_sltree, traverse_sltree, traverse_sltree_frontier, TraversalTrace,
+};
+use super::tree::{LodTree, NONE};
+use crate::math::{Camera, Vec3};
+
+/// LT-unit count modelled by the cold traversal inside the cache
+/// (matches [`SlTree::traverse`]; results are independent of it).
+const LT_UNITS: usize = 4;
+
+/// Per-node verdict states memoized during one incremental frame.
+const OPEN: u8 = 1; // in frustum, fails LoD, has children -> descend
+const STOPPED: u8 = 2; // new frontier node (selected or culled) here
+const DEAD: u8 = 3; // below a STOPPED ancestor
+
+/// Fallback policy for the temporal cut cache
+/// ([`RenderOptions::cut_cache`](crate::coordinator::RenderOptions)).
+///
+/// The cache is always bit-identical to the full search; these knobs
+/// only bound *when* the incremental path is worth taking.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CutCacheConfig {
+    /// Master switch. Disabled -> every frame runs the full traversal
+    /// (and reports `cache_hit == 0`).
+    pub enabled: bool,
+    /// Camera translation (world units) beyond which the next frame
+    /// falls back to a full traversal. Infinite by default: correctness
+    /// never needs the fallback, it only caps worst-case revalidation
+    /// work after a teleport.
+    pub max_translation: f32,
+    /// Camera view-direction change (radians) beyond which the next
+    /// frame falls back to a full traversal.
+    pub max_rotation: f32,
+    /// Cap on *consecutive incremental frames*: after N cache hits in
+    /// a row the next frame runs a full traversal (so the period is
+    /// N + 1 frames; 0 = never force). Keeps long-running streams from
+    /// depending on an unbounded chain of incremental updates.
+    pub refresh_every: u32,
+}
+
+impl Default for CutCacheConfig {
+    fn default() -> Self {
+        CutCacheConfig {
+            enabled: true,
+            max_translation: f32::INFINITY,
+            max_rotation: std::f32::consts::FRAC_PI_2,
+            refresh_every: 64,
+        }
+    }
+}
+
+impl CutCacheConfig {
+    /// A configuration that always runs the full traversal.
+    pub fn disabled() -> Self {
+        CutCacheConfig { enabled: false, ..Default::default() }
+    }
+}
+
+/// Frame-to-frame LoD search state for one camera stream (owned by a
+/// [`RenderSession`](crate::coordinator::RenderSession); one cache per
+/// stream — frontiers from different streams never mix).
+///
+/// See the [module docs](self) for the algorithm;
+/// [`CutCache::search`] is the only entry point the render loop needs.
+#[derive(Debug, Default)]
+pub struct CutCache {
+    /// Previous frame's cut (ascending node ids).
+    cut: Vec<u32>,
+    /// Previous frame's frustum-culled frontier (unordered).
+    culled: Vec<u32>,
+    /// Whether `cut`/`culled` describe a real previous frame.
+    valid: bool,
+    /// Tree / SLTree shapes the cached frontier belongs to.
+    nodes: usize,
+    subtrees: usize,
+    /// Buffer identities of the tree/SLTree the frontier was computed
+    /// against (node/subtree slab base pointers). Catches a caller
+    /// swapping in a different tree of coincidentally equal size —
+    /// see the contract note on [`CutCache::search`].
+    tree_id: usize,
+    slt_id: usize,
+    /// Camera pose and tau the frontier was computed at.
+    eye: Vec3,
+    fwd: Vec3,
+    tau: f32,
+    /// Incremental frames since the last full traversal.
+    frames_since_full: u32,
+    // ---- per-frame scratch (epoch-stamped, reused across frames) ----
+    mark: Vec<u32>,
+    state: Vec<u8>,
+    epoch: u32,
+    fetched: Vec<bool>,
+    path: Vec<u32>,
+    next_cut: Vec<u32>,
+    next_culled: Vec<u32>,
+}
+
+impl CutCache {
+    /// An empty (cold) cache; the first [`CutCache::search`] call runs
+    /// a full traversal and sizes the scratch to the tree.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The most recent cut (ascending node ids; empty before the first
+    /// search).
+    pub fn cut(&self) -> &[u32] {
+        &self.cut
+    }
+
+    /// Whether the next [`CutCache::search`] may take the incremental
+    /// path (a previous frame's frontier is cached).
+    pub fn is_warm(&self) -> bool {
+        self.valid
+    }
+
+    /// Cached frontier size (cut + culled) — the node count the next
+    /// incremental frame revalidates.
+    pub fn frontier_len(&self) -> usize {
+        self.cut.len() + self.culled.len()
+    }
+
+    /// Drop the cached frontier; the next search runs a full traversal.
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+        self.frames_since_full = 0;
+    }
+
+    /// LoD search with temporal reuse: returns the cut (ascending node
+    /// ids, **bit-identical** to
+    /// [`LodTree::canonical_search`](super::tree::LodTree::canonical_search))
+    /// and the traversal trace. The trace's `cache_hit` /
+    /// `revalidated` / `reseeded` counters report which path ran.
+    ///
+    /// **Contract:** a warm cache is bound to the `(tree, slt)` pair it
+    /// last searched. Passing a different pair falls back to a full
+    /// traversal whenever that is detectable (size or backing-buffer
+    /// identity changed — which covers any two simultaneously live
+    /// trees); when deliberately re-pointing a cache at new data, call
+    /// [`CutCache::invalidate`] first rather than relying on detection.
+    pub fn search(
+        &mut self,
+        tree: &LodTree,
+        slt: &SlTree,
+        cam: &Camera,
+        tau: f32,
+        cfg: &CutCacheConfig,
+    ) -> (&[u32], TraversalTrace) {
+        // Disabled: run the plain full traversal without maintaining
+        // any frontier state (no culled clone, no warm frontier), so a
+        // cache-averse session pays nothing beyond the search itself.
+        // `valid` stays false, so re-enabling later starts cold.
+        if !cfg.enabled {
+            let (cut, trace) = traverse_sltree(tree, slt, cam, tau, LT_UNITS);
+            self.cut = cut;
+            self.culled.clear();
+            self.valid = false;
+            return (&self.cut, trace);
+        }
+
+        let eye = cam.eye();
+        let fwd = cam.view.rotation().row(2);
+        let reuse = self.valid
+            && self.tau == tau
+            && self.nodes == tree.len()
+            && self.subtrees == slt.len()
+            && self.tree_id == tree.nodes.as_ptr() as usize
+            && self.slt_id == slt.subtrees.as_ptr() as usize
+            && (cfg.refresh_every == 0
+                || self.frames_since_full < cfg.refresh_every)
+            && self.within_delta(eye, fwd, cfg);
+        let trace = if reuse {
+            self.revalidate(tree, slt, cam, tau)
+        } else {
+            self.full_search(tree, slt, cam, tau)
+        };
+        self.eye = eye;
+        self.fwd = fwd;
+        self.tau = tau;
+        self.valid = true;
+        (&self.cut, trace)
+    }
+
+    /// Camera-jump guard: both the translation and the view-direction
+    /// delta from the cached pose must stay within the config bounds.
+    /// Any NaN (degenerate pose) fails closed into a full traversal.
+    fn within_delta(&self, eye: Vec3, fwd: Vec3, cfg: &CutCacheConfig) -> bool {
+        let translation = (eye - self.eye).length();
+        let rotation = self.fwd.dot(fwd).clamp(-1.0, 1.0).acos();
+        translation <= cfg.max_translation && rotation <= cfg.max_rotation
+    }
+
+    /// Cold path: full streaming traversal; the trace's `culled` list
+    /// becomes the cached frontier alongside the cut.
+    fn full_search(
+        &mut self,
+        tree: &LodTree,
+        slt: &SlTree,
+        cam: &Camera,
+        tau: f32,
+    ) -> TraversalTrace {
+        let (cut, mut trace) = traverse_sltree_frontier(tree, slt, cam, tau, LT_UNITS);
+        self.cut = cut;
+        // Move the frontier out of the trace — no caller of the cache
+        // reads `trace.culled`, so don't copy tens of thousands of ids.
+        self.culled = std::mem::take(&mut trace.culled);
+        self.nodes = tree.len();
+        self.subtrees = slt.len();
+        self.tree_id = tree.nodes.as_ptr() as usize;
+        self.slt_id = slt.subtrees.as_ptr() as usize;
+        self.frames_since_full = 0;
+        if self.mark.len() != tree.len() {
+            self.mark = vec![0; tree.len()];
+            self.state = vec![0; tree.len()];
+            self.epoch = 0;
+        }
+        if self.fetched.len() != slt.len() {
+            self.fetched = vec![false; slt.len()];
+        }
+        trace
+    }
+
+    /// Warm path: revalidate the cached frontier against the new camera.
+    ///
+    /// Every root-to-leaf path crosses the cached frontier exactly once,
+    /// so re-deciding each frontier node's path — with per-frame
+    /// memoization of ancestor verdicts — re-derives the canonical cut
+    /// exactly, while skipping the queue/activation machinery of the
+    /// full traversal. With a stable cut the steady state allocates
+    /// nothing (frontier buffers are double-buffered, memo arrays are
+    /// epoch-stamped); reseeds that cross subtree boundaries may grow
+    /// small queue/trace buffers.
+    fn revalidate(
+        &mut self,
+        tree: &LodTree,
+        slt: &SlTree,
+        cam: &Camera,
+        tau: f32,
+    ) -> TraversalTrace {
+        if self.epoch == u32::MAX {
+            self.mark.fill(0);
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+        let epoch = self.epoch;
+        self.fetched.fill(false);
+        let frustum = cam.frustum();
+        let mut trace = TraversalTrace { cache_hit: 1, ..Default::default() };
+
+        let old_cut = std::mem::take(&mut self.cut);
+        let old_culled = std::mem::take(&mut self.culled);
+        self.next_cut.clear();
+        self.next_culled.clear();
+
+        for &n in old_cut.iter().chain(old_culled.iter()) {
+            // Walk up to the first ancestor whose verdict is already
+            // memoized this frame (the root is implicitly reached).
+            self.path.clear();
+            self.path.push(n);
+            let mut a = tree.nodes[n as usize].parent;
+            while a != NONE && self.mark[a as usize] != epoch {
+                self.path.push(a);
+                a = tree.nodes[a as usize].parent;
+            }
+            let mut open = a == NONE || self.state[a as usize] == OPEN;
+            // Walk back down, resolving verdicts top-to-bottom. The
+            // first non-descend verdict is the new frontier node on
+            // this path (a coarsen when it sits above `n`).
+            for &x in self.path.iter().rev() {
+                let s = if !open {
+                    DEAD
+                } else {
+                    trace.revalidated += 1;
+                    trace.visited += 1;
+                    if !frustum.intersects_aabb(&tree.aabbs[x as usize]) {
+                        self.next_culled.push(x);
+                        STOPPED
+                    } else if tree.meets_lod(x, cam, tau)
+                        || tree.nodes[x as usize].is_leaf()
+                    {
+                        self.next_cut.push(x);
+                        STOPPED
+                    } else {
+                        OPEN
+                    }
+                };
+                self.mark[x as usize] = epoch;
+                self.state[x as usize] = s;
+                open = s == OPEN;
+            }
+            // The frontier node itself no longer stops the search:
+            // refine below it with a bounded streaming traversal.
+            if self.state[n as usize] == OPEN {
+                trace.reseeded += 1;
+                refine_sltree(
+                    tree,
+                    slt,
+                    &frustum,
+                    cam,
+                    tau,
+                    n,
+                    &mut self.next_cut,
+                    &mut self.next_culled,
+                    &mut self.fetched,
+                    &mut trace,
+                );
+            }
+        }
+
+        self.next_cut.sort_unstable();
+        self.cut = std::mem::take(&mut self.next_cut);
+        self.culled = std::mem::take(&mut self.next_culled);
+        // Recycle last frame's frontier buffers for the next frame.
+        self.next_cut = old_cut;
+        self.next_culled = old_culled;
+        self.frames_since_full = self.frames_since_full.saturating_add(1);
+        trace.selected = self.cut.len() as u64;
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SceneConfig;
+    use crate::scene::{walkthrough, Scene};
+
+    fn scene() -> Scene {
+        SceneConfig::small_scale().quick().build(11)
+    }
+
+    fn assert_frame_matches(
+        cache: &mut CutCache,
+        scene: &Scene,
+        slt: &SlTree,
+        cam: &Camera,
+        tau: f32,
+        cfg: &CutCacheConfig,
+        ctx: &str,
+    ) -> TraversalTrace {
+        let (want, _) = scene.tree.canonical_search(cam, tau);
+        let (got, trace) = cache.search(&scene.tree, slt, cam, tau, cfg);
+        assert_eq!(got, want.as_slice(), "{ctx}");
+        trace
+    }
+
+    #[test]
+    fn cached_path_is_bit_identical_along_a_walkthrough() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        // small_scale().quick() has world half-extent ~5.5; walk the
+        // camera through the scene at that scale so cuts are non-trivial.
+        let cams = walkthrough(6.0, 16, 256, 256);
+        let cfg = CutCacheConfig::default();
+        for tau in [4.0, 16.0] {
+            let mut cache = CutCache::new();
+            let mut hits = 0u64;
+            for (i, cam) in cams.iter().enumerate() {
+                let t = assert_frame_matches(
+                    &mut cache, &scene, &slt, cam, tau, &cfg,
+                    &format!("tau {tau} frame {i}"),
+                );
+                hits += t.cache_hit;
+                if i == 0 {
+                    assert_eq!(t.cache_hit, 0, "first frame must be cold");
+                } else {
+                    assert_eq!(t.cache_hit, 1, "frame {i} should hit");
+                    assert!(t.revalidated > 0);
+                }
+            }
+            assert_eq!(hits, cams.len() as u64 - 1);
+        }
+    }
+
+    #[test]
+    fn scenario_jumps_stay_correct_even_without_fallback() {
+        // Scenario cameras teleport around the scene — the incremental
+        // path must stay exact no matter how far the camera moved.
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let cfg = CutCacheConfig {
+            max_translation: f32::INFINITY,
+            max_rotation: std::f32::consts::PI,
+            refresh_every: 0,
+            ..Default::default()
+        };
+        let mut cache = CutCache::new();
+        for i in 0..6 {
+            let cam = scene.scenario_camera(i);
+            assert_frame_matches(
+                &mut cache, &scene, &slt, &cam, 8.0, &cfg,
+                &format!("scenario {i}"),
+            );
+        }
+    }
+
+    #[test]
+    fn translation_jump_triggers_full_fallback() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let cfg = CutCacheConfig { max_translation: 0.5, ..Default::default() };
+        let mut cache = CutCache::new();
+        let near = scene.scenario_camera(0);
+        let far = scene.scenario_camera(5);
+        let t0 = assert_frame_matches(&mut cache, &scene, &slt, &near, 8.0, &cfg, "a");
+        assert_eq!(t0.cache_hit, 0);
+        // Same pose again: within delta -> incremental.
+        let t1 = assert_frame_matches(&mut cache, &scene, &slt, &near, 8.0, &cfg, "b");
+        assert_eq!(t1.cache_hit, 1);
+        // Teleport: beyond delta -> full traversal, still correct.
+        let t2 = assert_frame_matches(&mut cache, &scene, &slt, &far, 8.0, &cfg, "c");
+        assert_eq!(t2.cache_hit, 0);
+        assert_eq!(t2.revalidated, 0);
+    }
+
+    #[test]
+    fn refresh_every_forces_periodic_full_searches() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let cfg = CutCacheConfig { refresh_every: 2, ..Default::default() };
+        let mut cache = CutCache::new();
+        let cam = scene.scenario_camera(1);
+        let hits: Vec<u64> = (0..6)
+            .map(|i| {
+                assert_frame_matches(
+                    &mut cache, &scene, &slt, &cam, 8.0, &cfg,
+                    &format!("frame {i}"),
+                )
+                .cache_hit
+            })
+            .collect();
+        // cold, hit, hit, cold, hit, hit
+        assert_eq!(hits, vec![0, 1, 1, 0, 1, 1]);
+    }
+
+    #[test]
+    fn tau_change_invalidates_the_frontier() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let cfg = CutCacheConfig::default();
+        let mut cache = CutCache::new();
+        let cam = scene.scenario_camera(2);
+        assert_frame_matches(&mut cache, &scene, &slt, &cam, 8.0, &cfg, "a");
+        let t = assert_frame_matches(&mut cache, &scene, &slt, &cam, 2.0, &cfg, "b");
+        assert_eq!(t.cache_hit, 0, "tau changed -> full search");
+        let t = assert_frame_matches(&mut cache, &scene, &slt, &cam, 2.0, &cfg, "c");
+        assert_eq!(t.cache_hit, 1);
+    }
+
+    #[test]
+    fn disabled_config_always_runs_cold() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let cfg = CutCacheConfig::disabled();
+        let mut cache = CutCache::new();
+        let cam = scene.scenario_camera(0);
+        for i in 0..3 {
+            let t = assert_frame_matches(
+                &mut cache, &scene, &slt, &cam, 8.0, &cfg,
+                &format!("frame {i}"),
+            );
+            assert_eq!(t.cache_hit, 0);
+        }
+    }
+
+    #[test]
+    fn swapping_trees_falls_back_to_full_search() {
+        // A warm cache fed a *different* (tree, slt) pair must detect
+        // the swap (both trees are alive, so their node slabs cannot
+        // share a buffer) and run cold instead of walking stale ids.
+        let a = scene();
+        let b = SceneConfig::small_scale().quick().build(12);
+        let slt_a = SlTree::partition(&a.tree, 32);
+        let slt_b = SlTree::partition(&b.tree, 32);
+        let cfg = CutCacheConfig::default();
+        let mut cache = CutCache::new();
+        let cam = a.scenario_camera(1);
+        assert_frame_matches(&mut cache, &a, &slt_a, &cam, 8.0, &cfg, "a0");
+        let t = assert_frame_matches(&mut cache, &b, &slt_b, &cam, 8.0, &cfg, "b0");
+        assert_eq!(t.cache_hit, 0, "tree swap must not reuse the frontier");
+        let t = assert_frame_matches(&mut cache, &a, &slt_a, &cam, 8.0, &cfg, "a1");
+        assert_eq!(t.cache_hit, 0, "swapping back is a different tree too");
+    }
+
+    #[test]
+    fn invalidate_and_accessors_behave() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let cfg = CutCacheConfig::default();
+        let mut cache = CutCache::new();
+        assert!(!cache.is_warm());
+        assert_eq!(cache.frontier_len(), 0);
+        let cam = scene.scenario_camera(3);
+        let (cut_len, selected) = {
+            let (cut, t) = cache.search(&scene.tree, &slt, &cam, 8.0, &cfg);
+            (cut.len(), t.selected)
+        };
+        assert_eq!(cut_len as u64, selected);
+        assert!(cache.is_warm());
+        assert!(cache.frontier_len() >= cache.cut().len());
+        assert_eq!(cache.cut().len(), cut_len);
+        cache.invalidate();
+        assert!(!cache.is_warm());
+        let (_, t) = cache.search(&scene.tree, &slt, &cam, 8.0, &cfg);
+        assert_eq!(t.cache_hit, 0);
+    }
+}

@@ -1,5 +1,5 @@
-//! The paper's algorithmic core: LoD trees, SLTree partitioning, and the
-//! streaming subtree-queue traversal.
+//! The paper's algorithmic core: LoD trees, SLTree partitioning, the
+//! streaming subtree-queue traversal, and temporal cut caching.
 //!
 //! * [`tree`] — the canonical LoD tree (variable fan-out, BFS node
 //!   layout) and the canonical top-down LoD search that defines the
@@ -8,12 +8,24 @@
 //!   plus greedy subtree merging (Sec. III-B).
 //! * [`traversal`] — the subtree-granular streaming traversal
 //!   (Sec. III-A), bit-accurate vs the canonical search, emitting the
-//!   per-thread workload and memory traces the simulators consume.
+//!   per-thread workload and memory traces the simulators consume;
+//!   plus [`refine_sltree`], the bounded seeded variant.
+//! * [`cut_cache`] — frame-to-frame reuse of the search frontier along
+//!   a camera path ([`CutCache`]): incremental revalidation that is
+//!   bit-identical to the canonical search at every frame, with
+//!   configurable full-traversal fallbacks ([`CutCacheConfig`]).
 
+#![warn(missing_docs)]
+
+pub mod cut_cache;
 pub mod sltree;
 pub mod traversal;
 pub mod tree;
 
+pub use cut_cache::{CutCache, CutCacheConfig};
 pub use sltree::{SlTree, Subtree};
-pub use traversal::{naive_static_workloads, traverse_sltree, TraversalTrace};
+pub use traversal::{
+    naive_static_workloads, refine_sltree, traverse_sltree,
+    traverse_sltree_frontier, TraversalTrace,
+};
 pub use tree::{CanonicalTrace, LodTree, Node, NONE};

@@ -55,11 +55,13 @@ pub struct Subtree {
 }
 
 impl Subtree {
+    /// Node count of this (possibly merged) subtree.
     #[inline]
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Whether the subtree holds no nodes (never true after `partition`).
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
@@ -77,9 +79,15 @@ impl Subtree {
 /// The subtree-based LoD tree.
 #[derive(Clone, Debug)]
 pub struct SlTree {
+    /// The subtrees, indexed by subtree id (`sid`).
     pub subtrees: Vec<Subtree>,
     /// node id -> subtree id.
     pub node_sid: Vec<u32>,
+    /// node id -> position of the node inside its subtree's `nodes`
+    /// slab (DFS order): `subtrees[node_sid[n]].nodes[node_pos[n]] == n`.
+    /// The O(1) seed lookup used by bounded re-refinement
+    /// ([`super::traversal::refine_sltree`]).
+    pub node_pos: Vec<u32>,
     /// The subtree containing the tree root.
     pub top: u32,
     /// Size limit used at construction.
@@ -268,8 +276,16 @@ impl SlTree {
             st.boundary = links;
         }
 
+        // Position lookup: node id -> index inside its subtree's slab.
+        let mut node_pos = vec![0u32; tree.len()];
+        for st in &subtrees {
+            for (p, &n) in st.nodes.iter().enumerate() {
+                node_pos[n as usize] = p as u32;
+            }
+        }
+
         let top = node_sid[LodTree::ROOT as usize];
-        SlTree { subtrees, node_sid, top, tau_s }
+        SlTree { subtrees, node_sid, node_pos, top, tau_s }
     }
 
     /// Convenience wrapper over [`super::traversal::traverse_sltree`]
@@ -278,11 +294,14 @@ impl SlTree {
         super::traversal::traverse_sltree(tree, self, cam, tau, 4).0
     }
 
+    /// Number of subtrees in the partition.
     #[inline]
     pub fn len(&self) -> usize {
         self.subtrees.len()
     }
 
+    /// Whether the partition holds no subtrees (never true after
+    /// `partition` — an empty tree cannot be partitioned).
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.subtrees.is_empty()
@@ -311,6 +330,9 @@ impl SlTree {
                 seen[n as usize] = true;
                 if self.node_sid[n as usize] != sid {
                     return Err(format!("node {n}: node_sid mismatch"));
+                }
+                if self.node_pos[n as usize] != p as u32 {
+                    return Err(format!("node {n}: node_pos mismatch"));
                 }
                 let end = p + 1 + st.skip[p] as usize;
                 if end > st.len() {
@@ -450,6 +472,18 @@ mod tests {
                     child_st.roots.iter().any(|r| r.parent_node == n),
                     "boundary ({pos},{csid}) has no matching root"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn node_pos_roundtrips_through_the_slabs() {
+        let tree = scene_tree();
+        for slt in [SlTree::partition(&tree, 32), SlTree::partition_unmerged(&tree, 16)] {
+            for n in 0..tree.len() as u32 {
+                let sid = slt.node_sid[n as usize] as usize;
+                let pos = slt.node_pos[n as usize] as usize;
+                assert_eq!(slt.subtrees[sid].nodes[pos], n);
             }
         }
     }

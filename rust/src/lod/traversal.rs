@@ -13,22 +13,45 @@
 //! streaming burst; because subtrees are size-capped, per-activation
 //! work is bounded; dynamic (greedy) scheduling soaks up the remaining
 //! view-dependent imbalance. Semantics are **bit-accurate** vs
-//! `LodTree::canonical_search` (asserted by tests and the `proptest`
+//! [`LodTree::canonical_search`] (asserted by tests and the `proptest`
 //! suite in `rust/tests/`).
+//!
+//! Two entry points share the scan dataflow:
+//!
+//! * [`traverse_sltree`] — the full (cold) search from the top subtree;
+//! * [`refine_sltree`] — a *bounded* search seeded at one node, used by
+//!   [`super::cut_cache::CutCache`] to patch a cached cut when a node
+//!   stops meeting the LoD between frames.
 
-use super::sltree::SlTree;
+use super::sltree::{SlTree, Subtree};
 use super::tree::{LodTree, NONE};
-use crate::math::Camera;
+use crate::math::{Camera, Frustum};
+use std::collections::VecDeque;
 
 /// Execution + memory trace of one SLTree traversal; the input the
 /// LTCore / GPU models replay.
+///
+/// Counter invariants (asserted by `fetches_are_bounded_by_subtree_count`
+/// and the proptest suite):
+///
+/// * `activations >= subtree_fetches` — a subtree may be activated by
+///   several boundary parents but is fetched (streamed from DRAM) only
+///   on first touch;
+/// * `bytes_streamed` = sum of `subtree_bytes[sid]` over first-touch
+///   sids, in bytes (36 B per node, the Fig. 7 attribute set);
+/// * `visited >= selected` and `selected ==` the returned cut length;
+/// * `visited == activation_sizes.iter().sum()` for full traversals;
+/// * `revalidated + reseeded > 0` implies `cache_hit == 1` — only the
+///   temporal cut cache's incremental path produces them.
 #[derive(Clone, Debug, Default)]
 pub struct TraversalTrace {
-    /// Nodes tested per worker thread (dynamic greedy schedule).
+    /// Nodes tested per worker thread (dynamic greedy schedule). Empty
+    /// for cut-cache incremental traces, which model no LT schedule.
     pub per_thread_nodes: Vec<u64>,
-    /// Node tests in total.
+    /// Node tests in total (each is one frustum test, plus one LoD test
+    /// when the node is in-frustum).
     pub visited: u64,
-    /// Selected (cut) Gaussians.
+    /// Selected (cut) Gaussians; equals the returned cut length.
     pub selected: u64,
     /// Distinct subtree DRAM fetches (first touch of a subtree).
     pub subtree_fetches: u64,
@@ -37,7 +60,7 @@ pub struct TraversalTrace {
     /// Total activations dequeued (>= subtree_fetches: a subtree can be
     /// activated by several boundary parents but is fetched once).
     pub activations: u64,
-    /// Peak subtree-queue occupancy.
+    /// Peak subtree-queue occupancy (work items, not bytes).
     pub queue_peak: usize,
     /// Per-activation node counts (workload distribution, Fig. 12 util).
     pub activation_sizes: Vec<u32>,
@@ -45,12 +68,34 @@ pub struct TraversalTrace {
     /// LTCore subtree-cache model).
     pub activation_sids: Vec<u32>,
     /// Bytes of each subtree (indexed by sid) for memory accounting.
+    /// Filled by full traversals; empty for incremental traces.
     pub subtree_bytes: Vec<u32>,
+    /// Frustum-culled frontier: every node that was reached (all
+    /// ancestors descended) but failed the frustum test. Together with
+    /// the cut these form the traversal *frontier* — the antichain the
+    /// temporal cut cache revalidates next frame. Filled only by
+    /// [`traverse_sltree_frontier`] (the cut cache's cold path); plain
+    /// [`traverse_sltree`] leaves it empty so simulator and bench
+    /// callers don't pay for a frontier they never read.
+    pub culled: Vec<u32>,
+    /// 1 if this trace came from the temporal cut cache's incremental
+    /// revalidation path, 0 for a full (cold) traversal.
+    pub cache_hit: u64,
+    /// Node verdicts (frustum + LoD) re-evaluated by incremental
+    /// revalidation: cached frontier nodes plus the interior ancestors
+    /// on their root paths (each memoized, so counted at most once per
+    /// frame). 0 for full traversals.
+    pub revalidated: u64,
+    /// Bounded refinements ([`refine_sltree`]) seeded at cached nodes
+    /// that stopped meeting the LoD. 0 for full traversals.
+    pub reseeded: u64,
 }
 
 impl TraversalTrace {
-    /// PE utilization under the dynamic schedule: mean/max of per-thread
-    /// work (1.0 = perfectly balanced).
+    /// PE utilization under the dynamic schedule: mean/max of the
+    /// per-thread visited-node workloads, dimensionless in `(0, 1]`
+    /// (1.0 = perfectly balanced; also 1.0 for an empty schedule, e.g.
+    /// a cut-cache incremental trace, which models no LT threads).
     pub fn utilization(&self) -> f64 {
         let max = self.per_thread_nodes.iter().copied().max().unwrap_or(0);
         if max == 0 {
@@ -70,9 +115,74 @@ struct Activation {
     parent_filter: u32,
 }
 
+/// Enqueue the boundary child subtrees recorded at position `pos` of
+/// `st` (descending past the node `n` at `pos` activates them, filtered
+/// to the roots whose parent is `n`).
+#[inline]
+fn push_boundary(st: &Subtree, pos: u32, n: u32, queue: &mut VecDeque<Activation>) {
+    // boundary is sorted by (pos, sid): binary search the run.
+    let lo = st.boundary.partition_point(|&(bp, _)| bp < pos);
+    for &(bp, csid) in &st.boundary[lo..] {
+        if bp != pos {
+            break;
+        }
+        queue.push_back(Activation { sid: csid, parent_filter: n });
+    }
+}
+
+/// Scan positions `[start, end)` of one subtree slab with the
+/// DFS-with-skip dataflow (the LT-unit inner loop): cull -> skip,
+/// select -> skip, refine -> fall through and enqueue boundary children.
+/// Selected nodes append to `cut`; frustum-culled frontier nodes append
+/// to `culled` only when `collect_culled` is set (the cut cache's
+/// frontier maintenance). Returns the number of nodes tested.
+#[allow(clippy::too_many_arguments)] // the LT-unit datapath, spelled out
+fn scan_positions(
+    tree: &LodTree,
+    st: &Subtree,
+    frustum: &Frustum,
+    cam: &Camera,
+    tau: f32,
+    start: usize,
+    end: usize,
+    queue: &mut VecDeque<Activation>,
+    cut: &mut Vec<u32>,
+    culled: &mut Vec<u32>,
+    collect_culled: bool,
+) -> u32 {
+    let mut tested = 0u32;
+    let mut p = start;
+    while p < end {
+        let n = st.nodes[p];
+        tested += 1;
+        if !frustum.intersects_aabb(&tree.aabbs[n as usize]) {
+            if collect_culled {
+                culled.push(n);
+            }
+            p += 1 + st.skip[p] as usize;
+            continue;
+        }
+        let node = &tree.nodes[n as usize];
+        if tree.meets_lod(n, cam, tau) || node.is_leaf() {
+            cut.push(n);
+            p += 1 + st.skip[p] as usize;
+            continue;
+        }
+        // Refine: descend. In-subtree children follow in DFS order;
+        // out-of-subtree children are activated via the boundary links
+        // of this position.
+        push_boundary(st, p as u32, n, queue);
+        p += 1;
+    }
+    tested
+}
+
 /// Traverse the SLTree and return the selected cut (ascending node ids)
 /// plus the trace. `threads` models the LT-unit / GPU-thread count for
 /// the workload-distribution statistics (results are independent of it).
+/// The trace's `culled` list stays empty — use
+/// [`traverse_sltree_frontier`] when the frustum-culled frontier is
+/// needed too.
 pub fn traverse_sltree(
     tree: &LodTree,
     slt: &SlTree,
@@ -80,15 +190,42 @@ pub fn traverse_sltree(
     tau: f32,
     threads: usize,
 ) -> (Vec<u32>, TraversalTrace) {
+    traverse_sltree_impl(tree, slt, cam, tau, threads, false)
+}
+
+/// [`traverse_sltree`] variant that additionally records the
+/// frustum-culled frontier in the trace's `culled` list — the cut
+/// (selected) plus `culled` (rejected) nodes together form the
+/// antichain [`super::cut_cache::CutCache`] revalidates on the next
+/// frame. Identical cut and counters otherwise.
+pub fn traverse_sltree_frontier(
+    tree: &LodTree,
+    slt: &SlTree,
+    cam: &Camera,
+    tau: f32,
+    threads: usize,
+) -> (Vec<u32>, TraversalTrace) {
+    traverse_sltree_impl(tree, slt, cam, tau, threads, true)
+}
+
+fn traverse_sltree_impl(
+    tree: &LodTree,
+    slt: &SlTree,
+    cam: &Camera,
+    tau: f32,
+    threads: usize,
+    collect_culled: bool,
+) -> (Vec<u32>, TraversalTrace) {
     let threads = threads.max(1);
     let frustum = cam.frustum();
     let mut cut = Vec::new();
+    let mut culled = Vec::new();
     let mut trace = TraversalTrace {
         per_thread_nodes: vec![0; threads],
         ..Default::default()
     };
 
-    let mut queue = std::collections::VecDeque::new();
+    let mut queue = VecDeque::new();
     queue.push_back(Activation { sid: slt.top, parent_filter: NONE });
     let mut fetched = vec![false; slt.len()];
     trace.subtree_bytes = slt.subtrees.iter().map(|s| s.bytes() as u32).collect();
@@ -111,34 +248,10 @@ pub fn traverse_sltree(
             }
             let start = root.pos as usize;
             let end = start + 1 + st.skip[start] as usize;
-            let mut p = start;
-            while p < end {
-                let n = st.nodes[p];
-                act_nodes += 1;
-                if !frustum.intersects_aabb(&tree.aabbs[n as usize]) {
-                    p += 1 + st.skip[p] as usize;
-                    continue;
-                }
-                let node = &tree.nodes[n as usize];
-                if tree.meets_lod(n, cam, tau) || node.is_leaf() {
-                    cut.push(n);
-                    p += 1 + st.skip[p] as usize;
-                    continue;
-                }
-                // Refine: descend. In-subtree children follow in DFS
-                // order; out-of-subtree children are activated via the
-                // boundary links of this position.
-                let pos = p as u32;
-                // boundary is sorted by (pos, sid): binary search the run.
-                let lo = st.boundary.partition_point(|&(bp, _)| bp < pos);
-                for &(bp, csid) in &st.boundary[lo..] {
-                    if bp != pos {
-                        break;
-                    }
-                    queue.push_back(Activation { sid: csid, parent_filter: n });
-                }
-                p += 1;
-            }
+            act_nodes += scan_positions(
+                tree, st, &frustum, cam, tau, start, end, &mut queue, &mut cut,
+                &mut culled, collect_culled,
+            );
         }
         trace.visited += act_nodes as u64;
         trace.activation_sizes.push(act_nodes);
@@ -156,8 +269,97 @@ pub fn traverse_sltree(
     }
 
     trace.selected = cut.len() as u64;
+    trace.culled = culled;
     cut.sort_unstable();
     (cut, trace)
+}
+
+/// Bounded SLTree refinement: re-run the streaming search *below* one
+/// `seed` node that the caller has already determined must descend
+/// (in-frustum, fails the LoD test, has children).
+///
+/// The seed's in-subtree descendants are scanned with the same
+/// DFS-with-skip dataflow as [`traverse_sltree`] — one contiguous slab
+/// range, `(pos, pos + 1 + skip[pos]]` — and its boundary child
+/// subtrees are activated through the same subtree queue, so the
+/// selected set is exactly what the full traversal would select under
+/// `seed`. This is the cut cache's reseed primitive: refinement work is
+/// bounded by how much the cut actually moved, not by the tree.
+///
+/// Newly selected nodes append to `cut` and frustum-culled frontier
+/// nodes to `culled` (both unsorted — the caller owns final ordering).
+/// `fetched` is the caller's per-frame first-touch set over subtree
+/// ids (`len == slt.len()`), shared across refinements so a subtree
+/// streamed by one seed is not double-counted by another. The trace
+/// accumulates `visited` / `activations` / `subtree_fetches` /
+/// `bytes_streamed` / `activation_*` exactly as the full traversal
+/// does; the seed's own slab is *not* counted as a fetch (its bytes
+/// were already resident from the frame that cached the cut).
+#[allow(clippy::too_many_arguments)] // mirrors the traverse_sltree datapath
+pub fn refine_sltree(
+    tree: &LodTree,
+    slt: &SlTree,
+    frustum: &Frustum,
+    cam: &Camera,
+    tau: f32,
+    seed: u32,
+    cut: &mut Vec<u32>,
+    culled: &mut Vec<u32>,
+    fetched: &mut [bool],
+    trace: &mut TraversalTrace,
+) {
+    debug_assert_eq!(fetched.len(), slt.len());
+    let sid = slt.node_sid[seed as usize] as usize;
+    let pos = slt.node_pos[seed as usize] as usize;
+    let st = &slt.subtrees[sid];
+    debug_assert_eq!(st.nodes[pos], seed);
+
+    // Descend past the seed: its out-of-subtree children activate via
+    // the boundary links at `pos`, its in-subtree descendants are the
+    // contiguous skip range right after it.
+    let mut queue = VecDeque::new();
+    push_boundary(st, pos as u32, seed, &mut queue);
+    let tested = scan_positions(
+        tree,
+        st,
+        frustum,
+        cam,
+        tau,
+        pos + 1,
+        pos + 1 + st.skip[pos] as usize,
+        &mut queue,
+        cut,
+        culled,
+        true,
+    );
+    trace.visited += tested as u64;
+
+    // Drain boundary activations exactly like the full traversal.
+    while let Some(act) = queue.pop_front() {
+        trace.queue_peak = trace.queue_peak.max(queue.len() + 1);
+        trace.activations += 1;
+        let st = &slt.subtrees[act.sid as usize];
+        if !fetched[act.sid as usize] {
+            fetched[act.sid as usize] = true;
+            trace.subtree_fetches += 1;
+            trace.bytes_streamed += st.bytes();
+        }
+        let mut act_nodes = 0u32;
+        for root in &st.roots {
+            if root.parent_node != act.parent_filter {
+                continue;
+            }
+            let start = root.pos as usize;
+            let end = start + 1 + st.skip[start] as usize;
+            act_nodes += scan_positions(
+                tree, st, frustum, cam, tau, start, end, &mut queue, cut, culled,
+                true,
+            );
+        }
+        trace.visited += act_nodes as u64;
+        trace.activation_sizes.push(act_nodes);
+        trace.activation_sids.push(act.sid);
+    }
 }
 
 /// Static one-thread-per-subtree schedule over the *canonical* tree's
@@ -203,6 +405,32 @@ mod tests {
         SceneConfig::small_scale().quick().build(11)
     }
 
+    /// Reference canonical search that also records the frustum-culled
+    /// frontier (the trace only counts it).
+    fn canonical_with_culled(
+        tree: &LodTree,
+        cam: &Camera,
+        tau: f32,
+    ) -> (Vec<u32>, Vec<u32>) {
+        let frustum = cam.frustum();
+        let (mut cut, mut culled) = (Vec::new(), Vec::new());
+        let mut stack = vec![LodTree::ROOT];
+        while let Some(n) = stack.pop() {
+            if !frustum.intersects_aabb(&tree.aabbs[n as usize]) {
+                culled.push(n);
+                continue;
+            }
+            if tree.meets_lod(n, cam, tau) || tree.nodes[n as usize].is_leaf() {
+                cut.push(n);
+                continue;
+            }
+            stack.extend(tree.children(n));
+        }
+        cut.sort_unstable();
+        culled.sort_unstable();
+        (cut, culled)
+    }
+
     #[test]
     fn bit_accurate_vs_canonical() {
         let scene = scene();
@@ -225,6 +453,93 @@ mod tests {
         let (want, _) = scene.tree.canonical_search(&cam, 8.0);
         let (got, _) = traverse_sltree(&scene.tree, &slt, &cam, 8.0, 4);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn culled_frontier_matches_canonical() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        for cam_i in [0usize, 2, 5] {
+            let cam = scene.scenario_camera(cam_i);
+            for tau in [4.0, 16.0] {
+                let (want_cut, want_culled) =
+                    canonical_with_culled(&scene.tree, &cam, tau);
+                let (got_cut, trace) =
+                    traverse_sltree_frontier(&scene.tree, &slt, &cam, tau, 4);
+                let mut got_culled = trace.culled.clone();
+                got_culled.sort_unstable();
+                assert_eq!(got_cut, want_cut, "cam {cam_i} tau {tau}");
+                assert_eq!(got_culled, want_culled, "cam {cam_i} tau {tau}");
+                // Frontier nodes form an antichain with the cut: no
+                // culled node may sit below a cut node or vice versa.
+                assert!(got_cut.iter().all(|n| !trace.culled.contains(n)));
+                // The lean variant returns the identical cut with an
+                // empty frontier.
+                let (lean_cut, lean_trace) =
+                    traverse_sltree(&scene.tree, &slt, &cam, tau, 4);
+                assert_eq!(lean_cut, got_cut);
+                assert!(lean_trace.culled.is_empty());
+                assert_eq!(lean_trace.visited, trace.visited);
+            }
+        }
+    }
+
+    #[test]
+    fn refine_matches_canonical_subsearch() {
+        // Refining from any descend-verdict node must select exactly
+        // what the canonical search selects strictly below that node.
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let cam = scene.scenario_camera(1);
+        let tau_fine = 2.0;
+        let tau_coarse = 32.0;
+        let frustum = cam.frustum();
+        // Seeds: the coarse cut's nodes that fail the fine LoD test —
+        // exactly the reseed population the cut cache produces when tau
+        // (or the camera) moves toward finer detail.
+        let (coarse_cut, _) = scene.tree.canonical_search(&cam, tau_coarse);
+        let mut fetched = vec![false; slt.len()];
+        let mut refined = 0;
+        for &seed in &coarse_cut {
+            let node = &scene.tree.nodes[seed as usize];
+            if node.is_leaf()
+                || scene.tree.meets_lod(seed, &cam, tau_fine)
+                || !frustum.intersects_aabb(&scene.tree.aabbs[seed as usize])
+            {
+                continue;
+            }
+            let (mut cut, mut culled) = (Vec::new(), Vec::new());
+            let mut trace = TraversalTrace::default();
+            refine_sltree(
+                &scene.tree, &slt, &frustum, &cam, tau_fine, seed, &mut cut,
+                &mut culled, &mut fetched, &mut trace,
+            );
+            // Reference: canonical descent from the seed's children.
+            let (mut want_cut, mut want_culled) = (Vec::new(), Vec::new());
+            let mut stack: Vec<u32> = scene.tree.children(seed).collect();
+            while let Some(n) = stack.pop() {
+                if !frustum.intersects_aabb(&scene.tree.aabbs[n as usize]) {
+                    want_culled.push(n);
+                    continue;
+                }
+                if scene.tree.meets_lod(n, &cam, tau_fine)
+                    || scene.tree.nodes[n as usize].is_leaf()
+                {
+                    want_cut.push(n);
+                    continue;
+                }
+                stack.extend(scene.tree.children(n));
+            }
+            cut.sort_unstable();
+            culled.sort_unstable();
+            want_cut.sort_unstable();
+            want_culled.sort_unstable();
+            assert_eq!(cut, want_cut, "seed {seed}");
+            assert_eq!(culled, want_culled, "seed {seed}");
+            assert!(trace.visited >= (cut.len() + culled.len()) as u64);
+            refined += 1;
+        }
+        assert!(refined > 0, "no refinement seeds — test scene degenerate");
     }
 
     #[test]
@@ -289,6 +604,10 @@ mod tests {
         let (_, t) = traverse_sltree(&scene.tree, &slt, &cam, 8.0, 4);
         assert!(t.subtree_fetches <= slt.len() as u64);
         assert!(t.activations >= t.subtree_fetches);
+        // Cold traversals never report cache activity.
+        assert_eq!(t.cache_hit, 0);
+        assert_eq!(t.revalidated, 0);
+        assert_eq!(t.reseeded, 0);
         // Every fetch streams one whole subtree, and only the *first*
         // activation of a subtree fetches it: recompute the expected
         // byte count by summing `subtree_bytes` over first-touch sids.

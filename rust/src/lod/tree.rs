@@ -19,14 +19,19 @@ pub const NONE: u32 = u32::MAX;
 /// `[first_child, first_child + child_count)`.
 #[derive(Clone, Copy, Debug)]
 pub struct Node {
+    /// Parent node id ([`NONE`] for the root).
     pub parent: u32,
+    /// First child's node id (children are contiguous; unused when
+    /// `child_count == 0`).
     pub first_child: u32,
+    /// Number of children (0 = leaf).
     pub child_count: u32,
     /// Depth from the root (root = 0).
     pub level: u16,
 }
 
 impl Node {
+    /// Whether this node has no children (a true leaf Gaussian).
     #[inline]
     pub fn is_leaf(&self) -> bool {
         self.child_count == 0
@@ -36,12 +41,14 @@ impl Node {
 /// The canonical LoD tree.
 #[derive(Clone, Debug, Default)]
 pub struct LodTree {
+    /// All nodes in BFS order from the root (node id == Gaussian id).
     pub nodes: Vec<Node>,
     /// Conservative world AABB of node `i`'s entire subtree.
     pub aabbs: Vec<Aabb>,
     /// World-space extent of the node's own Gaussian (longest 3-sigma
     /// edge) — the quantity whose projection the LoD test compares.
     pub world_size: Vec<f32>,
+    /// Tree height in levels (a root-only tree has height 1).
     pub height: u32,
 }
 
@@ -57,13 +64,16 @@ pub struct CanonicalTrace {
 }
 
 impl LodTree {
+    /// The root node id (BFS layout stores the root first).
     pub const ROOT: u32 = 0;
 
+    /// Number of nodes (== number of Gaussians).
     #[inline]
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Whether the tree has no nodes at all.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()

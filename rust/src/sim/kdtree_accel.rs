@@ -149,6 +149,7 @@ mod tests {
                 subtree_fetches: 1_400,
                 per_thread_nodes: vec![10_000; 4],
                 queue_peak: 64,
+                ..Default::default()
             },
         }
     }

@@ -246,6 +246,7 @@ mod tests {
             activation_sizes: vec![32; 125],
             activation_sids: (0..125).collect(),
             subtree_bytes: vec![32 * 36; 125],
+            ..Default::default()
         };
         let r = search(&trace, &cfg(), &DramConfig::default());
         assert_eq!(r.cache.misses, 125);

@@ -141,6 +141,7 @@ mod tests {
                 subtree_fetches: 1_500,
                 per_thread_nodes: vec![11_250; 4],
                 queue_peak: 40,
+                ..Default::default()
             },
         };
         let gaussian_tiles = 70_000u64;

@@ -167,6 +167,41 @@ fn concurrent_parallel_front_end_matches_sequential_sessions() {
 }
 
 #[test]
+fn cut_cache_camera_jump_falls_back_and_stays_correct() {
+    use sltarch::lod::CutCacheConfig;
+    use sltarch::scene::orbit_cameras;
+    let p = quick_pipeline(38);
+    // Frames 0..=3: a slow orbit (~1.1 world units / ~0.2 rad between
+    // frames). Frame 4 teleports across the scene; frame 5 holds still.
+    let mut cams: Vec<_> =
+        orbit_cameras(6.0, 0.9, 32, 256, 256).into_iter().take(4).collect();
+    cams.push(p.scene().scenario_camera(5));
+    cams.push(p.scene().scenario_camera(5));
+    let jumpy = RenderOptions {
+        cut_cache: CutCacheConfig { max_translation: 2.0, ..Default::default() },
+        ..p.default_options()
+    };
+    let mut session = p.session_with(jumpy);
+    let images = session.render_path(&cams).unwrap();
+    let stats = *session.stats();
+    // cold, hit, hit, hit, cold (teleport beyond max_translation), hit.
+    assert_eq!(stats.cache_hit, 4, "jump fallback pattern wrong");
+    assert!(stats.revalidated > 0);
+    // Every frame — before, across and after the fallback — must equal
+    // a cache-disabled render bit-for-bit.
+    let mut cold = p.session_with(RenderOptions {
+        cut_cache: CutCacheConfig::disabled(),
+        ..p.default_options()
+    });
+    let want = cold.render_path(&cams).unwrap();
+    assert_eq!(cold.stats().cache_hit, 0);
+    assert_eq!(cold.stats().revalidated, 0);
+    for (i, (a, b)) in images.iter().zip(want.iter()).enumerate() {
+        assert_eq!(a.data, b.data, "frame {i} diverged around the fallback");
+    }
+}
+
+#[test]
 fn simulation_is_deterministic_across_runs() {
     let p = quick_pipeline(32);
     let cam = p.scene().scenario_camera(2);

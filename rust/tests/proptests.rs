@@ -7,7 +7,7 @@ use sltarch::config::SceneConfig;
 use sltarch::coordinator::renderer::{AlphaMode, CpuRenderer};
 use sltarch::coordinator::{CpuBackend, FramePipeline, RenderOptions};
 use sltarch::gaussian::{project_into, project_into_threaded, Splat2D};
-use sltarch::lod::{traverse_sltree, SlTree};
+use sltarch::lod::{traverse_sltree, CutCache, CutCacheConfig, SlTree};
 use sltarch::math::{Camera, Intrinsics, Vec2, Vec3};
 use sltarch::scene::{build_lod_tree, GeneratorKind, SceneSpec};
 use sltarch::splat::blend::PIXELS;
@@ -77,6 +77,75 @@ fn prop_traversal_bit_accurate_for_any_camera_and_tau() {
                 let (_, t) = tree.canonical_search(&cam, tau);
                 t.visited
             });
+        }
+    });
+}
+
+#[test]
+fn prop_cut_cache_is_bit_identical_across_taus_and_cameras() {
+    // Tentpole contract: the temporal cut cache's incremental
+    // revalidation selects exactly the canonical cut at every frame of
+    // any camera sequence — even a teleporting one, with every full-
+    // search fallback disabled so the incremental path itself is what
+    // runs on frames 1+.
+    forall(8, |rng| {
+        let (_, tree) = random_scene(rng);
+        let extent = tree.aabbs[0].half_extent().max_component();
+        let tau_s = 8 + rng.below(56) as u32;
+        let slt = SlTree::partition(&tree, tau_s);
+        let cfg = CutCacheConfig {
+            enabled: true,
+            max_translation: f32::INFINITY,
+            max_rotation: std::f32::consts::PI,
+            refresh_every: 0,
+        };
+        for tau in [rng.range(0.5, 8.0), rng.range(8.0, 64.0)] {
+            let mut cache = CutCache::new();
+            for i in 0..6u64 {
+                let cam = random_camera(rng, extent.max(1.0));
+                let (want, _) = tree.canonical_search(&cam, tau);
+                let (got, trace) = cache.search(&tree, &slt, &cam, tau, &cfg);
+                assert_eq!(
+                    got,
+                    want.as_slice(),
+                    "frame {i} tau {tau} tau_s {tau_s}"
+                );
+                assert_eq!(trace.cache_hit, u64::from(i > 0), "frame {i}");
+                assert_eq!(trace.selected, want.len() as u64);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cached_sessions_render_identically_across_widths() {
+    // The cut cache must never change pixels: cached-path session
+    // renders equal cache-disabled renders at scheduler widths
+    // {1, 2, 8} along a camera path.
+    forall(4, |rng| {
+        let mut cfg = SceneConfig::small_scale().quick();
+        cfg.leaves = 1_500 + rng.below(1_500);
+        let pipeline = FramePipeline::builder(cfg.build(rng.next_u64())).build();
+        let cams: Vec<Camera> =
+            (0..4).map(|i| pipeline.scene().scenario_camera(i)).collect();
+        for threads in [1usize, 2, 8] {
+            let backend = CpuBackend::with_threads(threads);
+            let mut cached =
+                pipeline.session_on(&backend, pipeline.default_options());
+            let mut cold = pipeline.session_on(
+                &backend,
+                RenderOptions {
+                    cut_cache: CutCacheConfig::disabled(),
+                    ..pipeline.default_options()
+                },
+            );
+            let a = cached.render_path(&cams).unwrap();
+            let b = cold.render_path(&cams).unwrap();
+            for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                assert_eq!(x.data, y.data, "frame {i} at {threads} threads");
+            }
+            assert_eq!(cold.stats().cache_hit, 0);
+            assert!(cached.stats().cache_hit <= cams.len() as u64 - 1);
         }
     });
 }
