@@ -8,7 +8,7 @@
 use sltarch::config::SceneConfig;
 use sltarch::coordinator::renderer::AlphaMode;
 use sltarch::coordinator::workload::{lod_workload, splat_workload};
-use sltarch::coordinator::{FramePipeline, RenderOptions};
+use sltarch::coordinator::{BlendKernel, FramePipeline, RenderOptions};
 use sltarch::metrics::psnr;
 
 fn main() -> anyhow::Result<()> {
@@ -21,12 +21,19 @@ fn main() -> anyhow::Result<()> {
     }
     let pipeline = FramePipeline::builder(cfg.build(42)).build();
 
-    // Two sessions over one pipeline: the canonical per-pixel stream and
-    // the group-alpha stream, rendering the same cameras.
+    // Three sessions over one pipeline: the canonical per-pixel stream,
+    // the group-alpha stream (scalar reference kernel), and the same
+    // group dataflow through the divergence-free SoA kernel — which
+    // must reproduce the scalar frames bit for bit.
     let mut px_sess = pipeline
         .session_with(RenderOptions { alpha: AlphaMode::Pixel, ..pipeline.default_options() });
     let mut gp_sess = pipeline
         .session_with(RenderOptions { alpha: AlphaMode::Group, ..pipeline.default_options() });
+    let mut soa_sess = pipeline.session_with(RenderOptions {
+        alpha: AlphaMode::Group,
+        kernel: BlendKernel::Soa,
+        ..pipeline.default_options()
+    });
 
     println!(
         "{:>9} {:>10} {:>12} {:>12} {:>13} {:>12}",
@@ -47,6 +54,11 @@ fn main() -> anyhow::Result<()> {
                 / w.pixel.alpha_evals.max(1) as f64;
         let px = px_sess.render(&cam)?;
         let gp = gp_sess.render(&cam)?;
+        let soa = soa_sess.render(&cam)?;
+        assert_eq!(
+            gp.data, soa.data,
+            "SoA kernel must be bit-identical to the scalar kernel"
+        );
         println!(
             "{i:>9} {:>10} {:>11.1}% {:>11.1}% {:>12.1}% {:>12.2}",
             w.pairs,
@@ -56,13 +68,23 @@ fn main() -> anyhow::Result<()> {
             psnr(&px, &gp).min(99.0)
         );
     }
-    let (px, gp) = (px_sess.stats(), gp_sess.stats());
+    let (px, gp, soa) =
+        (px_sess.stats(), gp_sess.stats(), soa_sess.stats());
     println!(
         "\nsession stats: pixel {:.1} ms/frame vs group {:.1} ms/frame \
          over {} frames each",
         px.ms_per_frame(),
         gp.ms_per_frame(),
         px.frames
+    );
+    let blend_ms = |st: &sltarch::coordinator::RenderStats| {
+        st.stages.blend * 1e3 / st.frames.max(1) as f64
+    };
+    println!(
+        "blend stage: scalar kernel {:.2} ms/frame vs SoA kernel {:.2} \
+         ms/frame (identical pixels; RenderOptions::kernel)",
+        blend_ms(gp),
+        blend_ms(soa)
     );
     println!(
         "pixel util matches the paper's ~31% GPU-utilization floor; the\n\

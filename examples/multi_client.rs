@@ -11,7 +11,9 @@
 
 use sltarch::config::SceneConfig;
 use sltarch::coordinator::renderer::AlphaMode;
-use sltarch::coordinator::{CpuBackend, FramePipeline, RenderOptions, RenderStats};
+use sltarch::coordinator::{
+    BlendKernel, CpuBackend, FramePipeline, RenderOptions, RenderStats,
+};
 use sltarch::scene::orbit_cameras;
 
 fn arg_usize(args: &[String], key: &str, default: usize) -> usize {
@@ -59,8 +61,12 @@ fn main() -> anyhow::Result<()> {
                 let pipeline = &pipeline;
                 s.spawn(move || {
                     let alpha = if c % 2 == 0 { AlphaMode::Group } else { AlphaMode::Pixel };
+                    // Every client blends through the divergence-free
+                    // SoA kernel (byte-identical to the scalar
+                    // reference; see `splat::kernel`).
                     let mut session = pipeline.session_with(RenderOptions {
                         alpha,
+                        kernel: BlendKernel::Soa,
                         ..pipeline.default_options()
                     });
                     let range = 0.5 + 0.4 * (c as f32 + 1.0) / clients as f32;
@@ -95,14 +101,15 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // Aggregate serving report: merge the per-client stats, then score
-    // throughput against the measured concurrent span.
+    // Aggregate serving report: the clients ran concurrently, so fold
+    // them with `merge_concurrent` — it pins `wall_seconds` to the
+    // measured span (a plain `merge` would sum the per-client clocks
+    // and under-report aggregate fps).
+    let busy: f64 = per_client.iter().map(|st| st.wall_seconds).sum();
     let mut total = RenderStats::default();
     for st in &per_client {
-        total.merge(st);
+        total.merge_concurrent(st, span);
     }
-    let busy = total.wall_seconds; // summed per-client render time
-    total.wall_seconds = span;
     println!("\n=== aggregate ({clients} clients sharing one pipeline) ===");
     println!("frames             : {}", total.frames);
     println!(

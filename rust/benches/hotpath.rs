@@ -6,7 +6,7 @@
 //! `BENCH_hotpath.json` so CI can accumulate the perf trajectory.
 use sltarch::config::{RenderConfig, SceneConfig};
 use sltarch::coordinator::renderer::{default_threads, AlphaMode, CpuRenderer};
-use sltarch::coordinator::{CpuBackend, FramePipeline};
+use sltarch::coordinator::{BlendKernel, CpuBackend, FramePipeline, RenderOptions};
 use sltarch::gaussian::{project, project_into, project_into_threaded, Splat2D};
 use sltarch::lod::{traverse_sltree, CutCache, CutCacheConfig, SlTree};
 use sltarch::scene::{orbit_cameras, walkthrough};
@@ -176,6 +176,31 @@ fn main() {
         b.record(&format!("stage {name} ms/frame"), ms);
     }
     b.record("front_end_threads", stats.front_end_threads as f64);
+
+    // The PR-5 tentpole rows: the blend stage alone, scalar reference
+    // kernel vs the divergence-free SoA kernel, at scheduler widths
+    // {1, machine}. Both kernels render byte-identical frames (golden
+    // harness), so the ms/frame delta is pure inner-loop win.
+    let kernel_frames = if quick { 6 } else { 16 };
+    let kernel_cams = orbit_cameras(extent, 0.9, kernel_frames, 256, 256);
+    for &w in widths {
+        for (kname, kernel) in
+            [("scalar", BlendKernel::Scalar), ("soa", BlendKernel::Soa)]
+        {
+            let backend = CpuBackend::with_threads(w);
+            let mut kernel_session = pipeline.session_on(
+                &backend,
+                RenderOptions { kernel, ..pipeline.default_options() },
+            );
+            kernel_session.render_path(&kernel_cams).expect("kernel bench render");
+            let st = kernel_session.stats();
+            let blend_ms = st.stages.blend * 1e3 / st.frames as f64;
+            b.record(
+                &format!("blend(kernel={kname}, {w} threads) ms/frame"),
+                blend_ms,
+            );
+        }
+    }
 
     b.report();
     let json = std::path::Path::new("BENCH_hotpath.json");

@@ -15,6 +15,7 @@ use crate::config::RenderConfig;
 use crate::lod::CutCacheConfig;
 use crate::metrics::Image;
 use crate::runtime::PjrtEngine;
+use crate::splat::BlendKernel;
 use anyhow::Result;
 
 /// Typed per-session render knobs (replaces the per-call `AlphaMode`
@@ -23,6 +24,12 @@ use anyhow::Result;
 pub struct RenderOptions {
     /// Alpha dataflow: canonical per-pixel or SLTarch 2x2 group.
     pub alpha: AlphaMode,
+    /// CPU blend-kernel implementation: the branchy AoS scalar
+    /// reference loop or the divergence-free SoA kernel
+    /// ([`crate::splat::kernel`], the software SPcore). Byte-identical
+    /// outputs per alpha mode — this knob only trades blend time.
+    /// Offload backends (PJRT) ignore it.
+    pub kernel: BlendKernel,
     /// LoD granularity in projected pixels (the paper's tau).
     pub lod_tau: f32,
     /// Unified scheduler width: drives the chunked projection, the
@@ -42,6 +49,7 @@ impl Default for RenderOptions {
     fn default() -> Self {
         RenderOptions {
             alpha: AlphaMode::Group,
+            kernel: BlendKernel::Scalar,
             lod_tau: 32.0,
             threads: 0,
             cut_cache: CutCacheConfig::default(),
@@ -61,10 +69,12 @@ pub trait RenderBackend: Send + Sync {
     fn threads(&self, opts: &RenderOptions) -> usize;
 
     /// Blend `scratch` (already projected, binned and depth-sorted)
-    /// into `img`.
+    /// into `img`. The scratch is mutable so CPU kernels can use its
+    /// per-worker accumulation pools (`FrameScratch::tiles`); the
+    /// prepared bins/splats are only read.
     fn blend(
         &self,
-        scratch: &FrameScratch,
+        scratch: &mut FrameScratch,
         opts: &RenderOptions,
         rcfg: &RenderConfig,
         img: &mut Image,
@@ -112,7 +122,7 @@ impl RenderBackend for CpuBackend {
 
     fn blend(
         &self,
-        scratch: &FrameScratch,
+        scratch: &mut FrameScratch,
         opts: &RenderOptions,
         rcfg: &RenderConfig,
         img: &mut Image,
@@ -120,6 +130,7 @@ impl RenderBackend for CpuBackend {
         blend_tiles(
             scratch,
             opts.alpha.blend_mode(),
+            opts.kernel,
             rcfg.t_min,
             self.threads(opts),
             img,
@@ -158,13 +169,15 @@ impl RenderBackend for PjrtBackend {
 
     fn blend(
         &self,
-        scratch: &FrameScratch,
+        scratch: &mut FrameScratch,
         opts: &RenderOptions,
         rcfg: &RenderConfig,
         img: &mut Image,
     ) -> Result<()> {
         // A panicked blend can't leave the engine in a bad state (each
         // SplatChunk::run is self-contained), so ride through poison.
+        // `RenderOptions::kernel` is CPU-only; the artifacts implement
+        // one (group-check) dataflow per alpha mode.
         let engine = self.engine.lock().unwrap_or_else(|e| e.into_inner());
         blend_tiles_pjrt(
             &engine,

@@ -8,7 +8,10 @@
 //!   front-end scratch, temporal cut cache, unified stats); N sessions
 //!   over one `&FramePipeline` form the multi-client serving surface.
 //! * [`backend`] — the [`RenderBackend`] trait with the pure-CPU
-//!   ([`CpuBackend`]) and AOT-artifact ([`PjrtBackend`]) blenders.
+//!   ([`CpuBackend`]) and AOT-artifact ([`PjrtBackend`]) blenders;
+//!   [`RenderOptions::kernel`] picks the CPU blend-kernel
+//!   implementation ([`BlendKernel`]: scalar reference or the
+//!   divergence-free SoA kernel, byte-identical outputs).
 //! * [`stats`] — [`RenderStats`] / [`StageTimings`]: one report type
 //!   for frames, paths and serving sessions, including the cut cache's
 //!   `cache_hit` / `revalidated` / `reseeded` counters.
@@ -27,6 +30,7 @@ pub mod stats;
 pub mod workload;
 
 pub use crate::lod::cut_cache::{CutCache, CutCacheConfig};
+pub use crate::splat::BlendKernel;
 pub use backend::{CpuBackend, PjrtBackend, RenderBackend, RenderOptions};
 pub use pipeline::{FramePipeline, FramePipelineBuilder, SimulationReport};
 pub use renderer::{AlphaMode, CpuRenderer, FrameScratch};

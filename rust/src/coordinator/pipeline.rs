@@ -84,6 +84,14 @@ impl FramePipelineBuilder {
         self
     }
 
+    /// Default CPU blend kernel for sessions: the scalar reference loop
+    /// or the divergence-free SoA kernel (byte-identical outputs; see
+    /// [`crate::splat::kernel`]).
+    pub fn kernel(mut self, kernel: crate::splat::BlendKernel) -> Self {
+        self.defaults.kernel = kernel;
+        self
+    }
+
     /// LoD granularity tau (projected pixels) — sets both the pipeline
     /// config and the session default.
     pub fn tau(mut self, tau: f32) -> Self {
@@ -367,16 +375,24 @@ mod tests {
 
     #[test]
     fn session_matches_reference_renderer() {
+        use crate::splat::BlendKernel;
         let p = pipeline();
         let cam = p.scene().scenario_camera(1);
         let cut = p.search(&cam);
         let queue = p.scene().gaussians.gather(&cut);
         for alpha in [AlphaMode::Pixel, AlphaMode::Group] {
-            let mut session =
-                p.session_with(RenderOptions { alpha, ..p.default_options() });
-            let got = session.render(&cam).unwrap();
-            let want = CpuRenderer::render(&queue, &cam, alpha, p.rcfg());
-            assert_eq!(got.data, want.data, "{alpha:?}");
+            // Both kernels must reproduce the stateless scalar
+            // reference exactly.
+            for kernel in [BlendKernel::Scalar, BlendKernel::Soa] {
+                let mut session = p.session_with(RenderOptions {
+                    alpha,
+                    kernel,
+                    ..p.default_options()
+                });
+                let got = session.render(&cam).unwrap();
+                let want = CpuRenderer::render(&queue, &cam, alpha, p.rcfg());
+                assert_eq!(got.data, want.data, "{alpha:?} / {kernel:?}");
+            }
         }
     }
 
@@ -397,6 +413,7 @@ mod tests {
             .tau(8.0)
             .subtree_size(16)
             .alpha(AlphaMode::Pixel)
+            .kernel(crate::splat::BlendKernel::Soa)
             .threads(2)
             .backend(CpuBackend::with_threads(4))
             .build();
@@ -404,6 +421,7 @@ mod tests {
         assert_eq!(p.rcfg().subtree_size, 16);
         let opts = p.default_options();
         assert_eq!(opts.alpha, AlphaMode::Pixel);
+        assert_eq!(opts.kernel, crate::splat::BlendKernel::Soa);
         assert_eq!(opts.lod_tau, 8.0);
         assert_eq!(opts.threads, 2);
         assert_eq!(p.backend().threads(&opts), 2);

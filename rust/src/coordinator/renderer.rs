@@ -25,8 +25,8 @@ use crate::metrics::Image;
 use crate::runtime::{PjrtEngine, SplatChunk, SplatState, K_CHUNK};
 use crate::splat::blend::PIXELS;
 use crate::splat::{
-    bin_splats_into_threaded, blend_tile, sort_bins_threaded, BlendMode,
-    DepthSortScratch, TileBins, TILE,
+    bin_splats_into_threaded, blend_tile, blend_tile_soa, sort_bins_threaded,
+    BlendKernel, BlendMode, DepthSortScratch, TileBins, TileState, TILE,
 };
 use super::stats::StageTimings;
 use anyhow::Result;
@@ -64,6 +64,11 @@ pub struct FrameScratch {
     /// Per-worker radix-sort scratches (grown to the scheduler width on
     /// first use; index 0 serves the serial path).
     pub sort: Vec<DepthSortScratch>,
+    /// Per-worker SoA tile accumulation planes for the SoA blend kernel
+    /// (grown to the scheduler width on first use; index 0 serves the
+    /// serial path). The scalar kernel uses per-worker stack arrays and
+    /// leaves this pool empty.
+    pub tiles: Vec<TileState>,
     /// Work list of non-empty tile indices (the scheduler's queue).
     work: Vec<u32>,
 }
@@ -140,9 +145,9 @@ struct SharedImage {
     height: u32,
 }
 
-// SAFETY: workers only ever write through `store_tile`, and the atomic
-// work queue hands each tile index to exactly one worker, so concurrent
-// writes never alias.
+// SAFETY: workers only ever write through `store_tile` /
+// `store_tile_planes`, and the atomic work queue hands each tile index
+// to exactly one worker, so concurrent writes never alias.
 unsafe impl Send for SharedImage {}
 unsafe impl Sync for SharedImage {}
 
@@ -181,6 +186,39 @@ impl SharedImage {
             }
         }
     }
+
+    /// Store one tile's pixels from SoA colour planes (the SoA blend
+    /// kernel's `TileState`), interleaving on the fly.
+    ///
+    /// # Safety
+    /// Same contract as [`SharedImage::store_tile`].
+    unsafe fn store_tile_planes(
+        &self,
+        origin: (f32, f32),
+        r: &[f32; PIXELS],
+        g: &[f32; PIXELS],
+        b: &[f32; PIXELS],
+    ) {
+        let ox = origin.0 as u32;
+        let oy = origin.1 as u32;
+        for py in 0..TILE {
+            let y = oy + py;
+            if y >= self.height {
+                break;
+            }
+            for px in 0..TILE {
+                let x = ox + px;
+                if x >= self.width {
+                    break;
+                }
+                let p = (py * TILE + px) as usize;
+                unsafe {
+                    *self.data.add((y * self.width + x) as usize) =
+                        [r[p], g[p], b[p]];
+                }
+            }
+        }
+    }
 }
 
 /// Reset the accumulation scratch and blend one tile into it.
@@ -200,8 +238,25 @@ fn blend_one_tile(
 }
 
 /// Splat every non-empty tile of `scratch` into `img`, using `threads`
-/// workers over a dynamic-greedy shared queue (1 = serial reference).
+/// workers over a dynamic-greedy shared queue (1 = serial reference)
+/// and the chosen blend-kernel implementation. The two kernels are
+/// byte-identical per [`BlendMode`]; `kernel` only trades blend time.
 pub(crate) fn blend_tiles(
+    scratch: &mut FrameScratch,
+    mode: BlendMode,
+    kernel: BlendKernel,
+    t_min: f32,
+    threads: usize,
+    img: &mut Image,
+) {
+    match kernel {
+        BlendKernel::Scalar => blend_tiles_scalar(scratch, mode, t_min, threads, img),
+        BlendKernel::Soa => blend_tiles_soa(scratch, mode, t_min, threads, img),
+    }
+}
+
+/// [`blend_tiles`] with the scalar reference kernel ([`blend_tile`]).
+fn blend_tiles_scalar(
     scratch: &FrameScratch,
     mode: BlendMode,
     t_min: f32,
@@ -265,6 +320,70 @@ pub(crate) fn blend_tiles(
                     // outlives the scope.
                     unsafe { target.store_tile(origin, &rgb) };
                 }
+            });
+        }
+    });
+}
+
+/// [`blend_tiles`] with the divergence-free SoA kernel
+/// ([`blend_tile_soa`]): same dynamic-greedy tile scheduler, but each
+/// worker blends into a reusable [`TileState`] from the
+/// [`FrameScratch::tiles`] pool (SoA planes, no steady-state
+/// allocation) and stores the planes straight into the frame image.
+fn blend_tiles_soa(
+    scratch: &mut FrameScratch,
+    mode: BlendMode,
+    t_min: f32,
+    threads: usize,
+    img: &mut Image,
+) {
+    let FrameScratch { splats, bins, tiles, work, .. } = scratch;
+    let bins = &*bins;
+    let splats = &splats[..];
+    let work = &work[..];
+    if threads <= 1 || work.len() <= 1 {
+        if tiles.is_empty() {
+            tiles.push(TileState::fresh());
+        }
+        let state = &mut tiles[0];
+        for &idx in work {
+            let origin = bins.tile_origin(idx as usize);
+            state.reset();
+            blend_tile_soa(bins.tile(idx as usize), splats, origin, mode, state, t_min);
+            let shared = SharedImage::new(img);
+            // SAFETY: `img` is exclusively borrowed, no concurrency.
+            unsafe { shared.store_tile_planes(origin, &state.r, &state.g, &state.b) };
+        }
+        return;
+    }
+
+    let workers = threads.min(work.len());
+    if tiles.len() < workers {
+        tiles.resize_with(workers, TileState::fresh);
+    }
+    let cursor = AtomicUsize::new(0);
+    let target = SharedImage::new(img);
+    let cursor = &cursor;
+    let target = &target;
+    std::thread::scope(|s| {
+        for state in tiles[..workers].iter_mut() {
+            // Each worker owns one TileState from the pool for the
+            // whole pass; the shared cursor hands out tiles.
+            s.spawn(move || loop {
+                let w = cursor.fetch_add(1, Ordering::Relaxed);
+                if w >= work.len() {
+                    break;
+                }
+                let idx = work[w] as usize;
+                let origin = bins.tile_origin(idx);
+                state.reset();
+                blend_tile_soa(bins.tile(idx), splats, origin, mode, state, t_min);
+                // SAFETY: `w` (hence `idx`) is claimed by exactly one
+                // worker and tiles never overlap; the image outlives
+                // the scope.
+                unsafe {
+                    target.store_tile_planes(origin, &state.r, &state.g, &state.b)
+                };
             });
         }
     });
@@ -340,7 +459,18 @@ impl CpuRenderer {
     ) -> Image {
         front_end_into(queue, cam, scratch, threads);
         let mut img = Image::new(cam.intr.width, cam.intr.height);
-        blend_tiles(scratch, mode.blend_mode(), rcfg.t_min, threads, &mut img);
+        // The stateless reference renderer always runs the scalar
+        // kernel — it is the ground truth the SoA kernel (selected via
+        // `RenderOptions::kernel` on the session API) is tested
+        // against.
+        blend_tiles(
+            scratch,
+            mode.blend_mode(),
+            BlendKernel::Scalar,
+            rcfg.t_min,
+            threads,
+            &mut img,
+        );
         img
     }
 }
@@ -478,6 +608,46 @@ mod tests {
             );
             let fresh = CpuRenderer::render_threaded(&queue, &cam, AlphaMode::Group, &rcfg, 4);
             assert_eq!(reused.data, fresh.data, "camera {cam_i}");
+        }
+    }
+
+    #[test]
+    fn soa_blend_tiles_bit_identical_to_scalar() {
+        // The tile-level wiring of the SoA kernel (FrameScratch pool,
+        // SoA plane stores, dynamic scheduler) must reproduce the
+        // scalar kernel's frame bit for bit, in both alpha modes, at
+        // serial and parallel widths, with the scratch reused across
+        // frames.
+        let (scene, cut, cam) = setup();
+        let queue = scene.gaussians.gather(&cut);
+        let rcfg = RenderConfig::default();
+        let mut scratch = FrameScratch::new();
+        for mode in [BlendMode::PerPixel, BlendMode::PixelGroup] {
+            for threads in [1usize, 2, 8] {
+                front_end_into(&queue, &cam, &mut scratch, threads);
+                let mut want = Image::new(cam.intr.width, cam.intr.height);
+                blend_tiles(
+                    &mut scratch,
+                    mode,
+                    BlendKernel::Scalar,
+                    rcfg.t_min,
+                    threads,
+                    &mut want,
+                );
+                let mut got = Image::new(cam.intr.width, cam.intr.height);
+                blend_tiles(
+                    &mut scratch,
+                    mode,
+                    BlendKernel::Soa,
+                    rcfg.t_min,
+                    threads,
+                    &mut got,
+                );
+                assert_eq!(
+                    want.data, got.data,
+                    "{mode:?} diverged at {threads} threads"
+                );
+            }
         }
     }
 

@@ -14,6 +14,7 @@ use super::backend::{RenderBackend, RenderOptions};
 use super::pipeline::FramePipeline;
 use super::renderer::{default_threads, front_end_timed, FrameScratch};
 use super::stats::{RenderStats, StageTimings};
+use crate::gaussian::Gaussians;
 use crate::lod::CutCache;
 use crate::math::Camera;
 use crate::metrics::Image;
@@ -26,6 +27,9 @@ pub struct RenderSession<'p> {
     backend: &'p dyn RenderBackend,
     opts: RenderOptions,
     scratch: FrameScratch,
+    /// Reusable rendering-queue buffer (the gathered cut); with it the
+    /// steady-state frame really allocates only its output image.
+    queue: Gaussians,
     cut_cache: CutCache,
     stats: RenderStats,
 }
@@ -41,6 +45,7 @@ impl<'p> RenderSession<'p> {
             backend,
             opts,
             scratch: FrameScratch::new(),
+            queue: Gaussians::default(),
             cut_cache: CutCache::new(),
             stats: RenderStats::default(),
         }
@@ -116,7 +121,7 @@ impl<'p> RenderSession<'p> {
         let mut stages = StageTimings::default();
 
         let t = Instant::now();
-        let (cut_len, search_trace, queue) = {
+        let (cut_len, search_trace) = {
             let (cut, trace) = self.cut_cache.search(
                 &self.pipeline.scene().tree,
                 self.pipeline.sltree(),
@@ -124,17 +129,20 @@ impl<'p> RenderSession<'p> {
                 self.opts.lod_tau,
                 &self.opts.cut_cache,
             );
-            (cut.len() as u64, trace, self.pipeline.scene().gaussians.gather(cut))
+            // Gather into the session-owned queue buffer: no per-frame
+            // rendering-queue allocation once the buffers are warm.
+            self.pipeline.scene().gaussians.gather_into(cut, &mut self.queue);
+            (cut.len() as u64, trace)
         };
         stages.search = t.elapsed().as_secs_f64();
 
         let width = self.scheduler_width();
-        front_end_timed(&queue, cam, &mut self.scratch, &mut stages, width);
+        front_end_timed(&self.queue, cam, &mut self.scratch, &mut stages, width);
 
         let mut img = Image::new(cam.intr.width, cam.intr.height);
         let t = Instant::now();
         self.backend
-            .blend(&self.scratch, &self.opts, self.pipeline.rcfg(), &mut img)?;
+            .blend(&mut self.scratch, &self.opts, self.pipeline.rcfg(), &mut img)?;
         stages.blend = t.elapsed().as_secs_f64();
 
         self.stats.stages.accumulate(&stages);

@@ -50,8 +50,14 @@ impl StageTimings {
 
     /// `(name, ms/frame)` rows over `frames` frames — the one shared
     /// derivation every report (CLI, examples, hotpath bench) prints.
+    /// `frames == 0` returns all-zero rows: there is no per-frame
+    /// figure for zero frames, and silently dividing by 1 would report
+    /// the raw totals as if they were one frame's cost.
     pub fn rows_ms_per_frame(&self, frames: usize) -> [(&'static str, f64); 5] {
-        let scale = 1e3 / frames.max(1) as f64;
+        if frames == 0 {
+            return self.rows().map(|(name, _)| (name, 0.0));
+        }
+        let scale = 1e3 / frames as f64;
         self.rows().map(|(name, secs)| (name, secs * scale))
     }
 }
@@ -113,9 +119,12 @@ impl RenderStats {
     }
 
     /// Fold another session's stats into this one. Sums every counter
-    /// including `wall_seconds`; when aggregating *concurrent* sessions,
-    /// overwrite `wall_seconds` with the measured span afterwards so
-    /// [`RenderStats::fps`] reports true aggregate throughput.
+    /// including `wall_seconds` — correct for *sequential* windows
+    /// (one client, several batches). For stats gathered from sessions
+    /// that ran *concurrently*, summed wall-clock double-counts the
+    /// overlap and [`RenderStats::fps`] under-reports aggregate
+    /// throughput — use [`RenderStats::merge_concurrent`] with the
+    /// measured span instead.
     pub fn merge(&mut self, other: &RenderStats) {
         self.frames += other.frames;
         self.wall_seconds += other.wall_seconds;
@@ -128,6 +137,18 @@ impl RenderStats {
         self.revalidated += other.revalidated;
         self.reseeded += other.reseeded;
         self.stages.accumulate(&other.stages);
+    }
+
+    /// Fold a *concurrent* session's stats into this one: every counter
+    /// sums like [`RenderStats::merge`], but `wall_seconds` is pinned
+    /// to `span_seconds` — the measured wall-clock span the sessions
+    /// ran in — so [`RenderStats::fps`] / [`RenderStats::ms_per_frame`]
+    /// report true aggregate throughput instead of the summed (and
+    /// overlap-double-counting) per-client time. Pass the same span on
+    /// every call when folding several clients of one serving window.
+    pub fn merge_concurrent(&mut self, other: &RenderStats, span_seconds: f64) {
+        self.merge(other);
+        self.wall_seconds = span_seconds;
     }
 }
 
@@ -181,5 +202,38 @@ mod tests {
         assert!((a.wall_seconds - 3.0).abs() < 1e-12);
         assert!((a.stages.search - 0.4).abs() < 1e-12);
         assert!((a.stages.staged_total() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_concurrent_pins_span_and_reports_aggregate_fps() {
+        // Two clients, 10 frames in 2.0 s each, fully overlapping in a
+        // 2.0 s span: aggregate throughput is 10 fps. Plain merge sums
+        // the wall clocks (4.0 s -> 5 fps, the footgun); the concurrent
+        // merge pins the span.
+        let client = RenderStats { frames: 10, wall_seconds: 2.0, ..Default::default() };
+        let mut summed = RenderStats::default();
+        summed.merge(&client);
+        summed.merge(&client);
+        assert_eq!(summed.frames, 20);
+        assert!((summed.wall_seconds - 4.0).abs() < 1e-12);
+        assert!((summed.fps() - 5.0).abs() < 1e-12);
+        let mut agg = RenderStats::default();
+        agg.merge_concurrent(&client, 2.0);
+        agg.merge_concurrent(&client, 2.0);
+        assert_eq!(agg.frames, 20);
+        assert!((agg.wall_seconds - 2.0).abs() < 1e-12);
+        assert!((agg.fps() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rows_ms_per_frame_zero_frames_is_all_zero() {
+        let s = StageTimings { search: 1.5, blend: 0.5, ..Default::default() };
+        for (name, ms) in s.rows_ms_per_frame(0) {
+            assert_eq!(ms, 0.0, "stage {name} must report 0 for 0 frames");
+        }
+        // And the 1-frame report is the raw totals in ms.
+        let rows = s.rows_ms_per_frame(1);
+        assert_eq!(rows[0], ("search", 1500.0));
+        assert_eq!(rows[4], ("blend", 500.0));
     }
 }

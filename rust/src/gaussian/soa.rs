@@ -88,6 +88,25 @@ impl Gaussians {
     /// Gather a subset by index into a new batch (rendering-queue build).
     pub fn gather(&self, idx: &[u32]) -> Gaussians {
         let mut out = Gaussians::with_capacity(idx.len());
+        self.gather_into(idx, &mut out);
+        out
+    }
+
+    /// Gather a subset by index into a reusable batch — the per-frame
+    /// rendering-queue build without [`Gaussians::gather`]'s five
+    /// allocations once the buffers are warm (sessions call this every
+    /// frame with their own queue buffer).
+    pub fn gather_into(&self, idx: &[u32], out: &mut Gaussians) {
+        out.means.clear();
+        out.scales.clear();
+        out.quats.clear();
+        out.colors.clear();
+        out.opacity.clear();
+        out.means.reserve(idx.len());
+        out.scales.reserve(idx.len());
+        out.quats.reserve(idx.len());
+        out.colors.reserve(idx.len());
+        out.opacity.reserve(idx.len());
         for &i in idx {
             let i = i as usize;
             out.means.push(self.means[i]);
@@ -96,7 +115,6 @@ impl Gaussians {
             out.colors.push(self.colors[i]);
             out.opacity.push(self.opacity[i]);
         }
-        out
     }
 
     /// Flat row-major buffers for the PJRT artifacts (padded to `n`).
@@ -179,6 +197,24 @@ mod tests {
         let sub = g.gather(&[1, 0]);
         assert_eq!(sub.mean(0), g.mean(1));
         assert_eq!(sub.mean(1), g.mean(0));
+    }
+
+    #[test]
+    fn gather_into_reuse_matches_fresh_gather() {
+        let g = sample();
+        let mut reused = Gaussians::default();
+        // Shrinking, growing and duplicate index sets through one
+        // buffer must always equal a fresh gather.
+        for idx in [vec![1u32, 0], vec![0], vec![1, 1, 0, 1], vec![]] {
+            g.gather_into(&idx, &mut reused);
+            let fresh = g.gather(&idx);
+            assert_eq!(reused.len(), fresh.len());
+            assert_eq!(reused.means, fresh.means);
+            assert_eq!(reused.scales, fresh.scales);
+            assert_eq!(reused.quats, fresh.quats);
+            assert_eq!(reused.colors, fresh.colors);
+            assert_eq!(reused.opacity, fresh.opacity);
+        }
     }
 
     #[test]

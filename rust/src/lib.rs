@@ -51,6 +51,17 @@
 //!   hoisted out of the backends, so both consume identical sorted
 //!   bins.
 //!
+//! The CPU blend stage itself has two interchangeable kernels
+//! ([`coordinator::RenderOptions::kernel`]): the branchy AoS scalar
+//! reference ([`splat::blend_tile`]) and the divergence-free SoA
+//! kernel ([`splat::kernel`] — the software SPcore: SoA `r`/`g`/`b`/`t`
+//! tile planes, the Sec. IV-C no-exp group check via an exact
+//! precomputed power threshold, a per-row group-mask bitset driving a
+//! maskless inner loop, and incremental early termination). The two
+//! are **byte-identical** per alpha mode — pinned by kernel proptests
+//! and the golden harness — so the knob only trades blend time; the
+//! `blend(kernel=...)` rows in `BENCH_hotpath.json` track the payoff.
+//!
 //! ## The unified scheduler-width knob
 //!
 //! One width — `RenderSession::scheduler_width`, resolved from the
@@ -151,6 +162,7 @@ pub mod prelude {
     pub use crate::gaussian::Gaussians;
     pub use crate::lod::cut_cache::{CutCache, CutCacheConfig};
     pub use crate::lod::sltree::SlTree;
+    pub use crate::splat::kernel::BlendKernel;
     pub use crate::lod::tree::LodTree;
     pub use crate::math::{Camera, Mat4, Vec3};
     pub use crate::metrics::{lpips_proxy, psnr, ssim};

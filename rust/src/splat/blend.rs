@@ -7,6 +7,7 @@
 //! transmittance drops below `t_min`.
 
 use super::divergence::DivergenceStats;
+use super::kernel::group_keep_threshold;
 use super::tiling::TILE;
 use crate::gaussian::{Splat2D, ALPHA_CLAMP, ALPHA_THRESH};
 
@@ -21,7 +22,7 @@ pub enum BlendMode {
 
 /// Work counters for one tile's blending pass (replayed by the GPU,
 /// GSCore and SPCore timing models).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct BlendStats {
     /// Gaussians processed before early termination.
     pub gaussians: u64,
@@ -51,14 +52,40 @@ impl BlendStats {
 }
 
 pub const PIXELS: usize = (TILE * TILE) as usize;
-const GROUP: usize = 2;
-const GSIDE: usize = TILE as usize / GROUP;
-const GROUPS: usize = GSIDE * GSIDE;
+pub(crate) const GROUP: usize = 2;
+pub(crate) const GSIDE: usize = TILE as usize / GROUP;
+pub(crate) const GROUPS: usize = GSIDE * GSIDE;
 
 #[inline]
-fn gauss_power(conic: &[f32; 3], dx: f32, dy: f32) -> f32 {
+pub(crate) fn gauss_power(conic: &[f32; 3], dx: f32, dy: f32) -> f32 {
     let p = -0.5 * (conic[0] * dx * dx + conic[2] * dy * dy) - conic[1] * dx * dy;
     p.min(0.0)
+}
+
+/// §Perf: the Gaussian's alpha-threshold bounding box inside the tile
+/// (inclusive pixel coords), or `None` when the footprint misses the
+/// tile entirely. `radius` is the 3-sigma extent; alpha >= 1/255
+/// requires distance <= sqrt(2 ln(255*0.99)) sigma ~= 3.33 sigma, so a
+/// 3.4-sigma box is exactly conservative: every skipped pixel/group
+/// would have been masked anyway, and the blend result and all
+/// divergence counters are unchanged. Shared by the scalar and SoA
+/// kernels so their scan restriction can never diverge.
+#[inline]
+pub(crate) fn tile_bbox(
+    s: &Splat2D,
+    origin: (f32, f32),
+) -> Option<(usize, usize, usize, usize)> {
+    let margin = s.radius * (3.4 / 3.0) + 1.0;
+    let x0 = (s.mean.x - margin - origin.0).floor().max(0.0) as usize;
+    let y0 = (s.mean.y - margin - origin.1).floor().max(0.0) as usize;
+    let x1f = (s.mean.x + margin - origin.0).ceil();
+    let y1f = (s.mean.y + margin - origin.1).ceil();
+    if x1f < 0.0 || y1f < 0.0 || x0 >= TILE as usize || y0 >= TILE as usize {
+        return None;
+    }
+    let x1 = (x1f as usize).min(TILE as usize - 1);
+    let y1 = (y1f as usize).min(TILE as usize - 1);
+    Some((x0, y0, x1, y1))
 }
 
 /// Blend `order`ed splats into one tile.
@@ -89,17 +116,8 @@ pub fn blend_tile(
         stats.gaussians += 1;
 
         // §Perf: restrict the scan to the Gaussian's alpha-threshold
-        // bounding box inside the tile. `radius` is the 3-sigma extent;
-        // alpha >= 1/255 requires distance <= sqrt(2 ln(255*0.99)) sigma
-        // ~= 3.33 sigma, so a 3.4-sigma box is exactly conservative:
-        // every skipped pixel/group would have been masked anyway, and
-        // the blend result and all divergence counters are unchanged.
-        let margin = s.radius * (3.4 / 3.0) + 1.0;
-        let x0 = (s.mean.x - margin - origin.0).floor().max(0.0) as usize;
-        let y0 = (s.mean.y - margin - origin.1).floor().max(0.0) as usize;
-        let x1f = (s.mean.x + margin - origin.0).ceil();
-        let y1f = (s.mean.y + margin - origin.1).ceil();
-        if x1f < 0.0 || y1f < 0.0 || x0 >= TILE as usize || y0 >= TILE as usize {
+        // bounding box inside the tile (see [`tile_bbox`]).
+        let Some((x0, y0, x1, y1)) = tile_bbox(s, origin) else {
             // Footprint misses the tile entirely: all warps idle.
             stats.divergence.end_gaussian();
             match mode {
@@ -107,9 +125,7 @@ pub fn blend_tile(
                 BlendMode::PixelGroup => stats.group_checks += GROUPS as u64,
             }
             continue;
-        }
-        let x1 = (x1f as usize).min(TILE as usize - 1);
-        let y1 = (y1f as usize).min(TILE as usize - 1);
+        };
 
         match mode {
             BlendMode::PerPixel => {
@@ -145,16 +161,19 @@ pub fn blend_tile(
                 // groups are guaranteed-masked so only in-box ones are
                 // computed.
                 stats.group_checks += GROUPS as u64;
+                // Hardware trick (Sec. IV-C): compare the power against
+                // the precomputed exact boundary of
+                // `ln(ALPHA_THRESH / opacity)` — no exp in the keep
+                // loop, same decisions bit for bit (see
+                // [`group_keep_threshold`]).
+                let thr = group_keep_threshold(s.opacity);
                 let mut keep = [false; GROUPS];
                 for gy in y0 / GROUP..=y1 / GROUP {
                     for gx in x0 / GROUP..=x1 / GROUP {
                         let cx = origin.0 + 2.0 * gx as f32 + 1.0;
                         let cy = origin.1 + 2.0 * gy as f32 + 1.0;
                         let power = gauss_power(&s.conic, cx - s.mean.x, cy - s.mean.y);
-                        // Hardware trick (Sec. IV-C): compare the power
-                        // against ln(thresh/opacity) — no exp needed.
-                        let galpha = (s.opacity * power.exp()).min(ALPHA_CLAMP);
-                        keep[gy * GSIDE + gx] = galpha >= ALPHA_THRESH && s.opacity > 0.0;
+                        keep[gy * GSIDE + gx] = power >= thr;
                     }
                 }
                 for gy in y0 / GROUP..=y1 / GROUP {
@@ -300,6 +319,206 @@ mod tests {
         );
         assert!(stats.early_terminated);
         assert!(stats.gaussians < 4);
+    }
+
+    /// Reference scan with the bounding-box restriction removed: every
+    /// pixel (and every group) of the tile is evaluated for every
+    /// Gaussian. [`blend_tile`]'s restricted scan must match it exactly
+    /// — `tile_bbox` is conservative, so skipped pixels/groups would
+    /// have been masked anyway.
+    fn blend_tile_unrestricted(
+        order: &[u32],
+        splats: &[Splat2D],
+        origin: (f32, f32),
+        mode: BlendMode,
+        rgb: &mut [[f32; 3]; PIXELS],
+        t: &mut [f32; PIXELS],
+        t_min: f32,
+    ) -> BlendStats {
+        let mut stats = BlendStats::default();
+        for &si in order {
+            let t_max = t.iter().cloned().fold(0.0f32, f32::max);
+            if t_max < t_min {
+                stats.early_terminated = true;
+                break;
+            }
+            let s = &splats[si as usize];
+            stats.gaussians += 1;
+            match mode {
+                BlendMode::PerPixel => {
+                    stats.alpha_evals += PIXELS as u64;
+                    for py in 0..TILE as usize {
+                        for px in 0..TILE as usize {
+                            let p = py * TILE as usize + px;
+                            let dx = origin.0 + px as f32 + 0.5 - s.mean.x;
+                            let dy = origin.1 + py as f32 + 0.5 - s.mean.y;
+                            let power = gauss_power(&s.conic, dx, dy);
+                            let alpha = (s.opacity * power.exp()).min(ALPHA_CLAMP);
+                            let active = alpha >= ALPHA_THRESH && s.opacity > 0.0;
+                            stats.divergence.record_lane(p, active);
+                            if active {
+                                let w = t[p] * alpha;
+                                rgb[p][0] += w * s.color[0];
+                                rgb[p][1] += w * s.color[1];
+                                rgb[p][2] += w * s.color[2];
+                                t[p] *= 1.0 - alpha;
+                                stats.blends += 1;
+                            }
+                        }
+                    }
+                    stats.divergence.end_gaussian();
+                }
+                BlendMode::PixelGroup => {
+                    stats.group_checks += GROUPS as u64;
+                    let thr = group_keep_threshold(s.opacity);
+                    let mut keep = [false; GROUPS];
+                    for (g, k) in keep.iter_mut().enumerate() {
+                        let (gy, gx) = (g / GSIDE, g % GSIDE);
+                        let cx = origin.0 + 2.0 * gx as f32 + 1.0;
+                        let cy = origin.1 + 2.0 * gy as f32 + 1.0;
+                        let power =
+                            gauss_power(&s.conic, cx - s.mean.x, cy - s.mean.y);
+                        *k = power >= thr;
+                    }
+                    for (g, &k) in keep.iter().enumerate() {
+                        if !k {
+                            continue;
+                        }
+                        let (gy, gx) = (g / GSIDE, g % GSIDE);
+                        for sy in 0..GROUP {
+                            for sx in 0..GROUP {
+                                let py = gy * GROUP + sy;
+                                let px = gx * GROUP + sx;
+                                let p = py * TILE as usize + px;
+                                stats.divergence.record_lane(p, true);
+                                let dx = origin.0 + px as f32 + 0.5 - s.mean.x;
+                                let dy = origin.1 + py as f32 + 0.5 - s.mean.y;
+                                let power = gauss_power(&s.conic, dx, dy);
+                                let alpha =
+                                    (s.opacity * power.exp()).min(ALPHA_CLAMP);
+                                stats.alpha_evals += 1;
+                                let w = t[p] * alpha;
+                                rgb[p][0] += w * s.color[0];
+                                rgb[p][1] += w * s.color[1];
+                                rgb[p][2] += w * s.color[2];
+                                t[p] *= 1.0 - alpha;
+                                stats.blends += 1;
+                            }
+                        }
+                    }
+                    stats.divergence.end_gaussian();
+                }
+            }
+        }
+        stats
+    }
+
+    fn assert_restricted_matches_unrestricted(splats: &[Splat2D], label: &str) {
+        let order: Vec<u32> = (0..splats.len() as u32).collect();
+        for mode in [BlendMode::PerPixel, BlendMode::PixelGroup] {
+            let (mut rgb_r, mut t_r) = fresh();
+            let got = blend_tile(
+                &order, splats, (0.0, 0.0), mode, &mut rgb_r, &mut t_r,
+                1.0 / 255.0,
+            );
+            let (mut rgb_u, mut t_u) = fresh();
+            let want = blend_tile_unrestricted(
+                &order, splats, (0.0, 0.0), mode, &mut rgb_u, &mut t_u,
+                1.0 / 255.0,
+            );
+            for p in 0..PIXELS {
+                assert_eq!(
+                    rgb_r[p].map(f32::to_bits),
+                    rgb_u[p].map(f32::to_bits),
+                    "{label} {mode:?}: rgb[{p}]"
+                );
+                assert_eq!(
+                    t_r[p].to_bits(),
+                    t_u[p].to_bits(),
+                    "{label} {mode:?}: t[{p}]"
+                );
+            }
+            assert_eq!(got, want, "{label} {mode:?}: stats");
+        }
+    }
+
+    #[test]
+    fn bbox_splats_straddling_each_tile_border() {
+        // Footprints poking in from every side: the restricted scan
+        // clamps a partial bounding box against each border.
+        for (label, x, y) in [
+            ("left", -3.0, 8.0),
+            ("right", 19.0, 8.0),
+            ("top", 8.0, -3.0),
+            ("bottom", 8.0, 19.0),
+            ("corner", -2.5, 18.5),
+        ] {
+            let s = vec![splat(x, y, 0.9, 0.4), splat(8.0, 8.0, 0.5, 0.3)];
+            assert_restricted_matches_unrestricted(&s, label);
+        }
+    }
+
+    #[test]
+    fn bbox_fully_offscreen_footprints() {
+        // Fully-left/above footprints drive `x1f`/`y1f` negative (the
+        // early-miss branch), and far right/below ones push `x0`/`y0`
+        // past the tile.
+        for (label, x, y) in [
+            ("fully-left", -40.0, 8.0),
+            ("fully-above", 8.0, -40.0),
+            ("fully-right", 60.0, 8.0),
+            ("fully-below", 8.0, 60.0),
+            ("far-corner", -40.0, -40.0),
+        ] {
+            let s = vec![splat(x, y, 0.9, 0.4), splat(6.0, 9.0, 0.7, 0.2)];
+            assert_restricted_matches_unrestricted(&s, label);
+        }
+    }
+
+    #[test]
+    fn bbox_zero_and_huge_radius_splats() {
+        // Zero radius with a consistently sharp conic (3.3 sigma well
+        // inside the +1 px margin) and a footprint larger than the
+        // whole tile (bbox clamps to the full tile).
+        let mut zero = splat(8.2, 7.7, 0.9, 64.0);
+        zero.radius = 0.0;
+        let mut huge = splat(3.0, 12.0, 0.8, 0.0009);
+        huge.radius = 1e4;
+        assert_restricted_matches_unrestricted(&[zero], "zero-radius");
+        assert_restricted_matches_unrestricted(&[huge], "huge-radius");
+        assert_restricted_matches_unrestricted(
+            &[zero, huge, splat(15.5, 0.5, 0.6, 0.5)],
+            "mixed",
+        );
+    }
+
+    #[test]
+    fn group_keep_mask_matches_exp_form_on_real_splats() {
+        // The satellite-1 contract at the blend level: for real conic
+        // footprints, the no-exp compare selects exactly the groups the
+        // exp-form check would, across opacities including 0 and 1.
+        for opacity in [0.0, 0.003, 0.004, 0.3, 0.92, 0.99, 1.0] {
+            for (x, y, sharp) in
+                [(8.0, 8.0, 0.08), (2.5, 13.0, 0.3), (-1.0, 5.0, 0.05)]
+            {
+                let s = splat(x, y, opacity, sharp);
+                let thr = group_keep_threshold(s.opacity);
+                for g in 0..GROUPS {
+                    let (gy, gx) = (g / GSIDE, g % GSIDE);
+                    let cx = 2.0 * gx as f32 + 1.0;
+                    let cy = 2.0 * gy as f32 + 1.0;
+                    let power =
+                        gauss_power(&s.conic, cx - s.mean.x, cy - s.mean.y);
+                    let galpha = (s.opacity * power.exp()).min(ALPHA_CLAMP);
+                    let want = galpha >= ALPHA_THRESH && s.opacity > 0.0;
+                    assert_eq!(
+                        power >= thr,
+                        want,
+                        "opacity {opacity} group {g} power {power}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

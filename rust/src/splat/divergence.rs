@@ -14,7 +14,7 @@ pub const WARP_LANES: usize = 32;
 pub const WARPS_PER_TILE: usize = 256 / WARP_LANES;
 
 /// Accumulated lane-occupancy statistics over a blending pass.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct DivergenceStats {
     /// Active lane executions (lane wanted the blend body).
     pub active_lanes: u64,
@@ -38,6 +38,16 @@ impl DivergenceStats {
         if active {
             self.cur[pixel / WARP_LANES] += 1;
         }
+    }
+
+    /// Bulk [`DivergenceStats::record_lane`]: credit `active` active
+    /// lanes to the warp containing `pixel`. The SoA kernel computes
+    /// per-row activation counts in its vector loop and records them in
+    /// one call (a 16-pixel tile row sits inside one 32-lane warp);
+    /// `pixel` and the lanes it stands for must share one warp.
+    #[inline]
+    pub fn record_lanes(&mut self, pixel: usize, active: u16) {
+        self.cur[pixel / WARP_LANES] += active;
     }
 
     /// Close out the Gaussian in flight: fold per-warp counts into the
@@ -126,6 +136,26 @@ mod tests {
         assert_eq!(d.utilization(), 1.0);
         // 7 idle warps + 1 full warp are all uniform.
         assert_eq!(d.uniformity(), 1.0);
+    }
+
+    #[test]
+    fn record_lanes_equals_per_lane_recording() {
+        // The SoA kernel's bulk path must fold to the same totals as
+        // the scalar kernel's per-lane calls, row by row.
+        let pattern = |p: usize| p % 3 == 0 || p / 32 == 2;
+        let mut per_lane = DivergenceStats::default();
+        let mut bulk = DivergenceStats::default();
+        for p in 0..256 {
+            per_lane.record_lane(p, pattern(p));
+        }
+        for row in 0..8 {
+            let active =
+                (0..32).filter(|i| pattern(row * 32 + i)).count() as u16;
+            bulk.record_lanes(row * 32, active);
+        }
+        per_lane.end_gaussian();
+        bulk.end_gaussian();
+        assert_eq!(per_lane, bulk);
     }
 
     #[test]

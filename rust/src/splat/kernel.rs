@@ -1,0 +1,570 @@
+//! The divergence-free SoA blend kernel — the software model of the
+//! SPcore splatting unit (paper Sec. IV-C), and the crate's optimized
+//! CPU blend inner loop.
+//!
+//! Three ideas, each bit-identical to the scalar reference
+//! [`blend_tile`](super::blend::blend_tile) per [`BlendMode`]:
+//!
+//! 1. **SoA tile state** ([`TileState`]) — the accumulation planes are
+//!    separate `r`/`g`/`b`/`t` arrays instead of an AoS `[[f32; 3]]`
+//!    buffer, and the per-pixel compositing loop is straight-line code
+//!    (a select instead of a branch), so it vectorizes across pixels.
+//!    Safe for bit-identity: every pixel's arithmetic sequence is
+//!    unchanged — a masked pixel multiplies by `alpha = 0.0`, which is
+//!    a bitwise no-op on its planes (`t *= 1.0`, `rgb += 0.0`).
+//! 2. **No-exp group check** ([`group_keep_threshold`]) — the SPcore
+//!    hardware trick: precompute `ln(ALPHA_THRESH / opacity)` once per
+//!    splat and compare raw Gaussian powers against it, so the per-group
+//!    keep decision costs one compare and no `exp`. The threshold is
+//!    probed to the exact f32 decision boundary of the exp-form check,
+//!    so the kept set is identical bit for bit. The per-group-row keep
+//!    decisions land in a bitset that drives a maskless inner loop
+//!    (iterate set bits; blend whole groups unconditionally).
+//! 3. **Incremental early termination** — a running saturated-pixel
+//!    count (`t < t_min`, bumped exactly when a blend drops a pixel
+//!    across the threshold) replaces the scalar kernel's per-Gaussian
+//!    O(256) `t_max` scan. `all pixels saturated` is decided identically
+//!    (`max t < t_min  <=>  saturated == 256`), just without re-reading
+//!    the whole transmittance plane per Gaussian.
+//!
+//! Selected per session via
+//! [`RenderOptions::kernel`](crate::coordinator::RenderOptions); the
+//! equivalence contract is pinned by unit tests here, kernel proptests
+//! in `rust/tests/proptests.rs` and the golden-frame harness
+//! (`rust/tests/golden.rs` renders every golden scene through both
+//! kernels and asserts byte-equal frames at scheduler widths {1, 8}).
+
+use super::blend::{gauss_power, tile_bbox, BlendMode, BlendStats, GROUP, GROUPS, GSIDE, PIXELS};
+use super::sort::float_to_sortable_uint;
+use super::tiling::TILE;
+use crate::gaussian::{Splat2D, ALPHA_CLAMP, ALPHA_THRESH};
+
+/// Which CPU blend-kernel implementation a session runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BlendKernel {
+    /// The branchy AoS scalar reference loop
+    /// ([`blend_tile`](super::blend::blend_tile)).
+    #[default]
+    Scalar,
+    /// The divergence-free SoA kernel ([`blend_tile_soa`]) — same
+    /// pixels, same [`BlendStats`], faster inner loop.
+    Soa,
+}
+
+/// SoA accumulation state for one 16x16 tile: separate `r`/`g`/`b`
+/// colour planes and the transmittance plane `t`. Lives in a per-worker
+/// pool inside `FrameScratch`, so steady-state frames reuse the planes
+/// without allocating.
+#[derive(Clone, Debug)]
+pub struct TileState {
+    /// Accumulated red, row-major.
+    pub r: [f32; PIXELS],
+    /// Accumulated green, row-major.
+    pub g: [f32; PIXELS],
+    /// Accumulated blue, row-major.
+    pub b: [f32; PIXELS],
+    /// Per-pixel transmittance (1 = untouched).
+    pub t: [f32; PIXELS],
+}
+
+impl Default for TileState {
+    fn default() -> Self {
+        Self::fresh()
+    }
+}
+
+impl TileState {
+    /// A fresh tile: black, fully transmissive.
+    pub fn fresh() -> Self {
+        TileState {
+            r: [0.0; PIXELS],
+            g: [0.0; PIXELS],
+            b: [0.0; PIXELS],
+            t: [1.0; PIXELS],
+        }
+    }
+
+    /// Reset to the fresh state (between tiles; keeps the storage).
+    pub fn reset(&mut self) {
+        self.r = [0.0; PIXELS];
+        self.g = [0.0; PIXELS];
+        self.b = [0.0; PIXELS];
+        self.t = [1.0; PIXELS];
+    }
+}
+
+/// Inverse of [`float_to_sortable_uint`] (the radix sorter's monotone
+/// bit-space key): `a < b  <=>  key(a) < key(b)`, so stepping or
+/// bisecting keys steps/bisects representable values.
+fn from_ord(k: u32) -> f32 {
+    if k & 0x8000_0000 != 0 {
+        f32::from_bits(k & 0x7fff_ffff)
+    } else {
+        f32::from_bits(!k)
+    }
+}
+
+/// The exact no-exp group-keep threshold (paper Sec. IV-C): the
+/// smallest f32 `power` for which the exp-form group check
+/// `(opacity * power.exp()).min(ALPHA_CLAMP) >= ALPHA_THRESH`
+/// passes, so `power >= group_keep_threshold(opacity)` reproduces the
+/// reference keep decision **bit for bit** over the kernel's power
+/// domain (`gauss_power` is clamped to `<= 0`) while the per-group loop
+/// does one compare and no `exp`.
+///
+/// `f32::INFINITY` (keep nothing) when no non-positive power can pass:
+/// zero/negative/NaN opacity (the reference also gates on
+/// `opacity > 0`), or `opacity < ALPHA_THRESH` (for `power <= 0` the
+/// rounded product `opacity * exp(power)` never exceeds `opacity`
+/// itself).
+///
+/// A plain `ln(ALPHA_THRESH / opacity)` is only correct to a few ulps,
+/// and a keep decision flipped by one ulp would change rendered pixels
+/// — so the exact boundary is found on the exp-form predicate in f32
+/// bit space: an exponential search brackets the edge within a few ulps
+/// of the `ln` estimate, then a short bisection pins it (~10 `exp`
+/// evaluations typical, once per splat per tile it touches, versus one
+/// `exp` per covered group in the pre-fix keep loop — cheaper whenever
+/// the footprint covers more than a handful of groups, and off the
+/// per-group hot path either way). Working in key space also rides out
+/// the flat spots of `expf` (near `power = 0` whole ulp ranges share
+/// one `exp` value), where an ulp walk would never terminate.
+pub fn group_keep_threshold(opacity: f32) -> f32 {
+    // `min(ALPHA_CLAMP)` can never flip the decision: ALPHA_CLAMP >
+    // ALPHA_THRESH, so a clamped pass still passes. The predicate is
+    // `opacity * power.exp() >= ALPHA_THRESH`. NaN opacity keeps
+    // nothing (the reference's `opacity > 0` gate is false for NaN);
+    // `opacity < ALPHA_THRESH` covers every zero/negative value too.
+    if opacity.is_nan() || opacity < ALPHA_THRESH {
+        return f32::INFINITY;
+    }
+    let pass = |p: f32| opacity * p.exp() >= ALPHA_THRESH;
+    // opacity >= ALPHA_THRESH makes power 0 pass exactly
+    // (`opacity * exp(0) == opacity`), so the boundary is <= 0; its
+    // key is capped by key(0.0).
+    let zero_k = float_to_sortable_uint(0.0);
+    debug_assert!(pass(0.0));
+    let est = (ALPHA_THRESH / opacity).ln().min(0.0);
+    let est_k = float_to_sortable_uint(est);
+    // Upper bound: walk up in doubling key steps to the first passing
+    // value (0.0 passes, so the cap always terminates the walk).
+    let mut hi_k = est_k;
+    let mut step = 32u32;
+    while !pass(from_ord(hi_k)) && hi_k < zero_k {
+        hi_k = hi_k.saturating_add(step).min(zero_k);
+        step = step.saturating_mul(2);
+    }
+    // Lower bound: walk down to the first failing value. Terminates:
+    // far below the estimate `exp` underflows to 0 (or the key space
+    // bottoms out in NaNs) and the predicate is false.
+    let mut lo_k = est_k;
+    let mut step = 32u32;
+    while pass(from_ord(lo_k)) {
+        lo_k = lo_k.saturating_sub(step);
+        step = step.saturating_mul(2);
+    }
+    // Bisect to the exact f32 decision edge: invariant pass(hi) and
+    // !pass(lo), shrink until they are bitwise neighbours.
+    while hi_k - lo_k > 1 {
+        let mid = lo_k + (hi_k - lo_k) / 2;
+        if pass(from_ord(mid)) {
+            hi_k = mid;
+        } else {
+            lo_k = mid;
+        }
+    }
+    from_ord(hi_k)
+}
+
+/// Blend `order`ed splats into one tile — the divergence-free SoA
+/// kernel. Same contract as [`blend_tile`](super::blend::blend_tile)
+/// (carried accumulation state, early termination on `t_min`), same
+/// pixels and the same [`BlendStats`], bit for bit, in both modes.
+pub fn blend_tile_soa(
+    order: &[u32],
+    splats: &[Splat2D],
+    origin: (f32, f32),
+    mode: BlendMode,
+    state: &mut TileState,
+    t_min: f32,
+) -> BlendStats {
+    let mut stats = BlendStats::default();
+    // Incremental early termination: `saturated` counts pixels with
+    // `t < t_min`; the scalar kernel's whole-plane `t_max < t_min` scan
+    // is exactly `saturated == PIXELS`. One entry scan supports carried
+    // (partially saturated) state; `t` only decreases, so each pixel
+    // crosses the threshold at most once.
+    let mut saturated =
+        state.t.iter().filter(|&&v| v < t_min).count() as u32;
+
+    for &si in order {
+        if saturated == PIXELS as u32 {
+            stats.early_terminated = true;
+            break;
+        }
+        let s = &splats[si as usize];
+        stats.gaussians += 1;
+
+        let Some((x0, y0, x1, y1)) = tile_bbox(s, origin) else {
+            // Footprint misses the tile entirely: all warps idle.
+            stats.divergence.end_gaussian();
+            match mode {
+                BlendMode::PerPixel => stats.alpha_evals += PIXELS as u64,
+                BlendMode::PixelGroup => stats.group_checks += GROUPS as u64,
+            }
+            continue;
+        };
+
+        match mode {
+            BlendMode::PerPixel => {
+                stats.alpha_evals += PIXELS as u64;
+                let opaque = s.opacity > 0.0;
+                for py in y0..=y1 {
+                    let dy = origin.1 + py as f32 + 0.5 - s.mean.y;
+                    let row = py * TILE as usize;
+                    let mut active = 0u32;
+                    let mut newly_sat = 0u32;
+                    // Straight-line across the row: masked pixels blend
+                    // with alpha 0.0 (a bitwise no-op on the planes)
+                    // instead of branching.
+                    for px in x0..=x1 {
+                        let p = row + px;
+                        let dx = origin.0 + px as f32 + 0.5 - s.mean.x;
+                        let power = gauss_power(&s.conic, dx, dy);
+                        let alpha = (s.opacity * power.exp()).min(ALPHA_CLAMP);
+                        let keep = alpha >= ALPHA_THRESH && opaque;
+                        let aeff = if keep { alpha } else { 0.0 };
+                        let t_old = state.t[p];
+                        let w = t_old * aeff;
+                        state.r[p] += w * s.color[0];
+                        state.g[p] += w * s.color[1];
+                        state.b[p] += w * s.color[2];
+                        let t_new = t_old * (1.0 - aeff);
+                        state.t[p] = t_new;
+                        active += keep as u32;
+                        newly_sat += ((t_old >= t_min) & (t_new < t_min)) as u32;
+                    }
+                    // A 16-pixel row sits inside one 32-lane warp, so
+                    // one bulk record replaces 16 per-lane calls.
+                    stats.divergence.record_lanes(row, active as u16);
+                    stats.blends += active as u64;
+                    saturated += newly_sat;
+                }
+                stats.divergence.end_gaussian();
+            }
+            BlendMode::PixelGroup => {
+                stats.group_checks += GROUPS as u64;
+                // One threshold per splat; per group just a compare —
+                // the SPcore no-exp check.
+                let thr = group_keep_threshold(s.opacity);
+                let (gx0, gx1) = (x0 / GROUP, x1 / GROUP);
+                let (gy0, gy1) = (y0 / GROUP, y1 / GROUP);
+                // Per-group-row keep bitset (bit gx = keep group gx).
+                let mut keep_bits = [0u8; GSIDE];
+                for (gy, bits) in keep_bits.iter_mut().enumerate().take(gy1 + 1).skip(gy0) {
+                    let cy = origin.1 + 2.0 * gy as f32 + 1.0;
+                    for gx in gx0..=gx1 {
+                        let cx = origin.0 + 2.0 * gx as f32 + 1.0;
+                        let power =
+                            gauss_power(&s.conic, cx - s.mean.x, cy - s.mean.y);
+                        *bits |= u8::from(power >= thr) << gx;
+                    }
+                }
+                // Maskless inner loop: iterate the set bits and blend
+                // whole groups unconditionally (no per-pixel checks).
+                for py in GROUP * gy0..=GROUP * gy1 + (GROUP - 1) {
+                    let bits = keep_bits[py / GROUP];
+                    if bits == 0 {
+                        continue;
+                    }
+                    let dy = origin.1 + py as f32 + 0.5 - s.mean.y;
+                    let row = py * TILE as usize;
+                    let kept = bits.count_ones();
+                    let mut newly_sat = 0u32;
+                    let mut rest = bits;
+                    while rest != 0 {
+                        let gx = rest.trailing_zeros() as usize;
+                        rest &= rest - 1;
+                        for px in GROUP * gx..GROUP * gx + GROUP {
+                            let p = row + px;
+                            let dx = origin.0 + px as f32 + 0.5 - s.mean.x;
+                            let power = gauss_power(&s.conic, dx, dy);
+                            let alpha =
+                                (s.opacity * power.exp()).min(ALPHA_CLAMP);
+                            let t_old = state.t[p];
+                            let w = t_old * alpha;
+                            state.r[p] += w * s.color[0];
+                            state.g[p] += w * s.color[1];
+                            state.b[p] += w * s.color[2];
+                            let t_new = t_old * (1.0 - alpha);
+                            state.t[p] = t_new;
+                            newly_sat +=
+                                ((t_old >= t_min) & (t_new < t_min)) as u32;
+                        }
+                    }
+                    stats.divergence.record_lanes(row, (GROUP as u32 * kept) as u16);
+                    stats.alpha_evals += GROUP as u64 * kept as u64;
+                    stats.blends += GROUP as u64 * kept as u64;
+                    saturated += newly_sat;
+                }
+                stats.divergence.end_gaussian();
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Vec2;
+    use crate::splat::blend::blend_tile;
+    use crate::util::Rng;
+
+    /// Next representable f32 toward `+inf` (test probe).
+    fn step_up(x: f32) -> f32 {
+        if x == 0.0 {
+            return f32::from_bits(1);
+        }
+        if x < 0.0 {
+            f32::from_bits(x.to_bits() - 1)
+        } else {
+            f32::from_bits(x.to_bits() + 1)
+        }
+    }
+
+    /// Next representable f32 toward `-inf` (test probe).
+    fn step_down(x: f32) -> f32 {
+        if x == 0.0 {
+            return f32::from_bits(0x8000_0001);
+        }
+        if x < 0.0 {
+            f32::from_bits(x.to_bits() + 1)
+        } else {
+            f32::from_bits(x.to_bits() - 1)
+        }
+    }
+
+    fn splat(x: f32, y: f32, opacity: f32, sharp: f32) -> Splat2D {
+        Splat2D {
+            mean: Vec2::new(x, y),
+            conic: [sharp, 0.0, sharp],
+            depth: 1.0,
+            radius: 3.0 / sharp.sqrt(),
+            color: [0.9, 0.5, 0.25],
+            opacity,
+            id: 0,
+        }
+    }
+
+    fn assert_soa_matches_scalar(
+        order: &[u32],
+        splats: &[Splat2D],
+        origin: (f32, f32),
+        t_min: f32,
+        label: &str,
+    ) {
+        for mode in [BlendMode::PerPixel, BlendMode::PixelGroup] {
+            let mut rgb = [[0.0f32; 3]; PIXELS];
+            let mut t = [1.0f32; PIXELS];
+            let want = blend_tile(order, splats, origin, mode, &mut rgb, &mut t, t_min);
+            let mut state = TileState::fresh();
+            let got = blend_tile_soa(order, splats, origin, mode, &mut state, t_min);
+            for p in 0..PIXELS {
+                assert_eq!(
+                    state.r[p].to_bits(),
+                    rgb[p][0].to_bits(),
+                    "{label} {mode:?}: r[{p}]"
+                );
+                assert_eq!(
+                    state.g[p].to_bits(),
+                    rgb[p][1].to_bits(),
+                    "{label} {mode:?}: g[{p}]"
+                );
+                assert_eq!(
+                    state.b[p].to_bits(),
+                    rgb[p][2].to_bits(),
+                    "{label} {mode:?}: b[{p}]"
+                );
+                assert_eq!(
+                    state.t[p].to_bits(),
+                    t[p].to_bits(),
+                    "{label} {mode:?}: t[{p}]"
+                );
+            }
+            assert_eq!(got, want, "{label} {mode:?}: stats");
+        }
+    }
+
+    #[test]
+    fn soa_matches_scalar_on_simple_tiles() {
+        let s = vec![
+            splat(8.0, 8.0, 0.99, 0.5),
+            splat(7.3, 9.1, 0.8, 0.08),
+            splat(3.0, 4.0, 0.6, 0.15),
+            splat(12.0, 2.0, 0.0, 0.3), // zero opacity padding
+        ];
+        assert_soa_matches_scalar(&[0], &s, (0.0, 0.0), 1.0 / 255.0, "one");
+        assert_soa_matches_scalar(&[1, 2, 3], &s, (0.0, 0.0), 0.0, "three");
+        assert_soa_matches_scalar(&[0, 0, 1, 2], &s, (16.0, 32.0), 0.5, "offset");
+    }
+
+    #[test]
+    fn soa_matches_scalar_on_randomized_tiles() {
+        let mut rng = Rng::new(0x50A_B1E4D);
+        for case in 0..40 {
+            let n = 1 + rng.below(24);
+            let splats: Vec<Splat2D> = (0..n)
+                .map(|i| {
+                    let sharp = rng.range(0.02, 2.0);
+                    let opacity = match rng.below(6) {
+                        0 => 0.0,
+                        1 => 1.0,
+                        // Stress the keep boundary around ALPHA_THRESH.
+                        2 => rng.range(0.003, 0.005),
+                        _ => rng.range(0.01, 1.0),
+                    };
+                    let mut s = splat(
+                        rng.range(-30.0, 46.0),
+                        rng.range(-30.0, 46.0),
+                        opacity,
+                        sharp,
+                    );
+                    s.id = i as u32;
+                    if rng.below(8) == 0 {
+                        s.radius = 0.0; // culled splat in the order
+                        s.conic = [60.0, 0.0, 60.0];
+                    }
+                    s
+                })
+                .collect();
+            let order: Vec<u32> = (0..n as u32).collect();
+            let t_min = [0.0, 1.0 / 255.0, 0.5, 1.5][rng.below(4)];
+            assert_soa_matches_scalar(
+                &order,
+                &splats,
+                (0.0, 0.0),
+                t_min,
+                &format!("case {case}"),
+            );
+        }
+    }
+
+    #[test]
+    fn soa_early_termination_matches_scalar() {
+        // Opaque full-tile splats: the incremental saturated counter
+        // must stop on exactly the same Gaussian as the t_max scan.
+        let s = vec![splat(8.0, 8.0, 0.99, 0.001), splat(8.0, 8.0, 0.99, 0.001)];
+        let order = [0u32, 1, 1, 1];
+        assert_soa_matches_scalar(&order, &s, (0.0, 0.0), 0.5, "early-term");
+        let mut state = TileState::fresh();
+        let stats = blend_tile_soa(
+            &order,
+            &s,
+            (0.0, 0.0),
+            BlendMode::PerPixel,
+            &mut state,
+            0.5,
+        );
+        assert!(stats.early_terminated);
+        assert!(stats.gaussians < 4);
+    }
+
+    #[test]
+    fn soa_carried_state_matches_scalar() {
+        // Chunked blending: feed the same order in two calls over
+        // carried state, against one scalar pass.
+        let s = vec![splat(5.0, 6.0, 0.7, 0.1), splat(10.0, 9.0, 0.9, 0.2)];
+        for mode in [BlendMode::PerPixel, BlendMode::PixelGroup] {
+            let mut rgb = [[0.0f32; 3]; PIXELS];
+            let mut t = [1.0f32; PIXELS];
+            blend_tile(&[0, 1], &s, (0.0, 0.0), mode, &mut rgb, &mut t, 0.0);
+            let mut state = TileState::fresh();
+            blend_tile_soa(&[0], &s, (0.0, 0.0), mode, &mut state, 0.0);
+            blend_tile_soa(&[1], &s, (0.0, 0.0), mode, &mut state, 0.0);
+            for p in 0..PIXELS {
+                assert_eq!(state.r[p].to_bits(), rgb[p][0].to_bits(), "{mode:?}");
+                assert_eq!(state.t[p].to_bits(), t[p].to_bits(), "{mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn noexp_threshold_matches_exp_form_keep() {
+        // The satellite contract: the precomputed compare reproduces
+        // the exp-form keep decision exactly — including at the ulp
+        // neighbours of the threshold itself — for opacities spanning
+        // 0, the ALPHA_THRESH boundary region and 1.
+        let opacities = [
+            0.0,
+            1e-30,
+            1e-6,
+            ALPHA_THRESH,
+            0.0039,
+            0.004,
+            0.01,
+            0.25,
+            0.5,
+            0.9,
+            0.99,
+            1.0,
+        ];
+        for &opacity in &opacities {
+            let thr = group_keep_threshold(opacity);
+            let mut powers: Vec<f32> =
+                (0..=2048).map(|i| -8.0 * i as f32 / 2048.0).collect();
+            if thr.is_finite() {
+                let mut lo = thr;
+                let mut hi = thr;
+                powers.push(thr);
+                for _ in 0..8 {
+                    lo = step_down(lo);
+                    hi = step_up(hi);
+                    powers.push(lo);
+                    powers.push(hi);
+                }
+            }
+            for &p in &powers {
+                if !(p <= 0.0) {
+                    continue; // outside the kernel's gauss_power domain
+                }
+                let galpha = (opacity * p.exp()).min(ALPHA_CLAMP);
+                let want = galpha >= ALPHA_THRESH && opacity > 0.0;
+                assert_eq!(
+                    p >= thr,
+                    want,
+                    "opacity {opacity} power {p}: compare {} vs exp-form {want}",
+                    p >= thr
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn noexp_threshold_edge_opacities() {
+        assert_eq!(group_keep_threshold(0.0), f32::INFINITY);
+        assert_eq!(group_keep_threshold(-0.5), f32::INFINITY);
+        assert_eq!(group_keep_threshold(f32::NAN), f32::INFINITY);
+        // Below the alpha threshold nothing can pass at power <= 0.
+        assert_eq!(group_keep_threshold(1e-3), f32::INFINITY);
+        // At or above it, the boundary is a finite non-positive power.
+        let thr = group_keep_threshold(1.0);
+        assert!(thr.is_finite() && thr < 0.0);
+        assert!((thr - ALPHA_THRESH.ln()).abs() < 1e-4);
+        assert!(group_keep_threshold(ALPHA_THRESH) <= 0.0);
+    }
+
+    #[test]
+    fn tile_state_reset_restores_fresh() {
+        let mut state = TileState::fresh();
+        let s = vec![splat(8.0, 8.0, 0.9, 0.3)];
+        blend_tile_soa(&[0], &s, (0.0, 0.0), BlendMode::PerPixel, &mut state, 0.0);
+        assert!(state.t.iter().any(|&v| v != 1.0));
+        state.reset();
+        let fresh = TileState::fresh();
+        assert_eq!(state.r, fresh.r);
+        assert_eq!(state.g, fresh.g);
+        assert_eq!(state.b, fresh.b);
+        assert_eq!(state.t, fresh.t);
+    }
+}

@@ -11,14 +11,22 @@
 //! The CPU implementations here mirror the L1 Pallas kernels exactly and
 //! also emit the per-warp lane-occupancy statistics the GPU/SPCore
 //! timing models replay ([`divergence`]).
+//!
+//! Both dataflows come in two interchangeable kernel implementations:
+//! the branchy AoS scalar reference ([`blend::blend_tile`]) and the
+//! divergence-free SoA kernel ([`kernel::blend_tile_soa`]) — the
+//! software SPcore, selected per session via [`kernel::BlendKernel`]
+//! and byte-identical to the reference per mode.
 
 pub mod blend;
 pub mod divergence;
+pub mod kernel;
 pub mod sort;
 pub mod tiling;
 
 pub use blend::{blend_tile, BlendMode, BlendStats};
 pub use divergence::DivergenceStats;
+pub use kernel::{blend_tile_soa, group_keep_threshold, BlendKernel, TileState};
 pub use sort::{
     float_to_sortable_uint, radix_sort_tile, sort_bins_by_depth,
     sort_bins_threaded, sort_bins_with, sort_tile_by_depth, DepthSortScratch,

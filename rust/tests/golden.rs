@@ -7,7 +7,9 @@
 //! Every scene is rendered at scheduler widths {1, 2, 8} and the
 //! images must be byte-identical across widths before the digest is
 //! even checked — the parallel front end and tile scheduler may never
-//! change pixels.
+//! change pixels. The SoA blend kernel (`BlendKernel::Soa`) is held to
+//! the same bar: per alpha mode, widths {1, 8}, byte-identical to the
+//! scalar-kernel frame.
 //!
 //! To update the digests after an *intended* output change:
 //! `SLTARCH_BLESS=1 cargo test --test golden` and commit the file.
@@ -19,7 +21,8 @@ use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
 
 use sltarch::config::SceneConfig;
-use sltarch::coordinator::{CpuBackend, FramePipeline};
+use sltarch::coordinator::renderer::AlphaMode;
+use sltarch::coordinator::{BlendKernel, CpuBackend, FramePipeline, RenderOptions};
 use sltarch::math::Camera;
 use sltarch::scene::{orbit_cameras, walkthrough};
 
@@ -116,6 +119,33 @@ fn golden_frames_match_checked_in_digests() {
                 images[0].data, img.data,
                 "scene `{name}`: width {threads} diverged from serial"
             );
+        }
+
+        // The SoA blend kernel may never change pixels either: for both
+        // alpha dataflows, a kernel=Soa render at widths {1, 8} must be
+        // byte-identical to the scalar-kernel frame.
+        for alpha in [AlphaMode::Group, AlphaMode::Pixel] {
+            let scalar_opts = RenderOptions {
+                alpha,
+                kernel: BlendKernel::Scalar,
+                ..pipeline.default_options()
+            };
+            let backend = CpuBackend::with_threads(1);
+            let mut session = pipeline.session_on(&backend, scalar_opts);
+            let want = session.render(&cam).expect("scalar render");
+            for threads in [1usize, 8] {
+                let backend = CpuBackend::with_threads(threads);
+                let mut session = pipeline.session_on(
+                    &backend,
+                    RenderOptions { kernel: BlendKernel::Soa, ..scalar_opts },
+                );
+                let img = session.render(&cam).expect("soa render");
+                assert_eq!(
+                    want.data, img.data,
+                    "scene `{name}` ({alpha:?}): SoA kernel at width \
+                     {threads} diverged from the scalar kernel"
+                );
+            }
         }
 
         let img = &images[0];

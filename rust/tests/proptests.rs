@@ -13,8 +13,9 @@ use sltarch::scene::{build_lod_tree, GeneratorKind, SceneSpec};
 use sltarch::splat::blend::PIXELS;
 use sltarch::splat::{
     bin_splats, bin_splats_into_threaded, bin_splats_nested, blend_tile,
-    radix_sort_tile, sort_bins_threaded, sort_tile_by_depth, BlendMode,
-    DepthSortScratch, TileBins,
+    blend_tile_soa, group_keep_threshold, radix_sort_tile, sort_bins_threaded,
+    sort_tile_by_depth, BlendKernel, BlendMode, DepthSortScratch, TileBins,
+    TileState,
 };
 use sltarch::util::prop::forall;
 use sltarch::util::Rng;
@@ -201,6 +202,139 @@ fn prop_blend_conserves_energy_and_bounds() {
                     "energy not conserved: rgb {} vs 1-T {}",
                     rgb[p][0],
                     1.0 - t[p]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_soa_blend_kernel_is_bit_identical_to_scalar() {
+    // The PR-5 tentpole contract at the kernel level: on random tiles
+    // (random conics, opacities stressing the keep boundary, culled and
+    // off-tile splats, duplicate order entries, every early-termination
+    // regime) the SoA kernel reproduces `blend_tile`'s pixels AND its
+    // BlendStats/DivergenceStats bit for bit, in both alpha dataflows.
+    forall(24, |rng| {
+        let n = 1 + rng.below(32);
+        let splats: Vec<Splat2D> = (0..n)
+            .map(|i| {
+                let sharp = rng.range(0.02, 3.0);
+                let opacity = match rng.below(8) {
+                    0 => 0.0,
+                    1 => 1.0,
+                    2 => rng.range(0.0035, 0.0045), // ALPHA_THRESH region
+                    _ => rng.range(0.01, 1.0),
+                };
+                Splat2D {
+                    mean: Vec2::new(rng.range(-40.0, 56.0), rng.range(-40.0, 56.0)),
+                    conic: [sharp, 0.0, sharp],
+                    depth: rng.range(0.2, 100.0),
+                    radius: if rng.below(10) == 0 { 0.0 } else { 3.0 / sharp.sqrt() },
+                    color: [rng.range(0.0, 1.0), rng.range(0.0, 1.0), rng.range(0.0, 1.0)],
+                    opacity,
+                    id: i as u32,
+                }
+            })
+            .collect();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        if rng.below(3) == 0 {
+            order.push(rng.below(n) as u32); // duplicate entry
+        }
+        let t_min = [0.0f32, 1.0 / 255.0, 0.5, 1.5][rng.below(4)];
+        let origin = [(0.0f32, 0.0f32), (16.0, 48.0)][rng.below(2)];
+        for mode in [BlendMode::PerPixel, BlendMode::PixelGroup] {
+            let mut rgb = [[0.0f32; 3]; PIXELS];
+            let mut t = [1.0f32; PIXELS];
+            let want =
+                blend_tile(&order, &splats, origin, mode, &mut rgb, &mut t, t_min);
+            let mut state = TileState::fresh();
+            let got =
+                blend_tile_soa(&order, &splats, origin, mode, &mut state, t_min);
+            assert_eq!(got, want, "{mode:?}: stats diverged");
+            for p in 0..PIXELS {
+                assert_eq!(
+                    [state.r[p], state.g[p], state.b[p]].map(f32::to_bits),
+                    rgb[p].map(f32::to_bits),
+                    "{mode:?}: rgb[{p}]"
+                );
+                assert_eq!(state.t[p].to_bits(), t[p].to_bits(), "{mode:?}: t[{p}]");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_group_keep_threshold_matches_exp_form() {
+    // The no-exp compare is exact: for random opacities (including the
+    // ALPHA_THRESH boundary region) and powers — random plus the ulp
+    // neighbourhood of the threshold itself — `power >= thr` equals the
+    // reference exp-form keep decision.
+    use sltarch::gaussian::{ALPHA_CLAMP, ALPHA_THRESH};
+    forall(64, |rng| {
+        let opacity = match rng.below(4) {
+            0 => rng.range(0.0, 0.008),
+            1 => rng.range(0.9, 1.0),
+            _ => rng.range(0.0, 1.0),
+        };
+        let thr = group_keep_threshold(opacity);
+        let mut powers: Vec<f32> =
+            (0..64).map(|_| -rng.range(0.0, 9.0)).collect();
+        powers.push(0.0);
+        if thr.is_finite() {
+            // thr is <= 0 here, so stepping the bit pattern up moves
+            // toward 0 and down moves toward -inf.
+            for ulps in 1u32..=4 {
+                powers.push(f32::from_bits(thr.to_bits() - ulps)); // above
+                powers.push(f32::from_bits(thr.to_bits() + ulps)); // below
+            }
+            powers.push(thr);
+        }
+        for &p in &powers {
+            if !(p <= 0.0) {
+                continue; // gauss_power domain is <= 0
+            }
+            let galpha = (opacity * p.exp()).min(ALPHA_CLAMP);
+            let want = galpha >= ALPHA_THRESH && opacity > 0.0;
+            assert_eq!(p >= thr, want, "opacity {opacity} power {p}");
+        }
+    });
+}
+
+#[test]
+fn prop_soa_kernel_sessions_match_scalar_across_widths() {
+    // Session-level: a kernel=Soa session renders byte-identical frames
+    // to a kernel=Scalar session for both alpha modes at scheduler
+    // widths {1, 2, 8}, on randomized scenes and cameras.
+    forall(4, |rng| {
+        let mut cfg = SceneConfig::small_scale().quick();
+        cfg.leaves = 1_500 + rng.below(1_500);
+        let pipeline = FramePipeline::builder(cfg.build(rng.next_u64())).build();
+        let cam = pipeline.scene().scenario_camera(rng.below(6));
+        for alpha in [AlphaMode::Pixel, AlphaMode::Group] {
+            for threads in [1usize, 2, 8] {
+                let backend = CpuBackend::with_threads(threads);
+                let mut scalar = pipeline.session_on(
+                    &backend,
+                    RenderOptions {
+                        alpha,
+                        kernel: BlendKernel::Scalar,
+                        ..pipeline.default_options()
+                    },
+                );
+                let mut soa = pipeline.session_on(
+                    &backend,
+                    RenderOptions {
+                        alpha,
+                        kernel: BlendKernel::Soa,
+                        ..pipeline.default_options()
+                    },
+                );
+                let want = scalar.render(&cam).unwrap();
+                let got = soa.render(&cam).unwrap();
+                assert_eq!(
+                    want.data, got.data,
+                    "SoA kernel diverged ({alpha:?}, {threads} threads)"
                 );
             }
         }
