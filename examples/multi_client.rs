@@ -1,20 +1,21 @@
-//! Multi-client serving surface: N concurrent camera streams over ONE
-//! shared, immutable `FramePipeline` (scene + SLTree partitioned once),
-//! each client thread owning its private `RenderSession` (options,
-//! front-end scratch, unified stats). This is the serving shape the
-//! ROADMAP north star asks for: session setup amortized across frames,
-//! zero cross-client locking, aggregate throughput reported via
-//! `RenderStats`.
+//! Multi-client serving over ONE shared pipeline, now through the
+//! deadline-aware serving front end (`sltarch::serve`): a bounded frame
+//! queue with typed backpressure, per-client admission control, render
+//! workers, per-request deadlines and deadline-adaptive LoD
+//! degradation. The open-loop load generator offers more work than the
+//! worker pool can render, so the run shows the whole story: shed
+//! counts, p50/p95/p99 latency percentiles, and per-stream tau walking
+//! up under pressure (and back down when headroom returns).
 //!
 //! Run: `cargo run --release --example multi_client [-- --quick]
 //!       [-- --clients N] [-- --frames N]`
 
 use sltarch::config::SceneConfig;
-use sltarch::coordinator::renderer::AlphaMode;
-use sltarch::coordinator::{
-    BlendKernel, CpuBackend, FramePipeline, RenderOptions, RenderStats,
-};
+use sltarch::coordinator::{CpuBackend, FramePipeline};
 use sltarch::scene::orbit_cameras;
+use sltarch::serve::{
+    calibrate_frame_seconds, run_load, LoadGenConfig, QosConfig, ServeConfig,
+};
 
 fn arg_usize(args: &[String], key: &str, default: usize) -> usize {
     args.iter()
@@ -38,102 +39,118 @@ fn main() -> anyhow::Result<()> {
     }
     let extent = cfg.extent;
     println!(
-        "building `{}` ({} leaves) for {clients} concurrent clients x {frames} frames...",
+        "building `{}` ({} leaves) for {clients} clients x {frames} frames...",
         cfg.name, cfg.leaves
     );
 
-    // One pipeline for everyone. Per-client scheduler width 2 so the
-    // clients share the machine instead of oversubscribing it; the one
-    // knob drives each session's parallel front end (project -> CSR
-    // bin -> tile sort) and its blend-stage tile scheduler together.
+    // One immutable pipeline for everyone; per-session scheduler width 2
+    // so concurrent render workers share the machine instead of
+    // oversubscribing it.
     let pipeline = FramePipeline::builder(cfg.build(42))
         .tau(16.0)
         .backend(CpuBackend::with_threads(2))
         .build();
 
-    // Every client gets its own trajectory (different orbit band) and
-    // alternates alpha dataflows, proving per-session options really
-    // are per-session.
-    let t0 = std::time::Instant::now();
-    let per_client: Vec<RenderStats> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..clients)
-            .map(|c| {
-                let pipeline = &pipeline;
-                s.spawn(move || {
-                    let alpha = if c % 2 == 0 { AlphaMode::Group } else { AlphaMode::Pixel };
-                    // Every client blends through the divergence-free
-                    // SoA kernel (byte-identical to the scalar
-                    // reference; see `splat::kernel`).
-                    let mut session = pipeline.session_with(RenderOptions {
-                        alpha,
-                        kernel: BlendKernel::Soa,
-                        ..pipeline.default_options()
-                    });
-                    let range = 0.5 + 0.4 * (c as f32 + 1.0) / clients as f32;
-                    let cams = orbit_cameras(extent, range, frames, 256, 256);
-                    let images = session.render_path(&cams).expect("client render");
-                    // Sanity: every client stream produced real content.
-                    let mean: f32 = images
-                        .iter()
-                        .flat_map(|img| img.data.iter())
-                        .map(|p| p[0] + p[1] + p[2])
-                        .sum::<f32>()
-                        / (images.len() * images[0].data.len() * 3) as f32;
-                    assert!(mean > 1e-4, "client {c} rendered black frames");
-                    *session.stats()
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
-    });
-    let span = t0.elapsed().as_secs_f64();
+    // Every client streams its own orbit band; the server recycles the
+    // paths modulo, so each lane really follows a coherent trajectory
+    // (which is what keeps its temporal cut cache warm).
+    let paths: Vec<_> = (0..clients)
+        .map(|c| {
+            let range = 0.5 + 0.4 * (c as f32 + 1.0) / clients as f32;
+            orbit_cameras(extent, range, frames.max(8), 256, 256)
+        })
+        .collect();
 
-    println!("\n client  alpha   frames     fps   ms/frame      cut/frame   pairs/frame");
-    for (c, st) in per_client.iter().enumerate() {
+    // Calibrate the machine, then deliberately offer ~2x what the
+    // worker pool can render: per-client period = one frame time, but
+    // only 2 workers for `clients` streams. The budget is what one
+    // uncontended frame needs plus headroom — under this overload a
+    // fixed-tau server blows through it, the QoS controller trades LoD
+    // for latency instead.
+    let base = calibrate_frame_seconds(&pipeline, 16.0, &paths[0][..4.min(paths[0].len())]);
+    let budget = (base * 2.0).max(1e-3);
+    println!(
+        "calibration: {:.1} ms/frame at tau 16 -> budget {:.1} ms/request",
+        base * 1e3,
+        budget * 1e3
+    );
+
+    let serve = ServeConfig {
+        queue_capacity: clients * 4,
+        max_inflight: 3,
+        workers: 2,
+        budget,
+        shed_expired: false,
+        keep_frames: false,
+        qos: QosConfig {
+            enabled: true,
+            step: 8.0, // == CutCacheConfig::max_tau_step: nudges stay warm
+            max_tau: 64.0,
+            miss_threshold: 2,
+            recover_headroom: 0.5,
+            recover_after: 8,
+        },
+    };
+    let load = LoadGenConfig {
+        clients,
+        frames,
+        warmup: frames.min(8),
+        period: base,
+        burst_every: 4,
+        burst_extra: 2,
+        jitter: 0.1,
+        slow_client: clients > 1,
+        ..LoadGenConfig::default()
+    };
+
+    let r = run_load(&pipeline, serve, &load, &paths);
+
+    println!(
+        "\n client   served  missed expired      p50      p95      p99     tau  degr/recov"
+    );
+    for c in &r.clients {
+        let [p50, p95, p99] = c.e2e.percentiles_ms();
         println!(
-            "{c:>7} {:>6} {:>8} {:>7.2} {:>10.1} {:>14.0} {:>13.1}k",
-            if c % 2 == 0 { "group" } else { "pixel" },
-            st.frames,
-            st.fps(),
-            st.ms_per_frame(),
-            st.cut_total as f64 / st.frames as f64,
-            st.pairs_total as f64 / st.frames as f64 / 1e3,
+            "{:>7} {:>8} {:>7} {:>7} {:>7.1}ms {:>7.1}ms {:>7.1}ms {:>7.1} {:>5}/{}",
+            c.client, c.served, c.missed, c.expired, p50, p95, p99, c.tau,
+            c.degrade_events, c.recover_events
         );
     }
 
-    // Aggregate serving report: the clients ran concurrently, so fold
-    // them with `merge_concurrent` — it pins `wall_seconds` to the
-    // measured span (a plain `merge` would sum the per-client clocks
-    // and under-report aggregate fps).
-    let busy: f64 = per_client.iter().map(|st| st.wall_seconds).sum();
-    let mut total = RenderStats::default();
-    for st in &per_client {
-        total.merge_concurrent(st, span);
-    }
-    println!("\n=== aggregate ({clients} clients sharing one pipeline) ===");
-    println!("frames             : {}", total.frames);
+    let [p50, p95, p99] = r.e2e_percentiles_ms();
+    let [w50, w95, w99] = r.queue_wait.percentiles_ms();
+    println!("\n=== serving window ({clients} clients, {} workers) ===", serve.workers);
     println!(
-        "scheduler width    : {} (front end + blend, per client)",
-        total.front_end_threads
-    );
-    println!("wall-clock span    : {:.2} s", span);
-    println!(
-        "aggregate fps      : {:.2} ({:.1} ms/frame effective)",
-        total.fps(),
-        total.ms_per_frame()
+        "submitted          : {} ({} served, {} missed deadline, {} expired, {} failed)",
+        r.submitted, r.served, r.missed, r.expired, r.failed
     );
     println!(
-        "concurrency        : {:.2}x (client-seconds / span)",
-        busy / span.max(1e-12)
+        "shed               : {} (queue-full {}, client-saturated {})",
+        r.shed_total(),
+        r.shed_queue,
+        r.shed_admission
     );
     println!(
-        "cut-cache hits     : {}/{} frames (per-stream temporal reuse; \
-         {} frontier nodes revalidated, {} reseeds)",
-        total.cache_hit, total.frames, total.revalidated, total.reseeded
+        "queue occupancy    : high water {} / capacity {}",
+        r.queue_high_water, r.queue_capacity
     );
-    print!("per-stage (s, all clients):");
-    for (name, secs) in total.stages.rows() {
-        print!(" {name} {secs:.2}");
+    println!("served fps         : {:.2} over {:.2} s", r.served_fps(), r.span_seconds);
+    println!("e2e latency        : p50 {p50:.1} ms  p95 {p95:.1} ms  p99 {p99:.1} ms");
+    println!("queue wait         : p50 {w50:.1} ms  p95 {w95:.1} ms  p99 {w99:.1} ms");
+    println!(
+        "qos                : {} degrade / {} recover steps (budget {:.1} ms)",
+        r.degrade_events,
+        r.recover_events,
+        serve.budget * 1e3
+    );
+    println!(
+        "cut-cache          : {}/{} frames hit ({} revalidated, {} reseeds — tau \
+         nudges ride the warm path)",
+        r.render.cache_hit, r.render.frames, r.render.revalidated, r.render.reseeded
+    );
+    print!("per-stage p95 (ms) :");
+    for (name, [_, stage_p95, _]) in r.render.stages.percentile_rows_ms() {
+        print!(" {name} {stage_p95:.2}");
     }
     println!();
     Ok(())

@@ -14,6 +14,9 @@ use sltarch::splat::{
     bin_splats, bin_splats_into, bin_splats_into_threaded, sort_bins_threaded,
     sort_bins_with, DepthSortScratch, TileBins,
 };
+use sltarch::serve::{
+    calibrate_frame_seconds, run_load, LoadGenConfig, QosConfig, ServeConfig,
+};
 use sltarch::util::bench::Bench;
 
 fn main() {
@@ -89,7 +92,7 @@ fn main() {
     b.iter("bin_splats", 5, || bin_splats(&splats, 256, 256));
     let mut bins_buf = TileBins::default();
     b.iter("bin_splats_into(reused)", 5, || {
-        bin_splats_into(&splats, 256, 256, &mut bins_buf);
+        bin_splats_into(&splats, 256, 256, &mut bins_buf).expect("bin");
         bins_buf.pairs
     });
 
@@ -115,7 +118,7 @@ fn main() {
             proj_buf.len()
         });
         b.iter(&format!("bin_splats_into({w} threads)"), 5, || {
-            bin_splats_into_threaded(&splats, 256, 256, &mut bins_buf, w);
+            bin_splats_into_threaded(&splats, 256, 256, &mut bins_buf, w).expect("bin");
             bins_buf.pairs
         });
         let mut pool: Vec<DepthSortScratch> = Vec::new();
@@ -129,7 +132,7 @@ fn main() {
         let mut fe_pool: Vec<DepthSortScratch> = Vec::new();
         b.iter(&format!("front_end(project+bin+sort, {w} threads)"), 5, || {
             project_into_threaded(&queue, &cam, &mut fe_splats, w);
-            bin_splats_into_threaded(&fe_splats, 256, 256, &mut fe_bins, w);
+            bin_splats_into_threaded(&fe_splats, 256, 256, &mut fe_bins, w).expect("bin");
             sort_bins_threaded(&mut fe_bins, &fe_splats, &mut fe_pool, w);
             fe_bins.pairs
         });
@@ -201,6 +204,105 @@ fn main() {
             );
         }
     }
+
+    // The PR-6 tentpole rows: the deadline-aware serving layer under
+    // 2x overload (3 open-loop clients, 2 render workers). Three
+    // scenarios over identical offered load:
+    //   fixed    — QoS disabled: the tail collapses, p99 >> budget;
+    //   adaptive — deadline-adaptive tau: degrades LoD stepwise (warm
+    //              cut-cache nudges) until p99 fits the budget;
+    //   burst    — sustainable base rate + client-0 bursts: degrade on
+    //              each burst, hysteretic recovery in the calm stretches.
+    let serve_clients = 3usize;
+    let serve_frames = if quick { 6 } else { 20 };
+    let serve_paths: Vec<_> = (0..serve_clients)
+        .map(|c| orbit_cameras(extent, 0.55 + 0.15 * c as f32, 12, 256, 256))
+        .collect();
+    let base = calibrate_frame_seconds(&pipeline, rcfg.lod_tau, &serve_paths[0][..4]);
+    let coarse = calibrate_frame_seconds(&pipeline, 128.0, &serve_paths[0][..4]);
+    let budget = base * 1.5;
+    b.record("serve calib tau=base ms/frame", base * 1e3);
+    b.record("serve calib tau=128 ms/frame", coarse * 1e3);
+    b.record("serve budget ms", budget * 1e3);
+    let overload = LoadGenConfig {
+        clients: serve_clients,
+        frames: serve_frames,
+        warmup: serve_frames,
+        period: base * 0.75,
+        ..LoadGenConfig::default()
+    };
+    let serve_base = ServeConfig {
+        queue_capacity: serve_clients * 4,
+        max_inflight: 3,
+        workers: 2,
+        budget,
+        ..ServeConfig::default()
+    };
+    for (label, qos) in [
+        ("fixed", QosConfig::disabled()),
+        (
+            "adaptive",
+            QosConfig {
+                enabled: true,
+                step: 8.0, // == CutCacheConfig::max_tau_step: warm nudges
+                max_tau: 128.0,
+                miss_threshold: 1,
+                recover_headroom: 0.5,
+                recover_after: 8,
+            },
+        ),
+    ] {
+        let r = run_load(
+            &pipeline,
+            ServeConfig { qos, ..serve_base },
+            &overload,
+            &serve_paths,
+        );
+        let [p50, p95, p99] = r.e2e_percentiles_ms();
+        b.record(&format!("serve({label}) p50 ms"), p50);
+        b.record(&format!("serve({label}) p95 ms"), p95);
+        b.record(&format!("serve({label}) p99 ms"), p99);
+        b.record(&format!("serve({label}) served fps"), r.served_fps());
+        b.record(&format!("serve({label}) shed"), r.shed_total() as f64);
+        b.record(&format!("serve({label}) deadline misses"), r.missed as f64);
+        b.record(&format!("serve({label}) degrade events"), r.degrade_events as f64);
+        b.record(&format!("serve({label}) recover events"), r.recover_events as f64);
+        let tau_max =
+            r.clients.iter().map(|c| c.tau).fold(0.0f32, f32::max);
+        b.record(&format!("serve({label}) tau final"), tau_max as f64);
+    }
+    // Burst-recover: base rate the pool can sustain, client 0 dumps
+    // periodic bursts; the row pair of interest is degrade AND recover
+    // events both being non-zero.
+    let burst_load = LoadGenConfig {
+        clients: serve_clients,
+        frames: if quick { 8 } else { 16 },
+        warmup: 4,
+        period: base * 3.0,
+        burst_every: 3,
+        burst_extra: 4,
+        ..LoadGenConfig::default()
+    };
+    let burst_qos = QosConfig {
+        enabled: true,
+        step: 8.0,
+        max_tau: 128.0,
+        miss_threshold: 1,
+        recover_headroom: 0.6,
+        recover_after: 3,
+    };
+    let r = run_load(
+        &pipeline,
+        ServeConfig { qos: burst_qos, ..serve_base },
+        &burst_load,
+        &serve_paths,
+    );
+    let [_, _, p99] = r.e2e_percentiles_ms();
+    b.record("serve(burst) p99 ms", p99);
+    b.record("serve(burst) degrade events", r.degrade_events as f64);
+    b.record("serve(burst) recover events", r.recover_events as f64);
+    b.record("serve(burst) shed", r.shed_total() as f64);
+    b.record("serve queue high water", r.queue_high_water as f64);
 
     b.report();
     let json = std::path::Path::new("BENCH_hotpath.json");

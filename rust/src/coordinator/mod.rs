@@ -14,7 +14,9 @@
 //!   divergence-free SoA kernel, byte-identical outputs).
 //! * [`stats`] — [`RenderStats`] / [`StageTimings`]: one report type
 //!   for frames, paths and serving sessions, including the cut cache's
-//!   `cache_hit` / `revalidated` / `reseeded` counters.
+//!   `cache_hit` / `revalidated` / `reseeded` counters and the
+//!   log-bucketed [`LatencyHistogram`]s (per-stage and per-frame
+//!   p50/p95/p99) the serving layer degrades on.
 //! * [`renderer`] — the shared front end, the blend loops, and the
 //!   stateless reference renderers the equivalence tests pin against.
 //! * [`workload`] — runs the real pipeline once per (scene, camera,
@@ -35,4 +37,4 @@ pub use backend::{CpuBackend, PjrtBackend, RenderBackend, RenderOptions};
 pub use pipeline::{FramePipeline, FramePipelineBuilder, SimulationReport};
 pub use renderer::{AlphaMode, CpuRenderer, FrameScratch};
 pub use session::RenderSession;
-pub use stats::{RenderStats, StageTimings};
+pub use stats::{LatencyHistogram, RenderStats, StageTimings};

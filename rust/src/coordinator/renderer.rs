@@ -83,19 +83,21 @@ impl FrameScratch {
 /// Shared front end: project the queue, bin into CSR, and depth-sort
 /// every tile slice in place — all three stages on `threads` scoped
 /// workers (1 = the serial reference path; output is byte-identical at
-/// any width) — accumulating per-stage wall-clock into `stages` (the
-/// session API's unified stats).
+/// any width) — accumulating per-stage wall-clock (sums + histograms)
+/// into `stages` (the session API's unified stats). A binning invariant
+/// failure surfaces as `Err` so one malformed frame degrades that
+/// request instead of killing a serving process.
 pub(crate) fn front_end_timed(
     queue: &Gaussians,
     cam: &Camera,
     scratch: &mut FrameScratch,
     stages: &mut StageTimings,
     threads: usize,
-) {
+) -> Result<()> {
     let threads = threads.max(1);
     let t = Instant::now();
     project_into_threaded(queue, cam, &mut scratch.splats, threads);
-    stages.project += t.elapsed().as_secs_f64();
+    stages.record_stage(StageTimings::PROJECT, t.elapsed().as_secs_f64());
 
     let t = Instant::now();
     bin_splats_into_threaded(
@@ -104,18 +106,19 @@ pub(crate) fn front_end_timed(
         cam.intr.height,
         &mut scratch.bins,
         threads,
-    );
+    )?;
     // The scheduler work list only needs the finished offset table, so
     // it is built (and timed) with the binning stage.
     scratch.work.clear();
     scratch.work.extend(
         (0..scratch.bins.tile_count() as u32).filter(|&t| scratch.bins.tile_len(t as usize) > 0),
     );
-    stages.bin += t.elapsed().as_secs_f64();
+    stages.record_stage(StageTimings::BIN, t.elapsed().as_secs_f64());
 
     let t = Instant::now();
     sort_bins_threaded(&mut scratch.bins, &scratch.splats, &mut scratch.sort, threads);
-    stages.sort += t.elapsed().as_secs_f64();
+    stages.record_stage(StageTimings::SORT, t.elapsed().as_secs_f64());
+    Ok(())
 }
 
 /// Untimed front end for the stateless reference renderers.
@@ -124,8 +127,8 @@ fn front_end_into(
     cam: &Camera,
     scratch: &mut FrameScratch,
     threads: usize,
-) {
-    front_end_timed(queue, cam, scratch, &mut StageTimings::default(), threads);
+) -> Result<()> {
+    front_end_timed(queue, cam, scratch, &mut StageTimings::default(), threads)
 }
 
 /// Write one tile's accumulated RGB into the frame image (exclusive
@@ -457,7 +460,11 @@ impl CpuRenderer {
         threads: usize,
         scratch: &mut FrameScratch,
     ) -> Image {
-        front_end_into(queue, cam, scratch, threads);
+        // The stateless reference path keeps its infallible signature:
+        // a binning invariant violation here means the test/golden
+        // harness itself is broken, so failing loudly is the feature.
+        front_end_into(queue, cam, scratch, threads)
+            .expect("front end (stateless reference path)");
         let mut img = Image::new(cam.intr.width, cam.intr.height);
         // The stateless reference renderer always runs the scalar
         // kernel — it is the ground truth the SoA kernel (selected via
@@ -508,7 +515,7 @@ impl PjrtRenderer {
         // reference path keeps it serial — the session API drives the
         // parallel front end via its unified scheduler width); blending
         // on PJRT.
-        front_end_into(queue, cam, scratch, 1);
+        front_end_into(queue, cam, scratch, 1)?;
         let mut img = Image::new(cam.intr.width, cam.intr.height);
         blend_tiles_pjrt(engine, scratch, mode == AlphaMode::Group, rcfg.t_min, &mut img)?;
         Ok(img)
@@ -624,7 +631,7 @@ mod tests {
         let mut scratch = FrameScratch::new();
         for mode in [BlendMode::PerPixel, BlendMode::PixelGroup] {
             for threads in [1usize, 2, 8] {
-                front_end_into(&queue, &cam, &mut scratch, threads);
+                front_end_into(&queue, &cam, &mut scratch, threads).unwrap();
                 let mut want = Image::new(cam.intr.width, cam.intr.height);
                 blend_tiles(
                     &mut scratch,

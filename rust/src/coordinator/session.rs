@@ -134,16 +134,16 @@ impl<'p> RenderSession<'p> {
             self.pipeline.scene().gaussians.gather_into(cut, &mut self.queue);
             (cut.len() as u64, trace)
         };
-        stages.search = t.elapsed().as_secs_f64();
+        stages.record_stage(StageTimings::SEARCH, t.elapsed().as_secs_f64());
 
         let width = self.scheduler_width();
-        front_end_timed(&self.queue, cam, &mut self.scratch, &mut stages, width);
+        front_end_timed(&self.queue, cam, &mut self.scratch, &mut stages, width)?;
 
         let mut img = Image::new(cam.intr.width, cam.intr.height);
         let t = Instant::now();
         self.backend
             .blend(&mut self.scratch, &self.opts, self.pipeline.rcfg(), &mut img)?;
-        stages.blend = t.elapsed().as_secs_f64();
+        stages.record_stage(StageTimings::BLEND, t.elapsed().as_secs_f64());
 
         self.stats.stages.accumulate(&stages);
         self.stats.cut_total += cut_len;
@@ -154,7 +154,9 @@ impl<'p> RenderSession<'p> {
         self.stats.frames += 1;
         self.stats.threads = self.backend.threads(&self.opts);
         self.stats.front_end_threads = width;
-        self.stats.wall_seconds += frame_t0.elapsed().as_secs_f64();
+        let frame_seconds = frame_t0.elapsed().as_secs_f64();
+        self.stats.wall_seconds += frame_seconds;
+        self.stats.frame_latency.record(frame_seconds);
         Ok(img)
     }
 

@@ -1,6 +1,163 @@
 //! Unified render statistics: one report type for single frames, camera
 //! paths and whole serving sessions, with per-stage wall-clock
 //! accumulators. Replaces the PR-1 `FrameReport`/`PathReport` split.
+//!
+//! Since the serving-layer PR the report also carries **log-bucketed
+//! latency histograms** ([`LatencyHistogram`]): means hide exactly the
+//! tail behaviour a deadline-driven serving loop degrades on, so every
+//! stage and every whole frame records into a histogram that can answer
+//! p50/p95/p99 queries with bounded (<= 25 %) relative error and zero
+//! steady-state allocation.
+
+/// Sub-buckets per power-of-two octave (2 mantissa bits).
+const HIST_SUB: usize = 4;
+/// First octave boundary: samples below `2^10` ns (~1 µs) share the
+/// underflow bucket — nothing the renderer times is meaningfully faster.
+const HIST_MIN_LOG2: u32 = 10;
+/// Last octave boundary: samples at or above `2^34` ns (~17 s) share the
+/// overflow bucket — anything that slow is an outage, not a latency.
+const HIST_MAX_LOG2: u32 = 34;
+/// Bucket count: underflow + `(34-10)` octaves x 4 sub-buckets + overflow.
+const HIST_BUCKETS: usize = 2 + (HIST_MAX_LOG2 - HIST_MIN_LOG2) as usize * HIST_SUB;
+
+/// Fixed-footprint log-bucketed latency histogram.
+///
+/// Buckets are powers of two from ~1 µs to ~17 s, each split into
+/// [`HIST_SUB`] sub-buckets (2 mantissa bits), so a quantile's reported
+/// upper bound overshoots the true sample by at most one sub-bucket
+/// width — a relative error bounded by 25 %. Recording is O(1) with no
+/// allocation ever (the counts live inline), so histograms are safe on
+/// the per-frame hot path and cheap to [`LatencyHistogram::merge`]
+/// across clients.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LatencyHistogram {
+    counts: [u32; HIST_BUCKETS],
+    count: u64,
+    sum_ns: f64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // Manual impl: `[u32; 98]` exceeds std's derived-Default arrays.
+        LatencyHistogram {
+            counts: [0; HIST_BUCKETS],
+            count: 0,
+            sum_ns: 0.0,
+            max_ns: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram (same as `Default`).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index for a nanosecond sample.
+    fn bucket(ns: u64) -> usize {
+        if ns < (1u64 << HIST_MIN_LOG2) {
+            return 0;
+        }
+        let oct = 63 - ns.leading_zeros();
+        if oct >= HIST_MAX_LOG2 {
+            return HIST_BUCKETS - 1;
+        }
+        let sub = ((ns >> (oct - 2)) & (HIST_SUB as u64 - 1)) as usize;
+        1 + (oct - HIST_MIN_LOG2) as usize * HIST_SUB + sub
+    }
+
+    /// Inclusive upper bound (ns) of bucket `idx` — what quantiles
+    /// report. The overflow bucket reports the recorded maximum.
+    fn bucket_upper_ns(&self, idx: usize) -> u64 {
+        if idx == 0 {
+            1u64 << HIST_MIN_LOG2
+        } else if idx == HIST_BUCKETS - 1 {
+            self.max_ns
+        } else {
+            let i = idx - 1;
+            let oct = HIST_MIN_LOG2 as usize + i / HIST_SUB;
+            let sub = (i % HIST_SUB) as u64;
+            (1u64 << (oct - 2)) * (HIST_SUB as u64 + sub + 1)
+        }
+    }
+
+    /// Record one latency sample in seconds. Negative / NaN samples
+    /// (degenerate clocks) clamp to zero rather than poisoning counts.
+    pub fn record(&mut self, seconds: f64) {
+        let ns = (seconds.max(0.0) * 1e9) as u64;
+        let b = Self::bucket(ns);
+        self.counts[b] = self.counts[b].saturating_add(1);
+        self.count += 1;
+        self.sum_ns += ns as f64;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Whether any sample has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean sample in seconds (0 when empty).
+    pub fn mean_seconds(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns / self.count as f64 * 1e-9
+        }
+    }
+
+    /// Largest sample in seconds.
+    pub fn max_seconds(&self) -> f64 {
+        self.max_ns as f64 * 1e-9
+    }
+
+    /// Quantile `q` in `[0, 1]` as seconds: the upper bound of the
+    /// bucket holding the `ceil(q * count)`-th smallest sample
+    /// (conservative — never under-reports a tail). 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c as u64;
+            if seen >= target {
+                return self.bucket_upper_ns(i) as f64 * 1e-9;
+            }
+        }
+        self.max_seconds()
+    }
+
+    /// [`LatencyHistogram::quantile`] in milliseconds.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        self.quantile(q) * 1e3
+    }
+
+    /// `[p50, p95, p99]` in milliseconds — the row every serving report
+    /// prints.
+    pub fn percentiles_ms(&self) -> [f64; 3] {
+        [self.quantile_ms(0.50), self.quantile_ms(0.95), self.quantile_ms(0.99)]
+    }
+
+    /// Fold another histogram into this one (bucket-wise sum).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a = a.saturating_add(*b);
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
 
 /// Per-stage wall-clock seconds, accumulated across every frame a
 /// [`super::session::RenderSession`] renders. The stages mirror the
@@ -18,9 +175,24 @@ pub struct StageTimings {
     pub sort: f64,
     /// Tile blending (CPU scheduler or PJRT artifacts).
     pub blend: f64,
+    /// Per-stage latency histograms in pipeline order
+    /// ([`StageTimings::SEARCH`] .. [`StageTimings::BLEND`]): each
+    /// frame's per-stage duration is one sample, so stage tails
+    /// (p95/p99) are visible next to the mean the `f64` sums give.
+    pub hists: [LatencyHistogram; 5],
 }
 
 impl StageTimings {
+    /// Index of the search-stage histogram in [`StageTimings::hists`].
+    pub const SEARCH: usize = 0;
+    /// Index of the projection-stage histogram.
+    pub const PROJECT: usize = 1;
+    /// Index of the binning-stage histogram.
+    pub const BIN: usize = 2;
+    /// Index of the sort-stage histogram.
+    pub const SORT: usize = 3;
+    /// Index of the blend-stage histogram.
+    pub const BLEND: usize = 4;
     /// Sum of all stage accumulators. Always <= the wall-clock time of
     /// the renders that produced them (per-frame overhead — image
     /// allocation, stats bookkeeping — lands outside the stages).
@@ -28,13 +200,43 @@ impl StageTimings {
         self.search + self.project + self.bin + self.sort + self.blend
     }
 
-    /// Add another set of accumulators into this one.
+    /// Add another set of accumulators into this one (sums and
+    /// histograms both).
     pub fn accumulate(&mut self, other: &StageTimings) {
         self.search += other.search;
         self.project += other.project;
         self.bin += other.bin;
         self.sort += other.sort;
         self.blend += other.blend;
+        for (h, o) in self.hists.iter_mut().zip(other.hists.iter()) {
+            h.merge(o);
+        }
+    }
+
+    /// Record one frame's duration for stage `idx` (one of the
+    /// [`StageTimings::SEARCH`]..[`StageTimings::BLEND`] consts) into
+    /// both the wall-clock sum and the stage histogram.
+    pub fn record_stage(&mut self, idx: usize, seconds: f64) {
+        match idx {
+            Self::SEARCH => self.search += seconds,
+            Self::PROJECT => self.project += seconds,
+            Self::BIN => self.bin += seconds,
+            Self::SORT => self.sort += seconds,
+            _ => self.blend += seconds,
+        }
+        self.hists[idx.min(Self::BLEND)].record(seconds);
+    }
+
+    /// `(name, [p50, p95, p99] ms)` rows in pipeline order.
+    pub fn percentile_rows_ms(&self) -> [(&'static str, [f64; 3]); 5] {
+        let names = self.rows().map(|(name, _)| name);
+        [
+            (names[0], self.hists[0].percentiles_ms()),
+            (names[1], self.hists[1].percentiles_ms()),
+            (names[2], self.hists[2].percentiles_ms()),
+            (names[3], self.hists[3].percentiles_ms()),
+            (names[4], self.hists[4].percentiles_ms()),
+        ]
     }
 
     /// `(name, seconds)` rows in pipeline order — for reports/benches.
@@ -97,6 +299,11 @@ pub struct RenderStats {
     pub reseeded: u64,
     /// Per-stage wall-clock breakdown.
     pub stages: StageTimings,
+    /// End-to-end render latency histogram: one sample per frame (the
+    /// same wall-clock that sums into
+    /// [`RenderStats::wall_seconds`]), so p50/p95/p99 per-frame render
+    /// cost is reportable, not just the mean.
+    pub frame_latency: LatencyHistogram,
 }
 
 impl RenderStats {
@@ -137,6 +344,7 @@ impl RenderStats {
         self.revalidated += other.revalidated;
         self.reseeded += other.reseeded;
         self.stages.accumulate(&other.stages);
+        self.frame_latency.merge(&other.frame_latency);
     }
 
     /// Fold a *concurrent* session's stats into this one: every counter
@@ -223,6 +431,91 @@ mod tests {
         assert_eq!(agg.frames, 20);
         assert!((agg.wall_seconds - 2.0).abs() < 1e-12);
         assert!((agg.fps() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_conservative_and_bounded() {
+        let mut h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.99), 0.0);
+        // 100 samples: 1 ms .. 100 ms.
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean_seconds() - 50.5e-3).abs() < 1e-4);
+        assert!((h.max_seconds() - 100e-3).abs() < 1e-6);
+        // Quantiles never under-report and overshoot by <= 25 %.
+        for (q, want) in [(0.5, 50e-3), (0.95, 95e-3), (0.99, 99e-3)] {
+            let got = h.quantile(q);
+            assert!(got >= want, "q{q}: {got} under-reports {want}");
+            assert!(got <= want * 1.25 + 1e-9, "q{q}: {got} overshoots {want}");
+        }
+        let [p50, p95, p99] = h.percentiles_ms();
+        assert!(p50 <= p95 && p95 <= p99, "percentiles must be monotone");
+    }
+
+    #[test]
+    fn histogram_extremes_clamp_instead_of_panicking() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.0); // underflow bucket
+        h.record(-1.0); // clamps to zero
+        h.record(f64::NAN); // clamps to zero
+        h.record(1e9); // overflow bucket (~31 years)
+        assert_eq!(h.count(), 4);
+        // Overflow bucket reports the recorded max, not a bucket bound.
+        assert_eq!(h.quantile(1.0), h.max_seconds());
+        // Underflow bucket reports ~1 µs.
+        assert!(h.quantile(0.25) <= 1.1e-6);
+    }
+
+    #[test]
+    fn histogram_merge_matches_combined_recording() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut both = LatencyHistogram::new();
+        for i in 0..50 {
+            let s = 1e-3 * (1.0 + i as f64);
+            a.record(s);
+            both.record(s);
+        }
+        for i in 0..50 {
+            let s = 1e-2 * (1.0 + i as f64);
+            b.record(s);
+            both.record(s);
+        }
+        a.merge(&b);
+        assert_eq!(a, both, "merge must equal recording the union");
+    }
+
+    #[test]
+    fn record_stage_feeds_sum_and_histogram() {
+        let mut st = StageTimings::default();
+        st.record_stage(StageTimings::SEARCH, 0.002);
+        st.record_stage(StageTimings::BLEND, 0.004);
+        assert!((st.search - 0.002).abs() < 1e-12);
+        assert!((st.blend - 0.004).abs() < 1e-12);
+        assert_eq!(st.hists[StageTimings::SEARCH].count(), 1);
+        assert_eq!(st.hists[StageTimings::BLEND].count(), 1);
+        assert_eq!(st.hists[StageTimings::PROJECT].count(), 0);
+        let rows = st.percentile_rows_ms();
+        assert_eq!(rows[0].0, "search");
+        assert!(rows[0].1[0] >= 2.0 && rows[0].1[0] <= 2.5);
+        // accumulate folds histograms too.
+        let mut total = StageTimings::default();
+        total.accumulate(&st);
+        total.accumulate(&st);
+        assert_eq!(total.hists[StageTimings::SEARCH].count(), 2);
+    }
+
+    #[test]
+    fn merge_folds_frame_latency_histograms() {
+        let mut a = RenderStats::default();
+        a.frame_latency.record(0.010);
+        let mut b = RenderStats::default();
+        b.frame_latency.record(0.020);
+        a.merge(&b);
+        assert_eq!(a.frame_latency.count(), 2);
     }
 
     #[test]

@@ -20,6 +20,11 @@
 //!   -> tile binning -> depth sort -> chunked splatting -> image.
 //! * [`experiments`] — one module per paper table/figure; each prints the
 //!   rows the paper reports (see DESIGN.md §5 for the index).
+//! * [`serve`] — the deadline-aware serving layer over sessions:
+//!   bounded admission with typed backpressure, per-request deadlines,
+//!   log-bucketed latency percentiles, deadline-adaptive LoD
+//!   degradation ([`serve::QosController`]) and a synthetic open-loop
+//!   load generator ([`serve::run_load`]).
 //!
 //! ## Sessions, backends and pipeline parallelism
 //!
@@ -143,6 +148,7 @@ pub mod math;
 pub mod metrics;
 pub mod runtime;
 pub mod scene;
+pub mod serve;
 pub mod sim;
 pub mod splat;
 pub mod util;
@@ -158,7 +164,7 @@ pub mod prelude {
     };
     pub use crate::coordinator::renderer::{AlphaMode, CpuRenderer, FrameScratch};
     pub use crate::coordinator::session::RenderSession;
-    pub use crate::coordinator::stats::{RenderStats, StageTimings};
+    pub use crate::coordinator::stats::{LatencyHistogram, RenderStats, StageTimings};
     pub use crate::gaussian::Gaussians;
     pub use crate::lod::cut_cache::{CutCache, CutCacheConfig};
     pub use crate::lod::sltree::SlTree;
@@ -167,5 +173,9 @@ pub mod prelude {
     pub use crate::math::{Camera, Mat4, Vec3};
     pub use crate::metrics::{lpips_proxy, psnr, ssim};
     pub use crate::scene::Scene;
+    pub use crate::serve::{
+        FrameServer, LoadGenConfig, QosConfig, ServeConfig, ServeReport, ShedError,
+        ShedReason,
+    };
     pub use crate::sim::report::SimReport;
 }

@@ -31,8 +31,16 @@
 //! A full traversal still runs on the first frame, whenever the camera
 //! jumps beyond [`CutCacheConfig::max_translation`] /
 //! [`CutCacheConfig::max_rotation`], every
-//! [`CutCacheConfig::refresh_every`] frames, and when `tau` or the tree
-//! changes — the cache is a scheduler, never a semantic override.
+//! [`CutCacheConfig::refresh_every`] frames, when `tau` jumps by more
+//! than [`CutCacheConfig::max_tau_step`], and when the tree changes —
+//! the cache is a scheduler, never a semantic override. Small tau
+//! *nudges* (the serving layer's graceful-degradation steps) take the
+//! incremental path: node verdicts are pure functions of
+//! `(node, camera, tau)`, and the cached frontier is an antichain
+//! covering every root-to-leaf path, so revalidation under a new tau
+//! re-derives the new canonical cut exactly — tau deltas, like camera
+//! deltas, only change how much coarsening/refinement work the
+//! revalidation does.
 
 use super::sltree::SlTree;
 use super::traversal::{
@@ -73,6 +81,15 @@ pub struct CutCacheConfig {
     /// N + 1 frames; 0 = never force). Keeps long-running streams from
     /// depending on an unbounded chain of incremental updates.
     pub refresh_every: u32,
+    /// Tau delta (absolute, LoD-threshold units) beyond which the next
+    /// frame falls back to a full traversal. Like the camera-jump
+    /// guards this is a *work* bound, never a correctness one: a tau
+    /// nudge within the step revalidates the cached frontier (coarsen
+    /// on a raise, reseeded refinement on a lower) and stays
+    /// bit-identical to the canonical search. Sized to comfortably
+    /// cover the QoS controller's degradation steps; a whole-regime
+    /// change (e.g. a preview/quality toggle) should reseed cold.
+    pub max_tau_step: f32,
 }
 
 impl Default for CutCacheConfig {
@@ -82,6 +99,7 @@ impl Default for CutCacheConfig {
             max_translation: f32::INFINITY,
             max_rotation: std::f32::consts::FRAC_PI_2,
             refresh_every: 64,
+            max_tau_step: 8.0,
         }
     }
 }
@@ -197,8 +215,11 @@ impl CutCache {
 
         let eye = cam.eye();
         let fwd = cam.view.rotation().row(2);
+        // Tau deltas within the step revalidate like camera deltas; the
+        // comparison is written so a NaN tau (degenerate config) fails
+        // closed into a full traversal.
         let reuse = self.valid
-            && self.tau == tau
+            && (tau - self.tau).abs() <= cfg.max_tau_step
             && self.nodes == tree.len()
             && self.subtrees == slt.len()
             && self.tree_id == tree.nodes.as_ptr() as usize
@@ -471,17 +492,56 @@ mod tests {
     }
 
     #[test]
-    fn tau_change_invalidates_the_frontier() {
+    fn tau_jump_beyond_step_runs_cold() {
         let scene = scene();
         let slt = SlTree::partition(&scene.tree, 32);
         let cfg = CutCacheConfig::default();
         let mut cache = CutCache::new();
         let cam = scene.scenario_camera(2);
         assert_frame_matches(&mut cache, &scene, &slt, &cam, 8.0, &cfg, "a");
-        let t = assert_frame_matches(&mut cache, &scene, &slt, &cam, 2.0, &cfg, "b");
-        assert_eq!(t.cache_hit, 0, "tau changed -> full search");
-        let t = assert_frame_matches(&mut cache, &scene, &slt, &cam, 2.0, &cfg, "c");
+        // Delta 32 > the default max_tau_step of 8: a regime change,
+        // not a nudge -> full traversal, then warm again at the new tau.
+        let t = assert_frame_matches(&mut cache, &scene, &slt, &cam, 40.0, &cfg, "b");
+        assert_eq!(t.cache_hit, 0, "tau jump -> full search");
+        let t = assert_frame_matches(&mut cache, &scene, &slt, &cam, 40.0, &cfg, "c");
         assert_eq!(t.cache_hit, 1);
+    }
+
+    #[test]
+    fn tau_nudges_revalidate_instead_of_cold_starting() {
+        // The serving layer's graceful-degradation steps nudge tau a
+        // few units per event; those must ride the incremental path
+        // (revalidate/reseed), not cold-start the whole search.
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let cfg = CutCacheConfig::default();
+        let mut cache = CutCache::new();
+        let cam = scene.scenario_camera(2);
+        // Precondition: the two taus select genuinely different cuts
+        // (camera fixed, so the difference is purely LoD verdicts).
+        let (cut8, _) = scene.tree.canonical_search(&cam, 8.0);
+        let (cut2, _) = scene.tree.canonical_search(&cam, 2.0);
+        assert_ne!(cut8, cut2, "degenerate scene: taus select one cut");
+
+        assert_frame_matches(&mut cache, &scene, &slt, &cam, 8.0, &cfg, "warm");
+        // Finer nudge (delta 6 <= 8): cache hit; some cached cut node
+        // now fails the stricter LoD, so refinement must reseed.
+        let t = assert_frame_matches(&mut cache, &scene, &slt, &cam, 2.0, &cfg, "finer");
+        assert_eq!(t.cache_hit, 1, "nudge within max_tau_step must hit");
+        assert!(t.reseeded >= 1, "finer tau must reseed refinement");
+        assert!(cache.cut().len() >= cut8.len(), "finer cut cannot shrink");
+        // Coarser nudge back: hit again, frontier coarsens to the old cut.
+        let t = assert_frame_matches(&mut cache, &scene, &slt, &cam, 8.0, &cfg, "coarser");
+        assert_eq!(t.cache_hit, 1);
+        assert_eq!(cache.cut().len(), cut8.len());
+        // And a ramp of +2 steps stays warm the whole way up.
+        for (i, tau) in [10.0f32, 12.0, 14.0, 16.0].iter().enumerate() {
+            let t = assert_frame_matches(
+                &mut cache, &scene, &slt, &cam, *tau, &cfg,
+                &format!("ramp {i}"),
+            );
+            assert_eq!(t.cache_hit, 1, "ramp step {i} must stay warm");
+        }
     }
 
     #[test]

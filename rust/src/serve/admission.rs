@@ -1,0 +1,197 @@
+//! Per-client admission control: fairness under bursts.
+//!
+//! The bounded queue alone cannot be fair — one bursty client could
+//! fill every slot and starve well-behaved streams. The admission
+//! controller caps how many requests each client may hold in flight
+//! (queued **or** rendering) at once, so a burst from one client sheds
+//! *that client's* overflow ([`ShedReason::ClientSaturated`]) while
+//! others keep their slots. Admission is charged at submit and released
+//! only after the request leaves the system (served, expired or
+//! failed), which is what makes the shed ledger exact.
+
+use super::queue::ShedReason;
+use std::sync::{Mutex, MutexGuard};
+
+/// Interior ledger behind the mutex.
+#[derive(Debug, Default)]
+struct AdmissionState {
+    /// In-flight count per client (grown on first sight of a client).
+    inflight: Vec<usize>,
+    /// Sum of `inflight` (kept incrementally; checked in debug builds).
+    total: usize,
+    admitted: u64,
+    rejected: u64,
+}
+
+/// Caps each client's in-flight requests at a fixed bound and keeps an
+/// exact admitted/rejected ledger.
+#[derive(Debug)]
+pub struct AdmissionController {
+    max_inflight: usize,
+    state: Mutex<AdmissionState>,
+}
+
+impl AdmissionController {
+    /// A controller allowing each client at most `max_inflight`
+    /// outstanding requests (clamped to >= 1 so every client can always
+    /// make progress).
+    pub fn new(max_inflight: usize) -> Self {
+        AdmissionController {
+            max_inflight: max_inflight.max(1),
+            state: Mutex::new(AdmissionState::default()),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, AdmissionState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Try to charge one in-flight slot to `client`. Rejects with
+    /// [`ShedReason::ClientSaturated`] when the client is at its cap.
+    pub fn try_admit(&self, client: usize) -> Result<(), ShedReason> {
+        let mut st = self.lock();
+        if client >= st.inflight.len() {
+            st.inflight.resize(client + 1, 0);
+        }
+        if st.inflight[client] >= self.max_inflight {
+            st.rejected += 1;
+            return Err(ShedReason::ClientSaturated);
+        }
+        st.inflight[client] += 1;
+        st.total += 1;
+        st.admitted += 1;
+        Ok(())
+    }
+
+    /// Release one in-flight slot for `client` (after serve, expiry or
+    /// failure). Releasing a client with nothing in flight is a bug in
+    /// the caller's accounting; it is ignored in release builds and
+    /// trips a debug assertion otherwise.
+    pub fn release(&self, client: usize) {
+        let mut guard = self.lock();
+        // Reborrow through the guard once so the field borrows below
+        // are disjoint (`inflight` vs `total`).
+        let st = &mut *guard;
+        let slot = st.inflight.get_mut(client).filter(|c| **c > 0);
+        debug_assert!(
+            slot.is_some(),
+            "release without matching admit (client {client})"
+        );
+        if let Some(c) = slot {
+            *c -= 1;
+            st.total -= 1;
+        }
+    }
+
+    /// Requests currently in flight for `client`.
+    pub fn inflight(&self, client: usize) -> usize {
+        self.lock().inflight.get(client).copied().unwrap_or(0)
+    }
+
+    /// Requests currently in flight across every client.
+    pub fn total_inflight(&self) -> usize {
+        self.lock().total
+    }
+
+    /// Total submissions ever admitted.
+    pub fn admitted(&self) -> u64 {
+        self.lock().admitted
+    }
+
+    /// Total submissions ever rejected at the cap.
+    pub fn rejected(&self) -> u64 {
+        self.lock().rejected
+    }
+
+    /// The per-client in-flight bound this controller enforces.
+    pub fn max_inflight(&self) -> usize {
+        self.max_inflight
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn per_client_cap_and_release() {
+        let a = AdmissionController::new(2);
+        assert!(a.try_admit(0).is_ok());
+        assert!(a.try_admit(0).is_ok());
+        assert_eq!(a.try_admit(0), Err(ShedReason::ClientSaturated));
+        // Another client is unaffected by client 0 being saturated.
+        assert!(a.try_admit(1).is_ok());
+        assert_eq!(a.inflight(0), 2);
+        assert_eq!(a.inflight(1), 1);
+        assert_eq!(a.total_inflight(), 3);
+        a.release(0);
+        assert!(a.try_admit(0).is_ok());
+        assert_eq!(a.admitted(), 4);
+        assert_eq!(a.rejected(), 1);
+    }
+
+    #[test]
+    fn zero_cap_clamps_to_one() {
+        let a = AdmissionController::new(0);
+        assert_eq!(a.max_inflight(), 1);
+        assert!(a.try_admit(5).is_ok());
+        assert_eq!(a.try_admit(5), Err(ShedReason::ClientSaturated));
+    }
+
+    #[test]
+    fn burst_from_one_client_cannot_starve_another() {
+        let a = AdmissionController::new(3);
+        // Client 0 bursts far past its cap: exactly `cap` slots stick.
+        let mut shed = 0u64;
+        for _ in 0..50 {
+            if a.try_admit(0).is_err() {
+                shed += 1;
+            }
+        }
+        assert_eq!(a.inflight(0), 3);
+        assert_eq!(shed, 47);
+        // The well-behaved client still gets all of its slots.
+        for _ in 0..3 {
+            assert!(a.try_admit(1).is_ok());
+        }
+    }
+
+    #[test]
+    fn prop_admission_ledger_is_exact_under_random_interleaving() {
+        forall(64, |rng| {
+            let cap = 1 + rng.below(4);
+            let clients = 1 + rng.below(5);
+            let a = AdmissionController::new(cap);
+            // Shadow model: per-client in-flight counts.
+            let mut model = vec![0usize; clients];
+            let mut admitted = 0u64;
+            let mut rejected = 0u64;
+            for _ in 0..200 {
+                let c = rng.below(clients);
+                if rng.below(3) == 0 && model[c] > 0 {
+                    a.release(c);
+                    model[c] -= 1;
+                } else {
+                    match a.try_admit(c) {
+                        Ok(()) => {
+                            model[c] += 1;
+                            admitted += 1;
+                        }
+                        Err(r) => {
+                            assert_eq!(r, ShedReason::ClientSaturated);
+                            rejected += 1;
+                        }
+                    }
+                }
+                // Invariants hold at every step, not just at the end.
+                assert!(a.inflight(c) <= cap, "cap violated for client {c}");
+                assert_eq!(a.inflight(c), model[c]);
+            }
+            let total: usize = model.iter().sum();
+            assert_eq!(a.total_inflight(), total);
+            assert_eq!(a.admitted(), admitted);
+            assert_eq!(a.rejected(), rejected);
+        });
+    }
+}

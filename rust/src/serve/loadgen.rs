@@ -1,0 +1,280 @@
+//! Synthetic open-loop load generator for the serving layer.
+//!
+//! Drives a [`FrameServer`] with per-client camera streams on a fixed
+//! arrival schedule. **Open-loop** is the load-testing property that
+//! matters: arrivals never wait for completions (and
+//! [`FrameServer::submit`] never blocks), so when the server falls
+//! behind, pressure builds exactly as it would from real clients —
+//! this is what makes shed counts and tail latencies honest instead of
+//! the coordinated-omission numbers a closed loop would report.
+//!
+//! Fault injection:
+//!
+//! * **bursts** — client 0 periodically dumps
+//!   [`LoadGenConfig::burst_extra`] extra requests on top of its
+//!   schedule, the admission-fairness stressor;
+//! * **slow client** — the last client wakes at a quarter of the rate
+//!   but submits its backlog of four requests at once (same average
+//!   rate, maximally clumped), the classic laggy-stream pattern;
+//! * **jitter** — uniform arrival-time noise, deterministic per seed.
+//!
+//! The run is two-phase: a warmup phase finds the QoS operating point,
+//! then [`FrameServer::reset_window`] starts the measured window, so
+//! reported percentiles and the accounting ledger cover exactly the
+//! measured arrivals.
+
+use super::{FrameServer, ServeConfig, ServeReport};
+use crate::coordinator::{FramePipeline, RenderOptions};
+use crate::math::Camera;
+use crate::util::Rng;
+use std::time::{Duration, Instant};
+
+/// Load-generator configuration: one synthetic arrival schedule per
+/// client.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadGenConfig {
+    /// Number of concurrent client streams.
+    pub clients: usize,
+    /// Measured submissions per client (after warmup).
+    pub frames: usize,
+    /// Warmup submissions per client (excluded from the report window;
+    /// QoS state found during warmup persists).
+    pub warmup: usize,
+    /// Seconds between arrivals per client; `0.0` means back-to-back
+    /// maximum pressure.
+    pub period: f64,
+    /// Every `burst_every`-th arrival of client 0 is a burst
+    /// (`0` disables bursts).
+    pub burst_every: usize,
+    /// Extra requests client 0 submits per burst.
+    pub burst_extra: usize,
+    /// Uniform arrival jitter as a fraction of `period` (e.g. `0.2`
+    /// shifts each arrival by up to ±20% of the period).
+    pub jitter: f64,
+    /// Make the last client a slow/clumped stream (4x period, 4
+    /// requests per wakeup); needs at least 2 clients.
+    pub slow_client: bool,
+    /// Seed for the deterministic jitter streams.
+    pub seed: u64,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            clients: 2,
+            frames: 32,
+            warmup: 8,
+            period: 0.005,
+            burst_every: 0,
+            burst_extra: 0,
+            jitter: 0.0,
+            slow_client: false,
+            seed: 0x51E7_ACE5,
+        }
+    }
+}
+
+/// `(arrival period, requests per arrival)` for one client stream.
+fn stream_plan(load: &LoadGenConfig, client: usize) -> (f64, usize) {
+    if load.slow_client && load.clients > 1 && client == load.clients - 1 {
+        (load.period * 4.0, 4)
+    } else {
+        (load.period, 1)
+    }
+}
+
+/// Run one phase: every client submits exactly `frames` requests on its
+/// open-loop schedule; returns when all generator threads have finished
+/// submitting (not when the server has finished rendering).
+fn drive(
+    server: &FrameServer<'_>,
+    load: &LoadGenConfig,
+    paths: &[Vec<Camera>],
+    frames: usize,
+    phase_tag: u64,
+) {
+    if frames == 0 {
+        return;
+    }
+    std::thread::scope(|s| {
+        for c in 0..load.clients {
+            let path = &paths[c % paths.len()];
+            s.spawn(move || {
+                let mut rng =
+                    Rng::new(load.seed ^ (c as u64).wrapping_mul(0x9E37_79B9) ^ phase_tag);
+                let (period, per_arrival) = stream_plan(load, c);
+                let start = Instant::now();
+                let mut sent = 0usize;
+                let mut arrival = 0usize;
+                while sent < frames {
+                    // Absolute schedule: lateness never shifts future
+                    // arrivals (open loop).
+                    let mut due = period * arrival as f64;
+                    if load.jitter > 0.0 {
+                        due += period * load.jitter * (2.0 * rng.f32() as f64 - 1.0);
+                    }
+                    let elapsed = start.elapsed().as_secs_f64();
+                    if due > elapsed {
+                        std::thread::sleep(Duration::from_secs_f64(due - elapsed));
+                    }
+                    let mut n = per_arrival;
+                    if c == 0
+                        && load.burst_every > 0
+                        && arrival % load.burst_every == load.burst_every - 1
+                    {
+                        n += load.burst_extra;
+                    }
+                    // Sheds are part of the experiment, not an error.
+                    for _ in 0..n.min(frames - sent) {
+                        let _ = server.submit(c, path[sent % path.len()]);
+                        sent += 1;
+                    }
+                    arrival += 1;
+                }
+            });
+        }
+    });
+}
+
+/// Drive `pipeline` through a [`FrameServer`] with `serve` settings
+/// under the synthetic load `load`, one camera path per client
+/// (recycled modulo when `paths` is shorter). Returns the measured
+/// window's [`ServeReport`]: per the generator, exactly
+/// `load.clients * load.frames` submissions, each accounted once as
+/// served / expired / failed / shed.
+pub fn run_load(
+    pipeline: &FramePipeline,
+    serve: ServeConfig,
+    load: &LoadGenConfig,
+    paths: &[Vec<Camera>],
+) -> ServeReport {
+    assert!(load.clients > 0, "load generator needs at least one client");
+    assert!(
+        !paths.is_empty() && paths.iter().all(|p| !p.is_empty()),
+        "load generator needs at least one non-empty camera path"
+    );
+    let server = FrameServer::new(pipeline, serve, load.clients);
+    std::thread::scope(|s| {
+        let workers: Vec<_> = (0..serve.workers.max(1))
+            .map(|_| s.spawn(|| server.worker()))
+            .collect();
+        if load.warmup > 0 {
+            drive(&server, load, paths, load.warmup, 0xAA);
+            server.drain();
+        }
+        // Warmup found the QoS operating point; measure from here.
+        server.reset_window();
+        drive(&server, load, paths, load.frames, 0xBB);
+        server.drain();
+        server.close();
+        for w in workers {
+            w.join().unwrap();
+        }
+    });
+    server.report()
+}
+
+/// Mean seconds/frame of a fresh session over `cams` at LoD bound
+/// `tau` — the calibration the bench scenarios use to pick offered
+/// rates and budgets relative to what the machine can actually do.
+pub fn calibrate_frame_seconds(
+    pipeline: &FramePipeline,
+    tau: f32,
+    cams: &[Camera],
+) -> f64 {
+    let mut session = pipeline
+        .session_with(RenderOptions { lod_tau: tau, ..pipeline.default_options() });
+    for cam in cams {
+        let _ = session.render(cam);
+    }
+    let st = session.stats();
+    if st.frames == 0 {
+        0.0
+    } else {
+        st.wall_seconds / st.frames as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SceneConfig;
+    use crate::scene::walkthrough;
+    use crate::serve::QosConfig;
+
+    fn pipeline() -> FramePipeline {
+        FramePipeline::builder(SceneConfig::small_scale().quick().build(23)).build()
+    }
+
+    #[test]
+    fn measured_window_accounts_exactly_the_measured_arrivals() {
+        let p = pipeline();
+        let paths = vec![walkthrough(6.0, 8, 64, 64)];
+        let load = LoadGenConfig {
+            clients: 2,
+            frames: 5,
+            warmup: 2,
+            period: 0.0,
+            ..LoadGenConfig::default()
+        };
+        let serve = ServeConfig {
+            queue_capacity: 32,
+            max_inflight: 32,
+            workers: 2,
+            budget: 10.0,
+            ..ServeConfig::default()
+        };
+        let r = run_load(&p, serve, &load, &paths);
+        assert_eq!(r.submitted, 10, "2 clients x 5 measured frames");
+        assert_eq!(
+            r.submitted,
+            r.served + r.expired + r.failed + r.shed_total()
+        );
+        assert_eq!(r.served, 10, "roomy caps + huge budget: nothing sheds");
+        assert!(r.span_seconds > 0.0);
+        assert!(r.served_fps() > 0.0);
+        assert_eq!(r.clients.len(), 2);
+        assert_eq!(r.e2e.count(), r.served);
+    }
+
+    #[test]
+    fn bursts_and_slow_clients_keep_per_client_totals_exact() {
+        let p = pipeline();
+        let paths = vec![walkthrough(6.0, 6, 64, 64)];
+        let load = LoadGenConfig {
+            clients: 3,
+            frames: 7,
+            warmup: 0,
+            period: 0.001,
+            burst_every: 2,
+            burst_extra: 3,
+            jitter: 0.2,
+            slow_client: true,
+            ..LoadGenConfig::default()
+        };
+        let serve = ServeConfig {
+            queue_capacity: 4,
+            max_inflight: 2,
+            workers: 1,
+            budget: 10.0,
+            qos: QosConfig::disabled(),
+            ..ServeConfig::default()
+        };
+        let r = run_load(&p, serve, &load, &paths);
+        // Fault injection changes arrival *shape*, never the totals.
+        assert_eq!(r.submitted, 21, "3 clients x 7 frames");
+        assert_eq!(
+            r.submitted,
+            r.served + r.expired + r.failed + r.shed_total()
+        );
+        assert!(r.queue_high_water <= r.queue_capacity);
+    }
+
+    #[test]
+    fn calibration_reports_positive_frame_time() {
+        let p = pipeline();
+        let cams = walkthrough(6.0, 3, 64, 64);
+        let s = calibrate_frame_seconds(&p, 32.0, &cams);
+        assert!(s > 0.0 && s.is_finite());
+    }
+}

@@ -1,0 +1,741 @@
+//! Deadline-aware serving layer over [`RenderSession`] streams.
+//!
+//! This module turns the render-session surface into something a
+//! latency-sensitive deployment can actually sit behind. Scaling
+//! point-based rendering is not only a per-frame throughput problem:
+//! under bursty multi-client load the failure mode is unbounded queues
+//! and silent tail-latency collapse. The serving layer makes overload
+//! explicit and survivable:
+//!
+//! * a **bounded** [`FrameQueue`] that sheds (typed error, never
+//!   blocks) when the server is behind;
+//! * a per-client [`AdmissionController`] so one bursty client cannot
+//!   starve the others;
+//! * per-request **deadlines** with exact shed/serve/miss accounting;
+//! * a [`QosController`] per client stream that trades LoD quality for
+//!   latency *gracefully*: consecutive deadline misses coarsen the
+//!   stream's `tau` stepwise (bounded by a quality floor), and
+//!   sustained headroom recovers it hysteretically. Tau steps are sized
+//!   to the cut cache's
+//!   [`max_tau_step`](crate::lod::CutCacheConfig::max_tau_step) so each
+//!   nudge revalidates the cached cut instead of cold-starting the
+//!   LoD search;
+//! * log-bucketed latency histograms
+//!   ([`LatencyHistogram`](crate::coordinator::LatencyHistogram)) for
+//!   end-to-end and queue-wait time, reported as p50/p95/p99 per client
+//!   and in aggregate.
+//!
+//! Data flow — `submit` is called by client threads, `worker` by any
+//! number of render threads:
+//!
+//! ```text
+//! submit(client, cam)                      worker() loop
+//!   ├─ AdmissionController::try_admit        ├─ FrameQueue::pop_blocking
+//!   │    └─ Err: shed(ClientSaturated)       ├─ expired? drop + count (optional)
+//!   ├─ FrameQueue::push                      ├─ RenderSession::render
+//!   │    └─ Err: release + shed(QueueFull)   ├─ QosController::observe → tau
+//!   └─ Ok: request in flight                 └─ AdmissionController::release
+//! ```
+//!
+//! The ledger invariant (tested): after [`FrameServer::drain`], every
+//! submission is accounted exactly once —
+//! `submitted == served + expired + failed + shed_queue + shed_admission`.
+//!
+//! [`loadgen`] drives this stack with synthetic open-loop camera
+//! streams (burst and slow-client fault injection) and is what the
+//! `hotpath` bench and `examples/multi_client.rs` run.
+
+#![warn(missing_docs)]
+
+pub mod admission;
+pub mod loadgen;
+pub mod qos;
+pub mod queue;
+
+pub use admission::AdmissionController;
+pub use loadgen::{calibrate_frame_seconds, run_load, LoadGenConfig};
+pub use qos::{QosConfig, QosController};
+pub use queue::{FrameQueue, FrameRequest, ShedError, ShedReason};
+
+use crate::coordinator::{
+    FramePipeline, LatencyHistogram, RenderOptions, RenderSession, RenderStats,
+};
+use crate::math::Camera;
+use crate::metrics::Image;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Serving-layer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Bound on the shared frame queue; submissions beyond it shed with
+    /// [`ShedReason::QueueFull`].
+    pub queue_capacity: usize,
+    /// Per-client in-flight cap (queued + rendering); submissions
+    /// beyond it shed with [`ShedReason::ClientSaturated`].
+    pub max_inflight: usize,
+    /// Number of render worker threads the load generator spawns.
+    pub workers: usize,
+    /// Per-request latency budget in seconds; the deadline is
+    /// `enqueued + budget` and a served frame slower than this counts
+    /// as a deadline miss.
+    pub budget: f64,
+    /// Drop requests that are already past their deadline when a worker
+    /// picks them up (counted as `expired`, still a QoS miss signal)
+    /// instead of rendering them late.
+    pub shed_expired: bool,
+    /// Keep rendered frames in the lane (tests / offline use; a real
+    /// deployment would hand them to a transport instead).
+    pub keep_frames: bool,
+    /// Per-stream deadline-adaptive LoD degradation.
+    pub qos: QosConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_capacity: 64,
+            max_inflight: 4,
+            workers: 2,
+            budget: 0.050,
+            shed_expired: false,
+            keep_frames: false,
+            qos: QosConfig::default(),
+        }
+    }
+}
+
+/// Everything mutable one client stream owns, behind one mutex so the
+/// stream's cut cache and QoS state stay coherent even when several
+/// workers pull its requests.
+struct ClientLane<'p> {
+    session: RenderSession<'p>,
+    qos: QosController,
+    e2e: LatencyHistogram,
+    queue_wait: LatencyHistogram,
+    served: u64,
+    missed: u64,
+    expired: u64,
+    /// `(seq, frame)` pairs when [`ServeConfig::keep_frames`] is set;
+    /// workers may complete out of submission order, so consumers sort
+    /// by `seq`.
+    frames: Vec<(u64, Image)>,
+}
+
+/// Multi-client serving front end over one shared [`FramePipeline`].
+///
+/// Thread-safe by construction: `submit` and `worker` both take
+/// `&self`, so client threads and render workers share one server
+/// through plain borrows (see [`loadgen::run_load`]).
+pub struct FrameServer<'p> {
+    cfg: ServeConfig,
+    queue: FrameQueue,
+    admission: AdmissionController,
+    lanes: Vec<Mutex<ClientLane<'p>>>,
+    seq: AtomicU64,
+    submitted: AtomicU64,
+    shed_queue: AtomicU64,
+    shed_admission: AtomicU64,
+    served: AtomicU64,
+    missed: AtomicU64,
+    expired: AtomicU64,
+    failed: AtomicU64,
+    window_t0: Mutex<Instant>,
+}
+
+impl<'p> FrameServer<'p> {
+    /// A server with `clients` independent lanes rendering through
+    /// `pipeline` at its default options.
+    pub fn new(pipeline: &'p FramePipeline, cfg: ServeConfig, clients: usize) -> Self {
+        Self::with_options(pipeline, cfg, clients, pipeline.default_options())
+    }
+
+    /// Like [`new`](Self::new) but with explicit per-lane render
+    /// options; `opts.lod_tau` becomes every lane's QoS base (full
+    /// quality) tau.
+    pub fn with_options(
+        pipeline: &'p FramePipeline,
+        cfg: ServeConfig,
+        clients: usize,
+        opts: RenderOptions,
+    ) -> Self {
+        let lanes = (0..clients.max(1))
+            .map(|_| {
+                Mutex::new(ClientLane {
+                    session: pipeline.session_with(opts),
+                    qos: QosController::new(opts.lod_tau),
+                    e2e: LatencyHistogram::new(),
+                    queue_wait: LatencyHistogram::new(),
+                    served: 0,
+                    missed: 0,
+                    expired: 0,
+                    frames: Vec::new(),
+                })
+            })
+            .collect();
+        FrameServer {
+            cfg,
+            queue: FrameQueue::new(cfg.queue_capacity),
+            admission: AdmissionController::new(cfg.max_inflight),
+            lanes,
+            seq: AtomicU64::new(0),
+            submitted: AtomicU64::new(0),
+            shed_queue: AtomicU64::new(0),
+            shed_admission: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            missed: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            window_t0: Mutex::new(Instant::now()),
+        }
+    }
+
+    /// The configuration this server runs with.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Number of client lanes.
+    pub fn clients(&self) -> usize {
+        self.lanes.len()
+    }
+
+    fn lane(&self, client: usize) -> MutexGuard<'_, ClientLane<'p>> {
+        self.lanes[client].lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Submit one frame request for `client`. Never blocks: overload
+    /// sheds with a typed [`ShedError`] (admission first, then the
+    /// bounded queue; an admission charge is rolled back if the queue
+    /// rejects, so every shed is counted exactly once).
+    pub fn submit(&self, client: usize, cam: Camera) -> Result<u64, ShedError> {
+        assert!(client < self.lanes.len(), "unknown client {client}");
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        if let Err(reason) = self.admission.try_admit(client) {
+            self.shed_admission.fetch_add(1, Ordering::Relaxed);
+            return Err(ShedError { client, reason });
+        }
+        let now = Instant::now();
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let budget = Duration::from_secs_f64(self.cfg.budget.clamp(0.0, 1e9));
+        let req = FrameRequest { client, seq, cam, enqueued: now, deadline: now + budget };
+        if let Err(reason) = self.queue.push(req) {
+            self.admission.release(client);
+            self.shed_queue.fetch_add(1, Ordering::Relaxed);
+            return Err(ShedError { client, reason });
+        }
+        Ok(seq)
+    }
+
+    /// Render-worker loop: drains the queue until the server is closed,
+    /// then returns. Run any number of these concurrently (typically
+    /// from scoped threads — see [`loadgen::run_load`]).
+    pub fn worker(&self) {
+        while let Some(req) = self.queue.pop_blocking() {
+            self.handle(req);
+        }
+    }
+
+    /// Process one dequeued request end to end.
+    fn handle(&self, req: FrameRequest) {
+        let client = req.client;
+        {
+            let mut lane = self.lane(client);
+            lane.queue_wait.record(req.enqueued.elapsed().as_secs_f64());
+            let late = Instant::now() >= req.deadline;
+            if self.cfg.shed_expired && late {
+                // Expired in queue: don't waste render time on a frame
+                // nobody can use, but the controller must still see the
+                // miss or overload could never trigger degradation.
+                lane.expired += 1;
+                self.expired.fetch_add(1, Ordering::Relaxed);
+                let waited = req.enqueued.elapsed().as_secs_f64();
+                if let Some(tau) = lane.qos.observe(waited, self.cfg.budget, &self.cfg.qos)
+                {
+                    lane.session.options_mut().lod_tau = tau;
+                }
+            } else {
+                match lane.session.render(&req.cam) {
+                    Ok(img) => {
+                        let e2e = req.enqueued.elapsed().as_secs_f64();
+                        lane.e2e.record(e2e);
+                        lane.served += 1;
+                        self.served.fetch_add(1, Ordering::Relaxed);
+                        if e2e > self.cfg.budget {
+                            lane.missed += 1;
+                            self.missed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if let Some(tau) =
+                            lane.qos.observe(e2e, self.cfg.budget, &self.cfg.qos)
+                        {
+                            lane.session.options_mut().lod_tau = tau;
+                        }
+                        if self.cfg.keep_frames {
+                            lane.frames.push((req.seq, img));
+                        }
+                    }
+                    Err(_) => {
+                        // A failed render degrades exactly one request;
+                        // the session recovers on the next frame.
+                        self.failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        // Release only after the lane work is fully done, so
+        // `total_inflight() == 0` really means quiescent.
+        self.admission.release(client);
+    }
+
+    /// Block until every admitted request has left the system (the
+    /// ledger invariant holds from then on). Call before [`close`]
+    /// while workers are still running.
+    ///
+    /// [`close`]: Self::close
+    pub fn drain(&self) {
+        while self.admission.total_inflight() > 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Close the queue: new submissions shed with
+    /// [`ShedReason::Closed`]; workers drain remaining requests and
+    /// exit.
+    pub fn close(&self) {
+        self.queue.close();
+    }
+
+    /// Start a fresh measurement window: zero the counters and
+    /// per-lane histograms/stats and drop kept frames. QoS state
+    /// (current tau, degrade/recover totals) deliberately persists —
+    /// warmup is exactly when the controller finds its operating point.
+    pub fn reset_window(&self) {
+        for lane in &self.lanes {
+            let mut lane = lane.lock().unwrap_or_else(|e| e.into_inner());
+            lane.session.reset_stats();
+            lane.e2e = LatencyHistogram::new();
+            lane.queue_wait = LatencyHistogram::new();
+            lane.served = 0;
+            lane.missed = 0;
+            lane.expired = 0;
+            lane.frames.clear();
+        }
+        self.submitted.store(0, Ordering::Relaxed);
+        self.shed_queue.store(0, Ordering::Relaxed);
+        self.shed_admission.store(0, Ordering::Relaxed);
+        self.served.store(0, Ordering::Relaxed);
+        self.missed.store(0, Ordering::Relaxed);
+        self.expired.store(0, Ordering::Relaxed);
+        self.failed.store(0, Ordering::Relaxed);
+        *self.window_t0.lock().unwrap_or_else(|e| e.into_inner()) = Instant::now();
+    }
+
+    /// Take (and clear) the frames kept for `client`, as `(seq, frame)`
+    /// pairs in completion order.
+    pub fn take_frames(&self, client: usize) -> Vec<(u64, Image)> {
+        std::mem::take(&mut self.lane(client).frames)
+    }
+
+    /// Snapshot the serving metrics for the current window.
+    pub fn report(&self) -> ServeReport {
+        let span_seconds = self
+            .window_t0
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .elapsed()
+            .as_secs_f64();
+        let mut e2e = LatencyHistogram::new();
+        let mut queue_wait = LatencyHistogram::new();
+        let mut render = RenderStats::default();
+        let mut degrade_events = 0;
+        let mut recover_events = 0;
+        let mut clients = Vec::with_capacity(self.lanes.len());
+        for (i, lane) in self.lanes.iter().enumerate() {
+            let lane = lane.lock().unwrap_or_else(|e| e.into_inner());
+            e2e.merge(&lane.e2e);
+            queue_wait.merge(&lane.queue_wait);
+            render.merge(lane.session.stats());
+            degrade_events += lane.qos.degrade_events();
+            recover_events += lane.qos.recover_events();
+            clients.push(ClientReport {
+                client: i,
+                served: lane.served,
+                missed: lane.missed,
+                expired: lane.expired,
+                tau: lane.qos.tau(),
+                base_tau: lane.qos.base_tau(),
+                degrade_events: lane.qos.degrade_events(),
+                recover_events: lane.qos.recover_events(),
+                e2e: lane.e2e,
+            });
+        }
+        ServeReport {
+            clients,
+            submitted: self.submitted.load(Ordering::Relaxed),
+            served: self.served.load(Ordering::Relaxed),
+            missed: self.missed.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            shed_queue: self.shed_queue.load(Ordering::Relaxed),
+            shed_admission: self.shed_admission.load(Ordering::Relaxed),
+            degrade_events,
+            recover_events,
+            e2e,
+            queue_wait,
+            render,
+            span_seconds,
+            queue_high_water: self.queue.high_water(),
+            queue_capacity: self.queue.capacity(),
+        }
+    }
+}
+
+/// One client stream's slice of a [`ServeReport`].
+#[derive(Clone, Copy, Debug)]
+pub struct ClientReport {
+    /// Client lane index.
+    pub client: usize,
+    /// Frames rendered and delivered.
+    pub served: u64,
+    /// Served frames that exceeded the budget (late but delivered).
+    pub missed: u64,
+    /// Requests dropped past their deadline without rendering.
+    pub expired: u64,
+    /// The stream's tau at snapshot time.
+    pub tau: f32,
+    /// The stream's full-quality base tau.
+    pub base_tau: f32,
+    /// Degradation steps this stream has taken (cumulative).
+    pub degrade_events: u64,
+    /// Recovery steps this stream has taken (cumulative).
+    pub recover_events: u64,
+    /// End-to-end (submit → frame done) latency histogram.
+    pub e2e: LatencyHistogram,
+}
+
+/// Aggregate serving metrics for one measurement window.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Per-client breakdown.
+    pub clients: Vec<ClientReport>,
+    /// Submissions attempted this window.
+    pub submitted: u64,
+    /// Frames rendered and delivered.
+    pub served: u64,
+    /// Served frames that exceeded the budget.
+    pub missed: u64,
+    /// Requests dropped past their deadline without rendering.
+    pub expired: u64,
+    /// Requests whose render failed (each degrades exactly one frame).
+    pub failed: u64,
+    /// Submissions shed at the full queue.
+    pub shed_queue: u64,
+    /// Submissions shed at the per-client admission cap.
+    pub shed_admission: u64,
+    /// Degradation steps across all streams (cumulative over the
+    /// server's life — QoS state survives [`FrameServer::reset_window`]).
+    pub degrade_events: u64,
+    /// Recovery steps across all streams (cumulative).
+    pub recover_events: u64,
+    /// Aggregate end-to-end latency histogram.
+    pub e2e: LatencyHistogram,
+    /// Aggregate queue-wait histogram.
+    pub queue_wait: LatencyHistogram,
+    /// Merged render-session statistics (stage timings, cache
+    /// counters).
+    pub render: RenderStats,
+    /// Wall-clock length of this window in seconds.
+    pub span_seconds: f64,
+    /// Highest queue occupancy observed (never exceeds
+    /// `queue_capacity`).
+    pub queue_high_water: usize,
+    /// The queue bound in force.
+    pub queue_capacity: usize,
+}
+
+impl ServeReport {
+    /// Total shed submissions (queue + admission).
+    pub fn shed_total(&self) -> u64 {
+        self.shed_queue + self.shed_admission
+    }
+
+    /// Frames actually delivered per wall-clock second this window.
+    pub fn served_fps(&self) -> f64 {
+        if self.span_seconds > 0.0 {
+            self.served as f64 / self.span_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Aggregate end-to-end `[p50, p95, p99]` in milliseconds.
+    pub fn e2e_percentiles_ms(&self) -> [f64; 3] {
+        self.e2e.percentiles_ms()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SceneConfig;
+    use crate::scene::walkthrough;
+    use crate::util::prop::forall;
+
+    fn pipeline() -> FramePipeline {
+        FramePipeline::builder(SceneConfig::small_scale().quick().build(21)).build()
+    }
+
+    /// Submit-all / close / drain-inline pattern: no worker threads,
+    /// the test thread runs the worker loop to completion itself.
+    fn run_inline(server: &FrameServer<'_>) {
+        server.close();
+        server.worker();
+    }
+
+    #[test]
+    fn ledger_accounts_every_submission_exactly_once() {
+        let p = pipeline();
+        let cams = walkthrough(6.0, 6, 64, 64);
+        let cfg = ServeConfig {
+            queue_capacity: 4,
+            max_inflight: 2,
+            budget: 10.0, // generous: nothing sheds on time
+            ..ServeConfig::default()
+        };
+        let server = FrameServer::new(&p, cfg, 2);
+        let mut ok = 0u64;
+        let mut shed = 0u64;
+        for (i, cam) in cams.iter().enumerate() {
+            match server.submit(i % 2, *cam) {
+                Ok(_) => ok += 1,
+                Err(_) => shed += 1,
+            }
+        }
+        run_inline(&server);
+        let r = server.report();
+        assert_eq!(r.submitted, ok + shed);
+        assert_eq!(
+            r.submitted,
+            r.served + r.expired + r.failed + r.shed_queue + r.shed_admission,
+            "ledger must balance: {r:?}"
+        );
+        assert_eq!(r.served, ok);
+        assert!(r.queue_high_water <= r.queue_capacity);
+        // Everything left the system.
+        assert_eq!(server.admission.total_inflight(), 0);
+    }
+
+    #[test]
+    fn concurrent_workers_preserve_the_ledger() {
+        let p = pipeline();
+        let cams = walkthrough(6.0, 16, 64, 64);
+        let cfg = ServeConfig {
+            queue_capacity: 8,
+            max_inflight: 4,
+            budget: 10.0,
+            ..ServeConfig::default()
+        };
+        let server = FrameServer::new(&p, cfg, 3);
+        std::thread::scope(|s| {
+            let workers: Vec<_> = (0..2).map(|_| s.spawn(|| server.worker())).collect();
+            for (i, cam) in cams.iter().enumerate() {
+                // Ignore sheds; they are part of the ledger.
+                let _ = server.submit(i % 3, *cam);
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            server.drain();
+            server.close();
+            for w in workers {
+                w.join().unwrap();
+            }
+        });
+        let r = server.report();
+        assert_eq!(
+            r.submitted,
+            r.served + r.expired + r.failed + r.shed_queue + r.shed_admission
+        );
+        assert!(r.queue_high_water <= r.queue_capacity);
+    }
+
+    #[test]
+    fn burst_from_one_client_sheds_only_that_client() {
+        let p = pipeline();
+        let cam = walkthrough(6.0, 1, 64, 64)[0];
+        // No workers: everything admitted stays in flight.
+        let cfg = ServeConfig {
+            queue_capacity: 16,
+            max_inflight: 2,
+            ..ServeConfig::default()
+        };
+        let server = FrameServer::new(&p, cfg, 2);
+        // Client 0 bursts way past its cap.
+        for _ in 0..10 {
+            let _ = server.submit(0, cam);
+        }
+        // The well-behaved client is untouched by the burst.
+        for _ in 0..2 {
+            assert!(server.submit(1, cam).is_ok());
+        }
+        let r = server.report();
+        assert_eq!(r.shed_admission, 8);
+        assert_eq!(r.shed_queue, 0);
+        assert_eq!(
+            server.submit(0, cam).unwrap_err().reason,
+            ShedReason::ClientSaturated
+        );
+        run_inline(&server);
+    }
+
+    #[test]
+    fn prop_queue_and_admission_compose_without_losing_requests() {
+        let cam = walkthrough(6.0, 1, 64, 64)[0];
+        forall(32, |rng| {
+            let p = pipeline();
+            let cfg = ServeConfig {
+                queue_capacity: 1 + rng.below(6),
+                max_inflight: 1 + rng.below(3),
+                ..ServeConfig::default()
+            };
+            let clients = 1 + rng.below(3);
+            let server = FrameServer::new(&p, cfg, clients);
+            let mut submitted = 0u64;
+            for _ in 0..rng.below(40) + 1 {
+                let _ = server.submit(rng.below(clients), cam);
+                submitted += 1;
+                // Occupancy bound holds at every step.
+                assert!(server.queue.len() <= server.queue.capacity());
+            }
+            let r = server.report();
+            assert_eq!(r.submitted, submitted);
+            // Before draining: in-flight + sheds account for everything.
+            assert_eq!(
+                submitted,
+                server.admission.total_inflight() as u64 + r.shed_total()
+            );
+            run_inline(&server);
+            let r = server.report();
+            assert_eq!(
+                submitted,
+                r.served + r.expired + r.failed + r.shed_total()
+            );
+        });
+    }
+
+    #[test]
+    fn qos_disabled_frames_are_byte_identical_to_a_direct_session() {
+        let p = pipeline();
+        let cams = walkthrough(6.0, 5, 64, 64);
+        let cfg = ServeConfig {
+            queue_capacity: 16,
+            max_inflight: 16,
+            keep_frames: true,
+            qos: QosConfig::disabled(),
+            ..ServeConfig::default()
+        };
+        let server = FrameServer::new(&p, cfg, 1);
+        for cam in &cams {
+            server.submit(0, *cam).unwrap();
+        }
+        run_inline(&server);
+        let mut got = server.take_frames(0);
+        got.sort_by_key(|(seq, _)| *seq);
+        let mut session = p.session();
+        let want = session.render_path(&cams).unwrap();
+        assert_eq!(got.len(), want.len());
+        for ((_, g), w) in got.iter().zip(&want) {
+            assert_eq!(g.data, w.data, "served frame must match direct render");
+        }
+    }
+
+    #[test]
+    fn impossible_budget_degrades_to_the_quality_floor_and_no_further() {
+        let p = pipeline();
+        let cams = walkthrough(6.0, 12, 64, 64);
+        let base_tau = p.default_options().lod_tau;
+        let cfg = ServeConfig {
+            queue_capacity: 16,
+            max_inflight: 16,
+            budget: 0.0, // every frame misses
+            qos: QosConfig {
+                miss_threshold: 1,
+                step: 8.0,
+                max_tau: base_tau + 24.0,
+                ..QosConfig::default()
+            },
+            ..ServeConfig::default()
+        };
+        let server = FrameServer::new(&p, cfg, 1);
+        for cam in &cams {
+            server.submit(0, *cam).unwrap();
+        }
+        run_inline(&server);
+        let r = server.report();
+        assert_eq!(r.served, cams.len() as u64);
+        assert_eq!(r.missed, r.served, "zero budget: every frame is late");
+        assert_eq!(r.degrade_events, 3, "(max_tau - base) / step degrade steps");
+        let lane = &r.clients[0];
+        assert_eq!(lane.tau, base_tau + 24.0, "clamped at the quality floor");
+        assert_eq!(r.recover_events, 0);
+        assert!(!r.e2e.is_empty());
+        assert_eq!(r.e2e.count(), r.served);
+    }
+
+    #[test]
+    fn expired_requests_are_dropped_not_rendered_when_shedding_is_on() {
+        let p = pipeline();
+        let cams = walkthrough(6.0, 4, 64, 64);
+        let cfg = ServeConfig {
+            queue_capacity: 16,
+            max_inflight: 16,
+            budget: 0.0,
+            shed_expired: true,
+            qos: QosConfig::disabled(),
+            ..ServeConfig::default()
+        };
+        let server = FrameServer::new(&p, cfg, 1);
+        for cam in &cams {
+            server.submit(0, *cam).unwrap();
+        }
+        // By the time the inline worker runs, every deadline has passed.
+        run_inline(&server);
+        let r = server.report();
+        assert_eq!(r.expired, cams.len() as u64);
+        assert_eq!(r.served, 0);
+        assert_eq!(
+            r.submitted,
+            r.served + r.expired + r.failed + r.shed_total()
+        );
+    }
+
+    #[test]
+    fn reset_window_zeroes_counters_but_keeps_qos_state() {
+        let p = pipeline();
+        let cams = walkthrough(6.0, 4, 64, 64);
+        let base_tau = p.default_options().lod_tau;
+        let cfg = ServeConfig {
+            queue_capacity: 16,
+            max_inflight: 16,
+            budget: 0.0,
+            qos: QosConfig { miss_threshold: 1, ..QosConfig::default() },
+            ..ServeConfig::default()
+        };
+        let server = FrameServer::new(&p, cfg, 1);
+        for cam in &cams {
+            server.submit(0, *cam).unwrap();
+        }
+        run_inline(&server);
+        let warm = server.report();
+        assert!(warm.degrade_events > 0);
+        let degraded_tau = warm.clients[0].tau;
+        assert!(degraded_tau > base_tau);
+        server.reset_window();
+        let r = server.report();
+        assert_eq!(r.submitted, 0);
+        assert_eq!(r.served, 0);
+        assert!(r.e2e.is_empty());
+        // The operating point found during warmup persists.
+        assert_eq!(r.clients[0].tau, degraded_tau);
+        assert_eq!(r.degrade_events, warm.degrade_events);
+    }
+}

@@ -1,0 +1,266 @@
+//! Deadline-adaptive LoD degradation (QoS).
+//!
+//! When a client stream keeps missing its latency budget, the right
+//! lever in a point-based renderer is the LoD error bound `tau`: a
+//! coarser cut selects fewer nodes, shrinking every downstream stage
+//! (project, bin, sort, blend). The [`QosController`] watches observed
+//! frame latencies and walks `tau` **stepwise** between the session's
+//! base value (full quality) and a configured ceiling (the quality
+//! floor):
+//!
+//! * **degrade** — after [`QosConfig::miss_threshold`] *consecutive*
+//!   deadline misses, raise `tau` by [`QosConfig::step`], clamped to
+//!   [`QosConfig::max_tau`];
+//! * **recover** — only after [`QosConfig::recover_after`] consecutive
+//!   frames land under `recover_headroom * budget` does `tau` step back
+//!   down toward base. Frames in the dead band between the headroom
+//!   line and the budget reset the recovery streak, which is the
+//!   hysteresis that prevents degrade/recover flapping at the boundary.
+//!
+//! The controller is a pure state machine — it never touches a session
+//! itself. The [`FrameServer`](super::FrameServer) applies the returned
+//! tau to the lane's [`RenderOptions`](crate::coordinator::RenderOptions)
+//! where, with steps no larger than the cut cache's
+//! [`max_tau_step`](crate::lod::CutCacheConfig::max_tau_step), each
+//! nudge revalidates the cached cut instead of cold-starting the
+//! search.
+
+/// Tuning knobs for the deadline-adaptive tau controller.
+#[derive(Clone, Copy, Debug)]
+pub struct QosConfig {
+    /// Master switch; disabled means [`QosController::observe`] never
+    /// changes tau (the fixed-quality baseline).
+    pub enabled: bool,
+    /// Tau increment per degradation step (and decrement per recovery
+    /// step). Keep at or below the cut cache's
+    /// [`max_tau_step`](crate::lod::CutCacheConfig::max_tau_step) so
+    /// every QoS nudge stays on the cache's warm revalidation path.
+    pub step: f32,
+    /// Quality floor: tau never degrades beyond this ceiling.
+    pub max_tau: f32,
+    /// Consecutive deadline misses required before a degrade step.
+    pub miss_threshold: u32,
+    /// Recovery requires latencies at or below
+    /// `recover_headroom * budget` (in `(0, 1)`); the gap to the budget
+    /// is the hysteresis dead band.
+    pub recover_headroom: f64,
+    /// Consecutive sufficiently-fast frames required before a recovery
+    /// step.
+    pub recover_after: u32,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            enabled: true,
+            step: 4.0,
+            max_tau: 128.0,
+            miss_threshold: 2,
+            recover_headroom: 0.5,
+            recover_after: 16,
+        }
+    }
+}
+
+impl QosConfig {
+    /// A config with adaptation switched off (fixed-tau baseline).
+    pub fn disabled() -> Self {
+        QosConfig { enabled: false, ..QosConfig::default() }
+    }
+}
+
+/// Per-client-stream degradation state machine. Feed it one observed
+/// latency per completed frame via [`observe`](Self::observe); it
+/// returns the new tau whenever one of the transitions fires.
+#[derive(Clone, Copy, Debug)]
+pub struct QosController {
+    base_tau: f32,
+    tau: f32,
+    miss_streak: u32,
+    calm_streak: u32,
+    degrade_events: u64,
+    recover_events: u64,
+}
+
+impl QosController {
+    /// A controller at full quality: tau starts at (and never recovers
+    /// below) `base_tau`.
+    pub fn new(base_tau: f32) -> Self {
+        QosController {
+            base_tau,
+            tau: base_tau,
+            miss_streak: 0,
+            calm_streak: 0,
+            degrade_events: 0,
+            recover_events: 0,
+        }
+    }
+
+    /// The tau the stream should currently render at.
+    pub fn tau(&self) -> f32 {
+        self.tau
+    }
+
+    /// The full-quality tau this controller recovers toward.
+    pub fn base_tau(&self) -> f32 {
+        self.base_tau
+    }
+
+    /// Whether the stream is currently degraded below full quality.
+    pub fn is_degraded(&self) -> bool {
+        self.tau > self.base_tau
+    }
+
+    /// Degradation steps taken so far.
+    pub fn degrade_events(&self) -> u64 {
+        self.degrade_events
+    }
+
+    /// Recovery steps taken so far.
+    pub fn recover_events(&self) -> u64 {
+        self.recover_events
+    }
+
+    /// Record one observed frame latency against its budget (both in
+    /// seconds). Returns `Some(new_tau)` when a degrade or recover step
+    /// fired, `None` when tau is unchanged.
+    pub fn observe(
+        &mut self,
+        latency_seconds: f64,
+        budget_seconds: f64,
+        cfg: &QosConfig,
+    ) -> Option<f32> {
+        if !cfg.enabled {
+            return None;
+        }
+        if latency_seconds > budget_seconds {
+            // Deadline miss: any recovery progress is void.
+            self.calm_streak = 0;
+            self.miss_streak = self.miss_streak.saturating_add(1);
+            if self.miss_streak >= cfg.miss_threshold.max(1) && self.tau < cfg.max_tau {
+                self.miss_streak = 0;
+                self.tau = (self.tau + cfg.step).min(cfg.max_tau);
+                self.degrade_events += 1;
+                return Some(self.tau);
+            }
+            None
+        } else {
+            self.miss_streak = 0;
+            if self.is_degraded()
+                && latency_seconds <= budget_seconds * cfg.recover_headroom
+            {
+                self.calm_streak = self.calm_streak.saturating_add(1);
+                if self.calm_streak >= cfg.recover_after.max(1) {
+                    self.calm_streak = 0;
+                    self.tau = (self.tau - cfg.step).max(self.base_tau);
+                    self.recover_events += 1;
+                    return Some(self.tau);
+                }
+            } else {
+                // Dead-band frame (made the deadline but without enough
+                // headroom) — or nothing to recover from.
+                self.calm_streak = 0;
+            }
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BUDGET: f64 = 0.010;
+
+    fn cfg() -> QosConfig {
+        QosConfig {
+            enabled: true,
+            step: 4.0,
+            max_tau: 48.0,
+            miss_threshold: 2,
+            recover_headroom: 0.5,
+            recover_after: 3,
+        }
+    }
+
+    #[test]
+    fn degrades_only_after_consecutive_misses() {
+        let c = cfg();
+        let mut q = QosController::new(32.0);
+        assert_eq!(q.observe(0.020, BUDGET, &c), None, "first miss waits");
+        // An on-time frame breaks the miss streak.
+        assert_eq!(q.observe(0.002, BUDGET, &c), None);
+        assert_eq!(q.observe(0.020, BUDGET, &c), None);
+        assert_eq!(q.observe(0.020, BUDGET, &c), Some(36.0));
+        assert!(q.is_degraded());
+        assert_eq!(q.degrade_events(), 1);
+    }
+
+    #[test]
+    fn degradation_is_clamped_at_max_tau() {
+        let c = cfg();
+        let mut q = QosController::new(32.0);
+        for _ in 0..40 {
+            q.observe(0.050, BUDGET, &c);
+        }
+        assert_eq!(q.tau(), c.max_tau);
+        // Fully degraded: further misses fire no more events.
+        let events = q.degrade_events();
+        assert_eq!(q.observe(0.050, BUDGET, &c), None);
+        assert_eq!(q.observe(0.050, BUDGET, &c), None);
+        assert_eq!(q.degrade_events(), events);
+    }
+
+    #[test]
+    fn recovery_is_hysteretic_and_never_undershoots_base() {
+        let c = cfg();
+        let mut q = QosController::new(32.0);
+        q.observe(0.020, BUDGET, &c);
+        q.observe(0.020, BUDGET, &c);
+        assert_eq!(q.tau(), 36.0);
+        // Dead-band frames (under budget, over headroom) never recover.
+        for _ in 0..20 {
+            assert_eq!(q.observe(0.008, BUDGET, &c), None);
+        }
+        assert_eq!(q.tau(), 36.0);
+        // Two fast frames then a dead-band frame: streak resets.
+        q.observe(0.002, BUDGET, &c);
+        q.observe(0.002, BUDGET, &c);
+        assert_eq!(q.observe(0.008, BUDGET, &c), None);
+        // Three consecutive fast frames finally step back down.
+        q.observe(0.002, BUDGET, &c);
+        q.observe(0.002, BUDGET, &c);
+        assert_eq!(q.observe(0.002, BUDGET, &c), Some(32.0));
+        assert!(!q.is_degraded());
+        assert_eq!(q.recover_events(), 1);
+        // At base, fast frames change nothing: tau never undershoots.
+        for _ in 0..10 {
+            assert_eq!(q.observe(0.001, BUDGET, &c), None);
+        }
+        assert_eq!(q.tau(), 32.0);
+    }
+
+    #[test]
+    fn disabled_controller_never_moves_tau() {
+        let c = QosConfig::disabled();
+        let mut q = QosController::new(32.0);
+        for _ in 0..50 {
+            assert_eq!(q.observe(1.0, BUDGET, &c), None);
+        }
+        assert_eq!(q.tau(), 32.0);
+        assert_eq!(q.degrade_events(), 0);
+    }
+
+    #[test]
+    fn recovery_step_clamps_onto_base_exactly() {
+        // step 4 from base 32 to 34 would overshoot on the way down if
+        // the clamp were missing; max_tau at 34 forces the odd ceiling.
+        let c = QosConfig { max_tau: 34.0, recover_after: 1, ..cfg() };
+        let mut q = QosController::new(32.0);
+        q.observe(0.020, BUDGET, &c);
+        q.observe(0.020, BUDGET, &c);
+        assert_eq!(q.tau(), 34.0);
+        assert_eq!(q.observe(0.001, BUDGET, &c), Some(32.0));
+        assert_eq!(q.tau(), q.base_tau());
+    }
+}

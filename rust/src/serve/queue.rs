@@ -1,0 +1,277 @@
+//! Bounded frame-request queue with explicit shed semantics.
+//!
+//! The serving layer's first rule is that overload is **visible**: a
+//! full queue rejects the request with a typed [`ShedReason`] at submit
+//! time — it never blocks the submitter and never grows unboundedly.
+//! Consumers (the [`FrameServer`](super::FrameServer) workers) block on
+//! a condvar until a request or shutdown arrives, so an idle serving
+//! process burns no CPU.
+
+use crate::math::Camera;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// One queued render request for one client stream.
+#[derive(Clone, Copy, Debug)]
+pub struct FrameRequest {
+    /// Client lane index (0-based, assigned by the server).
+    pub client: usize,
+    /// Server-wide submission sequence number (orders frames within a
+    /// client even when workers complete them out of order).
+    pub seq: u64,
+    /// Camera to render.
+    pub cam: Camera,
+    /// When the request entered the queue (queue-wait + end-to-end
+    /// latency both measure from here).
+    pub enqueued: Instant,
+    /// Hard per-request deadline (`enqueued + budget`). Workers may
+    /// drop a request that is already past it
+    /// ([`ServeConfig::shed_expired`](super::ServeConfig::shed_expired)).
+    pub deadline: Instant,
+}
+
+/// Why a submission was shed (typed backpressure — the caller can tell
+/// "slow down" from "you specifically are too far behind" from "the
+/// server is gone").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The bounded queue is at capacity: the whole server is behind.
+    QueueFull,
+    /// This client already holds its per-client in-flight cap
+    /// (admission fairness): the client is behind, not the server.
+    ClientSaturated,
+    /// The queue was closed (server shutting down).
+    Closed,
+}
+
+/// A shed submission: which client was refused and why. This is the
+/// error type [`FrameServer::submit`](super::FrameServer::submit)
+/// returns — backpressure is a value, not a panic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShedError {
+    /// The client whose request was shed.
+    pub client: usize,
+    /// Why it was shed.
+    pub reason: ShedReason,
+}
+
+impl std::fmt::Display for ShedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let why = match self.reason {
+            ShedReason::QueueFull => "frame queue full",
+            ShedReason::ClientSaturated => "client at in-flight cap",
+            ShedReason::Closed => "server closed",
+        };
+        write!(f, "request from client {} shed: {why}", self.client)
+    }
+}
+
+impl std::error::Error for ShedError {}
+
+/// Interior queue state behind the mutex.
+#[derive(Debug, Default)]
+struct QueueState {
+    queue: VecDeque<FrameRequest>,
+    closed: bool,
+    /// Largest occupancy ever observed (the backpressure test's bound
+    /// witness and a useful serving metric).
+    high_water: usize,
+    /// Total accepted pushes.
+    pushed: u64,
+}
+
+/// Bounded MPMC frame-request queue: non-blocking reject-on-full
+/// producers, blocking condvar consumers, explicit close.
+#[derive(Debug)]
+pub struct FrameQueue {
+    capacity: usize,
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+impl FrameQueue {
+    /// An empty queue holding at most `capacity` requests (clamped to
+    /// >= 1 — a zero-capacity queue could never serve anything).
+    pub fn new(capacity: usize) -> Self {
+        FrameQueue {
+            capacity: capacity.max(1),
+            state: Mutex::new(QueueState::default()),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Lock the state, riding through poison: every mutation below
+    /// keeps the queue consistent at each step, so a panicked peer
+    /// cannot leave torn state behind.
+    fn lock(&self) -> MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Enqueue a request. Never blocks: a full or closed queue rejects
+    /// immediately with the corresponding [`ShedReason`].
+    pub fn push(&self, req: FrameRequest) -> Result<(), ShedReason> {
+        let mut st = self.lock();
+        if st.closed {
+            return Err(ShedReason::Closed);
+        }
+        if st.queue.len() >= self.capacity {
+            return Err(ShedReason::QueueFull);
+        }
+        st.queue.push_back(req);
+        st.high_water = st.high_water.max(st.queue.len());
+        st.pushed += 1;
+        drop(st);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue the oldest request, blocking until one arrives. Returns
+    /// `None` once the queue is closed **and** drained — the worker
+    /// shutdown signal (close never drops queued work).
+    pub fn pop_blocking(&self) -> Option<FrameRequest> {
+        let mut st = self.lock();
+        loop {
+            if let Some(req) = st.queue.pop_front() {
+                return Some(req);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Non-blocking dequeue (tests and drain probes).
+    pub fn try_pop(&self) -> Option<FrameRequest> {
+        self.lock().queue.pop_front()
+    }
+
+    /// Close the queue: subsequent pushes shed with
+    /// [`ShedReason::Closed`]; blocked consumers wake, drain what is
+    /// left and then receive `None`.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Current occupancy.
+    pub fn len(&self) -> usize {
+        self.lock().queue.len()
+    }
+
+    /// Whether the queue is currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.lock().queue.is_empty()
+    }
+
+    /// Largest occupancy ever observed; by construction
+    /// `high_water <= capacity`.
+    pub fn high_water(&self) -> usize {
+        self.lock().high_water
+    }
+
+    /// Total requests ever accepted (pushed successfully).
+    pub fn pushed(&self) -> u64 {
+        self.lock().pushed
+    }
+
+    /// The occupancy bound this queue enforces.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Intrinsics, Vec3};
+
+    fn cam() -> Camera {
+        Camera::look_at(
+            Vec3::new(0.0, 0.0, 5.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            Intrinsics::from_fov(32, 32, 1.0),
+        )
+    }
+
+    fn req(client: usize, seq: u64) -> FrameRequest {
+        let now = Instant::now();
+        FrameRequest { client, seq, cam: cam(), enqueued: now, deadline: now }
+    }
+
+    #[test]
+    fn occupancy_never_exceeds_capacity() {
+        let q = FrameQueue::new(2);
+        assert_eq!(q.capacity(), 2);
+        assert!(q.push(req(0, 0)).is_ok());
+        assert!(q.push(req(0, 1)).is_ok());
+        assert_eq!(q.push(req(0, 2)), Err(ShedReason::QueueFull));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.high_water(), 2);
+        assert_eq!(q.pushed(), 2);
+        // Freeing a slot re-admits exactly one.
+        assert_eq!(q.try_pop().unwrap().seq, 0);
+        assert!(q.push(req(0, 3)).is_ok());
+        assert_eq!(q.push(req(0, 4)), Err(ShedReason::QueueFull));
+        assert!(q.high_water() <= q.capacity());
+    }
+
+    #[test]
+    fn fifo_order_is_preserved() {
+        let q = FrameQueue::new(8);
+        for s in 0..5u64 {
+            q.push(req(0, s)).unwrap();
+        }
+        for s in 0..5u64 {
+            assert_eq!(q.pop_blocking().unwrap().seq, s);
+        }
+        assert!(q.is_empty());
+        assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn close_sheds_new_pushes_but_drains_queued_work() {
+        let q = FrameQueue::new(4);
+        q.push(req(0, 0)).unwrap();
+        q.push(req(1, 1)).unwrap();
+        q.close();
+        assert_eq!(q.push(req(0, 2)), Err(ShedReason::Closed));
+        // Queued work is still delivered, then the shutdown signal.
+        assert_eq!(q.pop_blocking().unwrap().seq, 0);
+        assert_eq!(q.pop_blocking().unwrap().seq, 1);
+        assert!(q.pop_blocking().is_none());
+        assert!(q.pop_blocking().is_none(), "None must be sticky");
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let q = FrameQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        assert!(q.push(req(0, 0)).is_ok());
+        assert_eq!(q.push(req(0, 1)), Err(ShedReason::QueueFull));
+    }
+
+    #[test]
+    fn blocked_consumer_wakes_on_push_and_on_close() {
+        let q = FrameQueue::new(4);
+        std::thread::scope(|s| {
+            let consumer = s.spawn(|| {
+                let mut got = Vec::new();
+                while let Some(r) = q.pop_blocking() {
+                    got.push(r.seq);
+                }
+                got
+            });
+            // Stagger pushes so the consumer really parks in between.
+            for seq in 0..3u64 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                q.push(req(0, seq)).unwrap();
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            q.close();
+            assert_eq!(consumer.join().unwrap(), vec![0, 1, 2]);
+        });
+    }
+}

@@ -33,5 +33,5 @@ pub use sort::{
 };
 pub use tiling::{
     bin_splats, bin_splats_into, bin_splats_into_threaded, bin_splats_nested,
-    TileBins, TILE,
+    TileBins, TilingError, TILE,
 };

@@ -20,6 +20,42 @@ use crate::gaussian::Splat2D;
 /// Tile side in pixels — fixed at 16 to match the splat HLO artifacts.
 pub const TILE: u32 = 16;
 
+/// Binning-stage failure. Carried as a typed error (instead of the old
+/// `panic!`/`assert!`) through `RenderBackend`/`RenderSession`'s
+/// `Result` render path, so one malformed frame degrades that request
+/// instead of killing a serving process. On error the target
+/// [`TileBins`] holds unspecified (but memory-safe) contents; the next
+/// successful bin fully rebuilds every buffer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TilingError {
+    /// The frame's (gaussian, tile) pair count does not fit the u32 CSR
+    /// offset table — only reachable with astronomically large screens
+    /// or splat counts, but a serving process must shed such a frame,
+    /// not die on it.
+    PairOverflow {
+        /// The offending pair count.
+        pairs: u64,
+    },
+    /// A rebuilt CSR table failed [`TileBins::validate_csr`] (the scan
+    /// runs in debug builds only; the message names the violated
+    /// invariant).
+    CsrInvariant(String),
+}
+
+impl std::fmt::Display for TilingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TilingError::PairOverflow { pairs } => write!(
+                f,
+                "tile-pair count {pairs} overflows the u32 CSR offsets"
+            ),
+            TilingError::CsrInvariant(e) => write!(f, "CSR invariant violated: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TilingError {}
+
 /// A splat's clamped tile-space bounding rectangle (inclusive).
 #[derive(Clone, Copy, Debug)]
 struct TileRect {
@@ -177,29 +213,41 @@ impl TileBins {
     }
 }
 
-/// Debug-build CSR sanity after a rebuild: panics with the violated
-/// invariant (release builds skip the scan entirely).
-fn debug_validate(bins: &TileBins, n_splats: usize) {
+/// Debug-build CSR sanity after a rebuild: reports the violated
+/// invariant as a [`TilingError`] (release builds skip the scan
+/// entirely).
+fn debug_validate(bins: &TileBins, n_splats: usize) -> Result<(), TilingError> {
     if cfg!(debug_assertions) {
         if let Err(e) = bins.validate_csr(n_splats) {
-            panic!("CSR invariant violated: {e}");
+            return Err(TilingError::CsrInvariant(e));
         }
     }
+    Ok(())
 }
 
 /// Bin projected splats into tiles covering a `width x height` screen.
-/// Culled splats (radius 0) never generate pairs.
+/// Culled splats (radius 0) never generate pairs. Infallible signature
+/// for tests/benches — a [`TilingError`] here means the harness itself
+/// is broken, so it unwraps; serving paths use [`bin_splats_into`] /
+/// [`bin_splats_into_threaded`] and propagate.
 pub fn bin_splats(splats: &[Splat2D], width: u32, height: u32) -> TileBins {
     let mut bins = TileBins::default();
-    bin_splats_into(splats, width, height, &mut bins);
+    bin_splats_into(splats, width, height, &mut bins)
+        .expect("tile binning (test/bench reference path)");
     bins
 }
 
 /// Bin into a reusable [`TileBins`]: after the first frame warms the
 /// buffers up, rebinning allocates nothing. Three passes over flat
 /// arrays: count per-tile overlaps, exclusive prefix-sum into the offset
-/// table, scatter the splat indices through per-tile cursors.
-pub fn bin_splats_into(splats: &[Splat2D], width: u32, height: u32, bins: &mut TileBins) {
+/// table, scatter the splat indices through per-tile cursors. `Err`
+/// leaves `bins` unspecified-but-safe (see [`TilingError`]).
+pub fn bin_splats_into(
+    splats: &[Splat2D],
+    width: u32,
+    height: u32,
+    bins: &mut TileBins,
+) -> Result<(), TilingError> {
     let tiles_x = width.div_ceil(TILE);
     let tiles_y = height.div_ceil(TILE);
     let tiles = (tiles_x * tiles_y) as usize;
@@ -221,10 +269,9 @@ pub fn bin_splats_into(splats: &[Splat2D], width: u32, height: u32, bins: &mut T
         let offsets = &mut bins.offsets;
         for_each_covered_tile(rect, tiles_x, |t| offsets[t + 1] += 1);
     }
-    assert!(
-        total_pairs <= u32::MAX as u64,
-        "tile-pair count {total_pairs} overflows the u32 CSR offsets"
-    );
+    if total_pairs > u32::MAX as u64 {
+        return Err(TilingError::PairOverflow { pairs: total_pairs });
+    }
 
     // Prefix sum: offsets[t + 1] becomes the end of tile t's slice.
     let mut acc = 0u32;
@@ -248,7 +295,7 @@ pub fn bin_splats_into(splats: &[Splat2D], width: u32, height: u32, bins: &mut T
             cursor[t] += 1;
         });
     }
-    debug_validate(bins, splats.len());
+    debug_validate(bins, splats.len())
 }
 
 /// Below this many splats the per-worker histogram merge costs more than
@@ -281,18 +328,18 @@ unsafe impl Sync for SharedIndices {}
 /// and the merge orders their sub-slices worker-after-worker inside each
 /// tile, so every tile slice comes out in ascending splat order — the
 /// CSR arrays are byte-identical to the serial build at any thread
-/// count.
+/// count. `Err` leaves `bins` unspecified-but-safe (see
+/// [`TilingError`]).
 pub fn bin_splats_into_threaded(
     splats: &[Splat2D],
     width: u32,
     height: u32,
     bins: &mut TileBins,
     threads: usize,
-) {
+) -> Result<(), TilingError> {
     let n = splats.len();
     if threads <= 1 || n < PAR_BIN_MIN {
-        bin_splats_into(splats, width, height, bins);
-        return;
+        return bin_splats_into(splats, width, height, bins);
     }
     let tiles_x = width.div_ceil(TILE);
     let tiles_y = height.div_ceil(TILE);
@@ -344,10 +391,9 @@ pub fn bin_splats_into_threaded(
             .map(|h| h.join().expect("bin count worker panicked"))
             .sum()
     });
-    assert!(
-        total_pairs <= u32::MAX as u64,
-        "tile-pair count {total_pairs} overflows the u32 CSR offsets"
-    );
+    if total_pairs > u32::MAX as u64 {
+        return Err(TilingError::PairOverflow { pairs: total_pairs });
+    }
 
     // Merge pass: one exclusive prefix-sum over (tile, worker) lands the
     // CSR offset table and, inside each tile's slice, every worker's
@@ -395,7 +441,7 @@ pub fn bin_splats_into_threaded(
             });
         }
     });
-    debug_validate(bins, n);
+    debug_validate(bins, n)
 }
 
 /// Reference nested-Vec binning (the pre-CSR implementation), kept for
@@ -535,7 +581,7 @@ mod tests {
                 let splats = random_splats(&mut rng, n, 256.0, 256.0);
                 let serial = bin_splats(&splats, 256, 256);
                 let mut par = TileBins::default();
-                bin_splats_into_threaded(&splats, 256, 256, &mut par, threads);
+                bin_splats_into_threaded(&splats, 256, 256, &mut par, threads).unwrap();
                 par.validate_csr(splats.len()).unwrap();
                 assert_eq!(par.offsets, serial.offsets, "case {case}/{threads}");
                 assert_eq!(par.indices, serial.indices, "case {case}/{threads}");
@@ -553,7 +599,7 @@ mod tests {
         for (i, &threads) in [8usize, 2, 5, 1, 8].iter().enumerate() {
             let n = 1_050 + rng.below(2_000);
             let splats = random_splats(&mut rng, n, 192.0, 160.0);
-            bin_splats_into_threaded(&splats, 192, 160, &mut reused, threads);
+            bin_splats_into_threaded(&splats, 192, 160, &mut reused, threads).unwrap();
             let fresh = bin_splats(&splats, 192, 160);
             assert_eq!(reused.offsets, fresh.offsets, "frame {i}");
             assert_eq!(reused.indices, fresh.indices, "frame {i}");
@@ -574,7 +620,7 @@ mod tests {
             .collect();
         for threads in [1usize, 8] {
             let mut bins = TileBins::default();
-            bin_splats_into_threaded(&splats, 64, 64, &mut bins, threads);
+            bin_splats_into_threaded(&splats, 64, 64, &mut bins, threads).unwrap();
             bins.validate_csr(splats.len()).unwrap();
             assert_eq!(bins.pairs, splats.len() as u64);
             assert_eq!(bins.tile_len(0), splats.len());
@@ -593,7 +639,7 @@ mod tests {
             (0..1_200).map(|_| splat_at(8.0, 8.0, 0.0)).collect();
         for threads in [1usize, 8] {
             let mut bins = TileBins::default();
-            bin_splats_into_threaded(&splats, 64, 64, &mut bins, threads);
+            bin_splats_into_threaded(&splats, 64, 64, &mut bins, threads).unwrap();
             bins.validate_csr(splats.len()).unwrap();
             assert_eq!(bins.pairs, 0);
             assert!(bins.indices.is_empty());
@@ -604,6 +650,19 @@ mod tests {
         let bins = bin_splats(&empty, 64, 64);
         bins.validate_csr(0).unwrap();
         assert_eq!(bins.pairs, 0);
+    }
+
+    #[test]
+    fn tiling_error_formats_both_variants() {
+        let overflow = TilingError::PairOverflow { pairs: u32::MAX as u64 + 1 };
+        assert!(overflow.to_string().contains("4294967296"));
+        assert!(overflow.to_string().contains("overflows"));
+        let csr = TilingError::CsrInvariant("offsets[0] == 3 != 0".into());
+        assert!(csr.to_string().contains("CSR invariant violated"));
+        assert!(csr.to_string().contains("offsets[0]"));
+        // The error is a std error, so it threads through anyhow.
+        let boxed: Box<dyn std::error::Error> = Box::new(overflow);
+        assert!(boxed.to_string().contains("overflows"));
     }
 
     #[test]
@@ -628,7 +687,7 @@ mod tests {
         for _ in 0..8 {
             let n = 1 + rng.below(200);
             let splats = random_splats(&mut rng, n, 256.0, 256.0);
-            bin_splats_into(&splats, 256, 256, &mut reused);
+            bin_splats_into(&splats, 256, 256, &mut reused).unwrap();
             let fresh = bin_splats(&splats, 256, 256);
             assert_eq!(reused.offsets, fresh.offsets);
             assert_eq!(reused.indices, fresh.indices);

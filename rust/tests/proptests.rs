@@ -99,6 +99,7 @@ fn prop_cut_cache_is_bit_identical_across_taus_and_cameras() {
             max_translation: f32::INFINITY,
             max_rotation: std::f32::consts::PI,
             refresh_every: 0,
+            max_tau_step: f32::INFINITY,
         };
         for tau in [rng.range(0.5, 8.0), rng.range(8.0, 64.0)] {
             let mut cache = CutCache::new();
@@ -114,6 +115,45 @@ fn prop_cut_cache_is_bit_identical_across_taus_and_cameras() {
                 assert_eq!(trace.cache_hit, u64::from(i > 0), "frame {i}");
                 assert_eq!(trace.selected, want.len() as u64);
             }
+        }
+    });
+}
+
+#[test]
+fn prop_cut_cache_is_bit_identical_across_tau_ramps() {
+    // Serving-layer contract: deadline-driven tau nudges (degrade up,
+    // recover back down) within `max_tau_step` ride the incremental
+    // path — every frame must be a cache hit — and still select exactly
+    // the canonical cut at every step of the ramp.
+    forall(8, |rng| {
+        let (_, tree) = random_scene(rng);
+        let extent = tree.aabbs[0].half_extent().max_component();
+        let tau_s = 8 + rng.below(56) as u32;
+        let slt = SlTree::partition(&tree, tau_s);
+        let step = rng.range(1.0, 8.0);
+        let cfg = CutCacheConfig {
+            enabled: true,
+            max_translation: f32::INFINITY,
+            max_rotation: std::f32::consts::PI,
+            refresh_every: 0,
+            max_tau_step: step,
+        };
+        let cam = random_camera(rng, extent.max(1.0));
+        let mut tau = rng.range(4.0, 16.0);
+        let mut cache = CutCache::new();
+        for i in 0..10u64 {
+            let (want, _) = tree.canonical_search(&cam, tau);
+            let (got, trace) = cache.search(&tree, &slt, &cam, tau, &cfg);
+            assert_eq!(got, want.as_slice(), "frame {i} tau {tau}");
+            assert_eq!(
+                trace.cache_hit,
+                u64::from(i > 0),
+                "nudge {i} (tau {tau}, step {step}) must stay warm"
+            );
+            // Ramp up for the first half (degradation), back down for
+            // the second (recovery), always within the allowed step.
+            let delta = rng.range(0.1, step);
+            tau = if i < 5 { tau + delta } else { (tau - delta).max(0.5) };
         }
     });
 }
@@ -399,7 +439,7 @@ fn prop_parallel_bins_match_nested_reference() {
         let (nested, pairs) = bin_splats_nested(&splats, w, h);
         for threads in [1usize, 2, 8] {
             let mut bins = TileBins::default();
-            bin_splats_into_threaded(&splats, w, h, &mut bins, threads);
+            bin_splats_into_threaded(&splats, w, h, &mut bins, threads).unwrap();
             bins.validate_csr(splats.len()).unwrap();
             assert_eq!(bins.pairs, pairs, "{threads} threads");
             for t in 0..nested.len() {
