@@ -9,13 +9,14 @@ use sltarch::coordinator::renderer::{default_threads, AlphaMode, CpuRenderer};
 use sltarch::coordinator::{BlendKernel, CpuBackend, FramePipeline, RenderOptions};
 use sltarch::gaussian::{project, project_into, project_into_threaded, Splat2D};
 use sltarch::lod::{traverse_sltree, CutCache, CutCacheConfig, SlTree};
+use sltarch::residency::ResidencyConfig;
 use sltarch::scene::{orbit_cameras, walkthrough};
+use sltarch::serve::{
+    calibrate_frame_seconds, run_load, LoadGenConfig, QosConfig, ServeConfig,
+};
 use sltarch::splat::{
     bin_splats, bin_splats_into, bin_splats_into_threaded, sort_bins_threaded,
     sort_bins_with, DepthSortScratch, TileBins,
-};
-use sltarch::serve::{
-    calibrate_frame_seconds, run_load, LoadGenConfig, QosConfig, ServeConfig,
 };
 use sltarch::util::bench::Bench;
 
@@ -205,18 +206,56 @@ fn main() {
         }
     }
 
+    // The PR-7 tentpole rows: out-of-core slab residency over the same
+    // orbit path, budgeted at half the scene's slab bytes so the LRU
+    // must actually evict. Cold pass = compulsory faulting; warm pass =
+    // steady state, where the cut-delta prefetcher turns demand stalls
+    // into overlapped loads. Frames are byte-identical to unmanaged
+    // renders (golden harness), so these rows are pure memory-system
+    // telemetry.
+    let slab_total: u64 =
+        pipeline.sltree().subtrees.iter().map(|s| s.bytes()).sum();
+    let res_budget = (slab_total / 2).max(1);
+    b.record("residency scene slab MB", slab_total as f64 / 1e6);
+    b.record("residency budget MB", res_budget as f64 / 1e6);
+    let mut res_session = pipeline.session_with(RenderOptions {
+        residency: ResidencyConfig::with_budget(res_budget),
+        ..pipeline.default_options()
+    });
+    res_session.render_path(&cams).expect("residency cold pass");
+    let cold = res_session.reset_stats().residency;
+    b.record(
+        "residency(cold) miss/frame",
+        cold.misses as f64 / cold.frames.max(1) as f64,
+    );
+    b.record("residency(cold) MB loaded", cold.bytes_loaded as f64 / 1e6);
+    res_session.render_path(&cams).expect("residency warm pass");
+    let warm = res_session.stats().residency;
+    b.record("residency(warm) hit rate", warm.hit_rate());
+    b.record("residency(warm) MB loaded", warm.bytes_loaded as f64 / 1e6);
+    b.record("residency(warm) MB evicted", warm.bytes_evicted as f64 / 1e6);
+    b.record("residency(prefetch) issued", warm.prefetch_issued as f64);
+    b.record("residency(prefetch) hits", warm.prefetch_hits as f64);
+    b.record("residency(prefetch) accuracy", warm.prefetch_hit_rate());
+    b.record(
+        "residency stall ms/frame",
+        warm.stall_seconds * 1e3 / warm.frames.max(1) as f64,
+    );
+    drop(res_session);
+
     // The PR-6 tentpole rows: the deadline-aware serving layer under
-    // 2x overload (3 open-loop clients, 2 render workers). Three
-    // scenarios over identical offered load:
+    // 2x overload (now 32 open-loop clients, 2 render workers — the
+    // PR-7 scale-up; per-client p99 spread rows watch for starvation).
+    // Three scenarios over identical offered load:
     //   fixed    — QoS disabled: the tail collapses, p99 >> budget;
     //   adaptive — deadline-adaptive tau: degrades LoD stepwise (warm
     //              cut-cache nudges) until p99 fits the budget;
     //   burst    — sustainable base rate + client-0 bursts: degrade on
     //              each burst, hysteretic recovery in the calm stretches.
-    let serve_clients = 3usize;
-    let serve_frames = if quick { 6 } else { 20 };
+    let serve_clients = 32usize;
+    let serve_frames = if quick { 4 } else { 8 };
     let serve_paths: Vec<_> = (0..serve_clients)
-        .map(|c| orbit_cameras(extent, 0.55 + 0.15 * c as f32, 12, 256, 256))
+        .map(|c| orbit_cameras(extent, 0.55 + 0.02 * (c % 8) as f32, 12, 256, 256))
         .collect();
     let base = calibrate_frame_seconds(&pipeline, rcfg.lod_tau, &serve_paths[0][..4]);
     let coarse = calibrate_frame_seconds(&pipeline, 128.0, &serve_paths[0][..4]);
@@ -224,11 +263,13 @@ fn main() {
     b.record("serve calib tau=base ms/frame", base * 1e3);
     b.record("serve calib tau=128 ms/frame", coarse * 1e3);
     b.record("serve budget ms", budget * 1e3);
+    // 32 clients / 2 workers: offered load is clients/period, capacity
+    // is workers/base, so period = base * 8 is 2x overload.
     let overload = LoadGenConfig {
         clients: serve_clients,
         frames: serve_frames,
         warmup: serve_frames,
-        period: base * 0.75,
+        period: base * 8.0,
         ..LoadGenConfig::default()
     };
     let serve_base = ServeConfig {
@@ -270,15 +311,34 @@ fn main() {
         let tau_max =
             r.clients.iter().map(|c| c.tau).fold(0.0f32, f32::max);
         b.record(&format!("serve({label}) tau final"), tau_max as f64);
+        // Per-client p99 spread across the 32 lanes: a fair scheduler
+        // keeps the spread small; starvation shows up as a blown max.
+        let mut p99_lo = f64::INFINITY;
+        let mut p99_hi = 0.0f64;
+        for c in r.clients.iter().filter(|c| c.served > 0) {
+            let p99 = c.e2e.percentiles_ms()[2];
+            p99_lo = p99_lo.min(p99);
+            p99_hi = p99_hi.max(p99);
+        }
+        if p99_lo.is_finite() {
+            b.record(&format!("serve({label}) client p99 min ms"), p99_lo);
+            b.record(&format!("serve({label}) client p99 max ms"), p99_hi);
+            b.record(
+                &format!("serve({label}) client p99 spread ms"),
+                p99_hi - p99_lo,
+            );
+        }
     }
     // Burst-recover: base rate the pool can sustain, client 0 dumps
     // periodic bursts; the row pair of interest is degrade AND recover
     // events both being non-zero.
+    // Sustainable base rate for 32 clients on 2 workers (offered
+    // ~1.3/base vs capacity 2/base), with client-0 bursts on top.
     let burst_load = LoadGenConfig {
         clients: serve_clients,
-        frames: if quick { 8 } else { 16 },
+        frames: if quick { 6 } else { 12 },
         warmup: 4,
-        period: base * 3.0,
+        period: base * 24.0,
         burst_every: 3,
         burst_extra: 4,
         ..LoadGenConfig::default()

@@ -14,6 +14,7 @@ use super::renderer::{
 use crate::config::RenderConfig;
 use crate::lod::CutCacheConfig;
 use crate::metrics::Image;
+use crate::residency::ResidencyConfig;
 use crate::runtime::PjrtEngine;
 use crate::splat::BlendKernel;
 use anyhow::Result;
@@ -43,6 +44,13 @@ pub struct RenderOptions {
     /// must fall back to a full traversal. The cut is bit-identical to
     /// the full search either way; this only trades search time.
     pub cut_cache: CutCacheConfig,
+    /// Out-of-core slab residency: disabled by default; enable with a
+    /// byte budget ([`ResidencyConfig::with_budget`]) to manage subtree
+    /// slabs under memory pressure (demand faulting + pinned LRU
+    /// eviction + cut-delta prefetch). Pixels are byte-identical either
+    /// way; this only adds simulated demand-stall time and telemetry
+    /// ([`crate::coordinator::RenderStats::residency`]).
+    pub residency: ResidencyConfig,
 }
 
 impl Default for RenderOptions {
@@ -53,6 +61,7 @@ impl Default for RenderOptions {
             lod_tau: 32.0,
             threads: 0,
             cut_cache: CutCacheConfig::default(),
+            residency: ResidencyConfig::default(),
         }
     }
 }

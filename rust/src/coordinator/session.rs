@@ -18,6 +18,7 @@ use crate::gaussian::Gaussians;
 use crate::lod::CutCache;
 use crate::math::Camera;
 use crate::metrics::Image;
+use crate::residency::{ResidencyManager, ResidencyStats};
 use anyhow::Result;
 use std::time::Instant;
 
@@ -31,6 +32,15 @@ pub struct RenderSession<'p> {
     /// steady-state frame really allocates only its output image.
     queue: Gaussians,
     cut_cache: CutCache,
+    /// Out-of-core slab residency (active only when
+    /// [`RenderOptions::residency`] is enabled): replays each frame's
+    /// slab-access trace after the search, so it can never change what
+    /// the search computed.
+    residency: ResidencyManager,
+    /// Simulated demand-stall seconds of the most recent frame (0 when
+    /// residency is disabled) — the serving layer folds this into its
+    /// QoS miss signal.
+    last_stall: f64,
     stats: RenderStats,
 }
 
@@ -47,6 +57,8 @@ impl<'p> RenderSession<'p> {
             scratch: FrameScratch::new(),
             queue: Gaussians::default(),
             cut_cache: CutCache::new(),
+            residency: ResidencyManager::new(),
+            last_stall: 0.0,
             stats: RenderStats::default(),
         }
     }
@@ -81,6 +93,21 @@ impl<'p> RenderSession<'p> {
     /// [`RenderOptions::cut_cache`] via [`RenderSession::options_mut`].
     pub fn cut_cache(&self) -> &CutCache {
         &self.cut_cache
+    }
+
+    /// The session's slab residency manager (unbound until the first
+    /// residency-enabled frame). Read-only; the knob is
+    /// [`RenderOptions::residency`] via [`RenderSession::options_mut`].
+    pub fn residency(&self) -> &ResidencyManager {
+        &self.residency
+    }
+
+    /// Simulated out-of-core demand-stall seconds of the most recent
+    /// frame (0 when residency is disabled). The serving layer adds
+    /// this to the observed latency it feeds the QoS controller, so
+    /// adaptive tau responds to memory pressure too.
+    pub fn last_residency_stall_seconds(&self) -> f64 {
+        self.last_stall
     }
 
     /// The unified scheduler width for this session: the backend's
@@ -120,6 +147,10 @@ impl<'p> RenderSession<'p> {
         // a frame that `frames`/`pairs_total` do not).
         let mut stages = StageTimings::default();
 
+        // Warm-frame residency replay needs the revalidation touch
+        // stream, which the cut cache only collects when asked.
+        self.cut_cache.set_collect_touched(self.opts.residency.enabled);
+
         let t = Instant::now();
         let (cut_len, search_trace) = {
             let (cut, trace) = self.cut_cache.search(
@@ -136,6 +167,25 @@ impl<'p> RenderSession<'p> {
         };
         stages.record_stage(StageTimings::SEARCH, t.elapsed().as_secs_f64());
 
+        // Replay the frame's slab-access streams through the residency
+        // manager: revalidation touches first (empty on cold frames),
+        // then activation fetches. Strictly after the search, so the
+        // pixels can never depend on residency state.
+        let residency_delta = if self.opts.residency.enabled {
+            let streams: [&[u32]; 2] =
+                [&search_trace.touched_sids, &search_trace.activation_sids];
+            self.residency.charge_frame(
+                self.pipeline.sltree(),
+                self.cut_cache.cut(),
+                &streams,
+                &self.opts.residency,
+                &self.pipeline.arch().dram,
+            )
+        } else {
+            ResidencyStats::default()
+        };
+        self.last_stall = residency_delta.stall_seconds;
+
         let width = self.scheduler_width();
         front_end_timed(&self.queue, cam, &mut self.scratch, &mut stages, width)?;
 
@@ -151,6 +201,7 @@ impl<'p> RenderSession<'p> {
         self.stats.cache_hit += search_trace.cache_hit;
         self.stats.revalidated += search_trace.revalidated;
         self.stats.reseeded += search_trace.reseeded;
+        self.stats.residency.accumulate(&residency_delta);
         self.stats.frames += 1;
         self.stats.threads = self.backend.threads(&self.opts);
         self.stats.front_end_threads = width;

@@ -304,6 +304,12 @@ pub struct RenderStats {
     /// [`RenderStats::wall_seconds`]), so p50/p95/p99 per-frame render
     /// cost is reportable, not just the mean.
     pub frame_latency: LatencyHistogram,
+    /// Out-of-core slab residency telemetry (hit/miss/prefetch counts,
+    /// bytes loaded/evicted/prefetched, simulated demand-stall time).
+    /// All-zero unless the session's
+    /// [`RenderOptions::residency`](super::backend::RenderOptions) knob
+    /// is enabled; summed across clients by [`RenderStats::merge`].
+    pub residency: crate::residency::ResidencyStats,
 }
 
 impl RenderStats {
@@ -345,6 +351,7 @@ impl RenderStats {
         self.reseeded += other.reseeded;
         self.stages.accumulate(&other.stages);
         self.frame_latency.merge(&other.frame_latency);
+        self.residency.accumulate(&other.residency);
     }
 
     /// Fold a *concurrent* session's stats into this one: every counter
@@ -516,6 +523,37 @@ mod tests {
         b.frame_latency.record(0.020);
         a.merge(&b);
         assert_eq!(a.frame_latency.count(), 2);
+    }
+
+    #[test]
+    fn merge_sums_residency_counters() {
+        use crate::residency::ResidencyStats;
+        let mut a = RenderStats::default();
+        a.residency = ResidencyStats {
+            frames: 1,
+            hits: 2,
+            misses: 1,
+            bytes_loaded: 36,
+            stall_seconds: 0.5,
+            ..Default::default()
+        };
+        let mut b = RenderStats::default();
+        b.residency = ResidencyStats {
+            frames: 2,
+            hits: 1,
+            prefetch_hits: 1,
+            prefetch_issued: 2,
+            bytes_evicted: 72,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.residency.frames, 3);
+        assert_eq!(a.residency.hits, 3);
+        assert_eq!(a.residency.misses, 1);
+        assert_eq!(a.residency.prefetch_hits, 1);
+        assert_eq!(a.residency.bytes_loaded, 36);
+        assert_eq!(a.residency.bytes_evicted, 72);
+        assert!((a.residency.stall_seconds - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -25,6 +25,13 @@
 //!   log-bucketed latency percentiles, deadline-adaptive LoD
 //!   degradation ([`serve::QosController`]) and a synthetic open-loop
 //!   load generator ([`serve::run_load`]).
+//! * [`residency`] — out-of-core subtree-slab residency for scenes
+//!   larger than memory: a hard byte budget with demand faulting,
+//!   pinned LRU eviction, cut-delta prefetch between frames, and
+//!   simulated demand-stall time fed into the serving layer's QoS miss
+//!   signal ([`residency::ResidencyManager`]; the
+//!   [`coordinator::RenderOptions::residency`] knob). Replay-based, so
+//!   managed renders stay **byte-identical** to unmanaged ones.
 //!
 //! ## Sessions, backends and pipeline parallelism
 //!
@@ -146,6 +153,7 @@ pub mod gaussian;
 pub mod lod;
 pub mod math;
 pub mod metrics;
+pub mod residency;
 pub mod runtime;
 pub mod scene;
 pub mod serve;
@@ -172,6 +180,7 @@ pub mod prelude {
     pub use crate::lod::tree::LodTree;
     pub use crate::math::{Camera, Mat4, Vec3};
     pub use crate::metrics::{lpips_proxy, psnr, ssim};
+    pub use crate::residency::{ResidencyConfig, ResidencyManager, ResidencyStats};
     pub use crate::scene::Scene;
     pub use crate::serve::{
         FrameServer, LoadGenConfig, QosConfig, ServeConfig, ServeReport, ShedError,

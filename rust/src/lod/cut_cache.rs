@@ -140,6 +140,13 @@ pub struct CutCache {
     tau: f32,
     /// Incremental frames since the last full traversal.
     frames_since_full: u32,
+    /// When set, revalidation records the subtree slab of every node
+    /// verdict it evaluates into the trace's `touched_sids` — the
+    /// out-of-core replay stream for
+    /// [`crate::residency::ResidencyManager`]. Off by default so the
+    /// documented zero-steady-state-allocation property holds for
+    /// sessions that don't manage residency.
+    collect_touched: bool,
     // ---- per-frame scratch (epoch-stamped, reused across frames) ----
     mark: Vec<u32>,
     state: Vec<u8>,
@@ -179,6 +186,16 @@ impl CutCache {
     pub fn invalidate(&mut self) {
         self.valid = false;
         self.frames_since_full = 0;
+    }
+
+    /// Enable/disable slab-touch collection: when on, incremental
+    /// revalidation fills the trace's `touched_sids` with the subtree
+    /// slab of every node verdict it evaluates (in access order,
+    /// duplicates kept). Residency-managed sessions turn this on so the
+    /// warm path's slab working set can be replayed; it never changes
+    /// the search result, only what the trace reports.
+    pub fn set_collect_touched(&mut self, collect: bool) {
+        self.collect_touched = collect;
     }
 
     /// LoD search with temporal reuse: returns the cut (ascending node
@@ -330,6 +347,12 @@ impl CutCache {
                 } else {
                     trace.revalidated += 1;
                     trace.visited += 1;
+                    if self.collect_touched {
+                        // Each evaluated verdict reads one node record
+                        // from its subtree slab — the warm-frame slab
+                        // access the residency manager replays.
+                        trace.touched_sids.push(slt.node_sid[x as usize]);
+                    }
                     if !frustum.intersects_aabb(&tree.aabbs[x as usize]) {
                         self.next_culled.push(x);
                         STOPPED

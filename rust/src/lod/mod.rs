@@ -23,7 +23,7 @@ pub mod traversal;
 pub mod tree;
 
 pub use cut_cache::{CutCache, CutCacheConfig};
-pub use sltree::{SlTree, Subtree};
+pub use sltree::{slab_bytes, SlTree, Subtree, NODE_BYTES};
 pub use traversal::{
     naive_static_workloads, refine_sltree, traverse_sltree,
     traverse_sltree_frontier, TraversalTrace,

@@ -21,6 +21,21 @@
 
 use super::tree::{LodTree, NONE};
 
+/// Bytes of one LoD-tree node record inside a subtree slab: AABB 24 B +
+/// world size 4 B + skip 4 B + child-SID link 4 B — the attribute set of
+/// Fig. 7. The single source of truth for slab sizing; every
+/// `bytes_streamed` figure, sim fixture and the residency manager's
+/// budget accounting derive from it via [`slab_bytes`].
+pub const NODE_BYTES: u64 = 36;
+
+/// Bytes of a slab holding `nodes` node records — what
+/// [`Subtree::bytes`], traversal's `bytes_streamed`, and the sim
+/// fixtures all share.
+#[inline]
+pub const fn slab_bytes(nodes: u64) -> u64 {
+    nodes * NODE_BYTES
+}
+
 /// Entry point of one constituent root inside a (possibly merged)
 /// subtree.
 #[derive(Clone, Copy, Debug)]
@@ -68,11 +83,10 @@ impl Subtree {
     }
 
     /// Bytes this subtree occupies in DRAM / one cache entry
-    /// (AABB 24 B + world size 4 B + skip 4 B + child-SID link 4 B per
-    /// node — the attribute set of Fig. 7).
+    /// ([`NODE_BYTES`] per node — the attribute set of Fig. 7).
     #[inline]
     pub fn bytes(&self) -> u64 {
-        self.nodes.len() as u64 * 36
+        slab_bytes(self.nodes.len() as u64)
     }
 }
 

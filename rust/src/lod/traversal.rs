@@ -89,6 +89,17 @@ pub struct TraversalTrace {
     /// Bounded refinements ([`refine_sltree`]) seeded at cached nodes
     /// that stopped meeting the LoD. 0 for full traversals.
     pub reseeded: u64,
+    /// Subtree slabs whose node records were read by incremental
+    /// revalidation, one sid per re-evaluated node verdict, in access
+    /// order (duplicates kept — the consumer deduplicates per frame).
+    /// Out-of-core replay input for
+    /// [`crate::residency::ResidencyManager`]: warm frames touch slabs
+    /// through frontier verdicts, not activations, so `activation_sids`
+    /// alone under-reports the working set. Filled only when the cut
+    /// cache's collect flag is on
+    /// ([`super::cut_cache::CutCache::set_collect_touched`]); empty for
+    /// full traversals (whose slab stream *is* `activation_sids`).
+    pub touched_sids: Vec<u32>,
 }
 
 impl TraversalTrace {

@@ -1,0 +1,561 @@
+//! The slab residency manager: per-slab state machine, first-touch
+//! fault accounting, pinned LRU eviction, and prefetch issue/promote.
+//!
+//! One manager per [`RenderSession`](crate::coordinator::RenderSession)
+//! (like the cut cache — slab recency from different camera streams
+//! never mixes). The manager is a *replay* simulator: the session runs
+//! the LoD search first, then charges the frame's slab-access stream
+//! here, so residency can change **when** bytes are charged but never
+//! **what** the search computed — bit-identity with the unmanaged path
+//! holds by construction.
+
+use super::prefetch::predict_slabs;
+use super::{ResidencyConfig, ResidencyStats};
+use crate::config::DramConfig;
+use crate::lod::sltree::SlTree;
+use crate::sim::dram::Traffic;
+
+/// Residency state of one subtree slab.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlabState {
+    /// Not in the resident buffer; a touch is a demand miss.
+    Evicted,
+    /// Prefetch in flight, issued at the end of the previous frame;
+    /// occupies budget, promotes to `Resident` when the next frame's
+    /// charge begins.
+    Loading,
+    /// In the resident buffer; touches are free.
+    Resident,
+}
+
+/// Per-slab bookkeeping record.
+#[derive(Clone, Copy, Debug)]
+struct Slab {
+    /// Slab size ([`crate::lod::sltree::slab_bytes`] of its node count).
+    bytes: u64,
+    state: SlabState,
+    /// Recency tick of the last touch (LRU key; ties break by sid).
+    last_use: u64,
+    /// Loaded by the prefetcher and not yet demand-touched; the first
+    /// touch counts as a prefetch hit and clears the flag.
+    from_prefetch: bool,
+    /// Ever charged to DRAM (demand or prefetch): splits compulsory
+    /// (cold) misses from capacity misses.
+    ever_loaded: bool,
+    /// Frame epoch of the last touch: first touch per frame pays the
+    /// hit/miss accounting, repeats within the frame are free.
+    touch_epoch: u64,
+    /// Frame epoch in which the slab was last pinned (current frame's
+    /// cut slabs + the root slab). Pinned slabs are never LRU victims.
+    pin_epoch: u64,
+}
+
+/// Out-of-core residency manager for SLTree subtree slabs.
+///
+/// Invariants, all unconditional (property-tested in
+/// `rust/tests/proptests.rs` and unit-tested below):
+///
+/// * `resident_bytes <= budget_bytes` after (and throughout) every
+///   frame — when pinned slabs leave no evictable room, a demand load
+///   is a **bypass**: charged and counted, but not retained;
+/// * LRU eviction never selects the root slab or a slab pinned by the
+///   current frame's cut;
+/// * replay never changes search results: the manager only consumes
+///   traces the search already produced.
+#[derive(Debug, Default)]
+pub struct ResidencyManager {
+    slabs: Vec<Slab>,
+    /// Sum of `bytes` over `Resident` + `Loading` slabs.
+    resident_bytes: u64,
+    /// Monotone recency counter.
+    tick: u64,
+    /// Monotone frame counter (epoch stamps for touch/pin dedup).
+    epoch: u64,
+    /// Previous frame's cut — the prefetcher's delta baseline.
+    prev_cut: Vec<u32>,
+    /// Slabs issued as prefetches at the end of the last frame
+    /// (`Loading`), promoted at the next charge.
+    loading: Vec<u32>,
+    /// Prediction scratch, reused across frames.
+    predicted: Vec<u32>,
+    /// Backing-buffer identity of the bound SLTree; rebinding resets.
+    slt_id: usize,
+}
+
+impl ResidencyManager {
+    /// An empty manager; binds to the first SLTree it charges.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bytes currently held by `Resident` + `Loading` slabs. The
+    /// budget invariant: never exceeds the configured budget.
+    #[inline]
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes
+    }
+
+    /// Number of slabs the manager is bound to (0 before first charge).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.slabs.len()
+    }
+
+    /// Whether the manager is unbound (no charge yet).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.slabs.is_empty()
+    }
+
+    /// Residency state of slab `sid`; `None` if out of range/unbound.
+    pub fn slab_state(&self, sid: u32) -> Option<SlabState> {
+        self.slabs.get(sid as usize).map(|s| s.state)
+    }
+
+    /// Whether slab `sid` currently occupies the resident buffer.
+    pub fn is_resident(&self, sid: u32) -> bool {
+        matches!(self.slab_state(sid), Some(SlabState::Resident))
+    }
+
+    /// Rebind to `slt` if it changed (different buffer identity or slab
+    /// count), resetting all residency state.
+    fn bind(&mut self, slt: &SlTree) {
+        let id = slt.subtrees.as_ptr() as usize;
+        if self.slt_id == id && self.slabs.len() == slt.len() {
+            return;
+        }
+        self.slt_id = id;
+        self.slabs = slt
+            .subtrees
+            .iter()
+            .map(|s| Slab {
+                bytes: s.bytes(),
+                state: SlabState::Evicted,
+                last_use: 0,
+                from_prefetch: false,
+                ever_loaded: false,
+                touch_epoch: 0,
+                pin_epoch: 0,
+            })
+            .collect();
+        self.resident_bytes = 0;
+        self.tick = 0;
+        self.epoch = 0;
+        self.prev_cut.clear();
+        self.loading.clear();
+    }
+
+    /// Evict unpinned LRU residents until `need` more bytes fit under
+    /// `budget`. Returns `false` — evicting *nothing* — when even
+    /// evicting every unpinned resident could not make room (the caller
+    /// then bypasses: a doomed admission must not churn residents).
+    fn make_room(
+        &mut self,
+        need: u64,
+        budget: u64,
+        epoch: u64,
+        delta: &mut ResidencyStats,
+    ) -> bool {
+        if self.resident_bytes.saturating_add(need) <= budget {
+            return true;
+        }
+        let evictable: u64 = self
+            .slabs
+            .iter()
+            .filter(|s| s.state == SlabState::Resident && s.pin_epoch != epoch)
+            .map(|s| s.bytes)
+            .sum();
+        if (self.resident_bytes - evictable).saturating_add(need) > budget {
+            return false;
+        }
+        while self.resident_bytes.saturating_add(need) > budget {
+            let victim = self
+                .slabs
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| {
+                    s.state == SlabState::Resident && s.pin_epoch != epoch
+                })
+                .min_by_key(|(i, s)| (s.last_use, *i))
+                .map(|(i, _)| i)
+                .expect("feasibility checked above");
+            let s = &mut self.slabs[victim];
+            s.state = SlabState::Evicted;
+            s.from_prefetch = false;
+            self.resident_bytes -= s.bytes;
+            delta.bytes_evicted += s.bytes;
+        }
+        true
+    }
+
+    /// Charge one frame's slab accesses and run the between-frames
+    /// prefetch step. Returns this frame's stats delta (`frames == 1`);
+    /// the caller accumulates it into
+    /// [`RenderStats`](crate::coordinator::RenderStats).
+    ///
+    /// * `cut` — this frame's selected cut (pins: these slabs plus the
+    ///   root slab cannot be evicted this frame);
+    /// * `accesses` — the frame's slab-access streams in order (a cold
+    ///   frame's `activation_sids`; a warm frame's `touched_sids`
+    ///   followed by its refine `activation_sids`). First touch per
+    ///   slab per frame pays hit/miss accounting; repeats are free.
+    /// * `dram` — cost model for the demand-miss stall
+    ///   ([`Traffic::dram_cycles`] at the 1 GHz reference clock).
+    ///
+    /// Frame order: promote last frame's prefetches -> pin -> replay
+    /// (demand faults, LRU admission, bypass) -> stall -> predict +
+    /// issue next frame's prefetches.
+    pub fn charge_frame(
+        &mut self,
+        slt: &SlTree,
+        cut: &[u32],
+        accesses: &[&[u32]],
+        cfg: &ResidencyConfig,
+        dram: &DramConfig,
+    ) -> ResidencyStats {
+        if !cfg.enabled {
+            return ResidencyStats::default();
+        }
+        self.bind(slt);
+        self.epoch += 1;
+        let epoch = self.epoch;
+        let mut delta = ResidencyStats { frames: 1, ..Default::default() };
+
+        // 1. Promote: prefetches issued between frames have landed.
+        for &sid in &self.loading {
+            let s = &mut self.slabs[sid as usize];
+            if s.state == SlabState::Loading {
+                s.state = SlabState::Resident;
+            }
+        }
+        self.loading.clear();
+
+        // 2. Pin the current frame's cut slabs + the root slab.
+        self.slabs[slt.top as usize].pin_epoch = epoch;
+        for &n in cut {
+            self.slabs[slt.node_sid[n as usize] as usize].pin_epoch = epoch;
+        }
+
+        // 3. Replay the access streams.
+        let mut demand_bytes = 0u64;
+        for stream in accesses {
+            for &sid in *stream {
+                let i = sid as usize;
+                self.tick += 1;
+                self.slabs[i].last_use = self.tick;
+                if self.slabs[i].touch_epoch == epoch {
+                    continue; // repeat touch within the frame: free
+                }
+                self.slabs[i].touch_epoch = epoch;
+                match self.slabs[i].state {
+                    SlabState::Resident => {
+                        delta.hits += 1;
+                        if self.slabs[i].from_prefetch {
+                            self.slabs[i].from_prefetch = false;
+                            delta.prefetch_hits += 1;
+                        }
+                    }
+                    SlabState::Loading => {
+                        // Unreachable after step 1; never punish replay.
+                        debug_assert!(false, "Loading slab mid-frame");
+                        delta.hits += 1;
+                    }
+                    SlabState::Evicted => {
+                        delta.misses += 1;
+                        if !self.slabs[i].ever_loaded {
+                            self.slabs[i].ever_loaded = true;
+                            delta.cold_misses += 1;
+                        }
+                        let bytes = self.slabs[i].bytes;
+                        demand_bytes += bytes;
+                        if self.make_room(bytes, cfg.budget_bytes, epoch, &mut delta)
+                        {
+                            self.slabs[i].state = SlabState::Resident;
+                            self.resident_bytes += bytes;
+                        } else {
+                            // Bypass: charged + counted, not retained —
+                            // keeps resident_bytes <= budget even when
+                            // pins fill the whole budget.
+                            delta.bypass_loads += 1;
+                        }
+                    }
+                }
+            }
+        }
+        delta.bytes_loaded = demand_bytes;
+
+        // 4. Demand-miss stall under the DRAM cost model (prefetch
+        // traffic is charged but never stalls — it ran between frames).
+        delta.stall_seconds =
+            Traffic::stream(demand_bytes).dram_cycles(dram) as f64 * 1e-9;
+
+        // 5. Predict next frame's slabs from the cut delta and issue
+        // prefetches for whatever the budget admits.
+        if cfg.prefetch {
+            let mut predicted = std::mem::take(&mut self.predicted);
+            predict_slabs(slt, &self.prev_cut, cut, &mut predicted);
+            for &sid in &predicted {
+                let i = sid as usize;
+                if self.slabs[i].state != SlabState::Evicted {
+                    continue; // already resident or in flight
+                }
+                let bytes = self.slabs[i].bytes;
+                if !self.make_room(bytes, cfg.budget_bytes, epoch, &mut delta) {
+                    continue;
+                }
+                self.tick += 1;
+                self.slabs[i].state = SlabState::Loading;
+                self.slabs[i].from_prefetch = true;
+                self.slabs[i].ever_loaded = true;
+                self.slabs[i].last_use = self.tick;
+                self.resident_bytes += bytes;
+                self.loading.push(sid);
+                delta.prefetch_issued += 1;
+                delta.bytes_prefetched += bytes;
+            }
+            self.predicted = predicted;
+        }
+
+        self.prev_cut.clear();
+        self.prev_cut.extend_from_slice(cut);
+        debug_assert!(self.resident_bytes <= cfg.budget_bytes);
+        delta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SceneConfig;
+    use crate::lod::traversal::traverse_sltree;
+    use crate::scene::Scene;
+
+    fn scene() -> Scene {
+        SceneConfig::small_scale().quick().build(11)
+    }
+
+    fn frame(
+        scene: &Scene,
+        slt: &SlTree,
+        cam_i: usize,
+        tau: f32,
+    ) -> (Vec<u32>, Vec<u32>) {
+        let cam = scene.scenario_camera(cam_i);
+        let (cut, trace) = traverse_sltree(&scene.tree, slt, &cam, tau, 4);
+        (cut, trace.activation_sids)
+    }
+
+    #[test]
+    fn disabled_config_charges_nothing() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let (cut, sids) = frame(&scene, &slt, 0, 8.0);
+        let mut mgr = ResidencyManager::new();
+        let d = mgr.charge_frame(
+            &slt,
+            &cut,
+            &[&sids],
+            &ResidencyConfig::default(),
+            &DramConfig::default(),
+        );
+        assert_eq!(d, ResidencyStats::default());
+        assert!(mgr.is_empty(), "disabled manager never binds");
+    }
+
+    #[test]
+    fn unbounded_budget_cold_then_warm() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let (cut, sids) = frame(&scene, &slt, 0, 8.0);
+        let cfg = ResidencyConfig::with_budget(u64::MAX);
+        let dram = DramConfig::default();
+        let mut mgr = ResidencyManager::new();
+
+        let d1 = mgr.charge_frame(&slt, &cut, &[&sids], &cfg, &dram);
+        let mut distinct = sids.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        assert_eq!(d1.misses, distinct.len() as u64, "first touches all miss");
+        assert_eq!(d1.cold_misses, d1.misses, "all compulsory");
+        assert_eq!(d1.hits, 0);
+        let expected_bytes: u64 =
+            distinct.iter().map(|&s| slt.subtrees[s as usize].bytes()).sum();
+        assert_eq!(d1.bytes_loaded, expected_bytes);
+        assert!(d1.stall_seconds > 0.0);
+        assert!(mgr.resident_bytes() >= expected_bytes);
+
+        // Same frame again: everything resident, nothing stalls.
+        let d2 = mgr.charge_frame(&slt, &cut, &[&sids], &cfg, &dram);
+        assert_eq!(d2.misses, 0);
+        assert_eq!(d2.hits, distinct.len() as u64);
+        assert_eq!(d2.bytes_loaded, 0);
+        assert_eq!(d2.stall_seconds, 0.0);
+        assert_eq!(d2.bytes_evicted, 0, "unbounded budget never evicts");
+    }
+
+    #[test]
+    fn budget_invariant_holds_even_when_pins_fill_it() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let dram = DramConfig::default();
+        // Budget = two slabs: far below the frame's working set, so
+        // pinned cut slabs alone exceed it and bypasses must kick in.
+        let budget = 2 * slt.subtrees[slt.top as usize].bytes();
+        let cfg = ResidencyConfig::with_budget(budget);
+        let mut mgr = ResidencyManager::new();
+        let mut total = ResidencyStats::default();
+        for cam_i in 0..4 {
+            let (cut, sids) = frame(&scene, &slt, cam_i, 8.0);
+            let d = mgr.charge_frame(&slt, &cut, &[&sids], &cfg, &dram);
+            assert!(
+                mgr.resident_bytes() <= budget,
+                "cam {cam_i}: {} > {budget}",
+                mgr.resident_bytes()
+            );
+            total.accumulate(&d);
+        }
+        assert!(total.bypass_loads > 0, "tiny budget must force bypasses");
+        assert!(
+            total.misses > total.cold_misses,
+            "tiny budget must force capacity misses"
+        );
+    }
+
+    #[test]
+    fn pinned_cut_slabs_survive_the_frame() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let dram = DramConfig::default();
+        let (cut_a, sids_a) = frame(&scene, &slt, 0, 8.0);
+        let (cut_b, sids_b) = frame(&scene, &slt, 5, 8.0);
+        // Budget ~ one frame's working set: frame B must evict A's
+        // slabs, but never B's own pinned ones.
+        let budget = {
+            let mut d = sids_a.clone();
+            d.sort_unstable();
+            d.dedup();
+            d.iter().map(|&s| slt.subtrees[s as usize].bytes()).sum::<u64>()
+        };
+        let cfg = ResidencyConfig::with_budget(budget);
+        let mut mgr = ResidencyManager::new();
+        mgr.charge_frame(&slt, &cut_a, &[&sids_a], &cfg, &dram);
+        // Snapshot which of B's pinned slabs are resident pre-charge.
+        let pre_resident: Vec<u32> = cut_b
+            .iter()
+            .map(|&n| slt.node_sid[n as usize])
+            .filter(|&s| mgr.is_resident(s))
+            .collect();
+        let d = mgr.charge_frame(&slt, &cut_b, &[&sids_b], &cfg, &dram);
+        assert!(d.bytes_evicted > 0, "teleport under a tight budget evicts");
+        for &s in &pre_resident {
+            assert!(
+                mgr.is_resident(s),
+                "pinned slab {s} was evicted mid-frame"
+            );
+        }
+        assert!(mgr.resident_bytes() <= budget);
+    }
+
+    #[test]
+    fn prefetch_issues_promotes_and_hits() {
+        // Frame 1 at coarse tau predicts the boundary children under
+        // its cut; frame 2 refines (finer tau) straight into them.
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let dram = DramConfig::default();
+        let cfg = ResidencyConfig::with_budget(u64::MAX);
+        let mut mgr = ResidencyManager::new();
+        let (cut1, sids1) = frame(&scene, &slt, 2, 32.0);
+        let d1 = mgr.charge_frame(&slt, &cut1, &[&sids1], &cfg, &dram);
+        assert!(d1.prefetch_issued > 0, "cut delta must issue prefetches");
+        assert!(d1.bytes_prefetched > 0);
+        let (cut2, sids2) = frame(&scene, &slt, 2, 8.0);
+        let d2 = mgr.charge_frame(&slt, &cut2, &[&sids2], &cfg, &dram);
+        assert!(d2.prefetch_hits > 0, "refinement must hit prefetched slabs");
+        assert!(
+            d2.misses < sids2.len() as u64,
+            "prefetch must absorb some would-be misses"
+        );
+    }
+
+    #[test]
+    fn prefetch_disabled_never_issues() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let dram = DramConfig::default();
+        let cfg = ResidencyConfig {
+            prefetch: false,
+            ..ResidencyConfig::with_budget(u64::MAX)
+        };
+        let mut mgr = ResidencyManager::new();
+        for cam_i in 0..3 {
+            let (cut, sids) = frame(&scene, &slt, cam_i, 8.0);
+            let d = mgr.charge_frame(&slt, &cut, &[&sids], &cfg, &dram);
+            assert_eq!(d.prefetch_issued, 0);
+            assert_eq!(d.prefetch_hits, 0);
+            assert_eq!(d.bytes_prefetched, 0);
+        }
+    }
+
+    #[test]
+    fn rebinding_to_a_new_sltree_resets_state() {
+        let scene = scene();
+        let slt_a = SlTree::partition(&scene.tree, 32);
+        let slt_b = SlTree::partition(&scene.tree, 16);
+        let dram = DramConfig::default();
+        let cfg = ResidencyConfig::with_budget(u64::MAX);
+        let mut mgr = ResidencyManager::new();
+        let (cut, sids) = frame(&scene, &slt_a, 0, 8.0);
+        mgr.charge_frame(&slt_a, &cut, &[&sids], &cfg, &dram);
+        assert!(mgr.resident_bytes() > 0);
+        let cam = scene.scenario_camera(0);
+        let (cut_b, trace_b) = traverse_sltree(&scene.tree, &slt_b, &cam, 8.0, 4);
+        let d = mgr.charge_frame(
+            &slt_b,
+            &cut_b,
+            &[&trace_b.activation_sids],
+            &cfg,
+            &dram,
+        );
+        assert_eq!(mgr.len(), slt_b.len(), "rebound to the new partition");
+        assert_eq!(d.hits, 0, "no stale residency after a rebind");
+    }
+
+    #[test]
+    fn stats_rates_and_accumulate() {
+        let mut a = ResidencyStats {
+            frames: 1,
+            hits: 3,
+            misses: 1,
+            prefetch_hits: 1,
+            prefetch_issued: 2,
+            ..Default::default()
+        };
+        assert!((a.hit_rate() - 0.75).abs() < 1e-12);
+        assert!((a.prefetch_hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(ResidencyStats::default().hit_rate(), 0.0);
+        assert_eq!(ResidencyStats::default().prefetch_hit_rate(), 0.0);
+        let b = ResidencyStats {
+            frames: 2,
+            hits: 1,
+            misses: 1,
+            cold_misses: 1,
+            bytes_loaded: 10,
+            bytes_evicted: 5,
+            bytes_prefetched: 7,
+            bypass_loads: 1,
+            stall_seconds: 0.25,
+            ..Default::default()
+        };
+        a.accumulate(&b);
+        assert_eq!(a.frames, 3);
+        assert_eq!(a.hits, 4);
+        assert_eq!(a.misses, 2);
+        assert_eq!(a.cold_misses, 1);
+        assert_eq!(a.bytes_loaded, 10);
+        assert_eq!(a.bytes_evicted, 5);
+        assert_eq!(a.bytes_prefetched, 7);
+        assert_eq!(a.bypass_loads, 1);
+        assert!((a.stall_seconds - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,146 @@
+//! Out-of-core subtree-slab residency: render scenes **larger than
+//! memory** without giving up the SLTree's memory regularity.
+//!
+//! The SLTree already makes every LoD-search fetch a streaming burst of
+//! one size-capped slab; this subsystem adds the missing piece for
+//! city-scale scenes — a hard byte budget over which slabs are actually
+//! held, with demand faulting, pinned LRU eviction, and a prefetcher
+//! driven by the temporal cut cache:
+//!
+//! * [`ResidencyManager`] — per-slab state machine
+//!   (`Evicted -> Loading -> Resident`), first-touch fault accounting
+//!   (compulsory vs capacity misses), LRU eviction that never evicts
+//!   the root slab or a slab pinned by the current frame's cut, and
+//!   bypass loads when pins fill the budget (so
+//!   `resident_bytes <= budget` holds unconditionally);
+//! * [`prefetch`] — a frame's coarsen/refine cut delta predicts the
+//!   slabs the next frame will touch; prefetch loads issue *between*
+//!   frames, so a correct prediction turns a demand stall into a free
+//!   hit;
+//! * [`ResidencyConfig`] / [`ResidencyStats`] — the
+//!   [`RenderOptions`](crate::coordinator::RenderOptions) knob and the
+//!   [`RenderStats`](crate::coordinator::RenderStats) telemetry block.
+//!
+//! **Bit-identity by construction.** The manager never sits on the
+//! search path: the session runs the (unchanged) LoD search first, then
+//! *replays* the frame's slab-access trace here. Residency decides when
+//! bytes are charged — demand stall vs overlapped prefetch — never what
+//! the search computes, so residency-enabled renders are byte-identical
+//! to unmanaged ones (pinned by the golden harness and a dedicated
+//! proptest). Demand-miss bytes become stall seconds via the
+//! [`sim::dram`](crate::sim::dram) cost model, and the serving layer
+//! feeds that stall into its QoS miss signal so adaptive tau responds
+//! to memory pressure as well as compute pressure.
+
+#![warn(missing_docs)]
+
+pub mod manager;
+pub mod prefetch;
+
+pub use manager::{ResidencyManager, SlabState};
+pub use prefetch::predict_slabs;
+
+/// Residency knob on [`RenderOptions`](crate::coordinator::RenderOptions):
+/// whether slab residency is managed, under what byte budget, and
+/// whether the cut-delta prefetcher runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ResidencyConfig {
+    /// Master switch. Disabled (the default) -> the session charges no
+    /// residency at all: no manager state, no stall, identical to the
+    /// pre-residency behavior.
+    pub enabled: bool,
+    /// Resident-buffer budget in bytes. The manager never holds more
+    /// than this (bypass loads keep the invariant unconditional even
+    /// when one frame's pinned cut exceeds it).
+    pub budget_bytes: u64,
+    /// Run the cut-delta prefetcher between frames. On by default when
+    /// residency is enabled; turning it off isolates demand-fault
+    /// behavior (every first touch stalls).
+    pub prefetch: bool,
+}
+
+impl Default for ResidencyConfig {
+    fn default() -> Self {
+        ResidencyConfig { enabled: false, budget_bytes: u64::MAX, prefetch: true }
+    }
+}
+
+impl ResidencyConfig {
+    /// Enabled residency with prefetch under `budget_bytes`.
+    pub fn with_budget(budget_bytes: u64) -> Self {
+        ResidencyConfig { enabled: true, budget_bytes, prefetch: true }
+    }
+}
+
+/// Residency telemetry: per-frame deltas from
+/// [`ResidencyManager::charge_frame`], accumulated into
+/// [`RenderStats`](crate::coordinator::RenderStats) (and summed across
+/// clients by its `merge`). First touch per slab per frame counts once;
+/// repeats within a frame are free.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ResidencyStats {
+    /// Frames charged.
+    pub frames: u64,
+    /// First touches that found the slab resident.
+    pub hits: u64,
+    /// First touches that demand-faulted (compulsory + capacity).
+    pub misses: u64,
+    /// Misses on slabs never loaded before (compulsory / cold misses);
+    /// `misses - cold_misses` are capacity misses caused by eviction.
+    pub cold_misses: u64,
+    /// First touches of a prefetched slab before anything else touched
+    /// it — the prefetches that actually paid off.
+    pub prefetch_hits: u64,
+    /// Prefetch loads issued between frames.
+    pub prefetch_issued: u64,
+    /// Demand-miss bytes streamed from DRAM (stalling).
+    pub bytes_loaded: u64,
+    /// Prefetch bytes streamed from DRAM (overlapped, non-stalling).
+    pub bytes_prefetched: u64,
+    /// Bytes evicted to make room (LRU victims).
+    pub bytes_evicted: u64,
+    /// Demand loads charged but not retained because pinned slabs left
+    /// no evictable room under the budget.
+    pub bypass_loads: u64,
+    /// Simulated demand-stall time: demand-miss traffic through
+    /// [`sim::dram::Traffic::dram_cycles`](crate::sim::dram::Traffic::dram_cycles)
+    /// at the 1 GHz reference clock.
+    pub stall_seconds: f64,
+}
+
+impl ResidencyStats {
+    /// First-touch hit rate, `hits / (hits + misses)`; 0 when idle.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction of issued prefetches that were touched before eviction,
+    /// `prefetch_hits / prefetch_issued`; 0 when none were issued.
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        if self.prefetch_issued == 0 {
+            0.0
+        } else {
+            self.prefetch_hits as f64 / self.prefetch_issued as f64
+        }
+    }
+
+    /// Sum `other` into `self` (all counters; `stall_seconds` adds).
+    pub fn accumulate(&mut self, other: &ResidencyStats) {
+        self.frames += other.frames;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.cold_misses += other.cold_misses;
+        self.prefetch_hits += other.prefetch_hits;
+        self.prefetch_issued += other.prefetch_issued;
+        self.bytes_loaded += other.bytes_loaded;
+        self.bytes_prefetched += other.bytes_prefetched;
+        self.bytes_evicted += other.bytes_evicted;
+        self.bypass_loads += other.bypass_loads;
+        self.stall_seconds += other.stall_seconds;
+    }
+}

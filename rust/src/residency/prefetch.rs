@@ -1,0 +1,166 @@
+//! Cut-cache-driven slab prefetch prediction.
+//!
+//! A camera path's consecutive cuts differ by a *frontier delta*: nodes
+//! newly added to the cut mean refinement advanced (and will likely
+//! advance further next frame — into the boundary child slabs below the
+//! added nodes), while nodes removed from the cut mean coarsening
+//! retreated (and will likely retreat further — into the parent slab).
+//! [`predict_slabs`] turns one frame's delta into the slab set to
+//! prefetch for the next frame; the
+//! [`ResidencyManager`](super::ResidencyManager) issues those loads
+//! between frames so they never stall the search.
+
+use crate::lod::sltree::SlTree;
+use crate::lod::tree::NONE;
+
+/// Push the child-subtree sids linked at `pos` of subtree `sid` (the
+/// boundary run is sorted by position — binary search it).
+#[inline]
+fn push_boundary_children(slt: &SlTree, sid: u32, pos: u32, out: &mut Vec<u32>) {
+    let st = &slt.subtrees[sid as usize];
+    let lo = st.boundary.partition_point(|&(bp, _)| bp < pos);
+    for &(bp, csid) in &st.boundary[lo..] {
+        if bp != pos {
+            break;
+        }
+        out.push(csid);
+    }
+}
+
+/// Predict the subtree slabs the *next* frame is likely to touch from
+/// the delta between two consecutive cuts (both ascending node ids, as
+/// every search entry point returns them).
+///
+/// * node added to the cut -> its own slab plus the boundary child
+///   slabs at its position (refinement momentum: the search just
+///   descended to here and tends to descend past it next);
+/// * node removed from the cut -> its slab's parent slab (coarsening
+///   momentum: the frontier just pulled up out of this slab).
+///
+/// `out` is cleared, then filled sorted + deduplicated. The caller
+/// filters already-resident slabs; prediction is pure — it never
+/// touches residency state. An empty `prev_cut` (first frame) treats
+/// the whole cut as added, which warms the boundary ring below the
+/// initial frontier.
+pub fn predict_slabs(slt: &SlTree, prev_cut: &[u32], cut: &[u32], out: &mut Vec<u32>) {
+    out.clear();
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < prev_cut.len() || j < cut.len() {
+        let in_prev = i < prev_cut.len();
+        let in_cur = j < cut.len();
+        if in_prev && in_cur && prev_cut[i] == cut[j] {
+            // Unchanged frontier node: no momentum signal.
+            i += 1;
+            j += 1;
+        } else if !in_prev || (in_cur && cut[j] < prev_cut[i]) {
+            // Added: refinement reached `n`; prefetch below it.
+            let n = cut[j];
+            let sid = slt.node_sid[n as usize];
+            out.push(sid);
+            push_boundary_children(slt, sid, slt.node_pos[n as usize], out);
+            j += 1;
+        } else {
+            // Removed: coarsening left `n`'s slab; prefetch above it.
+            let n = prev_cut[i];
+            let psid = slt.subtrees[slt.node_sid[n as usize] as usize].parent_sid;
+            if psid != NONE {
+                out.push(psid);
+            }
+            i += 1;
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SceneConfig;
+    use crate::lod::traversal::traverse_sltree;
+    use crate::scene::Scene;
+
+    fn scene() -> Scene {
+        SceneConfig::small_scale().quick().build(11)
+    }
+
+    #[test]
+    fn prediction_is_sorted_deduped_and_in_range() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let cam = scene.scenario_camera(0);
+        let (coarse, _) = traverse_sltree(&scene.tree, &slt, &cam, 32.0, 4);
+        let (fine, _) = traverse_sltree(&scene.tree, &slt, &cam, 8.0, 4);
+        let mut out = Vec::new();
+        predict_slabs(&slt, &coarse, &fine, &mut out);
+        assert!(out.windows(2).all(|w| w[0] < w[1]), "sorted + deduped");
+        assert!(out.iter().all(|&s| (s as usize) < slt.len()));
+        assert!(!out.is_empty(), "a real refinement delta predicts slabs");
+    }
+
+    #[test]
+    fn identical_cuts_predict_nothing() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let cam = scene.scenario_camera(1);
+        let (cut, _) = traverse_sltree(&scene.tree, &slt, &cam, 16.0, 4);
+        let mut out = vec![99]; // must be cleared
+        predict_slabs(&slt, &cut, &cut, &mut out);
+        assert!(out.is_empty(), "no delta -> no prediction");
+    }
+
+    #[test]
+    fn added_nodes_predict_their_boundary_children() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let cam = scene.scenario_camera(2);
+        let (cut, _) = traverse_sltree(&scene.tree, &slt, &cam, 8.0, 4);
+        let mut out = Vec::new();
+        // Empty previous cut: every cut node counts as added.
+        predict_slabs(&slt, &[], &cut, &mut out);
+        let mut checked = 0;
+        for &n in &cut {
+            let sid = slt.node_sid[n as usize];
+            assert!(out.binary_search(&sid).is_ok(), "own slab of node {n}");
+            let st = &slt.subtrees[sid as usize];
+            let pos = slt.node_pos[n as usize];
+            for &(bp, csid) in &st.boundary {
+                if bp == pos {
+                    assert!(
+                        out.binary_search(&csid).is_ok(),
+                        "boundary child slab {csid} of node {n}"
+                    );
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 0, "degenerate scene: no boundary links on the cut");
+    }
+
+    #[test]
+    fn removed_nodes_predict_the_parent_slab() {
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let cam = scene.scenario_camera(3);
+        // Coarsening direction: fine cut was cached, coarse cut is next.
+        let (fine, _) = traverse_sltree(&scene.tree, &slt, &cam, 4.0, 4);
+        let (coarse, _) = traverse_sltree(&scene.tree, &slt, &cam, 32.0, 4);
+        let mut out = Vec::new();
+        predict_slabs(&slt, &fine, &coarse, &mut out);
+        let mut checked = 0;
+        for &n in &fine {
+            if coarse.binary_search(&n).is_ok() {
+                continue; // still in the cut -> not removed
+            }
+            let psid = slt.subtrees[slt.node_sid[n as usize] as usize].parent_sid;
+            if psid != crate::lod::tree::NONE {
+                assert!(
+                    out.binary_search(&psid).is_ok(),
+                    "parent slab {psid} of removed node {n}"
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 0, "degenerate scene: coarsening removed nothing");
+    }
+}

@@ -19,7 +19,10 @@
 //!   to the cut cache's
 //!   [`max_tau_step`](crate::lod::CutCacheConfig::max_tau_step) so each
 //!   nudge revalidates the cached cut instead of cold-starting the
-//!   LoD search;
+//!   LoD search. When slab residency is enabled
+//!   ([`crate::residency`]), the frame's simulated demand-stall time is
+//!   added to the latency the controller observes, so memory pressure
+//!   and compute pressure degrade quality through one signal;
 //! * log-bucketed latency histograms
 //!   ([`LatencyHistogram`](crate::coordinator::LatencyHistogram)) for
 //!   end-to-end and queue-wait time, reported as p50/p95/p99 per client
@@ -266,8 +269,15 @@ impl<'p> FrameServer<'p> {
                             lane.missed += 1;
                             self.missed.fetch_add(1, Ordering::Relaxed);
                         }
+                        // The QoS controller sees end-to-end time plus
+                        // the frame's simulated out-of-core demand
+                        // stall, so a residency-thrashing stream
+                        // degrades tau like a compute-bound one would.
+                        // `missed` stays on real wall time: the stall
+                        // is model time, not delivery time.
+                        let stall = lane.session.last_residency_stall_seconds();
                         if let Some(tau) =
-                            lane.qos.observe(e2e, self.cfg.budget, &self.cfg.qos)
+                            lane.qos.observe(e2e + stall, self.cfg.budget, &self.cfg.qos)
                         {
                             lane.session.options_mut().lod_tau = tau;
                         }

@@ -124,6 +124,7 @@ pub fn search(w: &LodWorkload, cfg: &KdAccelConfig, dram: &DramConfig) -> StageR
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::workload::slab_bytes;
     use crate::config::LtCoreConfig;
     use crate::lod::TraversalTrace;
 
@@ -144,8 +145,8 @@ mod tests {
                 activations: 1_400,
                 activation_sizes: vec![29; 1_400],
                 activation_sids: (0..1_400).collect(),
-                subtree_bytes: vec![32 * 36; 1_400],
-                bytes_streamed: 1_400 * 32 * 36,
+                subtree_bytes: vec![slab_bytes(32) as u32; 1_400],
+                bytes_streamed: 1_400 * slab_bytes(32),
                 subtree_fetches: 1_400,
                 per_thread_nodes: vec![10_000; 4],
                 queue_peak: 64,

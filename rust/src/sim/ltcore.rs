@@ -191,6 +191,7 @@ pub fn search_workload(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::workload::slab_bytes;
 
     fn cfg() -> LtCoreConfig {
         LtCoreConfig::default()
@@ -240,12 +241,12 @@ mod tests {
             visited: 4000,
             selected: 100,
             subtree_fetches: 125,
-            bytes_streamed: 125 * 32 * 36,
+            bytes_streamed: 125 * slab_bytes(32),
             activations: 125,
             queue_peak: 8,
             activation_sizes: vec![32; 125],
             activation_sids: (0..125).collect(),
-            subtree_bytes: vec![32 * 36; 125],
+            subtree_bytes: vec![slab_bytes(32) as u32; 125],
             ..Default::default()
         };
         let r = search(&trace, &cfg(), &DramConfig::default());
@@ -263,7 +264,7 @@ mod tests {
             let trace = TraversalTrace {
                 activation_sizes: vec![32; 64],
                 activation_sids: (0..64).collect(),
-                subtree_bytes: vec![32 * 36; 64],
+                subtree_bytes: vec![slab_bytes(32) as u32; 64],
                 visited: 2048,
                 ..Default::default()
             };

@@ -117,6 +117,7 @@ pub fn simulate_variant(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::workload::slab_bytes;
     use crate::lod::TraversalTrace;
     use crate::splat::BlendStats;
 
@@ -136,8 +137,8 @@ mod tests {
                 activations: 1_500,
                 activation_sizes: vec![30; 1_500],
                 activation_sids: (0..1_500).collect(),
-                subtree_bytes: vec![32 * 36; 1_500],
-                bytes_streamed: 1_500 * 32 * 36,
+                subtree_bytes: vec![slab_bytes(32) as u32; 1_500],
+                bytes_streamed: 1_500 * slab_bytes(32),
                 subtree_fetches: 1_500,
                 per_thread_nodes: vec![11_250; 4],
                 queue_peak: 40,

@@ -7,9 +7,11 @@
 use crate::lod::TraversalTrace;
 use crate::splat::BlendStats;
 
-/// Bytes of one LoD-tree node record in DRAM (AABB 24 + world size 4 +
-/// skip/child metadata 8 — same figure `Subtree::bytes` uses).
-pub const NODE_BYTES: u64 = 36;
+/// Bytes of one LoD-tree node record in DRAM — re-exported from the
+/// single source of truth next to `Subtree::bytes`, so the hardware
+/// models and the SLTree itself can never disagree on the figure.
+/// [`slab_bytes`] converts a node count to slab bytes.
+pub use crate::lod::sltree::{slab_bytes, NODE_BYTES};
 
 /// Bytes of one rendering-queue entry streamed to the splatting stage
 /// (mean2d 8 + conic 12 + colour 12 + opacity 4 + depth 4 + id 4).
@@ -66,6 +68,7 @@ mod tests {
         // NODE_BYTES must match Subtree::bytes' per-node figure.
         let st = crate::lod::Subtree { nodes: vec![0, 1, 2], ..Default::default() };
         assert_eq!(st.bytes(), 3 * NODE_BYTES);
+        assert_eq!(st.bytes(), slab_bytes(3));
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //! even checked — the parallel front end and tile scheduler may never
 //! change pixels. The SoA blend kernel (`BlendKernel::Soa`) is held to
 //! the same bar: per alpha mode, widths {1, 8}, byte-identical to the
-//! scalar-kernel frame.
+//! scalar-kernel frame. So is out-of-core slab residency: a managed
+//! session under an eviction-heavy budget must render the exact golden
+//! frame.
 //!
 //! To update the digests after an *intended* output change:
 //! `SLTARCH_BLESS=1 cargo test --test golden` and commit the file.
@@ -24,6 +26,7 @@ use sltarch::config::SceneConfig;
 use sltarch::coordinator::renderer::AlphaMode;
 use sltarch::coordinator::{BlendKernel, CpuBackend, FramePipeline, RenderOptions};
 use sltarch::math::Camera;
+use sltarch::residency::ResidencyConfig;
 use sltarch::scene::{orbit_cameras, walkthrough};
 
 fn digest_path() -> PathBuf {
@@ -146,6 +149,31 @@ fn golden_frames_match_checked_in_digests() {
                      {threads} diverged from the scalar kernel"
                 );
             }
+        }
+
+        // Slab residency may never change pixels: a managed session
+        // under a budget tight enough to evict every frame must render
+        // the exact golden frame (the manager only replays the search's
+        // slab-access trace — it sits after the search by construction).
+        {
+            let slt = pipeline.sltree();
+            let budget = 3 * slt.subtrees[slt.top as usize].bytes().max(1);
+            let backend = CpuBackend::with_threads(2);
+            let mut session = pipeline.session_on(
+                &backend,
+                RenderOptions {
+                    residency: ResidencyConfig::with_budget(budget),
+                    ..pipeline.default_options()
+                },
+            );
+            let img = session.render(&cam).expect("residency render");
+            assert_eq!(
+                images[0].data, img.data,
+                "scene `{name}`: residency-managed render diverged"
+            );
+            let rs = session.stats().residency;
+            assert_eq!(rs.frames, 1, "{name}: residency frame not charged");
+            assert!(rs.misses > 0, "{name}: tight budget must demand-fault");
         }
 
         let img = &images[0];

@@ -3,12 +3,13 @@
 //! bit-accuracy, and blending conservation laws, on randomized scenes,
 //! cameras and parameters.
 
-use sltarch::config::SceneConfig;
+use sltarch::config::{DramConfig, SceneConfig};
 use sltarch::coordinator::renderer::{AlphaMode, CpuRenderer};
 use sltarch::coordinator::{CpuBackend, FramePipeline, RenderOptions};
 use sltarch::gaussian::{project_into, project_into_threaded, Splat2D};
 use sltarch::lod::{traverse_sltree, CutCache, CutCacheConfig, SlTree};
 use sltarch::math::{Camera, Intrinsics, Vec2, Vec3};
+use sltarch::residency::{ResidencyConfig, ResidencyManager};
 use sltarch::scene::{build_lod_tree, GeneratorKind, SceneSpec};
 use sltarch::splat::blend::PIXELS;
 use sltarch::splat::{
@@ -548,6 +549,124 @@ fn prop_session_render_is_bit_identical_to_seed_per_frame_path() {
                 assert_eq!(stats.front_end_threads, threads);
                 assert!(stats.stages.staged_total() <= stats.wall_seconds + 1e-9);
             }
+        }
+    });
+}
+
+#[test]
+fn prop_residency_resident_bytes_never_exceed_budget() {
+    // PR-7 tentpole invariant: whatever the scene, access pattern,
+    // budget or prefetch setting, the manager never holds more than its
+    // byte budget after a frame — bypass loads make this unconditional
+    // even when one frame's pinned cut alone exceeds the budget.
+    forall(8, |rng| {
+        let (_, tree) = random_scene(rng);
+        let extent = tree.aabbs[0].half_extent().max_component();
+        let tau_s = 8 + rng.below(56) as u32;
+        let slt = SlTree::partition(&tree, tau_s);
+        let total: u64 = slt.subtrees.iter().map(|s| s.bytes()).sum();
+        let cfg = ResidencyConfig {
+            enabled: true,
+            budget_bytes: 1 + rng.next_u64() % total,
+            prefetch: rng.below(2) == 0,
+        };
+        let dram = DramConfig::default();
+        let mut mgr = ResidencyManager::new();
+        for _ in 0..6 {
+            let cam = random_camera(rng, extent.max(1.0));
+            let tau = rng.range(0.5, 64.0);
+            let (cut, trace) = traverse_sltree(&tree, &slt, &cam, tau, 4);
+            let delta =
+                mgr.charge_frame(&slt, &cut, &[&trace.activation_sids], &cfg, &dram);
+            assert!(
+                mgr.resident_bytes() <= cfg.budget_bytes,
+                "resident {} > budget {}",
+                mgr.resident_bytes(),
+                cfg.budget_bytes
+            );
+            assert_eq!(delta.frames, 1);
+        }
+    });
+}
+
+#[test]
+fn prop_residency_never_evicts_current_cut_slabs() {
+    // The pin contract: while a frame is being charged, the slabs its
+    // cut lives in are pinned — no amount of LRU pressure from other
+    // slab accesses within the frame may evict them.
+    forall(8, |rng| {
+        let (_, tree) = random_scene(rng);
+        let extent = tree.aabbs[0].half_extent().max_component();
+        let tau_s = 8 + rng.below(56) as u32;
+        let slt = SlTree::partition(&tree, tau_s);
+        let cam = random_camera(rng, extent.max(1.0));
+        let tau = rng.range(2.0, 32.0);
+        let (cut, trace) = traverse_sltree(&tree, &slt, &cam, tau, 4);
+        // Budget: the frame's activated working set plus one slab, so
+        // the flood of extra accesses below must evict to admit.
+        let mut active = trace.activation_sids.clone();
+        active.sort_unstable();
+        active.dedup();
+        let active_bytes: u64 =
+            active.iter().map(|&s| slt.subtrees[s as usize].bytes()).sum();
+        let cfg = ResidencyConfig::with_budget(
+            active_bytes + slt.subtrees[slt.top as usize].bytes(),
+        );
+        let dram = DramConfig::default();
+        let mut mgr = ResidencyManager::new();
+        mgr.charge_frame(&slt, &cut, &[&trace.activation_sids], &cfg, &dram);
+        // Same frame again under pressure: every slab in the tree
+        // hammers the LRU, but the current cut's slabs are pinned.
+        let others: Vec<u32> = (0..slt.subtrees.len() as u32).collect();
+        mgr.charge_frame(
+            &slt,
+            &cut,
+            &[&trace.activation_sids, &others],
+            &cfg,
+            &dram,
+        );
+        assert!(mgr.resident_bytes() <= cfg.budget_bytes);
+        for &n in &cut {
+            let sid = slt.node_sid[n as usize];
+            assert!(mgr.is_resident(sid), "cut slab {sid} evicted under pressure");
+        }
+    });
+}
+
+#[test]
+fn prop_residency_sessions_render_identically_across_widths() {
+    // The PR-7 acceptance bar: a residency-managed session (budget
+    // tight enough to force constant eviction and bypass) renders
+    // byte-identical frames to an unmanaged session at scheduler widths
+    // {1, 2, 8} along a camera path.
+    forall(4, |rng| {
+        let mut cfg = SceneConfig::small_scale().quick();
+        cfg.leaves = 1_500 + rng.below(1_500);
+        let pipeline = FramePipeline::builder(cfg.build(rng.next_u64())).build();
+        let slt = pipeline.sltree();
+        let budget = 3 * slt.subtrees[slt.top as usize].bytes().max(1);
+        let cams: Vec<Camera> =
+            (0..4).map(|i| pipeline.scene().scenario_camera(i)).collect();
+        for threads in [1usize, 2, 8] {
+            let backend = CpuBackend::with_threads(threads);
+            let mut managed = pipeline.session_on(
+                &backend,
+                RenderOptions {
+                    residency: ResidencyConfig::with_budget(budget),
+                    ..pipeline.default_options()
+                },
+            );
+            let mut plain =
+                pipeline.session_on(&backend, pipeline.default_options());
+            let a = managed.render_path(&cams).unwrap();
+            let b = plain.render_path(&cams).unwrap();
+            for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                assert_eq!(x.data, y.data, "frame {i} at {threads} threads");
+            }
+            let rs = managed.stats().residency;
+            assert_eq!(rs.frames, cams.len() as u64);
+            assert!(rs.misses > 0, "tight budget must demand-fault");
+            assert_eq!(plain.stats().residency.frames, 0);
         }
     });
 }
