@@ -15,8 +15,8 @@ use sltarch::serve::{
     calibrate_frame_seconds, run_load, LoadGenConfig, QosConfig, ServeConfig,
 };
 use sltarch::splat::{
-    bin_splats, bin_splats_into, bin_splats_into_threaded, sort_bins_threaded,
-    sort_bins_with, DepthSortScratch, TileBins,
+    bin_splats, bin_splats_into, bin_splats_into_threaded, project_bin_fused,
+    sort_bins_threaded, sort_bins_with, DepthSortScratch, TileBins,
 };
 use sltarch::util::bench::Bench;
 
@@ -128,12 +128,23 @@ fn main() {
             sort_bins_threaded(&mut bins, &splats, &mut pool, w);
             bins.indices.len()
         });
+        // The PR-8 tentpole pair: the split three-pass front end (the
+        // retained equivalence reference) vs the fused projection +
+        // tile-count sweep. Same CSR bytes out of both (proptests +
+        // golden harness), so the row delta is the saved splat pass.
         let mut fe_splats: Vec<Splat2D> = Vec::new();
         let mut fe_bins = TileBins::default();
         let mut fe_pool: Vec<DepthSortScratch> = Vec::new();
-        b.iter(&format!("front_end(project+bin+sort, {w} threads)"), 5, || {
+        let (iw, ih) = (cam.intr.width, cam.intr.height);
+        b.iter(&format!("front_end(split, {w} threads)"), 5, || {
             project_into_threaded(&queue, &cam, &mut fe_splats, w);
-            bin_splats_into_threaded(&fe_splats, 256, 256, &mut fe_bins, w).expect("bin");
+            bin_splats_into_threaded(&fe_splats, iw, ih, &mut fe_bins, w).expect("bin");
+            sort_bins_threaded(&mut fe_bins, &fe_splats, &mut fe_pool, w);
+            fe_bins.pairs
+        });
+        b.iter(&format!("front_end(fused, {w} threads)"), 5, || {
+            project_bin_fused(&queue, &cam, &mut fe_splats, &mut fe_bins, w)
+                .expect("fused bin");
             sort_bins_threaded(&mut fe_bins, &fe_splats, &mut fe_pool, w);
             fe_bins.pairs
         });
@@ -188,9 +199,10 @@ fn main() {
     let kernel_frames = if quick { 6 } else { 16 };
     let kernel_cams = orbit_cameras(extent, 0.9, kernel_frames, 256, 256);
     for &w in widths {
-        for (kname, kernel) in
-            [("scalar", BlendKernel::Scalar), ("soa", BlendKernel::Soa)]
-        {
+        for (kname, kernel) in [
+            ("scalar", BlendKernel::Scalar),
+            ("soa, simd-shaped", BlendKernel::Soa),
+        ] {
             let backend = CpuBackend::with_threads(w);
             let mut kernel_session = pipeline.session_on(
                 &backend,

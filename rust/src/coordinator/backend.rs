@@ -29,7 +29,9 @@ pub struct RenderOptions {
     /// reference loop or the divergence-free SoA kernel
     /// ([`crate::splat::kernel`], the software SPcore). Byte-identical
     /// outputs per alpha mode — this knob only trades blend time.
-    /// Offload backends (PJRT) ignore it.
+    /// Defaults to the SoA kernel since its SIMD-shaped row rework;
+    /// pick [`BlendKernel::Scalar`] to run the reference loop. Offload
+    /// backends (PJRT) ignore it.
     pub kernel: BlendKernel,
     /// LoD granularity in projected pixels (the paper's tau).
     pub lod_tau: f32,
@@ -57,7 +59,7 @@ impl Default for RenderOptions {
     fn default() -> Self {
         RenderOptions {
             alpha: AlphaMode::Group,
-            kernel: BlendKernel::Scalar,
+            kernel: BlendKernel::Soa,
             lod_tau: 32.0,
             threads: 0,
             cut_cache: CutCacheConfig::default(),

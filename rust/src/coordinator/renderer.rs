@@ -1,7 +1,8 @@
-//! Image production internals: the shared front end (chunked parallel
-//! projection -> per-worker-histogram CSR binning -> dynamic-cursor
-//! parallel radix depth sort, each byte-identical to its serial
-//! reference at any scheduler width), the CPU and PJRT blend loops
+//! Image production internals: the shared front end (one fused
+//! projection + tile-count sweep with per-worker inline histograms ->
+//! CSR merge/scatter -> dynamic-cursor parallel radix depth sort, each
+//! byte-identical to the split serial reference at any scheduler
+//! width), the CPU and PJRT blend loops
 //! that the [`super::backend`] implementations drive, and the stateless
 //! reference renderers (`CpuRenderer` / `PjrtRenderer`) the equivalence
 //! tests compare the session API against. Both blend paths consume the
@@ -19,14 +20,15 @@
 //! the serial schedule regardless of thread count.
 
 use crate::config::RenderConfig;
-use crate::gaussian::{project_into_threaded, Gaussians, Splat2D};
+use crate::gaussian::{Gaussians, Splat2D};
 use crate::math::Camera;
 use crate::metrics::Image;
 use crate::runtime::{PjrtEngine, SplatChunk, SplatState, K_CHUNK};
 use crate::splat::blend::PIXELS;
 use crate::splat::{
-    bin_splats_into_threaded, blend_tile, blend_tile_soa, sort_bins_threaded,
-    BlendKernel, BlendMode, DepthSortScratch, TileBins, TileState, TILE,
+    blend_tile, blend_tile_soa, project_bin_finish, project_bin_sweep,
+    sort_bins_threaded, BlendKernel, BlendMode, DepthSortScratch, TileBins,
+    TileState, TILE,
 };
 use super::stats::StageTimings;
 use anyhow::Result;
@@ -80,11 +82,16 @@ impl FrameScratch {
     }
 }
 
-/// Shared front end: project the queue, bin into CSR, and depth-sort
-/// every tile slice in place — all three stages on `threads` scoped
-/// workers (1 = the serial reference path; output is byte-identical at
-/// any width) — accumulating per-stage wall-clock (sums + histograms)
-/// into `stages` (the session API's unified stats). A binning invariant
+/// Shared front end: one fused projection + tile-count sweep over the
+/// queue, the CSR merge/scatter finish, and the in-place depth sort of
+/// every tile slice — all on `threads` scoped workers (1 = the serial
+/// reference path; output is byte-identical at any width) —
+/// accumulating per-stage wall-clock (sums + histograms) into `stages`
+/// (the session API's unified stats). The fused sweep (ROADMAP item 3)
+/// bins each splat while it is still in registers instead of re-reading
+/// the projection buffer in a second pass, halving front-end memory
+/// traffic; the merge + scatter finish is shared with the split path,
+/// so the CSR output is unchanged byte for byte. A binning invariant
 /// failure surfaces as `Err` so one malformed frame degrades that
 /// request instead of killing a serving process.
 pub(crate) fn front_end_timed(
@@ -95,18 +102,16 @@ pub(crate) fn front_end_timed(
     threads: usize,
 ) -> Result<()> {
     let threads = threads.max(1);
+    // The fused sweep does the old PROJECT stage's work plus the
+    // binning count pass inline, so it is timed as PROJECT; the
+    // merge/scatter finish plus the work list is what remains of BIN.
     let t = Instant::now();
-    project_into_threaded(queue, cam, &mut scratch.splats, threads);
+    let sweep =
+        project_bin_sweep(queue, cam, &mut scratch.splats, &mut scratch.bins, threads);
     stages.record_stage(StageTimings::PROJECT, t.elapsed().as_secs_f64());
 
     let t = Instant::now();
-    bin_splats_into_threaded(
-        &scratch.splats,
-        cam.intr.width,
-        cam.intr.height,
-        &mut scratch.bins,
-        threads,
-    )?;
+    project_bin_finish(&mut scratch.bins, sweep)?;
     // The scheduler work list only needs the finished offset table, so
     // it is built (and timed) with the binning stage.
     scratch.work.clear();
@@ -615,6 +620,43 @@ mod tests {
             );
             let fresh = CpuRenderer::render_threaded(&queue, &cam, AlphaMode::Group, &rcfg, 4);
             assert_eq!(reused.data, fresh.data, "camera {cam_i}");
+        }
+    }
+
+    #[test]
+    fn fused_front_end_matches_split_front_end() {
+        // The tentpole contract: the fused project+bin sweep must
+        // reproduce the split front end (project, then count) exactly —
+        // the projected splats bit for bit AND the CSR arrays byte for
+        // byte — at every scheduler width, on a real scene queue.
+        use crate::gaussian::project_into_threaded;
+        use crate::splat::{bin_splats_into_threaded, project_bin_fused};
+        let (scene, cut, cam) = setup();
+        let queue = scene.gaussians.gather(&cut);
+        for threads in [1usize, 2, 8] {
+            let mut split_splats = Vec::new();
+            project_into_threaded(&queue, &cam, &mut split_splats, threads);
+            let mut split_bins = TileBins::default();
+            bin_splats_into_threaded(
+                &split_splats,
+                cam.intr.width,
+                cam.intr.height,
+                &mut split_bins,
+                threads,
+            )
+            .unwrap();
+            let mut fused_splats = Vec::new();
+            let mut fused_bins = TileBins::default();
+            project_bin_fused(&queue, &cam, &mut fused_splats, &mut fused_bins, threads)
+                .unwrap();
+            fused_bins.validate_csr(fused_splats.len()).unwrap();
+            assert_eq!(fused_splats.len(), split_splats.len(), "{threads} threads");
+            for (f, s) in fused_splats.iter().zip(&split_splats) {
+                assert_eq!(f.bit_pattern(), s.bit_pattern(), "{threads} threads");
+            }
+            assert_eq!(fused_bins.offsets, split_bins.offsets, "{threads} threads");
+            assert_eq!(fused_bins.indices, split_bins.indices, "{threads} threads");
+            assert_eq!(fused_bins.pairs, split_bins.pairs, "{threads} threads");
         }
     }
 

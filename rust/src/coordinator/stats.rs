@@ -161,17 +161,21 @@ impl LatencyHistogram {
 
 /// Per-stage wall-clock seconds, accumulated across every frame a
 /// [`super::session::RenderSession`] renders. The stages mirror the
-/// pipeline order: LoD search (+ queue gather), projection, CSR tile
-/// binning, radix depth sort, tile blending.
+/// pipeline order: LoD search (+ queue gather), the fused projection +
+/// tile-count sweep, the CSR binning finish, radix depth sort, tile
+/// blending.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct StageTimings {
     /// SLTree traversal + rendering-queue gather.
     pub search: f64,
-    /// 3D -> 2D splat projection.
+    /// The fused front-end sweep: 3D -> 2D splat projection with the
+    /// per-worker tile-count histograms accumulated inline (the old
+    /// binning count pass rides along here since the fusion).
     pub project: f64,
-    /// CSR tile binning (count -> prefix-sum -> scatter).
+    /// CSR binning finish (prefix-sum merge -> ordered scatter) plus
+    /// the scheduler work-list build.
     pub bin: f64,
-    /// In-place radix depth sort + work-list build.
+    /// In-place radix depth sort of every tile slice.
     pub sort: f64,
     /// Tile blending (CPU scheduler or PJRT artifacts).
     pub blend: f64,

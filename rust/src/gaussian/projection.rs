@@ -7,9 +7,10 @@
 
 use super::{Gaussians, COV2D_DILATION, NEAR_CULL};
 use crate::math::{safe_recip, Camera, Vec2};
+use crate::splat::group_keep_threshold;
 
 /// One projected (screen-space) Gaussian.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct Splat2D {
     /// Pixel-space centre.
     pub mean: Vec2,
@@ -24,8 +25,37 @@ pub struct Splat2D {
     pub color: [f32; 3],
     /// Base opacity.
     pub opacity: f32,
+    /// Cached no-exp group-keep threshold —
+    /// [`group_keep_threshold`]`(opacity)`, hoisted here at projection
+    /// time so the blend kernels amortize the bit-space bisection
+    /// across every tile the splat touches instead of re-deriving it
+    /// per (splat, tile). Invariant (proptest-pinned): every splat that
+    /// can reach a tile bin carries exactly
+    /// `group_keep_threshold(opacity)` bit for bit; culled splats may
+    /// hold `f32::INFINITY` (keep nothing) without paying for the
+    /// bisection. Sites that build splats by literal call
+    /// [`Splat2D::with_keep_thresh`] to maintain the invariant.
+    pub keep_thresh: f32,
     /// Index into the source rendering queue.
     pub id: u32,
+}
+
+impl Default for Splat2D {
+    /// Zeroed (culled) splat with `keep_thresh = INFINITY` — the
+    /// keep-nothing threshold zero opacity maps to (a derived all-zero
+    /// default would wrongly *keep* every `power == 0` group).
+    fn default() -> Self {
+        Splat2D {
+            mean: Vec2::default(),
+            conic: [0.0; 3],
+            depth: 0.0,
+            radius: 0.0,
+            color: [0.0; 3],
+            opacity: 0.0,
+            keep_thresh: f32::INFINITY,
+            id: 0,
+        }
+    }
 }
 
 impl Splat2D {
@@ -34,10 +64,20 @@ impl Splat2D {
         self.radius > 0.0
     }
 
+    /// Recompute the cached [`keep_thresh`](Splat2D::keep_thresh) from
+    /// the current opacity. Literal-construction sites (tests, loaders)
+    /// chain this to maintain the cache invariant; the projection paths
+    /// fill the field directly.
+    #[must_use]
+    pub fn with_keep_thresh(mut self) -> Self {
+        self.keep_thresh = group_keep_threshold(self.opacity);
+        self
+    }
+
     /// Every field as raw bits, in declaration order — the byte-identity
     /// fingerprint the parallel-vs-serial equivalence tests compare
     /// (f32 `==` would conflate `-0.0` and `0.0`; bits do not).
-    pub fn bit_pattern(&self) -> [u32; 12] {
+    pub fn bit_pattern(&self) -> [u32; 13] {
         [
             self.mean.x.to_bits(),
             self.mean.y.to_bits(),
@@ -50,6 +90,7 @@ impl Splat2D {
             self.color[1].to_bits(),
             self.color[2].to_bits(),
             self.opacity.to_bits(),
+            self.keep_thresh.to_bits(),
             self.id,
         ]
     }
@@ -118,9 +159,30 @@ pub fn project_one(g: &Gaussians, i: usize, cam: &Camera) -> Splat2D {
     let mid = 0.5 * (a + c);
     let lam = mid + (mid * mid - det).max(0.0).sqrt();
     let mut radius = (3.0 * lam.max(0.0).sqrt()).ceil();
-    if !(tz > NEAR_CULL && det > 1e-12) {
+    // Degenerate-projection guard: beyond the near/det culls, never
+    // emit `radius > 0` with a non-finite mean, conic, depth or radius.
+    // Non-finite source data (or a covariance overflowed by huge
+    // scales) can push `det` to `+inf` while the conic divides to NaN —
+    // without this guard such a splat survives `visible()` and poisons
+    // every tile its (infinite) footprint bins into with `exp(NaN)`.
+    let finite = mean.x.is_finite()
+        && mean.y.is_finite()
+        && conic[0].is_finite()
+        && conic[1].is_finite()
+        && conic[2].is_finite()
+        && tz.is_finite()
+        && radius.is_finite();
+    if !(tz > NEAR_CULL && det > 1e-12 && finite) {
         radius = 0.0;
     }
+    // Hoist the group-keep threshold once per splat (the blend kernels
+    // read the field per tile touch); culled splats skip the bisection
+    // — they can never reach a bin, so keep-nothing is free and exact.
+    let keep_thresh = if radius > 0.0 {
+        group_keep_threshold(g.opacity[i])
+    } else {
+        f32::INFINITY
+    };
 
     Splat2D {
         mean,
@@ -129,6 +191,7 @@ pub fn project_one(g: &Gaussians, i: usize, cam: &Camera) -> Splat2D {
         radius,
         color: g.colors[i],
         opacity: g.opacity[i],
+        keep_thresh,
         id: i as u32,
     }
 }
@@ -271,5 +334,47 @@ mod tests {
         let near = project_one(&one_at(Vec3::new(0.0, 0.0, -5.0)), 0, &cam());
         let far = project_one(&one_at(Vec3::new(0.0, 0.0, 8.0)), 0, &cam());
         assert!(near.radius > far.radius);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_culled_not_emitted() {
+        // The projection-side guard: non-finite or overflowing source
+        // data must never produce `radius > 0` with a non-finite
+        // mean/conic/radius (pre-guard, a covariance overflowed to
+        // `det = +inf` could emit an infinite radius + NaN conic).
+        let mut degenerate = vec![
+            one_at(Vec3::new(f32::NAN, 0.0, 0.0)),
+            one_at(Vec3::new(0.0, f32::INFINITY, 0.0)),
+            one_at(Vec3::new(0.0, 0.0, f32::NEG_INFINITY)),
+            one_at(Vec3::splat(1e30)),
+        ];
+        // Huge scales overflow cov2d even with a finite mean.
+        let mut huge = Gaussians::default();
+        huge.push(Vec3::ZERO, Vec3::splat(1e25), Quat::IDENTITY, [1.0; 3], 0.8);
+        degenerate.push(huge);
+        for (k, g) in degenerate.iter().enumerate() {
+            let s = project_one(g, 0, &cam());
+            assert!(!s.visible(), "degenerate gaussian {k} not culled");
+            assert_eq!(s.keep_thresh, f32::INFINITY, "gaussian {k}");
+        }
+    }
+
+    #[test]
+    fn keep_thresh_is_hoisted_for_visible_splats() {
+        let g = one_at(Vec3::ZERO);
+        let s = project_one(&g, 0, &cam());
+        assert!(s.visible());
+        assert_eq!(
+            s.keep_thresh.to_bits(),
+            crate::splat::group_keep_threshold(s.opacity).to_bits()
+        );
+        // Literal construction maintains the invariant via the helper.
+        let lit = Splat2D { opacity: 0.8, ..Splat2D::default() }.with_keep_thresh();
+        assert_eq!(
+            lit.keep_thresh.to_bits(),
+            crate::splat::group_keep_threshold(0.8).to_bits()
+        );
+        // The derived-looking default is the keep-nothing threshold.
+        assert_eq!(Splat2D::default().keep_thresh, f32::INFINITY);
     }
 }

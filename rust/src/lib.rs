@@ -59,20 +59,23 @@
 //!   [`coordinator::CpuBackend`] (dynamic-greedy multi-threaded tile
 //!   scheduler, bit-identical to serial at any width) or
 //!   [`coordinator::PjrtBackend`] (the AOT JAX/Pallas artifacts). The
-//!   front end (projection -> CSR binning -> radix depth sort) is
-//!   hoisted out of the backends, so both consume identical sorted
-//!   bins.
+//!   front end (fused projection + tile-count sweep -> CSR binning
+//!   finish -> radix depth sort) is hoisted out of the backends, so
+//!   both consume identical sorted bins.
 //!
 //! The CPU blend stage itself has two interchangeable kernels
 //! ([`coordinator::RenderOptions::kernel`]): the branchy AoS scalar
 //! reference ([`splat::blend_tile`]) and the divergence-free SoA
 //! kernel ([`splat::kernel`] — the software SPcore: SoA `r`/`g`/`b`/`t`
-//! tile planes, the Sec. IV-C no-exp group check via an exact
-//! precomputed power threshold, a per-row group-mask bitset driving a
-//! maskless inner loop, and incremental early termination). The two
-//! are **byte-identical** per alpha mode — pinned by kernel proptests
-//! and the golden harness — so the knob only trades blend time; the
-//! `blend(kernel=...)` rows in `BENCH_hotpath.json` track the payoff.
+//! tile planes blended through fixed 16-lane SIMD-shaped row loops,
+//! the Sec. IV-C no-exp group check via the exact power threshold
+//! hoisted to projection time ([`gaussian::Splat2D::keep_thresh`]), a
+//! per-row group-mask bitset driving a maskless inner loop, and
+//! incremental early termination). The SoA kernel is the default; the
+//! two are **byte-identical** per alpha mode — pinned by kernel
+//! proptests and the golden harness — so the knob only trades blend
+//! time; the `blend(kernel=...)` rows in `BENCH_hotpath.json` track
+//! the payoff.
 //!
 //! ## The unified scheduler-width knob
 //!
@@ -82,11 +85,15 @@
 //! offload backends, else `SLTARCH_THREADS` / machine parallelism —
 //! drives **every** parallel stage of a frame:
 //!
-//! * chunked projection ([`gaussian::project_into_threaded`]): scoped
-//!   workers fill disjoint `Splat2D` ranges;
-//! * parallel CSR binning ([`splat::bin_splats_into_threaded`]):
-//!   per-worker tile histograms merged by one prefix-sum, then an
-//!   ordered scatter into disjoint slots;
+//! * the fused projection + tile-count sweep
+//!   ([`splat::project_bin_sweep`]): scoped workers fill disjoint
+//!   `Splat2D` ranges and accumulate their per-worker tile histograms
+//!   inline (the split [`gaussian::project_into_threaded`] +
+//!   [`splat::bin_splats_into_threaded`] pair remains as the
+//!   equivalence reference);
+//! * the CSR binning finish ([`splat::project_bin_finish`]): per-worker
+//!   histograms merged by one prefix-sum, then an ordered scatter into
+//!   disjoint slots;
 //! * parallel tile depth sort ([`splat::sort_bins_threaded`]): the
 //!   blend scheduler's dynamic atomic-cursor dequeue applied to the
 //!   sorting stage;

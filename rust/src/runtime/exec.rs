@@ -6,6 +6,7 @@ use super::engine::PjrtEngine;
 use super::{K_CHUNK, PROJECT_N, TILE_PIXELS};
 use crate::gaussian::{Gaussians, Splat2D};
 use crate::math::{Camera, Vec2};
+use crate::splat::group_keep_threshold;
 use anyhow::Result;
 
 fn lit2(data: &[f32], d0: usize, d1: usize) -> Result<xla::Literal> {
@@ -59,6 +60,14 @@ impl ProjectBatch {
                     radius: radius[i],
                     color: g.colors[gi],
                     opacity: g.opacity[gi],
+                    // Same hoisting contract as the CPU `project_one`:
+                    // visible splats carry the exact per-splat keep
+                    // threshold, culled ones keep-nothing.
+                    keep_thresh: if radius[i] > 0.0 {
+                        group_keep_threshold(g.opacity[gi])
+                    } else {
+                        f32::INFINITY
+                    },
                     id: gi as u32,
                 });
             }

@@ -7,7 +7,6 @@
 //! transmittance drops below `t_min`.
 
 use super::divergence::DivergenceStats;
-use super::kernel::group_keep_threshold;
 use super::tiling::TILE;
 use crate::gaussian::{Splat2D, ALPHA_CLAMP, ALPHA_THRESH};
 
@@ -164,9 +163,11 @@ pub fn blend_tile(
                 // Hardware trick (Sec. IV-C): compare the power against
                 // the precomputed exact boundary of
                 // `ln(ALPHA_THRESH / opacity)` — no exp in the keep
-                // loop, same decisions bit for bit (see
-                // [`group_keep_threshold`]).
-                let thr = group_keep_threshold(s.opacity);
+                // loop, same decisions bit for bit. The boundary is
+                // computed once per splat at projection time
+                // (`Splat2D::keep_thresh`, see
+                // `splat::kernel::group_keep_threshold`).
+                let thr = s.keep_thresh;
                 let mut keep = [false; GROUPS];
                 for gy in y0 / GROUP..=y1 / GROUP {
                     for gx in x0 / GROUP..=x1 / GROUP {
@@ -215,6 +216,7 @@ pub fn blend_tile(
 mod tests {
     use super::*;
     use crate::math::Vec2;
+    use crate::splat::kernel::group_keep_threshold;
 
     fn splat(x: f32, y: f32, opacity: f32, sharp: f32) -> Splat2D {
         Splat2D {
@@ -225,7 +227,9 @@ mod tests {
             color: [1.0, 0.5, 0.25],
             opacity,
             id: 0,
+            ..Splat2D::default()
         }
+        .with_keep_thresh()
     }
 
     fn fresh() -> ([[f32; 3]; PIXELS], [f32; PIXELS]) {
@@ -524,7 +528,8 @@ mod tests {
     #[test]
     fn padding_zero_opacity_is_inert() {
         let mut s = vec![splat(8.0, 8.0, 0.8, 0.3)];
-        s.push(Splat2D { opacity: 0.0, ..s[0] });
+        // Padding carries the INFINITY threshold its zero opacity implies.
+        s.push(Splat2D { opacity: 0.0, keep_thresh: f32::INFINITY, ..s[0] });
         let (mut rgb_a, mut t_a) = fresh();
         blend_tile(&[0], &s, (0.0, 0.0), BlendMode::PerPixel, &mut rgb_a, &mut t_a, 0.0);
         let (mut rgb_b, mut t_b) = fresh();

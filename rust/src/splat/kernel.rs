@@ -5,19 +5,27 @@
 //! Three ideas, each bit-identical to the scalar reference
 //! [`blend_tile`](super::blend::blend_tile) per [`BlendMode`]:
 //!
-//! 1. **SoA tile state** ([`TileState`]) — the accumulation planes are
-//!    separate `r`/`g`/`b`/`t` arrays instead of an AoS `[[f32; 3]]`
-//!    buffer, and the per-pixel compositing loop is straight-line code
-//!    (a select instead of a branch), so it vectorizes across pixels.
-//!    Safe for bit-identity: every pixel's arithmetic sequence is
-//!    unchanged — a masked pixel multiplies by `alpha = 0.0`, which is
-//!    a bitwise no-op on its planes (`t *= 1.0`, `rgb += 0.0`).
+//! 1. **SoA tile state, SIMD-shaped rows** ([`TileState`],
+//!    `blend_row`) — the accumulation planes are separate
+//!    `r`/`g`/`b`/`t` arrays instead of an AoS `[[f32; 3]]` buffer, and
+//!    every touched row blends through one fixed 16-lane branch-free
+//!    loop over `&mut [f32; 16]` plane slices: no bounds checks, no
+//!    data-dependent trip count, only mul/add/compare — the shape the
+//!    autovectorizer turns into vector ops (std-only; no intrinsics).
+//!    The scalar `exp` evaluations are staged *before* the lane loop
+//!    into a row-wide effective-alpha array. Safe for bit-identity:
+//!    every pixel's arithmetic sequence is unchanged — a masked or
+//!    out-of-footprint lane carries `alpha = 0.0`, which is a bitwise
+//!    no-op on its planes (`t *= 1.0`, `rgb += 0.0`), and pixels never
+//!    read each other's planes so lane order is immaterial.
 //! 2. **No-exp group check** ([`group_keep_threshold`]) — the SPcore
 //!    hardware trick: precompute `ln(ALPHA_THRESH / opacity)` once per
 //!    splat and compare raw Gaussian powers against it, so the per-group
 //!    keep decision costs one compare and no `exp`. The threshold is
 //!    probed to the exact f32 decision boundary of the exp-form check,
-//!    so the kept set is identical bit for bit. The per-group-row keep
+//!    so the kept set is identical bit for bit — and since PR 8 it is
+//!    hoisted all the way to projection time ([`Splat2D::keep_thresh`]),
+//!    so the blend loops just read a field. The per-group-row keep
 //!    decisions land in a bitset that drives a maskless inner loop
 //!    (iterate set bits; blend whole groups unconditionally).
 //! 3. **Incremental early termination** — a running saturated-pixel
@@ -44,10 +52,14 @@ use crate::gaussian::{Splat2D, ALPHA_CLAMP, ALPHA_THRESH};
 pub enum BlendKernel {
     /// The branchy AoS scalar reference loop
     /// ([`blend_tile`](super::blend::blend_tile)).
-    #[default]
     Scalar,
     /// The divergence-free SoA kernel ([`blend_tile_soa`]) — same
-    /// pixels, same [`BlendStats`], faster inner loop.
+    /// pixels, same [`BlendStats`], faster inner loop. The default
+    /// since the SIMD-shaped row rework (PR 8): the bench rows confirm
+    /// it beats the scalar loop at widths {1, N}, and the golden
+    /// harness pins it byte-identical, so sessions get the fast kernel
+    /// unless they opt back into the reference.
+    #[default]
     Soa,
 }
 
@@ -176,6 +188,50 @@ pub fn group_keep_threshold(opacity: f32) -> f32 {
     from_ord(hi_k)
 }
 
+/// Lane count of the SIMD-shaped row blend — one full 16-pixel tile
+/// row, the natural vector width of the planes.
+const LANES: usize = TILE as usize;
+
+/// Blend one staged row of effective alphas into the tile planes — the
+/// SIMD-shaped stage of the SoA kernel. A fixed 16-lane trip count over
+/// `&mut [f32; LANES]` plane slices with only mul/add/sub/compare in
+/// the body (every `exp` happened in the staging pass), so the
+/// autovectorizer emits vector ops without intrinsics. Lanes with
+/// `aeff == 0.0` (masked or outside the splat's footprint) are bitwise
+/// no-ops: `w = t * 0.0` is `+0.0` (`t > 0` or `+0.0`, never negative),
+/// the planes never hold `-0.0` (they accumulate `x + (-x) -> +0.0`
+/// under round-to-nearest), and `t * (1.0 - 0.0)` is exact — so
+/// blending the whole row matches the scalar kernel's sparse writes bit
+/// for bit. Returns how many lanes crossed the `t_min` saturation
+/// threshold in this row.
+#[inline]
+fn blend_row(
+    state: &mut TileState,
+    row: usize,
+    aeff: &[f32; LANES],
+    color: [f32; 3],
+    t_min: f32,
+) -> u32 {
+    let TileState { r, g, b, t } = state;
+    let r: &mut [f32; LANES] = (&mut r[row..row + LANES]).try_into().expect("tile row");
+    let g: &mut [f32; LANES] = (&mut g[row..row + LANES]).try_into().expect("tile row");
+    let b: &mut [f32; LANES] = (&mut b[row..row + LANES]).try_into().expect("tile row");
+    let t: &mut [f32; LANES] = (&mut t[row..row + LANES]).try_into().expect("tile row");
+    let mut newly_sat = 0u32;
+    for l in 0..LANES {
+        let t_old = t[l];
+        let a = aeff[l];
+        let w = t_old * a;
+        r[l] += w * color[0];
+        g[l] += w * color[1];
+        b[l] += w * color[2];
+        let t_new = t_old * (1.0 - a);
+        t[l] = t_new;
+        newly_sat += ((t_old >= t_min) & (t_new < t_min)) as u32;
+    }
+    newly_sat
+}
+
 /// Blend `order`ed splats into one tile — the divergence-free SoA
 /// kernel. Same contract as [`blend_tile`](super::blend::blend_tile)
 /// (carried accumulation state, early termination on `t_min`), same
@@ -222,28 +278,23 @@ pub fn blend_tile_soa(
                 for py in y0..=y1 {
                     let dy = origin.1 + py as f32 + 0.5 - s.mean.y;
                     let row = py * TILE as usize;
+                    // Stage 1 (scalar): evaluate the Gaussian only
+                    // inside the bbox; out-of-bbox lanes keep alpha 0.0
+                    // — a bitwise no-op in the row blend below, so the
+                    // full-row pass writes exactly what the scalar
+                    // kernel's sparse loop wrote.
+                    let mut aeff = [0.0f32; LANES];
                     let mut active = 0u32;
-                    let mut newly_sat = 0u32;
-                    // Straight-line across the row: masked pixels blend
-                    // with alpha 0.0 (a bitwise no-op on the planes)
-                    // instead of branching.
                     for px in x0..=x1 {
-                        let p = row + px;
                         let dx = origin.0 + px as f32 + 0.5 - s.mean.x;
                         let power = gauss_power(&s.conic, dx, dy);
                         let alpha = (s.opacity * power.exp()).min(ALPHA_CLAMP);
                         let keep = alpha >= ALPHA_THRESH && opaque;
-                        let aeff = if keep { alpha } else { 0.0 };
-                        let t_old = state.t[p];
-                        let w = t_old * aeff;
-                        state.r[p] += w * s.color[0];
-                        state.g[p] += w * s.color[1];
-                        state.b[p] += w * s.color[2];
-                        let t_new = t_old * (1.0 - aeff);
-                        state.t[p] = t_new;
+                        aeff[px] = if keep { alpha } else { 0.0 };
                         active += keep as u32;
-                        newly_sat += ((t_old >= t_min) & (t_new < t_min)) as u32;
                     }
+                    // Stage 2 (SIMD-shaped): fixed 16-lane blend.
+                    let newly_sat = blend_row(state, row, &aeff, s.color, t_min);
                     // A 16-pixel row sits inside one 32-lane warp, so
                     // one bulk record replaces 16 per-lane calls.
                     stats.divergence.record_lanes(row, active as u16);
@@ -254,9 +305,11 @@ pub fn blend_tile_soa(
             }
             BlendMode::PixelGroup => {
                 stats.group_checks += GROUPS as u64;
-                // One threshold per splat; per group just a compare —
-                // the SPcore no-exp check.
-                let thr = group_keep_threshold(s.opacity);
+                // One threshold per splat, precomputed at projection
+                // time ([`Splat2D::keep_thresh`]); per group just a
+                // compare — the SPcore no-exp check with zero exp
+                // probes on the blend path.
+                let thr = s.keep_thresh;
                 let (gx0, gx1) = (x0 / GROUP, x1 / GROUP);
                 let (gy0, gy1) = (y0 / GROUP, y1 / GROUP);
                 // Per-group-row keep bitset (bit gx = keep group gx).
@@ -280,28 +333,23 @@ pub fn blend_tile_soa(
                     let dy = origin.1 + py as f32 + 0.5 - s.mean.y;
                     let row = py * TILE as usize;
                     let kept = bits.count_ones();
-                    let mut newly_sat = 0u32;
+                    // Stage 1 (scalar): alphas for the kept groups
+                    // only; dropped groups stay at 0.0, a bitwise
+                    // no-op in the row blend below.
+                    let mut aeff = [0.0f32; LANES];
                     let mut rest = bits;
                     while rest != 0 {
                         let gx = rest.trailing_zeros() as usize;
                         rest &= rest - 1;
                         for px in GROUP * gx..GROUP * gx + GROUP {
-                            let p = row + px;
                             let dx = origin.0 + px as f32 + 0.5 - s.mean.x;
                             let power = gauss_power(&s.conic, dx, dy);
-                            let alpha =
+                            aeff[px] =
                                 (s.opacity * power.exp()).min(ALPHA_CLAMP);
-                            let t_old = state.t[p];
-                            let w = t_old * alpha;
-                            state.r[p] += w * s.color[0];
-                            state.g[p] += w * s.color[1];
-                            state.b[p] += w * s.color[2];
-                            let t_new = t_old * (1.0 - alpha);
-                            state.t[p] = t_new;
-                            newly_sat +=
-                                ((t_old >= t_min) & (t_new < t_min)) as u32;
                         }
                     }
+                    // Stage 2 (SIMD-shaped): fixed 16-lane blend.
+                    let newly_sat = blend_row(state, row, &aeff, s.color, t_min);
                     stats.divergence.record_lanes(row, (GROUP as u32 * kept) as u16);
                     stats.alpha_evals += GROUP as u64 * kept as u64;
                     stats.blends += GROUP as u64 * kept as u64;
@@ -354,7 +402,9 @@ mod tests {
             color: [0.9, 0.5, 0.25],
             opacity,
             id: 0,
+            ..Splat2D::default()
         }
+        .with_keep_thresh()
     }
 
     fn assert_soa_matches_scalar(

@@ -33,5 +33,6 @@ pub use sort::{
 };
 pub use tiling::{
     bin_splats, bin_splats_into, bin_splats_into_threaded, bin_splats_nested,
+    project_bin_finish, project_bin_fused, project_bin_sweep, FusedSweep,
     TileBins, TilingError, TILE,
 };

@@ -268,7 +268,9 @@ mod tests {
             color: [0.0; 3],
             opacity: 0.5,
             id,
+            ..Splat2D::default()
         }
+        .with_keep_thresh()
     }
 
     #[test]

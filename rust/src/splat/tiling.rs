@@ -15,7 +15,8 @@
 //! on the CSR slices — and lets the whole structure be reused across
 //! frames with zero steady-state allocation.
 
-use crate::gaussian::Splat2D;
+use crate::gaussian::{project_one, Gaussians, Splat2D};
+use crate::math::Camera;
 
 /// Tile side in pixels — fixed at 16 to match the splat HLO artifacts.
 pub const TILE: u32 = 16;
@@ -66,10 +67,20 @@ struct TileRect {
 }
 
 /// Compute the 3-sigma bounding square of `s` clamped to the tile grid;
-/// `None` when the splat is culled or entirely off-screen.
+/// `None` when the splat is culled, degenerate, or entirely off-screen.
 #[inline]
 fn tile_rect(s: &Splat2D, tiles_x: u32, tiles_y: u32) -> Option<TileRect> {
-    if !s.visible() {
+    // Empty grid (zero-dimension image): nothing can bin, and the
+    // `tiles_x - 1` clamps below would underflow to u32::MAX.
+    if !s.visible() || tiles_x == 0 || tiles_y == 0 {
+        return None;
+    }
+    // Non-finite splats must never reach a bin: a NaN mean with positive
+    // radius survives `visible()`, then `floor().max(0.0) as u32` maps
+    // NaN to 0 and the splat lands in tile (0, 0), where exp(NaN)
+    // poisons the pixel row. Projection culls these at the source (see
+    // `project_one`); this guard covers splats that bypass projection.
+    if !(s.mean.x.is_finite() && s.mean.y.is_finite() && s.radius.is_finite()) {
         return None;
     }
     let r = s.radius;
@@ -237,25 +248,35 @@ pub fn bin_splats(splats: &[Splat2D], width: u32, height: u32) -> TileBins {
     bins
 }
 
-/// Bin into a reusable [`TileBins`]: after the first frame warms the
-/// buffers up, rebinning allocates nothing. Three passes over flat
-/// arrays: count per-tile overlaps, exclusive prefix-sum into the offset
-/// table, scatter the splat indices through per-tile cursors. `Err`
-/// leaves `bins` unspecified-but-safe (see [`TilingError`]).
-pub fn bin_splats_into(
-    splats: &[Splat2D],
-    width: u32,
-    height: u32,
-    bins: &mut TileBins,
-) -> Result<(), TilingError> {
-    let tiles_x = width.div_ceil(TILE);
-    let tiles_y = height.div_ceil(TILE);
-    let tiles = (tiles_x * tiles_y) as usize;
-    bins.tiles_x = tiles_x;
-    bins.tiles_y = tiles_y;
+/// Result of a front-end count sweep, consumed by [`finish_bins`].
+/// Produced by the split count passes ([`bin_splats_into`] /
+/// [`bin_splats_into_threaded`]) and the fused projection sweep
+/// ([`project_bin_sweep`]) alike — the finish code cannot tell which
+/// front end ran, which is what keeps their CSR output identical.
+#[derive(Clone, Copy, Debug)]
+struct CountSweep {
+    /// Total (splat, tile) pairs counted.
+    total_pairs: u64,
+    /// Worker count of a parallel sweep. `0` marks a serial sweep:
+    /// rects cached in `TileBins::rects` with counts accumulated in
+    /// `offsets[t + 1]`, rather than in the per-worker scratch.
+    workers: usize,
+}
 
-    // Count pass: overlap counts accumulate in offsets[t + 1] so the
-    // in-place inclusive scan below lands the exclusive offsets.
+/// Size the CSR tile grid for a `width x height` screen.
+#[inline]
+fn set_grid(bins: &mut TileBins, width: u32, height: u32) {
+    bins.tiles_x = width.div_ceil(TILE);
+    bins.tiles_y = height.div_ceil(TILE);
+}
+
+/// Serial count sweep over already-projected splats: per-tile overlap
+/// counts accumulate in `offsets[t + 1]` (so the in-place scan in
+/// [`finish_bins`] lands the exclusive offsets) and the rects are
+/// cached for the scatter replay.
+fn count_serial(splats: &[Splat2D], bins: &mut TileBins) -> CountSweep {
+    let tiles = bins.tile_count();
+    let (tiles_x, tiles_y) = (bins.tiles_x, bins.tiles_y);
     bins.offsets.clear();
     bins.offsets.resize(tiles + 1, 0);
     bins.rects.clear();
@@ -269,33 +290,118 @@ pub fn bin_splats_into(
         let offsets = &mut bins.offsets;
         for_each_covered_tile(rect, tiles_x, |t| offsets[t + 1] += 1);
     }
-    if total_pairs > u32::MAX as u64 {
-        return Err(TilingError::PairOverflow { pairs: total_pairs });
-    }
+    CountSweep { total_pairs, workers: 0 }
+}
 
-    // Prefix sum: offsets[t + 1] becomes the end of tile t's slice.
-    let mut acc = 0u32;
-    for o in bins.offsets.iter_mut() {
-        acc += *o;
-        *o = acc;
+/// Turn a finished count sweep into the CSR arrays: overflow check,
+/// exclusive prefix-sum (merging the per-worker histograms when the
+/// sweep was parallel), then the ordered scatter replay of the cached
+/// rects. Shared verbatim by the split and fused front ends, so their
+/// CSR output can never diverge. `Err` leaves `bins`
+/// unspecified-but-safe (see [`TilingError`]).
+fn finish_bins(
+    bins: &mut TileBins,
+    sweep: CountSweep,
+    n_splats: usize,
+) -> Result<(), TilingError> {
+    if sweep.total_pairs > u32::MAX as u64 {
+        return Err(TilingError::PairOverflow { pairs: sweep.total_pairs });
     }
-    bins.pairs = bins.offsets[tiles] as u64;
+    let tiles = bins.tile_count();
+    let tiles_x = bins.tiles_x;
 
-    // Scatter pass: replay the cached rects through per-tile cursors.
-    // Splats are replayed in ascending index order, so each tile's slice
-    // comes out ascending — exactly the nested-Vec push order.
-    bins.indices.clear();
-    bins.indices.resize(bins.pairs as usize, 0);
-    bins.cursor.clear();
-    bins.cursor.extend_from_slice(&bins.offsets[..tiles]);
-    let TileBins { ref rects, ref mut cursor, ref mut indices, .. } = *bins;
-    for &(i, rect) in rects {
-        for_each_covered_tile(rect, tiles_x, |t| {
-            indices[cursor[t] as usize] = i;
-            cursor[t] += 1;
+    if sweep.workers == 0 {
+        // Prefix sum: offsets[t + 1] becomes the end of tile t's slice.
+        let mut acc = 0u32;
+        for o in bins.offsets.iter_mut() {
+            acc += *o;
+            *o = acc;
+        }
+        bins.pairs = bins.offsets[tiles] as u64;
+
+        // Scatter pass: replay the cached rects through per-tile
+        // cursors. Splats are replayed in ascending index order, so
+        // each tile's slice comes out ascending — exactly the
+        // nested-Vec push order.
+        bins.indices.clear();
+        bins.indices.resize(bins.pairs as usize, 0);
+        bins.cursor.clear();
+        bins.cursor.extend_from_slice(&bins.offsets[..tiles]);
+        let TileBins { ref rects, ref mut cursor, ref mut indices, .. } = *bins;
+        for &(i, rect) in rects {
+            for_each_covered_tile(rect, tiles_x, |t| {
+                indices[cursor[t] as usize] = i;
+                cursor[t] += 1;
+            });
+        }
+    } else {
+        let workers = sweep.workers;
+        // Merge pass: one exclusive prefix-sum over (tile, worker)
+        // lands the CSR offset table and, inside each tile's slice,
+        // every worker's private write cursor (rewriting the histograms
+        // in place).
+        bins.offsets.clear();
+        bins.offsets.resize(tiles + 1, 0);
+        let mut acc = 0u32;
+        for t in 0..tiles {
+            bins.offsets[t] = acc;
+            for counts in bins.worker_counts[..workers].iter_mut() {
+                let c = counts[t];
+                counts[t] = acc;
+                acc += c;
+            }
+        }
+        bins.offsets[tiles] = acc;
+        bins.pairs = acc as u64;
+        debug_assert_eq!(bins.pairs, sweep.total_pairs);
+
+        // Scatter pass: every worker replays its cached rects through
+        // its own per-tile cursors into disjoint `indices` slots. Bare
+        // resize (no clear): the cursor ranges tile 0..pairs exactly,
+        // so every retained slot is overwritten.
+        bins.indices.resize(bins.pairs as usize, 0);
+        let shared = SharedIndices { ptr: bins.indices.as_mut_ptr() };
+        std::thread::scope(|s| {
+            for (rects, cursors) in bins.worker_rects[..workers]
+                .iter()
+                .zip(bins.worker_counts[..workers].iter_mut())
+            {
+                s.spawn(move || {
+                    for &(i, rect) in rects.iter() {
+                        for_each_covered_tile(rect, tiles_x, |t| {
+                            // SAFETY: the merge pass gave each
+                            // (worker, tile) pair a disjoint cursor
+                            // range inside `indices`, every worker only
+                            // advances its own cursors, and `indices`
+                            // outlives the scope — so no two writes
+                            // alias.
+                            unsafe {
+                                *shared.ptr.add(cursors[t] as usize) = i;
+                            }
+                            cursors[t] += 1;
+                        });
+                    }
+                });
+            }
         });
     }
-    debug_validate(bins, splats.len())
+    debug_validate(bins, n_splats)
+}
+
+/// Bin into a reusable [`TileBins`]: after the first frame warms the
+/// buffers up, rebinning allocates nothing. Three passes over flat
+/// arrays: count per-tile overlaps, exclusive prefix-sum into the offset
+/// table, scatter the splat indices through per-tile cursors. `Err`
+/// leaves `bins` unspecified-but-safe (see [`TilingError`]).
+pub fn bin_splats_into(
+    splats: &[Splat2D],
+    width: u32,
+    height: u32,
+    bins: &mut TileBins,
+) -> Result<(), TilingError> {
+    set_grid(bins, width, height);
+    let sweep = count_serial(splats, bins);
+    finish_bins(bins, sweep, splats.len())
 }
 
 /// Below this many splats the per-worker histogram merge costs more than
@@ -341,24 +447,33 @@ pub fn bin_splats_into_threaded(
     if threads <= 1 || n < PAR_BIN_MIN {
         return bin_splats_into(splats, width, height, bins);
     }
-    let tiles_x = width.div_ceil(TILE);
-    let tiles_y = height.div_ceil(TILE);
-    let tiles = (tiles_x * tiles_y) as usize;
-    bins.tiles_x = tiles_x;
-    bins.tiles_y = tiles_y;
+    set_grid(bins, width, height);
+    let sweep = count_threaded(splats, bins, threads);
+    finish_bins(bins, sweep, n)
+}
 
-    let chunk = n.div_ceil(threads).max(PAR_BIN_CHUNK);
-    let workers = n.div_ceil(chunk);
+/// Grow the per-worker scratch vectors to hold `workers` entries
+/// (never shrinks — stale tails are ignored via `[..workers]` slices).
+fn grow_worker_scratch(bins: &mut TileBins, workers: usize) {
     if bins.worker_rects.len() < workers {
         bins.worker_rects.resize_with(workers, Vec::new);
     }
     if bins.worker_counts.len() < workers {
         bins.worker_counts.resize_with(workers, Vec::new);
     }
+}
 
-    // Count pass: per-worker per-tile histograms plus cached rects, over
-    // disjoint contiguous splat chunks (chunk w holds splat indices
-    // `w * chunk ..`, so worker order == ascending splat order).
+/// Parallel count sweep over already-projected splats: scoped workers
+/// build per-thread tile-count histograms plus cached rects over
+/// disjoint contiguous splat chunks (chunk w holds splat indices
+/// `w * chunk ..`, so worker order == ascending splat order).
+fn count_threaded(splats: &[Splat2D], bins: &mut TileBins, threads: usize) -> CountSweep {
+    let n = splats.len();
+    let tiles = bins.tile_count();
+    let (tiles_x, tiles_y) = (bins.tiles_x, bins.tiles_y);
+    let chunk = n.div_ceil(threads).max(PAR_BIN_CHUNK);
+    let workers = n.div_ceil(chunk);
+    grow_worker_scratch(bins, workers);
     let total_pairs: u64 = std::thread::scope(|s| {
         let handles: Vec<_> = splats
             .chunks(chunk)
@@ -391,57 +506,150 @@ pub fn bin_splats_into_threaded(
             .map(|h| h.join().expect("bin count worker panicked"))
             .sum()
     });
-    if total_pairs > u32::MAX as u64 {
-        return Err(TilingError::PairOverflow { pairs: total_pairs });
-    }
+    CountSweep { total_pairs, workers }
+}
 
-    // Merge pass: one exclusive prefix-sum over (tile, worker) lands the
-    // CSR offset table and, inside each tile's slice, every worker's
-    // private write cursor (rewriting the histograms in place).
-    bins.offsets.clear();
-    bins.offsets.resize(tiles + 1, 0);
-    let mut acc = 0u32;
-    for t in 0..tiles {
-        bins.offsets[t] = acc;
-        for counts in bins.worker_counts[..workers].iter_mut() {
-            let c = counts[t];
-            counts[t] = acc;
-            acc += c;
+/// Below this many Gaussians the fused sweep runs serially. Mirrors the
+/// split paths' thresholds — output is byte-identical either way, this
+/// is purely a thread-spawn-cost cutoff.
+const PAR_FUSED_MIN: usize = 1024;
+
+/// Minimum Gaussians per fused worker chunk (same rationale as
+/// [`PAR_BIN_CHUNK`]).
+const PAR_FUSED_CHUNK: usize = 256;
+
+/// In-flight fused front-end sweep: returned by [`project_bin_sweep`],
+/// consumed by [`project_bin_finish`]. Splitting the sweep from the
+/// finish lets callers time them as the projection and binning stages
+/// respectively.
+#[must_use = "pass to project_bin_finish to build the CSR arrays"]
+#[derive(Debug)]
+pub struct FusedSweep {
+    counts: CountSweep,
+    n_splats: usize,
+}
+
+/// Fused projection + tile-count sweep (ROADMAP item 3): ONE pass over
+/// the rendering queue both projects every Gaussian into `splats` and
+/// accumulates the per-tile overlap counts the CSR build needs — where
+/// the split front end
+/// ([`project_into_threaded`](crate::gaussian::project_into_threaded)
+/// then [`bin_splats_into_threaded`]) makes two full passes, the second
+/// re-reading every projected splat from memory. Each worker projects a
+/// disjoint contiguous chunk and bins each splat inline while it is
+/// still in registers, halving front-end memory traffic.
+///
+/// The grid is sized from `cam.intr.width/height`. The prefix-sum merge
+/// and ordered scatter are shared verbatim with the split path (see
+/// [`project_bin_finish`]), so both the projected splats and the CSR
+/// arrays are byte-identical to the split front end at any thread
+/// count.
+pub fn project_bin_sweep(
+    queue: &Gaussians,
+    cam: &Camera,
+    splats: &mut Vec<Splat2D>,
+    bins: &mut TileBins,
+    threads: usize,
+) -> FusedSweep {
+    let n = queue.len();
+    set_grid(bins, cam.intr.width, cam.intr.height);
+    let tiles = bins.tile_count();
+    let (tiles_x, tiles_y) = (bins.tiles_x, bins.tiles_y);
+
+    if threads <= 1 || n < PAR_FUSED_MIN {
+        // Serial fused sweep: project and count in one loop, leaving
+        // the same state `count_serial` would (counts in
+        // `offsets[t + 1]`, rects cached for the scatter replay).
+        splats.clear();
+        splats.reserve(n);
+        bins.offsets.clear();
+        bins.offsets.resize(tiles + 1, 0);
+        bins.rects.clear();
+        let mut total_pairs = 0u64;
+        for i in 0..n {
+            let sp = project_one(queue, i, cam);
+            if let Some(rect) = tile_rect(&sp, tiles_x, tiles_y) {
+                bins.rects.push((i as u32, rect));
+                total_pairs +=
+                    (rect.x1 - rect.x0 + 1) as u64 * (rect.y1 - rect.y0 + 1) as u64;
+                let offsets = &mut bins.offsets;
+                for_each_covered_tile(rect, tiles_x, |t| offsets[t + 1] += 1);
+            }
+            splats.push(sp);
         }
+        return FusedSweep {
+            counts: CountSweep { total_pairs, workers: 0 },
+            n_splats: n,
+        };
     }
-    bins.offsets[tiles] = acc;
-    bins.pairs = acc as u64;
-    debug_assert_eq!(bins.pairs, total_pairs);
 
-    // Scatter pass: every worker replays its cached rects through its
-    // own per-tile cursors into disjoint `indices` slots. Bare resize
-    // (no clear): the cursor ranges tile 0..pairs exactly, so every
-    // retained slot is overwritten.
-    bins.indices.resize(bins.pairs as usize, 0);
-    let shared = SharedIndices { ptr: bins.indices.as_mut_ptr() };
-    std::thread::scope(|s| {
-        for (rects, cursors) in bins.worker_rects[..workers]
-            .iter()
-            .zip(bins.worker_counts[..workers].iter_mut())
-        {
-            s.spawn(move || {
-                for &(i, rect) in rects.iter() {
-                    for_each_covered_tile(rect, tiles_x, |t| {
-                        // SAFETY: the merge pass gave each
-                        // (worker, tile) pair a disjoint cursor range
-                        // inside `indices`, every worker only advances
-                        // its own cursors, and `indices` outlives the
-                        // scope — so no two writes alias.
-                        unsafe {
-                            *shared.ptr.add(cursors[t] as usize) = i;
+    // Parallel fused sweep: the same disjoint contiguous chunks and
+    // per-worker scratch as `count_threaded`, but each worker projects
+    // its `splats` slice itself and bins each splat straight out of the
+    // projection. Bare resize (no clear): every slot in 0..n is
+    // overwritten by exactly one worker below.
+    splats.resize(n, Splat2D::default());
+    let chunk = n.div_ceil(threads).max(PAR_FUSED_CHUNK);
+    let workers = n.div_ceil(chunk);
+    grow_worker_scratch(bins, workers);
+    let total_pairs: u64 = std::thread::scope(|s| {
+        let handles: Vec<_> = splats
+            .chunks_mut(chunk)
+            .zip(bins.worker_rects.iter_mut().zip(bins.worker_counts.iter_mut()))
+            .enumerate()
+            .map(|(w, (slots, (rects, counts)))| {
+                let base = w * chunk;
+                s.spawn(move || {
+                    rects.clear();
+                    counts.clear();
+                    counts.resize(tiles, 0);
+                    let mut pairs = 0u64;
+                    for (j, slot) in slots.iter_mut().enumerate() {
+                        let sp = project_one(queue, base + j, cam);
+                        if let Some(rect) = tile_rect(&sp, tiles_x, tiles_y) {
+                            rects.push(((base + j) as u32, rect));
+                            pairs += (rect.x1 - rect.x0 + 1) as u64
+                                * (rect.y1 - rect.y0 + 1) as u64;
+                            for_each_covered_tile(rect, tiles_x, |t| {
+                                counts[t] += 1;
+                            });
                         }
-                        cursors[t] += 1;
-                    });
-                }
-            });
-        }
+                        *slot = sp;
+                    }
+                    pairs
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("fused front-end worker panicked"))
+            .sum()
     });
-    debug_validate(bins, n)
+    FusedSweep { counts: CountSweep { total_pairs, workers }, n_splats: n }
+}
+
+/// Build the CSR arrays from a finished [`project_bin_sweep`] — the
+/// exact merge + scatter code the split binning paths run, so the
+/// output is byte-identical to theirs. `Err` leaves `bins`
+/// unspecified-but-safe (see [`TilingError`]).
+pub fn project_bin_finish(
+    bins: &mut TileBins,
+    sweep: FusedSweep,
+) -> Result<(), TilingError> {
+    finish_bins(bins, sweep.counts, sweep.n_splats)
+}
+
+/// One-call fused front end ([`project_bin_sweep`] +
+/// [`project_bin_finish`]) for callers that don't split stage timing.
+pub fn project_bin_fused(
+    queue: &Gaussians,
+    cam: &Camera,
+    splats: &mut Vec<Splat2D>,
+    bins: &mut TileBins,
+    threads: usize,
+) -> Result<(), TilingError> {
+    let sweep = project_bin_sweep(queue, cam, splats, bins, threads);
+    project_bin_finish(bins, sweep)
 }
 
 /// Reference nested-Vec binning (the pre-CSR implementation), kept for
@@ -482,7 +690,9 @@ mod tests {
             color: [1.0, 1.0, 1.0],
             opacity: 0.5,
             id: 0,
+            ..Splat2D::default()
         }
+        .with_keep_thresh()
     }
 
     #[test]
@@ -650,6 +860,95 @@ mod tests {
         let bins = bin_splats(&empty, 64, 64);
         bins.validate_csr(0).unwrap();
         assert_eq!(bins.pairs, 0);
+    }
+
+    #[test]
+    fn degenerate_zero_size_image() {
+        // A zero-dimension image yields an empty tile grid; the old
+        // `tiles_x - 1` clamp underflowed to u32::MAX here. Every grid
+        // shape must produce a valid, empty CSR instead.
+        let splats = vec![splat_at(8.0, 8.0, 3.0)];
+        for &(w, h) in &[(0u32, 0u32), (0, 64), (64, 0)] {
+            let bins = bin_splats(&splats, w, h);
+            bins.validate_csr(splats.len()).unwrap();
+            assert_eq!(bins.pairs, 0, "{w}x{h}");
+            assert!(bins.indices.is_empty(), "{w}x{h}");
+        }
+        // The threaded path (real workers) must agree.
+        let many: Vec<Splat2D> = (0..1_200).map(|_| splat_at(8.0, 8.0, 3.0)).collect();
+        let mut bins = TileBins::default();
+        bin_splats_into_threaded(&many, 0, 64, &mut bins, 8).unwrap();
+        bins.validate_csr(many.len()).unwrap();
+        assert_eq!(bins.pairs, 0);
+    }
+
+    #[test]
+    fn non_finite_splats_are_rejected_at_the_rect_stage() {
+        // A NaN mean with positive radius used to fall through the
+        // `floor().max(0.0)` clamps into tile (0, 0). None of these may
+        // generate a single pair.
+        let mut nan_x = splat_at(8.0, 8.0, 3.0);
+        nan_x.mean.x = f32::NAN;
+        let mut nan_y = splat_at(8.0, 8.0, 3.0);
+        nan_y.mean.y = f32::NAN;
+        let mut inf_mean = splat_at(8.0, 8.0, 3.0);
+        inf_mean.mean.x = f32::INFINITY;
+        let mut inf_radius = splat_at(8.0, 8.0, 3.0);
+        inf_radius.radius = f32::INFINITY;
+        let mut neg_inf = splat_at(8.0, 8.0, 3.0);
+        neg_inf.mean.y = f32::NEG_INFINITY;
+        let splats = vec![nan_x, nan_y, inf_mean, inf_radius, neg_inf];
+        let bins = bin_splats(&splats, 64, 64);
+        bins.validate_csr(splats.len()).unwrap();
+        assert_eq!(bins.pairs, 0);
+        assert!(bins.indices.is_empty());
+        // A finite splat alongside them still bins normally.
+        let mut with_good = splats.clone();
+        with_good.push(splat_at(8.0, 8.0, 3.0));
+        let bins = bin_splats(&with_good, 64, 64);
+        assert_eq!(bins.pairs, 1);
+        assert_eq!(bins.tile(0), &[5]);
+    }
+
+    #[test]
+    fn fused_sweep_matches_split_front_end_shapes() {
+        // Pure-tiling check that the fused convenience wrapper produces
+        // the same CSR as projecting-then-binning; the renderer test
+        // covers the real scene path. Here: synthesize a queue whose
+        // projection is deterministic and compare both pipelines.
+        use crate::math::{Intrinsics, Quat, Vec3};
+        let mut queue = Gaussians::default();
+        let mut rng = Rng::new(0xF0_5ED);
+        for _ in 0..1_400 {
+            queue.push(
+                Vec3::new(rng.range(-3.0, 3.0), rng.range(-3.0, 3.0), rng.range(2.0, 9.0)),
+                Vec3::splat(rng.range(0.01, 0.2)),
+                Quat::IDENTITY,
+                [0.5, 0.5, 0.5],
+                rng.range(0.05, 0.9),
+            );
+        }
+        let cam = Camera::look_at(
+            Vec3::new(0.0, 0.0, -1.0),
+            Vec3::new(0.0, 0.0, 1.0),
+            Vec3::new(0.0, 1.0, 0.0),
+            Intrinsics::from_fov(128, 128, 90f32.to_radians()),
+        );
+        let split_splats = crate::gaussian::project(&queue, &cam);
+        let split_bins = bin_splats(&split_splats, cam.intr.width, cam.intr.height);
+        for threads in [1usize, 2, 8] {
+            let mut splats = Vec::new();
+            let mut bins = TileBins::default();
+            project_bin_fused(&queue, &cam, &mut splats, &mut bins, threads).unwrap();
+            bins.validate_csr(splats.len()).unwrap();
+            assert_eq!(splats.len(), split_splats.len(), "threads {threads}");
+            for (a, b) in splats.iter().zip(&split_splats) {
+                assert_eq!(a.bit_pattern(), b.bit_pattern(), "threads {threads}");
+            }
+            assert_eq!(bins.offsets, split_bins.offsets, "threads {threads}");
+            assert_eq!(bins.indices, split_bins.indices, "threads {threads}");
+            assert_eq!(bins.pairs, split_bins.pairs, "threads {threads}");
+        }
     }
 
     #[test]

@@ -6,9 +6,11 @@
 use sltarch::config::{DramConfig, SceneConfig};
 use sltarch::coordinator::renderer::{AlphaMode, CpuRenderer};
 use sltarch::coordinator::{CpuBackend, FramePipeline, RenderOptions};
-use sltarch::gaussian::{project_into, project_into_threaded, Splat2D};
+use sltarch::gaussian::{
+    project_into, project_into_threaded, Gaussians, Splat2D, ALPHA_THRESH,
+};
 use sltarch::lod::{traverse_sltree, CutCache, CutCacheConfig, SlTree};
-use sltarch::math::{Camera, Intrinsics, Vec2, Vec3};
+use sltarch::math::{Camera, Intrinsics, Quat, Vec2, Vec3};
 use sltarch::residency::{ResidencyConfig, ResidencyManager};
 use sltarch::scene::{build_lod_tree, GeneratorKind, SceneSpec};
 use sltarch::splat::blend::PIXELS;
@@ -227,7 +229,9 @@ fn prop_blend_conserves_energy_and_bounds() {
                     color: [1.0, 1.0, 1.0],
                     opacity: rng.range(0.0, 1.0),
                     id: i as u32,
+                    ..Splat2D::default()
                 }
+                .with_keep_thresh()
             })
             .collect();
         let order: Vec<u32> = (0..k as u32).collect();
@@ -275,7 +279,9 @@ fn prop_soa_blend_kernel_is_bit_identical_to_scalar() {
                     color: [rng.range(0.0, 1.0), rng.range(0.0, 1.0), rng.range(0.0, 1.0)],
                     opacity,
                     id: i as u32,
+                    ..Splat2D::default()
                 }
+                .with_keep_thresh()
             })
             .collect();
         let mut order: Vec<u32> = (0..n as u32).collect();
@@ -343,6 +349,161 @@ fn prop_group_keep_threshold_matches_exp_form() {
 }
 
 #[test]
+fn prop_keep_threshold_table_is_bit_identical_to_recompute() {
+    // PR-8 tentpole contract: the per-splat keep threshold hoisted to
+    // projection time ([`Splat2D::keep_thresh`]) is the exact
+    // `group_keep_threshold` table entry, bit for bit — visible splats
+    // carry their opacity's threshold, culled splats carry the
+    // keep-nothing sentinel (+inf).
+    forall(8, |rng| {
+        let (g, tree) = random_scene(rng);
+        let extent = tree.aabbs[0].half_extent().max_component();
+        let cam = random_camera(rng, extent.max(1.0));
+        let mut splats = Vec::new();
+        project_into(&g, &cam, &mut splats);
+        for s in &splats {
+            if s.visible() {
+                assert_eq!(
+                    s.keep_thresh.to_bits(),
+                    group_keep_threshold(s.opacity).to_bits(),
+                    "splat {} threshold drifted from recompute",
+                    s.id
+                );
+            } else {
+                assert_eq!(
+                    s.keep_thresh.to_bits(),
+                    f32::INFINITY.to_bits(),
+                    "culled splat {} must keep nothing",
+                    s.id
+                );
+            }
+        }
+        // The literal-construction path (`with_keep_thresh`) fills the
+        // same table entry for any opacity, including the edge cases
+        // the blend kernels rely on: NaN and sub-ALPHA_THRESH
+        // opacities must map to the +inf keep-nothing sentinel.
+        for _ in 0..64 {
+            let opacity = match rng.below(6) {
+                0 => 0.0,
+                1 => f32::NAN,
+                2 => rng.range(0.0, ALPHA_THRESH), // below the keep floor
+                3 => rng.range(0.0035, 0.0045),    // ALPHA_THRESH region
+                _ => rng.range(0.0, 1.0),
+            };
+            let s = Splat2D { opacity, ..Splat2D::default() }.with_keep_thresh();
+            assert_eq!(
+                s.keep_thresh.to_bits(),
+                group_keep_threshold(opacity).to_bits(),
+                "with_keep_thresh diverged at opacity {opacity}"
+            );
+            if opacity.is_nan() || opacity < ALPHA_THRESH {
+                assert_eq!(s.keep_thresh.to_bits(), f32::INFINITY.to_bits());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_degenerate_splats_never_reach_a_tile_bin() {
+    // The PR-8 hardening contract, fuzz-backed: however broken the
+    // inputs — non-finite means, exploding or zero scales — projection
+    // either emits a fully finite splat or culls it (radius == 0 with
+    // keep_thresh == +inf), and the rect/binning stage never admits a
+    // non-finite splat into any tile (the old NaN -> tile (0,0) bug).
+    forall(12, |rng| {
+        let mut g = Gaussians::default();
+        let n = 32 + rng.below(96);
+        for _ in 0..n {
+            let coord = |rng: &mut Rng| match rng.below(6) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3 => rng.range(-1e30, 1e30),
+                _ => rng.range(-20.0, 20.0),
+            };
+            let scale = match rng.below(5) {
+                0 => Vec3::splat(1e25), // cov2d overflow -> inf radius
+                1 => Vec3::splat(0.0),  // det underflow
+                2 => Vec3::new(f32::NAN, 0.1, 0.1),
+                _ => Vec3::splat(rng.range(0.01, 2.0)),
+            };
+            g.push(
+                Vec3::new(coord(rng), coord(rng), coord(rng)),
+                scale,
+                Quat::IDENTITY,
+                [0.5; 3],
+                rng.range(0.0, 1.0),
+            );
+        }
+        let cam = random_camera(rng, 10.0);
+        let mut splats = Vec::new();
+        project_into(&g, &cam, &mut splats);
+        for s in &splats {
+            if s.visible() {
+                assert!(
+                    s.mean.x.is_finite()
+                        && s.mean.y.is_finite()
+                        && s.conic.iter().all(|c| c.is_finite())
+                        && s.depth.is_finite()
+                        && s.radius.is_finite(),
+                    "projection emitted a degenerate visible splat: {s:?}"
+                );
+            } else {
+                assert_eq!(s.keep_thresh.to_bits(), f32::INFINITY.to_bits());
+            }
+        }
+        // Belt and braces: hand-built non-finite splats (as a buggy
+        // upstream producer might emit) must bounce off the rect stage
+        // instead of landing in tile (0, 0).
+        let base = splats.len() as u32;
+        for (k, &v) in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY].iter().enumerate() {
+            splats.push(
+                Splat2D {
+                    mean: if k % 2 == 0 {
+                        Vec2::new(v, 8.0)
+                    } else {
+                        Vec2::new(8.0, v)
+                    },
+                    conic: [1.0, 0.0, 1.0],
+                    depth: 1.0,
+                    radius: 3.0,
+                    color: [1.0; 3],
+                    opacity: 0.5,
+                    id: base + k as u32,
+                    ..Splat2D::default()
+                }
+                .with_keep_thresh(),
+            );
+        }
+        splats.push(
+            Splat2D {
+                mean: Vec2::new(8.0, 8.0),
+                conic: [1.0, 0.0, 1.0],
+                depth: 1.0,
+                radius: f32::INFINITY, // covers-everything radius
+                color: [1.0; 3],
+                opacity: 0.5,
+                id: base + 3,
+                ..Splat2D::default()
+            }
+            .with_keep_thresh(),
+        );
+        let bins = bin_splats(&splats, 128, 128);
+        for t in 0..bins.tile_count() {
+            for &i in bins.tile(t) {
+                let s = &splats[i as usize];
+                assert!(
+                    s.mean.x.is_finite()
+                        && s.mean.y.is_finite()
+                        && s.radius.is_finite(),
+                    "non-finite splat {i} reached tile {t}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_soa_kernel_sessions_match_scalar_across_widths() {
     // Session-level: a kernel=Soa session renders byte-identical frames
     // to a kernel=Scalar session for both alpha modes at scheduler
@@ -402,7 +563,9 @@ fn random_screen_splats(rng: &mut Rng) -> Vec<Splat2D> {
                 color: [1.0; 3],
                 opacity: 0.5,
                 id: i as u32,
+                ..Splat2D::default()
             }
+            .with_keep_thresh()
         })
         .collect()
 }
