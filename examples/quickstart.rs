@@ -1,16 +1,39 @@
-//! Quickstart: build a scene, build the frame pipeline (which
+//! Quickstart: get a scene (a real `.splat`/`.ply` capture, or the
+//! deterministic procedural stand-in), build the frame pipeline (which
 //! partitions the SLTree exactly once), run the LoD search, render a
 //! frame through a session, and simulate the paper's five hardware
 //! variants — the whole public API in ~50 lines.
 //!
 //! Run: `cargo run --release --example quickstart`
+//! or on a real capture (see `scripts/fetch_scenes.sh`):
+//! `cargo run --release --example quickstart -- scenes/train.splat`
 
 use sltarch::prelude::*;
 use sltarch::sim::HwVariant;
 
 fn main() -> anyhow::Result<()> {
-    // 1. A deterministic synthetic scene (HierarchicalGS stand-in).
-    let scene = SceneConfig::small_scale().quick().build(42);
+    // 1. A scene: load a real .splat / .ply capture when a path is
+    //    given, else the deterministic synthetic HierarchicalGS
+    //    stand-in. Loaded splats flow through the exact same
+    //    SceneBuilder -> SLTree -> session path.
+    let scene = match std::env::args().nth(1) {
+        Some(path) => {
+            let (scene, report) = load_scene(
+                std::path::Path::new(&path),
+                LoadMode::Lossy,
+                &AssembleOptions::default(),
+            )?;
+            println!(
+                "loaded `{path}`: {} splats kept, {} dropped \
+                 ({} SH rest coeffs truncated to degree 0)",
+                report.kept,
+                report.dropped.total(),
+                report.sh_rest_coeffs,
+            );
+            scene
+        }
+        None => SceneConfig::small_scale().quick().build(42),
+    };
     println!(
         "scene `{}`: {} Gaussians, LoD tree height {}",
         scene.name,

@@ -4,10 +4,17 @@
 //! the batched `render_path` API. This is the harness the §Perf
 //! optimization pass iterates against; it also dumps
 //! `BENCH_hotpath.json` so CI can accumulate the perf trajectory.
+use sltarch::assets::{
+    load_ply, load_scene, load_splat, write_ply, write_splat,
+    AssembleOptions, LoadMode,
+};
 use sltarch::config::{RenderConfig, SceneConfig};
 use sltarch::coordinator::renderer::{default_threads, AlphaMode, CpuRenderer};
 use sltarch::coordinator::{BlendKernel, CpuBackend, FramePipeline, RenderOptions};
-use sltarch::gaussian::{project, project_into, project_into_threaded, Splat2D};
+use sltarch::gaussian::{
+    project, project_into, project_into_threaded, Gaussians, Splat2D,
+};
+use sltarch::math::{Quat, Vec3};
 use sltarch::lod::{traverse_sltree, CutCache, CutCacheConfig, SlTree};
 use sltarch::residency::ResidencyConfig;
 use sltarch::scene::{orbit_cameras, walkthrough};
@@ -19,6 +26,7 @@ use sltarch::splat::{
     sort_bins_threaded, sort_bins_with, DepthSortScratch, TileBins,
 };
 use sltarch::util::bench::Bench;
+use sltarch::util::Rng;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick")
@@ -375,6 +383,68 @@ fn main() {
     b.record("serve(burst) recover events", r.recover_events as f64);
     b.record("serve(burst) shed", r.shed_total() as f64);
     b.record("serve queue high water", r.queue_high_water as f64);
+
+    // Asset-ingestion rows: streaming-parse throughput for both
+    // interchange formats over an in-memory batch (encode once, parse
+    // per rep), plus the full ingest -> assemble -> render path on the
+    // checked-in zoo fixture. Parse time must stay a loading-screen
+    // cost, never a per-frame one.
+    let asset_n = if quick { 20_000 } else { 200_000 };
+    let mut arng = Rng::new(0x45537);
+    let mut asset = Gaussians::with_capacity(asset_n);
+    for _ in 0..asset_n {
+        asset.push(
+            Vec3::new(
+                arng.range(-5.0, 5.0),
+                arng.range(-2.0, 2.0),
+                arng.range(-5.0, 5.0),
+            ),
+            Vec3::new(
+                arng.range(0.05, 0.5),
+                arng.range(0.05, 0.5),
+                arng.range(0.05, 0.5),
+            ),
+            Quat::new(
+                0.2 + arng.f32(),
+                arng.range(-1.0, 1.0),
+                arng.range(-1.0, 1.0),
+                arng.range(-1.0, 1.0),
+            ),
+            [arng.f32(), arng.f32(), arng.f32()],
+            arng.range(0.05, 0.99),
+        );
+    }
+    let mut splat_bytes = Vec::new();
+    write_splat(&mut splat_bytes, &asset).expect("encode .splat");
+    let mut ply_bytes = Vec::new();
+    write_ply(&mut ply_bytes, &asset).expect("encode ply");
+    b.record("load(splat) input MB", splat_bytes.len() as f64 / 1e6);
+    b.record("load(ply) input MB", ply_bytes.len() as f64 / 1e6);
+    b.iter(&format!("load(splat, {asset_n} splats)"), 3, || {
+        load_splat(&splat_bytes[..], LoadMode::Strict)
+            .expect("load .splat")
+            .report
+            .kept
+    });
+    b.iter(&format!("load(ply, {asset_n} splats)"), 3, || {
+        load_ply(&ply_bytes[..], LoadMode::Strict)
+            .expect("load ply")
+            .report
+            .kept
+    });
+    let zoo = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/zoo_room.splat");
+    let (fscene, freport) =
+        load_scene(&zoo, LoadMode::Strict, &AssembleOptions::default())
+            .expect("zoo fixture");
+    b.record("load(zoo_room.splat) kept", freport.kept as f64);
+    let fcam = fscene.scenario_camera(0);
+    let fpipe =
+        FramePipeline::builder(fscene).tau(16.0).subtree_size(32).build();
+    let mut fsession = fpipe.session();
+    b.iter("render(loaded zoo_room.splat)", 5, || {
+        fsession.render(&fcam).expect("fixture render").data.len()
+    });
 
     b.report();
     let json = std::path::Path::new("BENCH_hotpath.json");

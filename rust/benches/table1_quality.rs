@@ -1,4 +1,10 @@
-//! Bench: regenerate Table I (rendering quality Org vs SLTARCH).
+//! Bench: regenerate Table I (rendering quality Org vs SLTARCH), plus
+//! the same quality sweep over a *loaded* fixture-zoo asset — real
+//! ingested splats must clear the same Org-vs-SLTARCH bar as the
+//! procedural eval scenes.
+use sltarch::assets::{load_scene, AssembleOptions, LoadMode};
+use sltarch::coordinator::FramePipeline;
+use sltarch::experiments::table1::evaluate_pipeline;
 use sltarch::util::bench::Bench;
 
 fn main() {
@@ -9,6 +15,27 @@ fn main() {
     b.iter("table1_evaluate(small,quick)", 1, || {
         sltarch::experiments::table1::evaluate_scene(&cfg, 42)
     });
+
+    // Quality rows on a loaded asset: the .splat zoo fixture through
+    // the full ingest -> assemble -> render path.
+    let zoo = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/zoo_room.splat");
+    let (scene, report) =
+        load_scene(&zoo, LoadMode::Strict, &AssembleOptions::default())
+            .expect("zoo fixture");
+    b.record("fixture kept splats", report.kept as f64);
+    let pipeline =
+        FramePipeline::builder(scene).tau(16.0).subtree_size(32).build();
+    let mut row = sltarch::experiments::table1::QualityRow::default();
+    b.iter("table1_evaluate(zoo_room.splat)", 1, || {
+        row = evaluate_pipeline(&pipeline);
+        row.psnr_slt
+    });
+    b.record("fixture PSNR org dB", row.psnr_org);
+    b.record("fixture PSNR slt dB", row.psnr_slt);
+    b.record("fixture SSIM org", row.ssim_org);
+    b.record("fixture SSIM slt", row.ssim_slt);
+
     b.report();
     sltarch::experiments::table1::run(quick);
 }

@@ -1,0 +1,269 @@
+//! The 32-byte `.splat` record stream (antimatter15-style).
+//!
+//! Each record is exactly [`SPLAT_RECORD_BYTES`] bytes, little-endian:
+//!
+//! | bytes  | field    | encoding                                      |
+//! |--------|----------|-----------------------------------------------|
+//! | 0..12  | position | `[f32; 3]`                                    |
+//! | 12..24 | scale    | `[f32; 3]`, stored **linearly** (no `exp`)    |
+//! | 24..28 | color    | RGBA `u8 x 4`; `A` is opacity, **already**    |
+//! |        |          | sigmoid-space (no activation on load)         |
+//! | 28..32 | rotation | `u8 x 4` quaternion in `(w, x, y, z)` order,  |
+//! |        |          | decoded as `(byte - 128) / 128` then          |
+//! |        |          | re-normalized                                 |
+//!
+//! There is no header and no declared count: the stream ends at EOF, and
+//! a partial trailing record is the truncation signal. The quantized
+//! color/opacity/rotation make `.splat` a *lossy* interchange format —
+//! round trips are digest-stable, not bitwise (unlike [`super::ply`]).
+
+use std::io::Read;
+
+use crate::gaussian::Gaussians;
+
+use super::{admit, read_full, AssetError, LoadMode, LoadedAsset, RawSplat};
+
+/// Size of one `.splat` record in bytes.
+pub const SPLAT_RECORD_BYTES: usize = 32;
+
+#[inline]
+fn f32_at(buf: &[u8], off: usize) -> f32 {
+    f32::from_le_bytes([buf[off], buf[off + 1], buf[off + 2], buf[off + 3]])
+}
+
+/// Decode the packed `u8` quaternion component: `(byte - 128) / 128`,
+/// covering `[-1.0, 0.9921875]` in steps of `1/128`.
+#[inline]
+fn unpack_rot(b: u8) -> f32 {
+    (b as i32 - 128) as f32 / 128.0
+}
+
+/// Stream a `.splat` record sequence from `r`.
+///
+/// Strict mode fails with a typed [`AssetError`] on the first degenerate
+/// record (non-finite field, zero-norm quaternion) or partial trailing
+/// record; lossy mode drops such records, counts them, and never fails
+/// on record content.
+pub fn load_splat<R: Read>(
+    mut r: R,
+    mode: LoadMode,
+) -> Result<LoadedAsset, AssetError> {
+    let mut out = LoadedAsset::default();
+    let mut buf = [0u8; SPLAT_RECORD_BYTES];
+    loop {
+        let index = out.report.records;
+        let got = read_full(&mut r, &mut buf)?;
+        if got == 0 {
+            break; // clean EOF on a record boundary
+        }
+        if got < SPLAT_RECORD_BYTES {
+            match mode {
+                LoadMode::Strict => {
+                    return Err(AssetError::Truncated { index, got })
+                }
+                LoadMode::Lossy => {
+                    out.report.dropped.truncated_tail += 1;
+                    break;
+                }
+            }
+        }
+        out.report.records += 1;
+        let raw = RawSplat {
+            mean: [f32_at(&buf, 0), f32_at(&buf, 4), f32_at(&buf, 8)],
+            scale: [f32_at(&buf, 12), f32_at(&buf, 16), f32_at(&buf, 20)],
+            color: [
+                buf[24] as f32 / 255.0,
+                buf[25] as f32 / 255.0,
+                buf[26] as f32 / 255.0,
+            ],
+            opacity: buf[27] as f32 / 255.0,
+            quat: [
+                unpack_rot(buf[28]),
+                unpack_rot(buf[29]),
+                unpack_rot(buf[30]),
+                unpack_rot(buf[31]),
+            ],
+        };
+        admit(&raw, index, mode, &mut out.gaussians, &mut out.report)?;
+    }
+    Ok(out)
+}
+
+/// Quantize a `[0, 1]` value to a `u8` channel.
+#[inline]
+fn pack_unit(v: f32) -> u8 {
+    (v * 255.0).round().clamp(0.0, 255.0) as u8
+}
+
+/// Quantize a `[-1, 1]` quaternion component to the packed byte.
+#[inline]
+fn pack_rot(v: f32) -> u8 {
+    (v * 128.0 + 128.0).round().clamp(0.0, 255.0) as u8
+}
+
+/// Encode a splat batch as a `.splat` record stream.
+///
+/// Color, opacity and rotation are quantized to `u8` (the format's
+/// native precision), so `load(write(g))` matches `g` only within
+/// quantization — the fixture-zoo round-trip tests pin the exact
+/// tolerances. Rotations are normalized before packing; a zero-norm
+/// quaternion encodes as identity.
+pub fn write_splat<W: std::io::Write>(
+    mut w: W,
+    g: &Gaussians,
+) -> std::io::Result<()> {
+    let mut buf = [0u8; SPLAT_RECORD_BYTES];
+    for i in 0..g.len() {
+        buf[0..4].copy_from_slice(&g.means[i][0].to_le_bytes());
+        buf[4..8].copy_from_slice(&g.means[i][1].to_le_bytes());
+        buf[8..12].copy_from_slice(&g.means[i][2].to_le_bytes());
+        buf[12..16].copy_from_slice(&g.scales[i][0].to_le_bytes());
+        buf[16..20].copy_from_slice(&g.scales[i][1].to_le_bytes());
+        buf[20..24].copy_from_slice(&g.scales[i][2].to_le_bytes());
+        buf[24] = pack_unit(g.colors[i][0]);
+        buf[25] = pack_unit(g.colors[i][1]);
+        buf[26] = pack_unit(g.colors[i][2]);
+        buf[27] = pack_unit(g.opacity[i]);
+        let q = super::normalize_quat(g.quats[i])
+            .unwrap_or([1.0, 0.0, 0.0, 0.0]);
+        buf[28] = pack_rot(q[0]);
+        buf[29] = pack_rot(q[1]);
+        buf[30] = pack_rot(q[2]);
+        buf[31] = pack_rot(q[3]);
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assets::LoadMode;
+    use crate::math::{Quat, Vec3};
+
+    fn sample() -> Gaussians {
+        let mut g = Gaussians::default();
+        g.push(
+            Vec3::new(1.5, -2.25, 3.0),
+            Vec3::new(0.5, 0.25, 0.125),
+            Quat::IDENTITY,
+            [1.0, 0.5, 0.0],
+            0.8,
+        );
+        g.push(
+            Vec3::new(-4.0, 0.0, 7.5),
+            Vec3::splat(0.0625),
+            Quat::from_axis_angle(Vec3::new(0.0, 1.0, 0.0), 0.9),
+            [0.2, 0.4, 0.6],
+            1.0,
+        );
+        g
+    }
+
+    #[test]
+    fn round_trip_within_quantization() {
+        let g = sample();
+        let mut bytes = Vec::new();
+        write_splat(&mut bytes, &g).unwrap();
+        assert_eq!(bytes.len(), g.len() * SPLAT_RECORD_BYTES);
+        let got = load_splat(&bytes[..], LoadMode::Strict).unwrap();
+        assert_eq!(got.gaussians.len(), g.len());
+        assert_eq!(got.report.kept, g.len());
+        for i in 0..g.len() {
+            // Positions and scales are raw f32: bit-exact.
+            assert_eq!(got.gaussians.means[i], g.means[i]);
+            assert_eq!(got.gaussians.scales[i], g.scales[i]);
+            // Color/opacity quantized to 1/255.
+            for k in 0..3 {
+                assert!(
+                    (got.gaussians.colors[i][k] - g.colors[i][k]).abs()
+                        <= 0.5 / 255.0 + 1e-6
+                );
+            }
+            assert!(
+                (got.gaussians.opacity[i] - g.opacity[i]).abs()
+                    <= 0.5 / 255.0 + 1e-6
+            );
+            // Quats quantized to 1/128 then renormalized.
+            for k in 0..4 {
+                assert!(
+                    (got.gaussians.quats[i][k] - g.quats[i][k]).abs()
+                        <= 1.0 / 128.0 + 1e-5
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_offset() {
+        let g = sample();
+        let mut bytes = Vec::new();
+        write_splat(&mut bytes, &g).unwrap();
+        for cut in 0..bytes.len() {
+            let slice = &bytes[..cut];
+            let partial = cut % SPLAT_RECORD_BYTES != 0;
+            match load_splat(slice, LoadMode::Strict) {
+                Ok(a) => {
+                    assert!(!partial, "cut {cut} should be truncated");
+                    assert_eq!(a.report.records, cut / SPLAT_RECORD_BYTES);
+                }
+                Err(AssetError::Truncated { index, got }) => {
+                    assert!(partial, "cut {cut} wrongly truncated");
+                    assert_eq!(index, cut / SPLAT_RECORD_BYTES);
+                    assert_eq!(got, cut % SPLAT_RECORD_BYTES);
+                }
+                Err(e) => panic!("cut {cut}: wrong error {e}"),
+            }
+            // Lossy never fails and keeps the whole records.
+            let a = load_splat(slice, LoadMode::Lossy).unwrap();
+            assert_eq!(a.report.kept, cut / SPLAT_RECORD_BYTES);
+            assert_eq!(
+                a.report.dropped.truncated_tail,
+                u64::from(partial)
+            );
+        }
+    }
+
+    #[test]
+    fn nan_position_is_typed_strict_dropped_lossy() {
+        let g = sample();
+        let mut bytes = Vec::new();
+        write_splat(&mut bytes, &g).unwrap();
+        // Poison record 1's y-position with a NaN bit pattern.
+        let off = SPLAT_RECORD_BYTES + 4;
+        bytes[off..off + 4].copy_from_slice(&f32::NAN.to_le_bytes());
+        match load_splat(&bytes[..], LoadMode::Strict) {
+            Err(AssetError::NonFinite { field: "position", index: 1 }) => {}
+            other => panic!("wrong result: {other:?}"),
+        }
+        let a = load_splat(&bytes[..], LoadMode::Lossy).unwrap();
+        assert_eq!(a.report.kept, 1);
+        assert_eq!(a.report.dropped.bad_position, 1);
+    }
+
+    #[test]
+    fn zero_quat_bytes_decode_to_identityless_drop() {
+        // All-128 rotation bytes decode to the zero quaternion.
+        let mut bytes = vec![0u8; SPLAT_RECORD_BYTES];
+        bytes[12..16].copy_from_slice(&1.0f32.to_le_bytes()); // scale > 0
+        bytes[16..20].copy_from_slice(&1.0f32.to_le_bytes());
+        bytes[20..24].copy_from_slice(&1.0f32.to_le_bytes());
+        for b in &mut bytes[28..32] {
+            *b = 128;
+        }
+        match load_splat(&bytes[..], LoadMode::Strict) {
+            Err(AssetError::ZeroNormQuat { index: 0 }) => {}
+            other => panic!("wrong result: {other:?}"),
+        }
+        let a = load_splat(&bytes[..], LoadMode::Lossy).unwrap();
+        assert_eq!(a.report.kept, 0);
+        assert_eq!(a.report.dropped.bad_rotation, 1);
+    }
+
+    #[test]
+    fn empty_stream_is_an_empty_asset() {
+        let a = load_splat(&[][..], LoadMode::Strict).unwrap();
+        assert_eq!(a.report.records, 0);
+        assert!(a.gaussians.is_empty());
+    }
+}

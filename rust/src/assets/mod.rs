@@ -1,0 +1,600 @@
+//! Real-asset ingestion: streaming parsers for the two de-facto 3DGS
+//! interchange formats, plus the matching encoders the fixture zoo and
+//! round-trip tests are built on.
+//!
+//! * [`dot_splat`] — the 32-byte `.splat` record stream
+//!   (antimatter15-style): position `[f32; 3]`, scale `[f32; 3]`
+//!   (stored **linearly**, unlike PLY), RGBA `u8 x 4` color + opacity
+//!   (opacity already sigmoid-space), and a packed `u8 x 4` rotation
+//!   quaternion decoded as `(byte - 128) / 128` then re-normalized.
+//! * [`ply`] — binary little-endian PLY with the 3DGS training-output
+//!   vertex schema: property order is **header-driven** (never assume
+//!   field order), `f_dc_*` maps to color through the SH C0 constant,
+//!   optional `f_rest_*` SH bands are parsed and band-truncated to
+//!   degree 0 for now, `opacity` passes through a sigmoid, `scale_*`
+//!   through `exp`, and `rot_*` is re-normalized.
+//!
+//! Both parsers stream from any [`std::io::Read`] / [`std::io::BufRead`]
+//! source, return typed [`AssetError`]s in [`LoadMode::Strict`] and
+//! never panic in [`LoadMode::Lossy`], which instead drops degenerate
+//! splats and counts them in [`DropCounters`]. A loaded batch feeds the
+//! existing `SceneBuilder` -> SLTree partition path via
+//! [`assemble_scene`], so loaded scenes flow through sessions, the cut
+//! cache, residency and serving unchanged.
+//!
+//! The checked-in fixture zoo lives in `rust/tests/fixtures/` (see
+//! `docs/TESTING.md`); full-size captures are fetched out-of-band by
+//! `scripts/fetch_scenes.sh` (sha256-verified, never run in CI).
+#![warn(missing_docs)]
+
+pub mod dot_splat;
+pub mod ply;
+
+pub use dot_splat::{load_splat, write_splat, SPLAT_RECORD_BYTES};
+pub use ply::{load_ply, write_ply, SH_C0};
+
+use std::path::Path;
+
+use crate::gaussian::Gaussians;
+use crate::scene::{build_lod_tree, scenario_cameras, Scene};
+
+/// Hard bound on |position| / scale components a *lossy* load will
+/// admit: beyond it the projection maths can overflow `f32` for
+/// plausible cameras, so such splats would only ever be culled.
+pub const MAX_COORD: f32 = 1e12;
+
+/// How a parser reacts to degenerate input.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LoadMode {
+    /// Return the first typed [`AssetError`] and stop.
+    #[default]
+    Strict,
+    /// Never fail on degenerate *records*: drop them, count them in
+    /// [`DropCounters`], and keep going. Structural errors (bad magic,
+    /// bad header, unsupported property types) still fail — without a
+    /// valid header there is nothing to salvage.
+    Lossy,
+}
+
+/// Per-cause counters for splats a lossy load dropped.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DropCounters {
+    /// Non-finite or out-of-range (>[`MAX_COORD`]) position.
+    pub bad_position: u64,
+    /// Non-finite, non-positive or out-of-range scale.
+    pub bad_scale: u64,
+    /// Non-finite or zero-norm rotation quaternion.
+    pub bad_rotation: u64,
+    /// Non-finite opacity.
+    pub bad_opacity: u64,
+    /// Non-finite color.
+    pub bad_color: u64,
+    /// Partial trailing record (1 at most — parsing stops there).
+    pub truncated_tail: u64,
+}
+
+impl DropCounters {
+    /// Total number of records dropped.
+    pub fn total(&self) -> u64 {
+        self.bad_position
+            + self.bad_scale
+            + self.bad_rotation
+            + self.bad_opacity
+            + self.bad_color
+            + self.truncated_tail
+    }
+}
+
+/// What a load did: record counts, drop counters, format telemetry.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LoadReport {
+    /// Complete records decoded from the source (kept plus field-level
+    /// drops; a partial trailing record is counted only in
+    /// [`DropCounters::truncated_tail`]).
+    pub records: usize,
+    /// Splats admitted into the batch.
+    pub kept: usize,
+    /// Lossy-mode drop counters (all zero on a strict load — strict
+    /// fails instead of dropping).
+    pub dropped: DropCounters,
+    /// `f_rest_*` SH coefficients per vertex found in a PLY header
+    /// (parsed for stride, band-truncated to degree 0 for now; always 0
+    /// for `.splat`, which carries no SH rest bands).
+    pub sh_rest_coeffs: usize,
+}
+
+/// A parsed batch of splats plus its [`LoadReport`].
+#[derive(Clone, Debug, Default)]
+pub struct LoadedAsset {
+    /// The admitted splats, in file order.
+    pub gaussians: Gaussians,
+    /// Counters describing the load.
+    pub report: LoadReport,
+}
+
+/// Typed asset-ingestion errors.
+#[derive(Debug)]
+pub enum AssetError {
+    /// Underlying I/O failure (not a format problem).
+    Io(std::io::Error),
+    /// The source ended mid-record.
+    Truncated {
+        /// Index of the record that was cut short.
+        index: usize,
+        /// Bytes of it that were present.
+        got: usize,
+    },
+    /// The file does not start with the expected magic (`ply`).
+    BadMagic,
+    /// The header is structurally invalid (the message names the line).
+    BadHeader(String),
+    /// A required property has an unsupported type (or is a `list`).
+    UnsupportedProperty {
+        /// Property name as it appears in the header.
+        name: String,
+        /// The offending type token.
+        ty: String,
+    },
+    /// The header declares an implausible vertex count.
+    AbsurdVertexCount {
+        /// The declared count.
+        count: u64,
+    },
+    /// A record field is non-finite (strict mode only; the field name
+    /// is one of `position`, `scale`, `rotation`, `opacity`, `color`).
+    NonFinite {
+        /// Which field was non-finite.
+        field: &'static str,
+        /// Record index.
+        index: usize,
+    },
+    /// A rotation quaternion with zero norm (strict mode only).
+    ZeroNormQuat {
+        /// Record index.
+        index: usize,
+    },
+    /// No splats survived the load — nothing to build a scene from.
+    EmptyScene,
+}
+
+impl std::fmt::Display for AssetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AssetError::Io(e) => write!(f, "asset i/o error: {e}"),
+            AssetError::Truncated { index, got } => write!(
+                f,
+                "truncated record {index}: only {got} bytes of it present"
+            ),
+            AssetError::BadMagic => write!(f, "bad magic: not a PLY file"),
+            AssetError::BadHeader(m) => write!(f, "bad header: {m}"),
+            AssetError::UnsupportedProperty { name, ty } => {
+                write!(f, "unsupported property type `{ty}` for `{name}`")
+            }
+            AssetError::AbsurdVertexCount { count } => {
+                write!(f, "absurd vertex count {count}")
+            }
+            AssetError::NonFinite { field, index } => {
+                write!(f, "non-finite {field} in record {index}")
+            }
+            AssetError::ZeroNormQuat { index } => {
+                write!(f, "zero-norm rotation quaternion in record {index}")
+            }
+            AssetError::EmptyScene => {
+                write!(f, "no splats survived the load")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AssetError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            AssetError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for AssetError {
+    fn from(e: std::io::Error) -> Self {
+        AssetError::Io(e)
+    }
+}
+
+/// Fill `buf` from `r`, tolerating short reads and `Interrupted`.
+/// Returns the number of bytes actually read (< `buf.len()` only at
+/// EOF) — the caller turns a short count into its truncation handling.
+pub(crate) fn read_full<R: std::io::Read>(
+    r: &mut R,
+    buf: &mut [u8],
+) -> std::io::Result<usize> {
+    let mut n = 0;
+    while n < buf.len() {
+        match r.read(&mut buf[n..]) {
+            Ok(0) => break,
+            Ok(k) => n += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(n)
+}
+
+/// One decoded record before admission (quat *not* yet normalized).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct RawSplat {
+    pub mean: [f32; 3],
+    pub scale: [f32; 3],
+    /// `(w, x, y, z)`, matching [`Gaussians::quats`] order.
+    pub quat: [f32; 4],
+    pub color: [f32; 3],
+    pub opacity: f32,
+}
+
+/// Relative tolerance (on the squared f64 norm) under which a
+/// quaternion is considered already unit-length and passed through
+/// bitwise. Makes normalization exactly idempotent: re-normalizing a
+/// quat this function produced is a no-op, which is what lets a
+/// PLY round trip reproduce a loaded scene bit for bit.
+const QUAT_SNAP: f64 = 1e-6;
+
+/// Normalize `(w, x, y, z)` through f64, snapping already-unit inputs
+/// to themselves (see [`QUAT_SNAP`]). Returns `None` for a zero-norm
+/// quat. Callers must reject non-finite components first.
+pub(crate) fn normalize_quat(q: [f32; 4]) -> Option<[f32; 4]> {
+    let n2: f64 = q.iter().map(|&c| c as f64 * c as f64).sum();
+    if n2 == 0.0 {
+        return None;
+    }
+    if (n2 - 1.0).abs() <= QUAT_SNAP {
+        return Some(q);
+    }
+    let inv = 1.0 / n2.sqrt();
+    Some([
+        (q[0] as f64 * inv) as f32,
+        (q[1] as f64 * inv) as f32,
+        (q[2] as f64 * inv) as f32,
+        (q[3] as f64 * inv) as f32,
+    ])
+}
+
+/// Check a *stored* splat for the well-formedness the lossy loader
+/// guarantees: every field finite, |position| and scale within
+/// [`MAX_COORD`], scale positive, quat unit-norm, opacity in `[0, 1]`.
+/// Returns the first offending field name, or `None` when well-formed.
+/// (This is the invariant the degenerate-input fuzz suite pins: a
+/// lossy load never emits a splat the projection guards would have to
+/// cull for being non-finite.)
+pub fn splat_defect(g: &Gaussians, i: usize) -> Option<&'static str> {
+    let finite3 = |v: &[f32; 3]| v.iter().all(|c| c.is_finite());
+    if !finite3(&g.means[i]) || g.means[i].iter().any(|c| c.abs() > MAX_COORD) {
+        return Some("position");
+    }
+    if !finite3(&g.scales[i])
+        || g.scales[i].iter().any(|&c| !(c > 0.0) || c > MAX_COORD)
+    {
+        return Some("scale");
+    }
+    let q = &g.quats[i];
+    let n2: f64 = q.iter().map(|&c| c as f64 * c as f64).sum();
+    if !n2.is_finite() || (n2 - 1.0).abs() > 1e-3 {
+        return Some("rotation");
+    }
+    if !g.opacity[i].is_finite() || !(0.0..=1.0).contains(&g.opacity[i]) {
+        return Some("opacity");
+    }
+    if !finite3(&g.colors[i]) {
+        return Some("color");
+    }
+    None
+}
+
+/// Validate one decoded record and either push it into `g`, drop it
+/// (lossy: bump the matching counter), or fail (strict: typed error).
+pub(crate) fn admit(
+    raw: &RawSplat,
+    index: usize,
+    mode: LoadMode,
+    g: &mut Gaussians,
+    rep: &mut LoadReport,
+) -> Result<(), AssetError> {
+    let lossy = mode == LoadMode::Lossy;
+    let finite3 = |v: &[f32; 3]| v.iter().all(|c| c.is_finite());
+
+    if !finite3(&raw.mean) {
+        if lossy {
+            rep.dropped.bad_position += 1;
+            return Ok(());
+        }
+        return Err(AssetError::NonFinite { field: "position", index });
+    }
+    if !finite3(&raw.scale) {
+        if lossy {
+            rep.dropped.bad_scale += 1;
+            return Ok(());
+        }
+        return Err(AssetError::NonFinite { field: "scale", index });
+    }
+    if !raw.quat.iter().all(|c| c.is_finite()) {
+        if lossy {
+            rep.dropped.bad_rotation += 1;
+            return Ok(());
+        }
+        return Err(AssetError::NonFinite { field: "rotation", index });
+    }
+    if !raw.opacity.is_finite() {
+        if lossy {
+            rep.dropped.bad_opacity += 1;
+            return Ok(());
+        }
+        return Err(AssetError::NonFinite { field: "opacity", index });
+    }
+    if !finite3(&raw.color) {
+        if lossy {
+            rep.dropped.bad_color += 1;
+            return Ok(());
+        }
+        return Err(AssetError::NonFinite { field: "color", index });
+    }
+    let quat = match normalize_quat(raw.quat) {
+        Some(q) => q,
+        None => {
+            if lossy {
+                rep.dropped.bad_rotation += 1;
+                return Ok(());
+            }
+            return Err(AssetError::ZeroNormQuat { index });
+        }
+    };
+    // Finite-but-unrenderable ranges: strict keeps them (a faithful
+    // load), lossy drops them (they could only ever be culled).
+    if lossy {
+        if raw.mean.iter().any(|c| c.abs() > MAX_COORD) {
+            rep.dropped.bad_position += 1;
+            return Ok(());
+        }
+        if raw.scale.iter().any(|&c| !(c > 0.0) || c > MAX_COORD) {
+            rep.dropped.bad_scale += 1;
+            return Ok(());
+        }
+        if !(0.0..=1.0).contains(&raw.opacity) {
+            rep.dropped.bad_opacity += 1;
+            return Ok(());
+        }
+    }
+    g.means.push(raw.mean);
+    g.scales.push(raw.scale);
+    g.quats.push(quat);
+    g.colors.push(raw.color);
+    g.opacity.push(raw.opacity);
+    rep.kept += 1;
+    Ok(())
+}
+
+/// How to turn a loaded splat batch into a renderable [`Scene`].
+#[derive(Clone, Debug)]
+pub struct AssembleOptions {
+    /// Scene name (defaults to the file stem in [`load_scene`]).
+    pub name: String,
+    /// Evaluation-camera image width in pixels.
+    pub width: u32,
+    /// Evaluation-camera image height in pixels.
+    pub height: u32,
+    /// LoD-tree build seed (grouping randomness; deterministic).
+    pub seed: u64,
+    /// Mean sibling-group size for the LoD-tree build.
+    pub mean_fanout: f32,
+    /// Sibling-group size cap for the LoD-tree build.
+    pub max_fanout: usize,
+}
+
+impl Default for AssembleOptions {
+    fn default() -> Self {
+        AssembleOptions {
+            name: "loaded".into(),
+            width: 256,
+            height: 256,
+            seed: 42,
+            mean_fanout: 2.0,
+            max_fanout: 512,
+        }
+    }
+}
+
+/// Build a [`Scene`] over loaded leaves: LoD tree via the same
+/// bottom-up builder procedural scenes use, scenario cameras sized to
+/// the cloud's bounding box. Fails with [`AssetError::EmptyScene`] on
+/// an empty batch (the tree builder needs at least one leaf).
+pub fn assemble_scene(
+    leaves: Gaussians,
+    opts: &AssembleOptions,
+) -> Result<Scene, AssetError> {
+    if leaves.is_empty() {
+        return Err(AssetError::EmptyScene);
+    }
+    // Half-extent for the orbit cameras: the farthest coordinate from
+    // the origin (captures are kept un-recentred — the data stays pure).
+    let mut extent = 0.0f32;
+    for m in &leaves.means {
+        for c in m {
+            extent = extent.max(c.abs());
+        }
+    }
+    let extent = extent.max(1e-3);
+    let (gaussians, tree, _stats) =
+        build_lod_tree(leaves, opts.seed, opts.mean_fanout, opts.max_fanout);
+    let cameras = scenario_cameras(extent, opts.width, opts.height);
+    Ok(Scene { name: opts.name.clone(), gaussians, tree, cameras })
+}
+
+/// Load a `.splat` or `.ply` file into a renderable [`Scene`].
+///
+/// The format is picked by extension (`.splat` / `.ply`), falling back
+/// to sniffing the `ply` magic. The scene name defaults to the file
+/// stem when `opts.name` is the [`AssembleOptions::default`] value.
+pub fn load_scene(
+    path: &Path,
+    mode: LoadMode,
+    opts: &AssembleOptions,
+) -> Result<(Scene, LoadReport), AssetError> {
+    let file = std::fs::File::open(path)?;
+    let mut reader = std::io::BufReader::new(file);
+    let is_ply = match path.extension().and_then(|e| e.to_str()) {
+        Some(e) if e.eq_ignore_ascii_case("ply") => true,
+        Some(e) if e.eq_ignore_ascii_case("splat") => false,
+        _ => {
+            use std::io::BufRead;
+            reader.fill_buf()?.starts_with(b"ply")
+        }
+    };
+    let asset = if is_ply {
+        load_ply(reader, mode)?
+    } else {
+        load_splat(reader, mode)?
+    };
+    let mut opts = opts.clone();
+    if opts.name == AssembleOptions::default().name {
+        if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+            opts.name = stem.to_string();
+        }
+    }
+    let scene = assemble_scene(asset.gaussians, &opts)?;
+    Ok((scene, asset.report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Quat, Vec3};
+
+    fn good_raw() -> RawSplat {
+        RawSplat {
+            mean: [1.0, 2.0, 3.0],
+            scale: [0.1, 0.2, 0.3],
+            quat: [1.0, 0.0, 0.0, 0.0],
+            color: [0.5, 0.6, 0.7],
+            opacity: 0.8,
+        }
+    }
+
+    #[test]
+    fn admit_keeps_good_records_in_both_modes() {
+        for mode in [LoadMode::Strict, LoadMode::Lossy] {
+            let mut g = Gaussians::default();
+            let mut rep = LoadReport::default();
+            admit(&good_raw(), 0, mode, &mut g, &mut rep).unwrap();
+            assert_eq!(g.len(), 1, "{mode:?}");
+            assert_eq!(rep.kept, 1);
+            assert_eq!(rep.dropped.total(), 0);
+            assert_eq!(splat_defect(&g, 0), None);
+        }
+    }
+
+    #[test]
+    fn admit_rejects_each_degenerate_field() {
+        let cases: Vec<(RawSplat, &str)> = vec![
+            (RawSplat { mean: [f32::NAN, 0.0, 0.0], ..good_raw() }, "position"),
+            (
+                RawSplat { scale: [0.1, f32::INFINITY, 0.1], ..good_raw() },
+                "scale",
+            ),
+            (
+                RawSplat { quat: [f32::NAN, 0.0, 0.0, 0.0], ..good_raw() },
+                "rotation",
+            ),
+            (RawSplat { opacity: f32::NAN, ..good_raw() }, "opacity"),
+            (
+                RawSplat { color: [0.1, f32::NEG_INFINITY, 0.1], ..good_raw() },
+                "color",
+            ),
+        ];
+        for (raw, field) in cases {
+            // Strict: typed error naming the field.
+            let mut g = Gaussians::default();
+            let mut rep = LoadReport::default();
+            match admit(&raw, 7, LoadMode::Strict, &mut g, &mut rep) {
+                Err(AssetError::NonFinite { field: f, index: 7 }) => {
+                    assert_eq!(f, field)
+                }
+                other => panic!("{field}: wrong result {other:?}"),
+            }
+            // Lossy: dropped + counted, never pushed.
+            let mut g = Gaussians::default();
+            let mut rep = LoadReport::default();
+            admit(&raw, 7, LoadMode::Lossy, &mut g, &mut rep).unwrap();
+            assert_eq!(g.len(), 0, "{field}");
+            assert_eq!(rep.dropped.total(), 1, "{field}");
+        }
+    }
+
+    #[test]
+    fn zero_norm_quat_is_typed_strict_and_dropped_lossy() {
+        let raw = RawSplat { quat: [0.0; 4], ..good_raw() };
+        let mut g = Gaussians::default();
+        let mut rep = LoadReport::default();
+        match admit(&raw, 3, LoadMode::Strict, &mut g, &mut rep) {
+            Err(AssetError::ZeroNormQuat { index: 3 }) => {}
+            other => panic!("wrong result {other:?}"),
+        }
+        admit(&raw, 3, LoadMode::Lossy, &mut g, &mut rep).unwrap();
+        assert_eq!(g.len(), 0);
+        assert_eq!(rep.dropped.bad_rotation, 1);
+    }
+
+    #[test]
+    fn lossy_drops_out_of_range_but_strict_keeps() {
+        let raw = RawSplat { mean: [2e12, 0.0, 0.0], ..good_raw() };
+        let mut g = Gaussians::default();
+        let mut rep = LoadReport::default();
+        admit(&raw, 0, LoadMode::Strict, &mut g, &mut rep).unwrap();
+        assert_eq!(g.len(), 1, "strict keeps finite-but-huge");
+        admit(&raw, 1, LoadMode::Lossy, &mut g, &mut rep).unwrap();
+        assert_eq!(g.len(), 1, "lossy drops finite-but-huge");
+        assert_eq!(rep.dropped.bad_position, 1);
+    }
+
+    #[test]
+    fn normalize_quat_is_idempotent_bitwise() {
+        // Unnormalized in, unit out; a second pass must be a no-op
+        // (the PLY round-trip identity depends on this snap).
+        for q in [
+            [1.0f32, 2.0, -3.0, 0.5],
+            [0.001, 0.0, 0.0, 0.0],
+            [1e20, -1e20, 1e19, 0.0],
+            [-0.3, 0.4, 0.5, -0.6],
+        ] {
+            let n1 = normalize_quat(q).unwrap();
+            let n2 = normalize_quat(n1).unwrap();
+            for k in 0..4 {
+                assert_eq!(n1[k].to_bits(), n2[k].to_bits(), "{q:?}[{k}]");
+            }
+            let norm: f64 = n1.iter().map(|&c| c as f64 * c as f64).sum();
+            assert!((norm - 1.0).abs() < 1e-5, "{q:?} -> {norm}");
+        }
+        assert!(normalize_quat([0.0; 4]).is_none());
+    }
+
+    #[test]
+    fn assemble_builds_a_renderable_scene() {
+        let mut g = Gaussians::default();
+        // A loose shell of splats around the origin.
+        for i in 0..600u32 {
+            let a = i as f32 * 0.61;
+            g.push(
+                Vec3::new(4.0 * a.cos(), (i % 7) as f32 * 0.5 - 1.5, 4.0 * a.sin()),
+                Vec3::splat(0.2),
+                Quat::IDENTITY,
+                [0.5, 0.4, 0.3],
+                0.8,
+            );
+        }
+        let scene = assemble_scene(g, &AssembleOptions::default()).unwrap();
+        assert_eq!(scene.cameras.len(), 6);
+        assert!(scene.tree.len() > 600, "interior nodes missing");
+        scene.tree.check_invariants().unwrap();
+        assert!(matches!(
+            assemble_scene(Gaussians::default(), &AssembleOptions::default()),
+            Err(AssetError::EmptyScene)
+        ));
+    }
+}

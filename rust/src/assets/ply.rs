@@ -1,0 +1,710 @@
+//! Binary little-endian PLY with the 3DGS training-output schema.
+//!
+//! The header names every vertex property in file order, so the parser
+//! is entirely **header-driven**: required fields are located by name,
+//! unknown properties (normals, extra channels) are skipped by their
+//! declared size, and the record stride is whatever the header says —
+//! property order is never assumed. Required float32 fields:
+//! `x y z`, `f_dc_0..2`, `opacity`, `scale_0..2`, `rot_0..3`.
+//!
+//! Field activations (inverse of how 3DGS training stores them):
+//!
+//! * color = `0.5 + SH_C0 * f_dc_k` ([`SH_C0`] is the degree-0 real
+//!   spherical-harmonic basis constant),
+//! * `opacity` through a sigmoid (stored as a logit),
+//! * `scale_*` through `exp` (stored as a log-scale),
+//! * `rot_*` re-normalized, `(w, x, y, z)` component order.
+//!
+//! Optional `f_rest_*` higher-order SH bands are parsed (counted and
+//! strided over) and band-truncated to degree 0 for now — the count is
+//! reported in [`super::LoadReport::sh_rest_coeffs`].
+//!
+//! [`write_ply`] is the matching encoder. It searches each stored
+//! field's *preimage* under the loader's activation (monotone bisection
+//! in sortable-bit space), so re-encoding a **loaded** scene reproduces
+//! it bit for bit: `load(write(s))` is the identity on any `s` that a
+//! load produced. That is what makes PLY round-trip renders
+//! byte-identical where `.splat`'s `u8` quantization is only
+//! digest-stable.
+
+use std::io::BufRead;
+
+use crate::gaussian::Gaussians;
+use crate::splat::float_to_sortable_uint;
+
+use super::{
+    admit, read_full, AssetError, LoadMode, LoadReport, LoadedAsset, RawSplat,
+};
+
+/// Degree-0 real spherical-harmonic basis constant: color channels are
+/// stored as `(color - 0.5) / SH_C0` by 3DGS training code.
+pub const SH_C0: f32 = 0.282_094_8;
+
+/// Vertex counts above this are treated as corrupt headers rather than
+/// data ([`AssetError::AbsurdVertexCount`]): 100M splats is ~5x the
+/// largest published 3DGS captures.
+const MAX_VERTEX_COUNT: u64 = 100_000_000;
+
+/// Header caps: maximum line length and line count before the header is
+/// declared structurally bad (a binary blob mistaken for a header would
+/// otherwise be scanned for a `\n` indefinitely).
+const MAX_HEADER_LINE: usize = 1024;
+const MAX_HEADER_LINES: usize = 4096;
+
+/// The 14 required vertex properties, all `float32`.
+const REQUIRED: [&str; 14] = [
+    "x", "y", "z", "f_dc_0", "f_dc_1", "f_dc_2", "opacity", "scale_0",
+    "scale_1", "scale_2", "rot_0", "rot_1", "rot_2", "rot_3",
+];
+
+/// Size in bytes of a PLY scalar type token, `None` if unknown.
+fn scalar_size(ty: &str) -> Option<usize> {
+    Some(match ty {
+        "char" | "int8" | "uchar" | "uint8" => 1,
+        "short" | "int16" | "ushort" | "uint16" => 2,
+        "int" | "int32" | "uint" | "uint32" | "float" | "float32" => 4,
+        "double" | "float64" => 8,
+        _ => return None,
+    })
+}
+
+/// An element mid-description: name, declared count, running stride.
+struct ElemHdr {
+    name: String,
+    count: u64,
+    stride: usize,
+}
+
+/// Where everything lives in one vertex record.
+struct VertexLayout {
+    /// Declared vertex count.
+    count: u64,
+    /// Bytes per vertex record.
+    stride: usize,
+    /// Byte offset of each [`REQUIRED`] field within a record.
+    offsets: [usize; 14],
+    /// Number of `f_rest_*` SH coefficients per vertex.
+    sh_rest: usize,
+    /// Bytes of non-vertex elements stored *before* the vertex data.
+    pre_skip: u64,
+}
+
+/// Fold a finished element into the layout (vertex) or the pre-vertex
+/// byte skip (anything declared before the vertex element). Elements
+/// *after* the vertex element need neither: parsing stops once the
+/// vertex records are consumed.
+fn finish_element(
+    cur: &mut Option<ElemHdr>,
+    layout: &mut Option<VertexLayout>,
+    pre_skip: &mut u64,
+) {
+    if let Some(e) = cur.take() {
+        if e.name == "vertex" {
+            *layout = Some(VertexLayout {
+                count: e.count,
+                stride: e.stride,
+                offsets: [usize::MAX; 14],
+                sh_rest: 0,
+                pre_skip: 0,
+            });
+        } else if layout.is_none() {
+            *pre_skip += e.count.saturating_mul(e.stride as u64);
+        }
+    }
+}
+
+/// Read one `\n`-terminated header line (CR trimmed), with length caps.
+/// EOF before any byte is a structural error — a header never just ends.
+fn header_line<R: BufRead>(r: &mut R) -> Result<String, AssetError> {
+    let mut raw = Vec::new();
+    let mut limited = r.take((MAX_HEADER_LINE + 1) as u64);
+    let n = limited.read_until(b'\n', &mut raw)?;
+    if n == 0 {
+        return Err(AssetError::BadHeader("unexpected end of header".into()));
+    }
+    if raw.len() > MAX_HEADER_LINE {
+        return Err(AssetError::BadHeader("header line too long".into()));
+    }
+    while raw.last() == Some(&b'\n') || raw.last() == Some(&b'\r') {
+        raw.pop();
+    }
+    String::from_utf8(raw)
+        .map_err(|_| AssetError::BadHeader("non-UTF-8 header line".into()))
+}
+
+/// Parse the header through `end_header`, returning the vertex layout.
+fn parse_header<R: BufRead>(r: &mut R) -> Result<VertexLayout, AssetError> {
+    if header_line(r)? != "ply" {
+        return Err(AssetError::BadMagic);
+    }
+    let mut format_ok = false;
+    let mut cur: Option<ElemHdr> = None;
+    let mut layout: Option<VertexLayout> = None;
+    let mut pre_skip: u64 = 0;
+    let mut offsets = [usize::MAX; 14];
+    let mut sh_rest = 0usize;
+
+    for _ in 0..MAX_HEADER_LINES {
+        let line = header_line(r)?;
+        let mut tok = line.split_ascii_whitespace();
+        match tok.next() {
+            None => continue, // blank line
+            Some("comment") | Some("obj_info") => continue,
+            Some("format") => {
+                let kind = tok.next().unwrap_or("");
+                if kind != "binary_little_endian" {
+                    return Err(AssetError::BadHeader(format!(
+                        "unsupported format `{kind}` (need binary_little_endian)"
+                    )));
+                }
+                format_ok = true;
+            }
+            Some("element") => {
+                finish_element(&mut cur, &mut layout, &mut pre_skip);
+                let name = tok
+                    .next()
+                    .ok_or_else(|| {
+                        AssetError::BadHeader("element without a name".into())
+                    })?
+                    .to_string();
+                let count: u64 = tok
+                    .next()
+                    .and_then(|c| c.parse().ok())
+                    .ok_or_else(|| {
+                        AssetError::BadHeader(format!(
+                            "element `{name}` without a count"
+                        ))
+                    })?;
+                if name == "vertex" {
+                    if layout.is_some() {
+                        return Err(AssetError::BadHeader(
+                            "duplicate vertex element".into(),
+                        ));
+                    }
+                    if count > MAX_VERTEX_COUNT {
+                        return Err(AssetError::AbsurdVertexCount { count });
+                    }
+                }
+                cur = Some(ElemHdr { name, count, stride: 0 });
+            }
+            Some("property") => {
+                let e = cur.as_mut().ok_or_else(|| {
+                    AssetError::BadHeader("property before any element".into())
+                })?;
+                let in_vertex = e.name == "vertex";
+                // Elements after the vertex element are never read, so
+                // their exotic properties are harmless.
+                let relevant = in_vertex || layout.is_none();
+                let ty = tok.next().unwrap_or("").to_string();
+                if ty == "list" {
+                    // Variable-length records make the stride
+                    // unknowable, so a list at or before the vertex
+                    // data is unsupported.
+                    if relevant {
+                        let pname =
+                            tok.next_back().unwrap_or("<unnamed>").to_string();
+                        return Err(AssetError::UnsupportedProperty {
+                            name: pname,
+                            ty,
+                        });
+                    }
+                    continue;
+                }
+                let pname = tok
+                    .next()
+                    .ok_or_else(|| {
+                        AssetError::BadHeader("property without a name".into())
+                    })?
+                    .to_string();
+                let size = match scalar_size(&ty) {
+                    Some(s) => s,
+                    None if relevant => {
+                        return Err(AssetError::UnsupportedProperty {
+                            name: pname,
+                            ty,
+                        })
+                    }
+                    None => continue,
+                };
+                if in_vertex {
+                    if let Some(slot) =
+                        REQUIRED.iter().position(|&f| f == pname)
+                    {
+                        if ty != "float" && ty != "float32" {
+                            return Err(AssetError::UnsupportedProperty {
+                                name: pname,
+                                ty,
+                            });
+                        }
+                        if offsets[slot] != usize::MAX {
+                            return Err(AssetError::BadHeader(format!(
+                                "duplicate property `{pname}`"
+                            )));
+                        }
+                        offsets[slot] = e.stride;
+                    } else if pname.starts_with("f_rest_")
+                        && (ty == "float" || ty == "float32")
+                    {
+                        sh_rest += 1;
+                    }
+                    // Any other unknown property (nx/ny/nz, extra
+                    // channels) is fine: it only contributes stride.
+                }
+                e.stride += size;
+            }
+            Some("end_header") => {
+                finish_element(&mut cur, &mut layout, &mut pre_skip);
+                if !format_ok {
+                    return Err(AssetError::BadHeader(
+                        "missing format line".into(),
+                    ));
+                }
+                let mut layout = layout.ok_or_else(|| {
+                    AssetError::BadHeader("no vertex element".into())
+                })?;
+                for (slot, off) in offsets.iter().enumerate() {
+                    if *off == usize::MAX {
+                        return Err(AssetError::BadHeader(format!(
+                            "missing property `{}`",
+                            REQUIRED[slot]
+                        )));
+                    }
+                }
+                layout.offsets = offsets;
+                layout.sh_rest = sh_rest;
+                layout.pre_skip = pre_skip;
+                return Ok(layout);
+            }
+            Some(other) => {
+                return Err(AssetError::BadHeader(format!(
+                    "unknown header keyword `{other}`"
+                )));
+            }
+        }
+    }
+    Err(AssetError::BadHeader("header too long".into()))
+}
+
+#[inline]
+fn f32_at(buf: &[u8], off: usize) -> f32 {
+    f32::from_le_bytes([buf[off], buf[off + 1], buf[off + 2], buf[off + 3]])
+}
+
+/// The loader's opacity activation. `1 / (1 + e^-x)`: NaN stays NaN
+/// (caught by admission); `+/-inf` saturate to 1/0.
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// The loader's color activation for one `f_dc` coefficient.
+#[inline]
+fn dc_to_color(dc: f32) -> f32 {
+    0.5 + SH_C0 * dc
+}
+
+/// Stream a binary little-endian 3DGS PLY from `r`.
+///
+/// Header problems (bad magic, unsupported format or property types,
+/// absurd vertex counts) fail in **both** modes — without a valid
+/// layout there is nothing to salvage. Record-level problems follow
+/// [`LoadMode`]: strict returns the typed [`AssetError`], lossy drops
+/// and counts.
+pub fn load_ply<R: BufRead>(
+    mut r: R,
+    mode: LoadMode,
+) -> Result<LoadedAsset, AssetError> {
+    let layout = parse_header(&mut r)?;
+    // Vertices are capped at MAX_VERTEX_COUNT, but still bound the
+    // upfront reservation — a hostile count must not allocate gigabytes
+    // before the first record proves the data is really there.
+    let reserve = (layout.count as usize).min(1 << 20);
+    let mut out = LoadedAsset {
+        gaussians: Gaussians::with_capacity(reserve),
+        report: LoadReport {
+            sh_rest_coeffs: layout.sh_rest,
+            ..LoadReport::default()
+        },
+    };
+
+    if layout.pre_skip > 0 {
+        let skipped = std::io::copy(
+            &mut (&mut r).take(layout.pre_skip),
+            &mut std::io::sink(),
+        )?;
+        if skipped < layout.pre_skip {
+            match mode {
+                LoadMode::Strict => {
+                    return Err(AssetError::Truncated { index: 0, got: 0 })
+                }
+                LoadMode::Lossy => {
+                    out.report.dropped.truncated_tail += 1;
+                    return Ok(out);
+                }
+            }
+        }
+    }
+
+    let mut buf = vec![0u8; layout.stride];
+    let o = &layout.offsets;
+    for index in 0..layout.count as usize {
+        let got = read_full(&mut r, &mut buf)?;
+        if got < layout.stride {
+            match mode {
+                LoadMode::Strict => {
+                    return Err(AssetError::Truncated { index, got })
+                }
+                LoadMode::Lossy => {
+                    out.report.dropped.truncated_tail += 1;
+                    break;
+                }
+            }
+        }
+        out.report.records += 1;
+        let raw = RawSplat {
+            mean: [f32_at(&buf, o[0]), f32_at(&buf, o[1]), f32_at(&buf, o[2])],
+            color: [
+                dc_to_color(f32_at(&buf, o[3])),
+                dc_to_color(f32_at(&buf, o[4])),
+                dc_to_color(f32_at(&buf, o[5])),
+            ],
+            opacity: sigmoid(f32_at(&buf, o[6])),
+            scale: [
+                f32_at(&buf, o[7]).exp(),
+                f32_at(&buf, o[8]).exp(),
+                f32_at(&buf, o[9]).exp(),
+            ],
+            quat: [
+                f32_at(&buf, o[10]),
+                f32_at(&buf, o[11]),
+                f32_at(&buf, o[12]),
+                f32_at(&buf, o[13]),
+            ],
+        };
+        admit(&raw, index, mode, &mut out.gaussians, &mut out.report)?;
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Encoder: exact-preimage search.
+
+/// Inverse of [`float_to_sortable_uint`]: bisecting sortable keys
+/// bisects representable `f32` values in numeric order.
+fn from_ord(k: u32) -> f32 {
+    if k & 0x8000_0000 != 0 {
+        f32::from_bits(k & 0x7fff_ffff)
+    } else {
+        f32::from_bits(!k)
+    }
+}
+
+/// Find an `x` in `[lo, hi]` with `fwd(x)` bitwise equal to `target`,
+/// assuming `fwd` is (weakly) monotone increasing there. Bisects in
+/// sortable-bit space for the smallest `x` with `fwd(x) >= target`,
+/// then scans a few neighbours (tolerating sub-ulp non-monotonicity in
+/// libm). When `target` is not in `fwd`'s image — possible for
+/// arbitrary inputs, impossible for values a load produced — returns
+/// the `x` whose image is nearest, so first-pass encodes are within an
+/// ulp or two and second-pass encodes are exact.
+fn invert(target: f32, lo: f32, hi: f32, fwd: impl Fn(f32) -> f32) -> f32 {
+    let (mut lo_k, mut hi_k) =
+        (float_to_sortable_uint(lo), float_to_sortable_uint(hi));
+    while lo_k < hi_k {
+        let mid = lo_k + (hi_k - lo_k) / 2;
+        if fwd(from_ord(mid)) < target {
+            lo_k = mid + 1;
+        } else {
+            hi_k = mid;
+        }
+    }
+    let mut best = from_ord(lo_k);
+    let mut best_err = f64::INFINITY;
+    for d in -8i64..=8 {
+        let Ok(k) = u32::try_from(lo_k as i64 + d) else { continue };
+        let x = from_ord(k);
+        let v = fwd(x);
+        if v.to_bits() == target.to_bits() {
+            return x;
+        }
+        let err = (v as f64 - target as f64).abs();
+        if err < best_err {
+            best = x;
+            best_err = err;
+        }
+    }
+    best
+}
+
+/// Stored-field ranges the preimage search covers: log-scales and
+/// opacity logits for anything renderable live well inside ±120, and
+/// `f_dc` for colors in a sane gamut inside ±64.
+const LOGIT_RANGE: (f32, f32) = (-120.0, 120.0);
+const DC_RANGE: (f32, f32) = (-64.0, 64.0);
+
+/// Encode a splat batch as a binary little-endian 3DGS PLY.
+///
+/// Positions and rotations are stored raw (rotations normalized first;
+/// a zero-norm quaternion encodes as identity); color, opacity and
+/// scale are stored through exact-preimage inversion of the loader's
+/// activations (see [`invert`]), so a loaded scene survives
+/// `write_ply` -> [`load_ply`] bit for bit.
+pub fn write_ply<W: std::io::Write>(
+    mut w: W,
+    g: &Gaussians,
+) -> std::io::Result<()> {
+    let mut header = String::new();
+    header.push_str("ply\nformat binary_little_endian 1.0\n");
+    header.push_str("comment sltarch asset encoder\n");
+    header.push_str(&format!("element vertex {}\n", g.len()));
+    for name in REQUIRED {
+        header.push_str(&format!("property float {name}\n"));
+    }
+    header.push_str("end_header\n");
+    w.write_all(header.as_bytes())?;
+
+    let mut rec = [0u8; 14 * 4];
+    for i in 0..g.len() {
+        let q = super::normalize_quat(g.quats[i])
+            .unwrap_or([1.0, 0.0, 0.0, 0.0]);
+        let fields: [f32; 14] = [
+            g.means[i][0],
+            g.means[i][1],
+            g.means[i][2],
+            invert(g.colors[i][0], DC_RANGE.0, DC_RANGE.1, dc_to_color),
+            invert(g.colors[i][1], DC_RANGE.0, DC_RANGE.1, dc_to_color),
+            invert(g.colors[i][2], DC_RANGE.0, DC_RANGE.1, dc_to_color),
+            invert(g.opacity[i], LOGIT_RANGE.0, LOGIT_RANGE.1, sigmoid),
+            invert(g.scales[i][0], LOGIT_RANGE.0, LOGIT_RANGE.1, f32::exp),
+            invert(g.scales[i][1], LOGIT_RANGE.0, LOGIT_RANGE.1, f32::exp),
+            invert(g.scales[i][2], LOGIT_RANGE.0, LOGIT_RANGE.1, f32::exp),
+            q[0],
+            q[1],
+            q[2],
+            q[3],
+        ];
+        for (k, f) in fields.iter().enumerate() {
+            rec[k * 4..k * 4 + 4].copy_from_slice(&f.to_le_bytes());
+        }
+        w.write_all(&rec)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assets::LoadMode;
+    use crate::math::{Quat, Vec3};
+
+    fn sample() -> Gaussians {
+        let mut g = Gaussians::default();
+        g.push(
+            Vec3::new(0.5, -1.25, 2.0),
+            Vec3::new(0.5, 0.03, 1.75),
+            Quat::from_axis_angle(Vec3::new(1.0, 0.5, -0.25), 0.6),
+            [0.9, 0.45, 0.1],
+            0.95,
+        );
+        g.push(
+            Vec3::new(-3.0, 0.0, 4.5),
+            Vec3::splat(0.2),
+            Quat::IDENTITY,
+            [0.05, 0.5, 0.88],
+            0.31,
+        );
+        g
+    }
+
+    #[test]
+    fn invert_hits_exact_preimages() {
+        // Any value in the image must invert exactly.
+        for raw in [-7.5f32, -0.3, 0.0, 0.9, 3.0, 12.0] {
+            let s = raw.exp();
+            let back = invert(s, LOGIT_RANGE.0, LOGIT_RANGE.1, f32::exp);
+            assert_eq!(back.exp().to_bits(), s.to_bits(), "exp({raw})");
+            let o = sigmoid(raw);
+            let back = invert(o, LOGIT_RANGE.0, LOGIT_RANGE.1, sigmoid);
+            assert_eq!(sigmoid(back).to_bits(), o.to_bits(), "sigmoid({raw})");
+            let c = dc_to_color(raw);
+            let back = invert(c, DC_RANGE.0, DC_RANGE.1, dc_to_color);
+            assert_eq!(dc_to_color(back).to_bits(), c.to_bits(), "dc({raw})");
+        }
+        // Saturated opacities have exact preimages too.
+        for o in [0.0f32, 1.0] {
+            let back = invert(o, LOGIT_RANGE.0, LOGIT_RANGE.1, sigmoid);
+            assert_eq!(sigmoid(back).to_bits(), o.to_bits(), "sigmoid sat {o}");
+        }
+    }
+
+    #[test]
+    fn round_trip_is_exact_from_the_first_load_on() {
+        let g0 = sample();
+        let mut bytes = Vec::new();
+        write_ply(&mut bytes, &g0).unwrap();
+        let g1 = load_ply(&bytes[..], LoadMode::Strict).unwrap().gaussians;
+        assert_eq!(g1.len(), g0.len());
+        // Pass 1: raw f32 fields exact, activated fields within ulps.
+        assert_eq!(g1.means, g0.means);
+        for i in 0..g0.len() {
+            for k in 0..3 {
+                assert!(
+                    (g1.colors[i][k] - g0.colors[i][k]).abs() < 1e-5,
+                    "color[{i}][{k}]"
+                );
+                assert!(
+                    (g1.scales[i][k] - g0.scales[i][k]).abs()
+                        < g0.scales[i][k] * 1e-5,
+                    "scale[{i}][{k}]"
+                );
+            }
+            assert!((g1.opacity[i] - g0.opacity[i]).abs() < 1e-5);
+        }
+        // Pass 2: a loaded scene survives re-encoding bit for bit.
+        let mut bytes2 = Vec::new();
+        write_ply(&mut bytes2, &g1).unwrap();
+        let g2 = load_ply(&bytes2[..], LoadMode::Strict).unwrap().gaussians;
+        assert_eq!(g1.means, g2.means);
+        assert_eq!(g1.scales, g2.scales);
+        assert_eq!(g1.quats, g2.quats);
+        assert_eq!(g1.colors, g2.colors);
+        assert_eq!(g1.opacity, g2.opacity);
+    }
+
+    #[test]
+    fn shuffled_property_order_loads_identically() {
+        // Same two vertices, canonical vs shuffled property order plus
+        // unknown nx/ny/nz and a uchar channel: identical batches.
+        let g = sample();
+        let mut canonical = Vec::new();
+        write_ply(&mut canonical, &g).unwrap();
+        let want = load_ply(&canonical[..], LoadMode::Strict).unwrap();
+
+        // Re-emit by hand with a shuffled layout.
+        let order = [
+            "rot_0", "rot_1", "rot_2", "rot_3", "nx", "ny", "nz", "scale_0",
+            "scale_1", "scale_2", "opacity", "x", "y", "z", "f_dc_2",
+            "f_dc_1", "f_dc_0",
+        ];
+        let mut header = String::from(
+            "ply\nformat binary_little_endian 1.0\nelement vertex 2\n",
+        );
+        for name in order {
+            header.push_str(&format!("property float {name}\n"));
+        }
+        header.push_str("property uchar segmentation\nend_header\n");
+        let mut bytes = header.into_bytes();
+        // Pull each vertex's canonical fields back out of `canonical`.
+        let body = &canonical[canonical.len() - 2 * 14 * 4..];
+        let field = |v: usize, slot: usize| -> [u8; 4] {
+            let off = v * 14 * 4 + slot * 4;
+            body[off..off + 4].try_into().unwrap()
+        };
+        for v in 0..2 {
+            for name in order {
+                match REQUIRED.iter().position(|&r| r == name) {
+                    Some(slot) => bytes.extend_from_slice(&field(v, slot)),
+                    None => bytes.extend_from_slice(&0.25f32.to_le_bytes()),
+                }
+            }
+            bytes.push(7); // the uchar channel
+        }
+        let got = load_ply(&bytes[..], LoadMode::Strict).unwrap();
+        assert_eq!(got.gaussians.means, want.gaussians.means);
+        assert_eq!(got.gaussians.scales, want.gaussians.scales);
+        assert_eq!(got.gaussians.quats, want.gaussians.quats);
+        assert_eq!(got.gaussians.colors, want.gaussians.colors);
+        assert_eq!(got.gaussians.opacity, want.gaussians.opacity);
+    }
+
+    #[test]
+    fn header_errors_are_typed() {
+        let cases: [(&[u8], fn(&AssetError) -> bool); 6] = [
+            (b"plx\n", |e| matches!(e, AssetError::BadMagic)),
+            (b"ply\nformat ascii 1.0\nend_header\n", |e| {
+                matches!(e, AssetError::BadHeader(_))
+            }),
+            // No vertex element at all.
+            (b"ply\nformat binary_little_endian 1.0\nend_header\n", |e| {
+                matches!(e, AssetError::BadHeader(_))
+            }),
+            // Vertex element missing required fields.
+            (
+                b"ply\nformat binary_little_endian 1.0\nelement vertex 2\nproperty float x\nend_header\n",
+                |e| matches!(e, AssetError::BadHeader(_)),
+            ),
+            (
+                b"ply\nformat binary_little_endian 1.0\nelement vertex 999999999999\nend_header\n",
+                |e| matches!(e, AssetError::AbsurdVertexCount { .. }),
+            ),
+            (
+                b"ply\nformat binary_little_endian 1.0\nelement vertex 1\nproperty double x\nend_header\n",
+                |e| {
+                    matches!(e, AssetError::UnsupportedProperty { name, .. }
+                        if name == "x")
+                },
+            ),
+        ];
+        for (bytes, check) in cases {
+            // Header errors are structural: both modes fail.
+            for mode in [LoadMode::Strict, LoadMode::Lossy] {
+                match load_ply(bytes, mode) {
+                    Err(e) => assert!(check(&e), "{mode:?}: wrong error {e}"),
+                    Ok(_) => panic!("{mode:?}: accepted bad header"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_vertex_data() {
+        let g = sample();
+        let mut bytes = Vec::new();
+        write_ply(&mut bytes, &g).unwrap();
+        let body = 2 * 14 * 4;
+        let header_len = bytes.len() - body;
+        // Cut mid-way through the second vertex.
+        let cut = header_len + 14 * 4 + 10;
+        match load_ply(&bytes[..cut], LoadMode::Strict) {
+            Err(AssetError::Truncated { index: 1, got: 10 }) => {}
+            other => panic!("wrong result: {other:?}"),
+        }
+        let a = load_ply(&bytes[..cut], LoadMode::Lossy).unwrap();
+        assert_eq!(a.report.kept, 1);
+        assert_eq!(a.report.dropped.truncated_tail, 1);
+    }
+
+    #[test]
+    fn pre_vertex_elements_are_skipped_and_f_rest_counted() {
+        // A camera element before the vertices, plus 3 f_rest coeffs.
+        let mut header =
+            String::from("ply\nformat binary_little_endian 1.0\n");
+        header.push_str(
+            "element camera 2\nproperty float cx\nproperty uchar id\n",
+        );
+        header.push_str("element vertex 1\n");
+        for name in REQUIRED {
+            header.push_str(&format!("property float {name}\n"));
+        }
+        for k in 0..3 {
+            header.push_str(&format!("property float f_rest_{k}\n"));
+        }
+        header.push_str("end_header\n");
+        let mut bytes = header.into_bytes();
+        bytes.extend_from_slice(&[0u8; 2 * 5]); // camera payload
+        let mut vals = [0.0f32; 17];
+        vals[..3].copy_from_slice(&[1.0, 2.0, 3.0]); // x y z
+        vals[10] = 1.0; // rot_0 = w
+        vals[14..17].copy_from_slice(&[9.0, 9.0, 9.0]); // f_rest junk
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let a = load_ply(&bytes[..], LoadMode::Strict).unwrap();
+        assert_eq!(a.report.kept, 1);
+        assert_eq!(a.report.sh_rest_coeffs, 3);
+        assert_eq!(a.gaussians.means[0], [1.0, 2.0, 3.0]);
+        // scale = exp(0) = 1, opacity = sigmoid(0) = 0.5.
+        assert_eq!(a.gaussians.scales[0], [1.0, 1.0, 1.0]);
+        assert_eq!(a.gaussians.opacity[0], 0.5);
+    }
+}

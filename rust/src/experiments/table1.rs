@@ -21,8 +21,16 @@ pub struct QualityRow {
     pub lpips_slt: f64,
 }
 
+/// Evaluate Table I's metrics for a procedural eval scene.
 pub fn evaluate_scene(cfg: &crate::config::SceneConfig, seed: u64) -> QualityRow {
-    let p = build_pipeline(cfg, seed);
+    evaluate_pipeline(&build_pipeline(cfg, seed))
+}
+
+/// Evaluate Table I's metrics over an already-built pipeline — any
+/// scene source works, including assets loaded through
+/// [`crate::assets::load_scene`] (the fixture-zoo quality rows in
+/// `benches/table1_quality.rs` go through here).
+pub fn evaluate_pipeline(p: &crate::coordinator::FramePipeline) -> QualityRow {
     let mut row = QualityRow::default();
     let n = p.scene().cameras.len() as f64;
     // Three long-lived sessions over one pipeline: ground truth renders

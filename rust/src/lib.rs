@@ -25,6 +25,14 @@
 //!   log-bucketed latency percentiles, deadline-adaptive LoD
 //!   degradation ([`serve::QosController`]) and a synthetic open-loop
 //!   load generator ([`serve::run_load`]).
+//! * [`assets`] — real-asset ingestion: std-only streaming parsers (and
+//!   matching encoders) for the two de-facto 3DGS interchange formats —
+//!   32-byte `.splat` records and binary little-endian PLY with
+//!   `f_rest_*` SH bands — with typed [`assets::AssetError`]s in strict
+//!   mode, counted drops in lossy mode, and [`assets::load_scene`]
+//!   feeding loaded clouds straight into the `SceneBuilder` -> SLTree
+//!   partition path (sessions, cut cache, residency and serving all work
+//!   on loaded scenes unchanged).
 //! * [`residency`] — out-of-core subtree-slab residency for scenes
 //!   larger than memory: a hard byte budget with demand faulting,
 //!   pinned LRU eviction, cut-delta prefetch between frames, and
@@ -153,6 +161,7 @@
 //! println!("{} Gaussians -> {:?} px", session.stats().cut_total, img.dims());
 //! ```
 
+pub mod assets;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
@@ -170,6 +179,10 @@ pub mod util;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
+    pub use crate::assets::{
+        assemble_scene, load_scene, AssembleOptions, AssetError, LoadMode,
+        LoadReport, LoadedAsset,
+    };
     pub use crate::config::{ArchConfig, RenderConfig, SceneConfig};
     pub use crate::coordinator::backend::{
         CpuBackend, PjrtBackend, RenderBackend, RenderOptions,

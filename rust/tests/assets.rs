@@ -1,0 +1,596 @@
+//! Real-asset ingestion suite: encoder/parser round trips, the
+//! checked-in fixture zoo, and degenerate-input fuzzing.
+//!
+//! The contracts pinned here (ISSUE/ROADMAP "real-asset ingestion"):
+//!
+//! * **Round trips.** Any procedural batch written through the PLY
+//!   encoder reloads with raw f32 fields bit-exact and activated fields
+//!   within ulps; from the first load onward the PLY cycle is **bitwise
+//!   idempotent**, so round-tripped renders are byte-identical. The
+//!   `.splat` cycle is exact on positions/scales and within `u8`
+//!   quantization elsewhere; its renders are digest-stable across
+//!   scheduler widths {1, 8}.
+//! * **Fixture zoo.** The checked-in files under `tests/fixtures/` load
+//!   with the exact kept/dropped counters they were built with, and the
+//!   zoo scenes render through a real `RenderSession` (golden digests
+//!   for them live in `tests/golden.rs`).
+//! * **Fuzzing.** Truncation at every byte offset, NaN/±inf fields,
+//!   zero-norm quaternions, shuffled/unknown/absurd headers and raw
+//!   random bytes: strict mode returns the right [`AssetError`]
+//!   variant, lossy mode never panics and never emits a splat the
+//!   PR-8-hardened projection would have to cull
+//!   ([`sltarch::assets::splat_defect`] is that invariant).
+
+use std::path::{Path, PathBuf};
+
+use sltarch::assets::{
+    assemble_scene, load_ply, load_scene, load_splat, splat_defect,
+    write_ply, write_splat, AssembleOptions, AssetError, LoadMode,
+    SPLAT_RECORD_BYTES,
+};
+use sltarch::coordinator::{CpuBackend, FramePipeline};
+use sltarch::gaussian::Gaussians;
+use sltarch::math::{Quat, Vec3};
+use sltarch::util::prop::forall;
+use sltarch::util::Rng;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+/// A random well-formed batch: arbitrary (non-unit) quats, sane ranges.
+fn random_batch(rng: &mut Rng, n: usize) -> Gaussians {
+    let mut g = Gaussians::with_capacity(n);
+    for _ in 0..n {
+        let w = (0.2 + rng.f32()) * if rng.below(2) == 0 { 1.0 } else { -1.0 };
+        g.push(
+            Vec3::new(
+                rng.range(-5.0, 5.0),
+                rng.range(-2.0, 2.0),
+                rng.range(-5.0, 5.0),
+            ),
+            Vec3::new(
+                rng.range(0.05, 0.5),
+                rng.range(0.05, 0.5),
+                rng.range(0.05, 0.5),
+            ),
+            Quat::new(
+                w,
+                rng.range(-1.0, 1.0),
+                rng.range(-1.0, 1.0),
+                rng.range(-1.0, 1.0),
+            ),
+            [rng.f32(), rng.f32(), rng.f32()],
+            rng.range(0.05, 0.99),
+        );
+    }
+    g
+}
+
+fn assert_batches_bitwise_equal(a: &Gaussians, b: &Gaussians, what: &str) {
+    assert_eq!(a.means, b.means, "{what}: means");
+    assert_eq!(a.scales, b.scales, "{what}: scales");
+    assert_eq!(a.quats, b.quats, "{what}: quats");
+    assert_eq!(a.colors, b.colors, "{what}: colors");
+    assert_eq!(a.opacity, b.opacity, "{what}: opacity");
+}
+
+fn assert_all_well_formed(g: &Gaussians, what: &str) {
+    for i in 0..g.len() {
+        assert_eq!(
+            splat_defect(g, i),
+            None,
+            "{what}: kept splat {i} is degenerate"
+        );
+    }
+}
+
+/// Render one frame of an assembled scene at the given scheduler width.
+fn render_once(
+    leaves: Gaussians,
+    threads: usize,
+) -> sltarch::metrics::Image {
+    let scene = assemble_scene(leaves, &AssembleOptions::default()).unwrap();
+    let cam = scene.scenario_camera(0);
+    let pipeline =
+        FramePipeline::builder(scene).tau(16.0).subtree_size(32).build();
+    let backend = CpuBackend::with_threads(threads);
+    let mut session = pipeline.session_on(&backend, pipeline.default_options());
+    session.render(&cam).expect("render")
+}
+
+// ---------------------------------------------------------------------------
+// Satellite 1: round-trip property tests.
+
+#[test]
+fn ply_round_trip_exact_fields_and_bitwise_idempotence() {
+    forall(24, |rng| {
+        let n = 1 + rng.below(40);
+        let g0 = random_batch(rng, n);
+        let mut bytes = Vec::new();
+        write_ply(&mut bytes, &g0).unwrap();
+        let g1 = load_ply(&bytes[..], LoadMode::Strict).unwrap().gaussians;
+        assert_eq!(g1.len(), n);
+
+        // Raw f32 fields survive bit-exact; activated fields (color,
+        // opacity, log-scale) land within the activation's image
+        // spacing; quats equal the f64-normalized originals.
+        assert_eq!(g1.means, g0.means, "positions must be exact");
+        for i in 0..n {
+            for k in 0..3 {
+                assert!(
+                    (g1.colors[i][k] - g0.colors[i][k]).abs() < 1e-5,
+                    "color[{i}][{k}]: {} vs {}",
+                    g1.colors[i][k],
+                    g0.colors[i][k]
+                );
+                let rel = (g1.scales[i][k] - g0.scales[i][k]).abs()
+                    / g0.scales[i][k];
+                assert!(rel < 1e-5, "scale[{i}][{k}] rel err {rel}");
+            }
+            assert!((g1.opacity[i] - g0.opacity[i]).abs() < 1e-5, "[{i}]");
+            let q = g0.quats[i];
+            let norm: f64 =
+                q.iter().map(|&c| c as f64 * c as f64).sum::<f64>().sqrt();
+            for k in 0..4 {
+                let want = (q[k] as f64 / norm) as f32;
+                assert!(
+                    (g1.quats[i][k] - want).abs() < 1e-5,
+                    "quat[{i}][{k}]"
+                );
+            }
+        }
+
+        // From the first load on, the cycle is bitwise idempotent.
+        let mut bytes2 = Vec::new();
+        write_ply(&mut bytes2, &g1).unwrap();
+        let g2 = load_ply(&bytes2[..], LoadMode::Strict).unwrap().gaussians;
+        assert_batches_bitwise_equal(&g1, &g2, "ply idempotence");
+    });
+}
+
+#[test]
+fn splat_round_trip_within_quantization() {
+    forall(24, |rng| {
+        let n = 1 + rng.below(40);
+        let g0 = random_batch(rng, n);
+        let mut bytes = Vec::new();
+        write_splat(&mut bytes, &g0).unwrap();
+        let g1 = load_splat(&bytes[..], LoadMode::Strict).unwrap().gaussians;
+        assert_eq!(g1.len(), n);
+        // Positions and scales are raw f32 in this format: bit-exact.
+        assert_eq!(g1.means, g0.means, "positions must be exact");
+        assert_eq!(g1.scales, g0.scales, "scales must be exact");
+        for i in 0..n {
+            for k in 0..3 {
+                assert!(
+                    (g1.colors[i][k] - g0.colors[i][k]).abs()
+                        <= 0.5 / 255.0 + 1e-6
+                );
+            }
+            assert!(
+                (g1.opacity[i] - g0.opacity[i]).abs() <= 0.5 / 255.0 + 1e-6
+            );
+            let q = g0.quats[i];
+            let norm: f64 =
+                q.iter().map(|&c| c as f64 * c as f64).sum::<f64>().sqrt();
+            for k in 0..4 {
+                let want = (q[k] as f64 / norm) as f32;
+                // One quantization step plus renormalization slack.
+                assert!(
+                    (g1.quats[i][k] - want).abs() <= 1.0 / 128.0 + 1e-2,
+                    "quat[{i}][{k}]: {} vs {want}",
+                    g1.quats[i][k]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn ply_round_trip_renders_byte_identical() {
+    // PLY: the loaded batch is bitwise stable under encode+load, so the
+    // round-tripped scene renders byte-identical frames — checked both
+    // against the re-round-tripped scene and across widths {1, 8}.
+    let mut rng = Rng::new(0xA55E7);
+    let g0 = random_batch(&mut rng, 400);
+    let mut bytes = Vec::new();
+    write_ply(&mut bytes, &g0).unwrap();
+    let g1 = load_ply(&bytes[..], LoadMode::Strict).unwrap().gaussians;
+    let mut bytes2 = Vec::new();
+    write_ply(&mut bytes2, &g1).unwrap();
+    let g2 = load_ply(&bytes2[..], LoadMode::Strict).unwrap().gaussians;
+
+    let f1w1 = render_once(g1.clone(), 1);
+    let f1w8 = render_once(g1, 8);
+    let f2w1 = render_once(g2, 1);
+    assert_eq!(f1w1.data, f1w8.data, "ply round trip: width 8 diverged");
+    assert_eq!(f1w1.data, f2w1.data, "ply round trip: re-encode diverged");
+}
+
+#[test]
+fn splat_round_trip_renders_digest_stable() {
+    // .splat: quantized, so only the loaded scene's own digests are
+    // pinned — identical across scheduler widths {1, 8}.
+    let mut rng = Rng::new(0xB44D9);
+    let g0 = random_batch(&mut rng, 400);
+    let mut bytes = Vec::new();
+    write_splat(&mut bytes, &g0).unwrap();
+    let g1 = load_splat(&bytes[..], LoadMode::Strict).unwrap().gaussians;
+    let w1 = render_once(g1.clone(), 1);
+    let w8 = render_once(g1, 8);
+    assert_eq!(w1.fnv1a64(), w8.fnv1a64(), "digest drift across widths");
+    assert_eq!(w1.data, w8.data, "byte drift across widths");
+}
+
+// ---------------------------------------------------------------------------
+// Fixture zoo: checked-in files with known contents.
+
+#[test]
+fn minimal_fixtures_load_strict() {
+    let a = load_splat(
+        std::fs::File::open(fixture("minimal.splat")).unwrap(),
+        LoadMode::Strict,
+    )
+    .unwrap();
+    assert_eq!(a.report.kept, 4);
+    assert_eq!(a.report.dropped.total(), 0);
+    assert_all_well_formed(&a.gaussians, "minimal.splat");
+
+    let f = std::fs::File::open(fixture("minimal.ply")).unwrap();
+    let a = load_ply(std::io::BufReader::new(f), LoadMode::Strict).unwrap();
+    assert_eq!(a.report.kept, 3);
+    // The fixture's shuffled header carries 9 f_rest coefficients.
+    assert_eq!(a.report.sh_rest_coeffs, 9);
+    assert_all_well_formed(&a.gaussians, "minimal.ply");
+}
+
+#[test]
+fn degenerate_splat_fixture_counters() {
+    let bytes = std::fs::read(fixture("degenerate.splat")).unwrap();
+    // Strict: the first bad record is record 1's NaN position.
+    match load_splat(&bytes[..], LoadMode::Strict) {
+        Err(AssetError::NonFinite { field: "position", index: 1 }) => {}
+        other => panic!("wrong strict result: {other:?}"),
+    }
+    // Lossy: exact per-cause counters, well-formed survivors.
+    let a = load_splat(&bytes[..], LoadMode::Lossy).unwrap();
+    assert_eq!(a.report.kept, 3);
+    assert_eq!(a.report.dropped.bad_position, 2);
+    assert_eq!(a.report.dropped.bad_scale, 2);
+    assert_eq!(a.report.dropped.bad_rotation, 1);
+    assert_eq!(a.report.dropped.truncated_tail, 1);
+    assert_eq!(a.report.dropped.total(), 6);
+    assert_all_well_formed(&a.gaussians, "degenerate.splat survivors");
+    // And the survivors render without tripping any projection guard.
+    let img = render_once(a.gaussians, 2);
+    assert!(img.data.iter().all(|p| p.iter().all(|c| c.is_finite())));
+}
+
+#[test]
+fn degenerate_ply_fixture_counters() {
+    let bytes = std::fs::read(fixture("degenerate.ply")).unwrap();
+    match load_ply(&bytes[..], LoadMode::Strict) {
+        Err(AssetError::NonFinite { field: "position", index: 1 }) => {}
+        other => panic!("wrong strict result: {other:?}"),
+    }
+    let a = load_ply(&bytes[..], LoadMode::Lossy).unwrap();
+    assert_eq!(a.report.kept, 1);
+    assert_eq!(a.report.dropped.bad_position, 1);
+    assert_eq!(a.report.dropped.bad_scale, 1);
+    assert_eq!(a.report.dropped.bad_rotation, 1);
+    assert_eq!(a.report.dropped.total(), 3);
+    assert_all_well_formed(&a.gaussians, "degenerate.ply survivors");
+}
+
+#[test]
+fn zoo_scenes_load_assemble_and_render_across_widths() {
+    for (file, sh_rest) in [("zoo_room.splat", 0usize), ("zoo_room.ply", 9)] {
+        let (scene, report) = load_scene(
+            &fixture(file),
+            LoadMode::Strict,
+            &AssembleOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(report.kept, 516, "{file}");
+        assert_eq!(report.dropped.total(), 0, "{file}");
+        assert_eq!(report.sh_rest_coeffs, sh_rest, "{file}");
+        assert_eq!(scene.name, "zoo_room");
+        scene.tree.check_invariants().unwrap();
+        assert!(scene.tree.len() > 516, "{file}: no interior nodes");
+
+        let cam = scene.scenario_camera(0);
+        let pipeline =
+            FramePipeline::builder(scene).tau(16.0).subtree_size(32).build();
+        let mut frames = Vec::new();
+        for threads in [1usize, 8] {
+            let backend = CpuBackend::with_threads(threads);
+            let mut session =
+                pipeline.session_on(&backend, pipeline.default_options());
+            frames.push(session.render(&cam).expect("zoo render"));
+        }
+        assert_eq!(frames[0].data, frames[1].data, "{file}: width drift");
+        let mean: f32 = frames[0]
+            .data
+            .iter()
+            .map(|p| p[0] + p[1] + p[2])
+            .sum::<f32>()
+            / (frames[0].data.len() as f32 * 3.0);
+        assert!(mean > 1e-3, "{file} rendered black (mean {mean})");
+    }
+}
+
+#[test]
+fn load_scene_sniffs_format_without_extension() {
+    // A PLY copied to an extension-less path must still load via the
+    // `ply` magic sniff.
+    let bytes = std::fs::read(fixture("minimal.ply")).unwrap();
+    let dir = std::env::temp_dir();
+    let path = dir.join("sltarch_sniff_fixture");
+    std::fs::write(&path, &bytes).unwrap();
+    let (scene, report) =
+        load_scene(&path, LoadMode::Strict, &AssembleOptions::default())
+            .unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(report.kept, 3);
+    assert_eq!(scene.name, "sltarch_sniff_fixture");
+}
+
+// ---------------------------------------------------------------------------
+// Satellite 2: degenerate-input fuzzing.
+
+#[test]
+fn splat_fuzz_truncation_at_every_offset() {
+    forall(8, |rng| {
+        let n = 1 + rng.below(6);
+        let g = random_batch(rng, n);
+        let mut bytes = Vec::new();
+        write_splat(&mut bytes, &g).unwrap();
+        for cut in 0..=bytes.len() {
+            let slice = &bytes[..cut];
+            let whole = cut / SPLAT_RECORD_BYTES;
+            let partial = cut % SPLAT_RECORD_BYTES != 0;
+            match load_splat(slice, LoadMode::Strict) {
+                Ok(a) => {
+                    assert!(!partial, "cut {cut}");
+                    assert_eq!(a.report.kept, whole);
+                }
+                Err(AssetError::Truncated { index, got }) => {
+                    assert!(partial, "cut {cut}");
+                    assert_eq!((index, got), (whole, cut % SPLAT_RECORD_BYTES));
+                }
+                Err(e) => panic!("cut {cut}: unexpected error {e}"),
+            }
+            let a = load_splat(slice, LoadMode::Lossy).unwrap();
+            assert_eq!(a.report.kept, whole);
+            assert_eq!(a.report.dropped.truncated_tail, u64::from(partial));
+            assert_all_well_formed(&a.gaussians, "splat truncation fuzz");
+        }
+    });
+}
+
+#[test]
+fn ply_fuzz_truncation_at_every_offset() {
+    let mut rng = Rng::new(0x7D1);
+    let g = random_batch(&mut rng, 3);
+    let mut bytes = Vec::new();
+    write_ply(&mut bytes, &g).unwrap();
+    let body = bytes.len() - 3 * 14 * 4;
+    for cut in 0..bytes.len() {
+        let slice = &bytes[..cut];
+        if cut < body {
+            // Header cut: structural, both modes fail with a typed
+            // error and never panic.
+            for mode in [LoadMode::Strict, LoadMode::Lossy] {
+                match load_ply(slice, mode) {
+                    Err(
+                        AssetError::BadHeader(_) | AssetError::BadMagic,
+                    ) => {}
+                    other => panic!("cut {cut} {mode:?}: {other:?}"),
+                }
+            }
+        } else {
+            // Body cut: strict names the truncated record, lossy keeps
+            // the whole ones.
+            let whole = (cut - body) / (14 * 4);
+            let got = (cut - body) % (14 * 4);
+            match load_ply(slice, LoadMode::Strict) {
+                Err(AssetError::Truncated { index, got: g }) => {
+                    assert_eq!((index, g), (whole, got), "cut {cut}");
+                }
+                other => panic!("cut {cut}: {other:?}"),
+            }
+            let a = load_ply(slice, LoadMode::Lossy).unwrap();
+            assert_eq!(a.report.kept, whole, "cut {cut}");
+            assert_eq!(a.report.dropped.truncated_tail, 1, "cut {cut}");
+        }
+    }
+}
+
+/// Canonical-encoder slot offsets (see `REQUIRED` in assets::ply).
+const SLOT_X: usize = 0;
+const SLOT_DC0: usize = 3;
+const SLOT_OPACITY: usize = 6;
+const SLOT_SCALE0: usize = 7;
+const SLOT_ROT0: usize = 10;
+
+fn ply_body_offset(bytes: &[u8]) -> usize {
+    let needle = b"end_header\n";
+    bytes
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .expect("encoder output has a header")
+        + needle.len()
+}
+
+fn poison(bytes: &mut [u8], vertex: usize, slot: usize, value: f32) {
+    let body = ply_body_offset(bytes);
+    let off = body + vertex * 14 * 4 + slot * 4;
+    bytes[off..off + 4].copy_from_slice(&value.to_le_bytes());
+}
+
+#[test]
+fn ply_fuzz_nonfinite_fields_are_typed_and_dropped() {
+    // (slot, poison value, strict field name; None => ZeroNormQuat).
+    let cases: [(usize, f32, Option<&str>); 7] = [
+        (SLOT_X, f32::NAN, Some("position")),
+        (SLOT_X, f32::INFINITY, Some("position")),
+        (SLOT_SCALE0, f32::NAN, Some("scale")),
+        (SLOT_SCALE0, f32::INFINITY, Some("scale")), // exp(inf) = inf
+        (SLOT_DC0, f32::NAN, Some("color")),
+        (SLOT_OPACITY, f32::NAN, Some("opacity")),
+        (SLOT_ROT0, f32::NAN, Some("rotation")),
+    ];
+    forall(8, |rng| {
+        let n = 2 + rng.below(6);
+        let g = random_batch(rng, n);
+        let victim = rng.below(n);
+        for (slot, value, field) in cases {
+            let mut bytes = Vec::new();
+            write_ply(&mut bytes, &g).unwrap();
+            poison(&mut bytes, victim, slot, value);
+            match load_ply(&bytes[..], LoadMode::Strict) {
+                Err(AssetError::NonFinite { field: f, index }) => {
+                    assert_eq!(Some(f), field, "slot {slot}");
+                    assert_eq!(index, victim, "slot {slot}");
+                }
+                other => panic!("slot {slot}: {other:?}"),
+            }
+            let a = load_ply(&bytes[..], LoadMode::Lossy).unwrap();
+            assert_eq!(a.report.kept, n - 1, "slot {slot}");
+            assert_eq!(a.report.dropped.total(), 1, "slot {slot}");
+            assert_all_well_formed(&a.gaussians, "poison fuzz");
+        }
+        // Zero-norm quaternion: its own typed variant.
+        let mut bytes = Vec::new();
+        write_ply(&mut bytes, &g).unwrap();
+        for k in 0..4 {
+            poison(&mut bytes, victim, SLOT_ROT0 + k, 0.0);
+        }
+        match load_ply(&bytes[..], LoadMode::Strict) {
+            Err(AssetError::ZeroNormQuat { index }) => {
+                assert_eq!(index, victim)
+            }
+            other => panic!("zero quat: {other:?}"),
+        }
+        let a = load_ply(&bytes[..], LoadMode::Lossy).unwrap();
+        assert_eq!(a.report.kept, n - 1);
+        assert_eq!(a.report.dropped.bad_rotation, 1);
+    });
+}
+
+#[test]
+fn ply_fuzz_shuffled_headers_load_identically() {
+    // Any permutation of the vertex properties (plus injected unknown
+    // scalar properties) must load to the identical batch.
+    let names = [
+        "x", "y", "z", "f_dc_0", "f_dc_1", "f_dc_2", "opacity", "scale_0",
+        "scale_1", "scale_2", "rot_0", "rot_1", "rot_2", "rot_3",
+    ];
+    forall(16, |rng| {
+        let n = 1 + rng.below(8);
+        let g = random_batch(rng, n);
+        let mut canonical = Vec::new();
+        write_ply(&mut canonical, &g).unwrap();
+        let want =
+            load_ply(&canonical[..], LoadMode::Strict).unwrap().gaussians;
+        let body = ply_body_offset(&canonical);
+
+        // Shuffle the slots, sprinkle unknown properties in between.
+        let mut order: Vec<usize> = (0..14).collect();
+        rng.shuffle(&mut order);
+        let junk_before: Vec<bool> =
+            (0..14).map(|_| rng.below(4) == 0).collect();
+
+        let mut header = String::from(
+            "ply\nformat binary_little_endian 1.0\ncomment fuzz\n",
+        );
+        header.push_str(&format!("element vertex {}\n", g.len()));
+        for (pos, &slot) in order.iter().enumerate() {
+            if junk_before[pos] {
+                header.push_str(&format!("property uint junk_{pos}\n"));
+            }
+            header.push_str(&format!("property float {}\n", names[slot]));
+        }
+        header.push_str("end_header\n");
+        let mut bytes = header.into_bytes();
+        for v in 0..g.len() {
+            for (pos, &slot) in order.iter().enumerate() {
+                if junk_before[pos] {
+                    bytes.extend_from_slice(&0xDEADBEEFu32.to_le_bytes());
+                }
+                let off = body + v * 14 * 4 + slot * 4;
+                bytes.extend_from_slice(&canonical[off..off + 4]);
+            }
+        }
+        let got = load_ply(&bytes[..], LoadMode::Strict).unwrap().gaussians;
+        assert_batches_bitwise_equal(&got, &want, "shuffled header");
+    });
+}
+
+#[test]
+fn ply_absurd_vertex_count_is_typed_in_both_modes() {
+    let header = b"ply\nformat binary_little_endian 1.0\n\
+                   element vertex 100000001\nproperty float x\nend_header\n";
+    for mode in [LoadMode::Strict, LoadMode::Lossy] {
+        match load_ply(&header[..], mode) {
+            Err(AssetError::AbsurdVertexCount { count: 100_000_001 }) => {}
+            other => panic!("{mode:?}: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn fuzz_random_bytes_never_panic() {
+    forall(96, |rng| {
+        let len = rng.below(600);
+        let mut blob: Vec<u8> =
+            (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        for mode in [LoadMode::Strict, LoadMode::Lossy] {
+            // Whatever the result, it must be a Result — never a panic.
+            let _ = load_splat(&blob[..], mode);
+            let _ = load_ply(&blob[..], mode);
+            if let Ok(a) = load_splat(&blob[..], LoadMode::Lossy) {
+                assert_all_well_formed(&a.gaussians, "random splat blob");
+            }
+        }
+        // Same blob behind a valid PLY header: a syntactically fine
+        // header over garbage vertex data.
+        let mut framed = b"ply\nformat binary_little_endian 1.0\n\
+                           element vertex 7\n"
+            .to_vec();
+        for name in [
+            "x", "y", "z", "f_dc_0", "f_dc_1", "f_dc_2", "opacity",
+            "scale_0", "scale_1", "scale_2", "rot_0", "rot_1", "rot_2",
+            "rot_3",
+        ] {
+            framed.extend_from_slice(
+                format!("property float {name}\n").as_bytes(),
+            );
+        }
+        framed.extend_from_slice(b"end_header\n");
+        framed.append(&mut blob);
+        let _ = load_ply(&framed[..], LoadMode::Strict);
+        let a = load_ply(&framed[..], LoadMode::Lossy).unwrap();
+        assert_all_well_formed(&a.gaussians, "framed garbage");
+    });
+}
+
+#[test]
+fn empty_batch_cannot_assemble() {
+    assert!(matches!(
+        assemble_scene(Gaussians::default(), &AssembleOptions::default()),
+        Err(AssetError::EmptyScene)
+    ));
+    // And an I/O-level miss is typed, not a panic.
+    match load_scene(
+        Path::new("/nonexistent/sltarch/scene.splat"),
+        LoadMode::Strict,
+        &AssembleOptions::default(),
+    ) {
+        Err(AssetError::Io(_)) => {}
+        other => panic!("wrong result: {:?}", other.map(|_| ())),
+    }
+}

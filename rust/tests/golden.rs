@@ -1,5 +1,6 @@
-//! Golden-frame regression harness: renders three fixed scenes
-//! (quickstart, city orbit, VR walkthrough frame) and compares the
+//! Golden-frame regression harness: renders five fixed scenes
+//! (quickstart, city orbit, VR walkthrough frame, and the two
+//! checked-in fixture-zoo assets under `tests/fixtures/`) and compares the
 //! FNV-1a digests of their quantized RGBA buffers against the
 //! checked-in values in `tests/golden_digests.txt`, so any future
 //! pipeline change that silently alters rendered output fails tier-1.
@@ -22,6 +23,7 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
 
+use sltarch::assets::{load_scene, AssembleOptions, LoadMode};
 use sltarch::config::SceneConfig;
 use sltarch::coordinator::renderer::AlphaMode;
 use sltarch::coordinator::{BlendKernel, CpuBackend, FramePipeline, RenderOptions};
@@ -33,7 +35,7 @@ fn digest_path() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden_digests.txt")
 }
 
-/// The three pinned scenes: name, pipeline, camera.
+/// The five pinned scenes: name, pipeline, camera.
 fn scenes() -> Vec<(&'static str, FramePipeline, Camera)> {
     let mut out = Vec::new();
 
@@ -57,6 +59,30 @@ fn scenes() -> Vec<(&'static str, FramePipeline, Camera)> {
     let cam = walkthrough(cfg.extent, 8, 256, 256)[2];
     let pipeline = FramePipeline::builder(cfg.build(11)).tau(16.0).build();
     out.push(("vr_walkthrough", pipeline, cam));
+
+    // 4 + 5. The checked-in fixture zoo, one scene per asset format —
+    // pins the whole ingestion path (parse -> assemble -> render), so a
+    // parser change that alters any decoded field fails tier-1 exactly
+    // like a renderer change would.
+    for (file, name) in
+        [("zoo_room.splat", "fixture_splat"), ("zoo_room.ply", "fixture_ply")]
+    {
+        let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("tests/fixtures")
+            .join(file);
+        let (scene, report) =
+            load_scene(&path, LoadMode::Strict, &AssembleOptions::default())
+                .expect("fixture zoo scene must load strictly");
+        assert_eq!(
+            report.dropped.total(),
+            0,
+            "{file}: zoo fixtures are fully well-formed"
+        );
+        let cam = scene.scenario_camera(0);
+        let pipeline =
+            FramePipeline::builder(scene).tau(16.0).subtree_size(32).build();
+        out.push((name, pipeline, cam));
+    }
 
     out
 }

@@ -1,0 +1,62 @@
+#!/usr/bin/env bash
+# Fetch full-size 3DGS captures for local benchmarking.
+#
+# NEVER run in CI — CI renders only the checked-in fixture zoo under
+# rust/tests/fixtures/ (a workflow grep enforces this). Downloads are
+# sha256-verified before they are trusted; a mismatch deletes the file.
+#
+# Usage:
+#   scripts/fetch_scenes.sh            # fetch everything into scenes/
+#   scripts/fetch_scenes.sh bicycle    # fetch one scene by name
+#
+# Then: cargo run --release --example quickstart -- scenes/<name>.ply
+
+set -euo pipefail
+
+DEST="${SLTARCH_SCENES_DIR:-$(dirname "$0")/../scenes}"
+mkdir -p "$DEST"
+
+# name | url | sha256
+# Public antimatter15-converted .splat captures and 3DGS training PLYs.
+# Checksums pin the exact bytes benches were run against; refresh them
+# deliberately (sha256sum <file>) when a source republishes.
+SCENES='
+train https://huggingface.co/cakewalk/splat-data/resolve/main/train.splat 9af56ae9478a438be5c4aa39ecd0a21edffee05a74fdd5b7c26f06fec14a4fe8
+plush https://huggingface.co/cakewalk/splat-data/resolve/main/plush.splat 83abc29f6e27ef2d4299d3ab46f6e08f42268f47408e1022edbf06963b5e4c6a
+'
+
+fetch_one() {
+    local name="$1" url="$2" sha="$3"
+    local out="$DEST/$name.${url##*.}"
+    if [ -f "$out" ] && echo "$sha  $out" | sha256sum -c --quiet 2>/dev/null; then
+        echo "ok       $out (cached)"
+        return 0
+    fi
+    echo "fetching $out"
+    curl -fL --retry 3 -o "$out.part" "$url"
+    local got
+    got=$(sha256sum "$out.part" | cut -d' ' -f1)
+    if [ "$got" != "$sha" ]; then
+        rm -f "$out.part"
+        echo "sha256 mismatch for $name: got $got, want $sha" >&2
+        return 1
+    fi
+    mv "$out.part" "$out"
+    echo "ok       $out"
+}
+
+want="${1:-}"
+found=0
+while read -r name url sha; do
+    [ -z "$name" ] && continue
+    if [ -z "$want" ] || [ "$name" = "$want" ]; then
+        fetch_one "$name" "$url" "$sha"
+        found=1
+    fi
+done <<<"$SCENES"
+
+if [ "$found" = 0 ]; then
+    echo "unknown scene '$want' — available:" >&2
+    while read -r name _ _; do [ -n "$name" ] && echo "  $name" >&2; done <<<"$SCENES"
+    exit 1
+fi

@@ -1,0 +1,236 @@
+#!/usr/bin/env python3
+"""Regenerate the checked-in fixture zoo under rust/tests/fixtures/.
+
+The fixtures are tiny hand-built `.splat` / PLY files the asset tests
+and the golden-frame harness load. They are deterministic (fixed LCG
+seed, no dependency on Python's hash or float formatting) so a re-run
+reproduces the committed bytes exactly; golden digests in
+rust/tests/golden_digests.txt are blessed against these bytes — do not
+regenerate without re-blessing (SLTARCH_BLESS=1, see docs/TESTING.md).
+
+Formats (mirrors rust/src/assets/):
+  .splat  32-byte records: pos f32x3 | scale f32x3 (linear) | RGBA u8x4
+          (A = opacity, sigmoid-space) | rot u8x4 as (b-128)/128, wxyz.
+  .ply    binary little-endian, header-driven property order; stored
+          fields are log-scales, opacity logits and (c-0.5)/SH_C0 color
+          coefficients; rot wxyz raw f32.
+"""
+
+import math
+import os
+import struct
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "fixtures")
+SH_C0 = 0.2820948
+
+
+class Lcg:
+    """Deterministic 64-bit LCG (MMIX constants) — no Python RNG drift."""
+
+    def __init__(self, seed):
+        self.s = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next(self):
+        self.s = (self.s * 6364136223846793005 + 1442695040888963407) & 0xFFFFFFFFFFFFFFFF
+        return self.s
+
+    def f(self, lo=0.0, hi=1.0):
+        # 24-bit mantissa so the value is exact in f32.
+        return lo + (hi - lo) * ((self.next() >> 40) / float(1 << 24))
+
+
+def room_splats(seed, n_floor=14, n_wall=10, n_blob=120):
+    """An origin-centred 'room': floor grid, two walls, scattered blobs.
+
+    Visible from every scenario camera (they orbit the origin), which is
+    what the golden harness's non-black check needs.
+    """
+    rng = Lcg(seed)
+    splats = []  # (pos, scale, color, opacity, quat_wxyz)
+
+    def jitter(amount):
+        return rng.f(-amount, amount)
+
+    # Floor grid at y = -1.5, extent +-4.
+    for ix in range(n_floor):
+        for iz in range(n_floor):
+            x = -4.0 + 8.0 * ix / (n_floor - 1) + jitter(0.1)
+            z = -4.0 + 8.0 * iz / (n_floor - 1) + jitter(0.1)
+            splats.append(
+                (
+                    (x, -1.5, z),
+                    (0.35, 0.08, 0.35),
+                    (0.45 + jitter(0.1), 0.4 + jitter(0.1), 0.35),
+                    0.9,
+                    (1.0, 0.0, 0.0, 0.0),
+                )
+            )
+    # Two walls.
+    for iy in range(n_wall):
+        for iz in range(n_wall):
+            y = -1.5 + 3.0 * iy / (n_wall - 1)
+            z = -4.0 + 8.0 * iz / (n_wall - 1)
+            splats.append(
+                (
+                    (-4.0 + jitter(0.05), y, z),
+                    (0.08, 0.3, 0.3),
+                    (0.3, 0.35, 0.55 + jitter(0.1)),
+                    0.85,
+                    (1.0, 0.0, 0.0, 0.0),
+                )
+            )
+        for ix in range(n_wall):
+            x = -4.0 + 8.0 * ix / (n_wall - 1)
+            y = -1.5 + 3.0 * iy / (n_wall - 1)
+            splats.append(
+                (
+                    (x, y, -4.0 + jitter(0.05)),
+                    (0.3, 0.3, 0.08),
+                    (0.55 + jitter(0.1), 0.3, 0.3),
+                    0.85,
+                    (1.0, 0.0, 0.0, 0.0),
+                )
+            )
+    # Scattered rotated blobs inside the room.
+    for _ in range(n_blob):
+        pos = (rng.f(-3.0, 3.0), rng.f(-1.2, 1.2), rng.f(-3.0, 3.0))
+        scale = (rng.f(0.08, 0.3), rng.f(0.08, 0.3), rng.f(0.08, 0.3))
+        color = (rng.f(0.1, 0.95), rng.f(0.1, 0.95), rng.f(0.1, 0.95))
+        opacity = rng.f(0.5, 1.0)
+        ang = rng.f(0.0, math.pi)
+        ax = (rng.f(-1, 1), rng.f(-1, 1), rng.f(-1, 1))
+        norm = math.sqrt(sum(a * a for a in ax)) or 1.0
+        s = math.sin(ang / 2) / norm
+        quat = (math.cos(ang / 2), ax[0] * s, ax[1] * s, ax[2] * s)
+        splats.append((pos, scale, color, opacity, quat))
+    return splats
+
+
+def pack_splat_record(pos, scale, color, opacity, quat):
+    def rot_byte(v):
+        return max(0, min(255, int(round(v * 128.0 + 128.0))))
+
+    def unit_byte(v):
+        return max(0, min(255, int(round(v * 255.0))))
+
+    return (
+        struct.pack("<3f", *pos)
+        + struct.pack("<3f", *scale)
+        + bytes([unit_byte(color[0]), unit_byte(color[1]), unit_byte(color[2]), unit_byte(opacity)])
+        + bytes([rot_byte(quat[0]), rot_byte(quat[1]), rot_byte(quat[2]), rot_byte(quat[3])])
+    )
+
+
+def write_dot_splat(path, splats, tail_bytes=b""):
+    with open(path, "wb") as f:
+        for s in splats:
+            f.write(pack_splat_record(*s))
+        f.write(tail_bytes)
+
+
+# Shuffled on purpose: the loader must be header-driven, and the golden
+# fixture keeps it honest (plus unknown nx/ny/nz and 9 f_rest coeffs).
+PLY_ORDER = [
+    "scale_2", "x", "f_dc_1", "rot_3", "nx", "opacity", "scale_0", "y",
+    "rot_0", "f_dc_0", "ny", "rot_1", "scale_1", "z", "rot_2", "nz",
+    "f_dc_2",
+] + [f"f_rest_{i}" for i in range(9)]
+
+
+def ply_field(name, pos, scale, color, opacity, quat, rng):
+    axis = {"x": 0, "y": 1, "z": 2}
+    if name in axis:
+        return pos[axis[name]]
+    if name.startswith("scale_"):
+        return math.log(scale[int(name[-1])])
+    if name.startswith("f_dc_"):
+        return (color[int(name[-1])] - 0.5) / SH_C0
+    if name == "opacity":
+        o = min(max(opacity, 1e-6), 1.0 - 1e-6)
+        return math.log(o / (1.0 - o))
+    if name.startswith("rot_"):
+        return quat[int(name[-1])]
+    return rng.f(-1.0, 1.0)  # normals / f_rest junk
+
+
+def write_ply(path, splats, order=PLY_ORDER):
+    rng = Lcg(0xF1E57)
+    header = ["ply", "format binary_little_endian 1.0",
+              "comment sltarch fixture zoo (scripts/gen_fixtures.py)",
+              f"element vertex {len(splats)}"]
+    header += [f"property float {n}" for n in order]
+    header.append("end_header")
+    with open(path, "wb") as f:
+        f.write(("\n".join(header) + "\n").encode())
+        for s in splats:
+            for name in order:
+                f.write(struct.pack("<f", ply_field(name, *s, rng)))
+
+
+def good(x=0.0, y=0.0, z=0.0):
+    return ((x, y, z), (0.3, 0.3, 0.3), (0.8, 0.5, 0.2), 0.9, (1.0, 0.0, 0.0, 0.0))
+
+
+def main():
+    os.makedirs(OUT, exist_ok=True)
+
+    # minimal.splat: 4 well-formed splats around the origin.
+    write_dot_splat(
+        os.path.join(OUT, "minimal.splat"),
+        [good(0, 0, 0), good(1, 0, 0), good(0, 1, 0), good(-1, 0, -1)],
+    )
+
+    # minimal.ply: 3 well-formed vertices, shuffled header.
+    write_ply(
+        os.path.join(OUT, "minimal.ply"),
+        [good(0, 0, 0), good(1.5, 0, 0), good(0, 0, -1.5)],
+    )
+
+    # degenerate.splat: good/bad interleaved + a 7-byte truncated tail.
+    nan, inf = float("nan"), float("inf")
+    records = [
+        good(0, 0, 0),                                      # kept
+        ((nan, 0, 0), (0.3,) * 3, (0.5,) * 3, 0.9, (1, 0, 0, 0)),   # bad pos
+        ((0, 0, 0), (inf, 0.3, 0.3), (0.5,) * 3, 0.9, (1, 0, 0, 0)),  # bad scale
+        ((0, 1, 0), (0.3,) * 3, (0.5,) * 3, 0.9, (0, 0, 0, 0)),     # zero quat
+        good(1, 1, 0),                                      # kept
+        ((-inf, 0, 1), (0.3,) * 3, (0.5,) * 3, 0.9, (1, 0, 0, 0)),  # bad pos
+        ((0, 0, 1), (nan, nan, nan), (0.5,) * 3, 0.9, (1, 0, 0, 0)),  # bad scale
+        good(0, -1, 1),                                     # kept
+    ]
+    write_dot_splat(
+        os.path.join(OUT, "degenerate.splat"), records, tail_bytes=b"\x00" * 7
+    )
+
+    # degenerate.ply: 1 good + NaN x / NaN log-scale / zero-norm rot.
+    ply_records = [
+        good(0, 0, 0),
+        ((nan, 0, 0), (0.3,) * 3, (0.5,) * 3, 0.9, (1, 0, 0, 0)),
+        # NaN scale: math.log can't emit NaN from a valid input, so patch
+        # below by writing the record then poisoning scale_0's bytes.
+        good(1, 0, 0),
+        ((0, 1, 0), (0.3,) * 3, (0.5,) * 3, 0.9, (0.0, 0.0, 0.0, 0.0)),
+    ]
+    path = os.path.join(OUT, "degenerate.ply")
+    write_ply(path, ply_records)
+    # Poison vertex 2's scale_0 with NaN (slot index in PLY_ORDER).
+    with open(path, "r+b") as f:
+        data = f.read()
+        header_end = data.index(b"end_header\n") + len(b"end_header\n")
+        stride = 4 * len(PLY_ORDER)
+        off = header_end + 2 * stride + 4 * PLY_ORDER.index("scale_0")
+        f.seek(off)
+        f.write(struct.pack("<f", nan))
+
+    # zoo_room: the golden fixtures (one per format, different seeds so
+    # the two scenes differ).
+    write_dot_splat(os.path.join(OUT, "zoo_room.splat"), room_splats(0xA11CE))
+    write_ply(os.path.join(OUT, "zoo_room.ply"), room_splats(0xB0B5))
+
+    for name in sorted(os.listdir(OUT)):
+        p = os.path.join(OUT, name)
+        print(f"{os.path.getsize(p):8d}  {name}")
+
+
+if __name__ == "__main__":
+    main()
