@@ -21,11 +21,14 @@
 //!
 //! [`write_ply`] is the matching encoder. It searches each stored
 //! field's *preimage* under the loader's activation (monotone bisection
-//! in sortable-bit space), so re-encoding a **loaded** scene reproduces
-//! it bit for bit: `load(write(s))` is the identity on any `s` that a
-//! load produced. That is what makes PLY round-trip renders
-//! byte-identical where `.splat`'s `u8` quantization is only
-//! digest-stable.
+//! in sortable-bit space), so re-encoding a **PLY-loaded** scene
+//! reproduces it bit for bit: `load_ply(write_ply(s))` is the identity
+//! on any `s` that a PLY load produced. That is what makes PLY
+//! round-trip renders byte-identical where `.splat`'s `u8` quantization
+//! is only digest-stable — a scene that came from a `.splat` load (or
+//! any other source) carries values outside the activations' images,
+//! and those encode as the nearest representable stored value instead
+//! (see [`write_ply`]).
 
 use std::io::BufRead;
 
@@ -50,6 +53,14 @@ const MAX_VERTEX_COUNT: u64 = 100_000_000;
 /// otherwise be scanned for a `\n` indefinitely).
 const MAX_HEADER_LINE: usize = 1024;
 const MAX_HEADER_LINES: usize = 4096;
+
+/// Plausibility cap on the total bytes of non-vertex elements declared
+/// *before* the vertex data (cameras, metadata — tiny in practice).
+/// Mirrors [`MAX_VERTEX_COUNT`]: without it a hostile header could
+/// declare a pre-vertex element with `count * stride` near `u64::MAX`
+/// and make the loader try to skip that many bytes, which on a non-file
+/// source (pipe, socket) stalls rather than hitting EOF.
+const MAX_PRE_SKIP_BYTES: u64 = 1 << 30;
 
 /// The 14 required vertex properties, all `float32`.
 const REQUIRED: [&str; 14] = [
@@ -97,7 +108,7 @@ fn finish_element(
     cur: &mut Option<ElemHdr>,
     layout: &mut Option<VertexLayout>,
     pre_skip: &mut u64,
-) {
+) -> Result<(), AssetError> {
     if let Some(e) = cur.take() {
         if e.name == "vertex" {
             *layout = Some(VertexLayout {
@@ -108,25 +119,47 @@ fn finish_element(
                 pre_skip: 0,
             });
         } else if layout.is_none() {
-            *pre_skip += e.count.saturating_mul(e.stride as u64);
+            *pre_skip = pre_skip
+                .saturating_add(e.count.saturating_mul(e.stride as u64));
+            if *pre_skip > MAX_PRE_SKIP_BYTES {
+                return Err(AssetError::BadHeader(format!(
+                    "pre-vertex element `{}` implausibly large",
+                    e.name
+                )));
+            }
         }
     }
+    Ok(())
 }
 
 /// Read one `\n`-terminated header line (CR trimmed), with length caps.
-/// EOF before any byte is a structural error — a header never just ends.
+/// EOF before the `\n` is a structural error — a header never just
+/// ends, not even right after `end_header`: a file cut there has lost
+/// its vertex data too, and must read as truncated, not as valid.
 fn header_line<R: BufRead>(r: &mut R) -> Result<String, AssetError> {
     let mut raw = Vec::new();
-    let mut limited = r.take((MAX_HEADER_LINE + 1) as u64);
+    // +2: room for a full-length line plus its `\n`, so hitting the
+    // cap is distinguishable from a line that exactly fits it.
+    let mut limited = r.take((MAX_HEADER_LINE + 2) as u64);
     let n = limited.read_until(b'\n', &mut raw)?;
     if n == 0 {
         return Err(AssetError::BadHeader("unexpected end of header".into()));
     }
+    if raw.last() != Some(&b'\n') {
+        return Err(AssetError::BadHeader(
+            if raw.len() > MAX_HEADER_LINE + 1 {
+                "header line too long".into()
+            } else {
+                "unterminated header line".into()
+            },
+        ));
+    }
+    raw.pop();
+    while raw.last() == Some(&b'\r') {
+        raw.pop();
+    }
     if raw.len() > MAX_HEADER_LINE {
         return Err(AssetError::BadHeader("header line too long".into()));
-    }
-    while raw.last() == Some(&b'\n') || raw.last() == Some(&b'\r') {
-        raw.pop();
     }
     String::from_utf8(raw)
         .map_err(|_| AssetError::BadHeader("non-UTF-8 header line".into()))
@@ -160,7 +193,7 @@ fn parse_header<R: BufRead>(r: &mut R) -> Result<VertexLayout, AssetError> {
                 format_ok = true;
             }
             Some("element") => {
-                finish_element(&mut cur, &mut layout, &mut pre_skip);
+                finish_element(&mut cur, &mut layout, &mut pre_skip)?;
                 let name = tok
                     .next()
                     .ok_or_else(|| {
@@ -253,7 +286,7 @@ fn parse_header<R: BufRead>(r: &mut R) -> Result<VertexLayout, AssetError> {
                 e.stride += size;
             }
             Some("end_header") => {
-                finish_element(&mut cur, &mut layout, &mut pre_skip);
+                finish_element(&mut cur, &mut layout, &mut pre_skip)?;
                 if !format_ok {
                     return Err(AssetError::BadHeader(
                         "missing format line".into(),
@@ -436,19 +469,28 @@ fn invert(target: f32, lo: f32, hi: f32, fwd: impl Fn(f32) -> f32) -> f32 {
     best
 }
 
-/// Stored-field ranges the preimage search covers: log-scales and
-/// opacity logits for anything renderable live well inside ±120, and
-/// `f_dc` for colors in a sane gamut inside ±64.
+/// Stored-field ranges the preimage search covers. ±120 spans the full
+/// image of both activations in `f32`: `sigmoid` saturates to exactly
+/// 0/1 well inside it, and `exp` underflows to exactly 0 below −104 and
+/// overflows past `f32::MAX` (so is rejected as non-finite on load)
+/// above ~89 — every finite value a load produced has its preimage
+/// here. `f_dc` has no such saturation, so colors get the whole finite
+/// line: any finite loaded color is `dc_to_color` of some finite `f_dc`
+/// and stays exactly invertible however wild the training output was.
 const LOGIT_RANGE: (f32, f32) = (-120.0, 120.0);
-const DC_RANGE: (f32, f32) = (-64.0, 64.0);
+const DC_RANGE: (f32, f32) = (f32::MIN, f32::MAX);
 
 /// Encode a splat batch as a binary little-endian 3DGS PLY.
 ///
 /// Positions and rotations are stored raw (rotations normalized first;
 /// a zero-norm quaternion encodes as identity); color, opacity and
 /// scale are stored through exact-preimage inversion of the loader's
-/// activations (see [`invert`]), so a loaded scene survives
-/// `write_ply` -> [`load_ply`] bit for bit.
+/// activations (see [`invert`]), so a **PLY-loaded** scene survives
+/// `write_ply` -> [`load_ply`] bit for bit. Fields that did not come
+/// through those activations — a `.splat` load's `u8`-quantized color
+/// and opacity, or a non-positive scale, which `exp` cannot produce
+/// (except exactly `0.0`, which it underflows to) — encode as the
+/// nearest value the activation *can* produce, within an ulp or two.
 pub fn write_ply<W: std::io::Write>(
     mut w: W,
     g: &Gaussians,
@@ -530,6 +572,16 @@ mod tests {
             let back = invert(c, DC_RANGE.0, DC_RANGE.1, dc_to_color);
             assert_eq!(dc_to_color(back).to_bits(), c.to_bits(), "dc({raw})");
         }
+        // `f_dc` has no sane gamut: wild-but-finite training outputs
+        // must still invert exactly (the DC range is the whole line).
+        for raw in [-3.0e38f32, -1.0e6, 1000.0, 2.5e30, f32::MAX] {
+            let c = dc_to_color(raw);
+            let back = invert(c, DC_RANGE.0, DC_RANGE.1, dc_to_color);
+            assert_eq!(dc_to_color(back).to_bits(), c.to_bits(), "dc({raw})");
+        }
+        // Scales underflowed to exactly 0.0 invert exactly too.
+        let back = invert(0.0, LOGIT_RANGE.0, LOGIT_RANGE.1, f32::exp);
+        assert_eq!(back.exp().to_bits(), 0.0f32.to_bits(), "exp underflow");
         // Saturated opacities have exact preimages too.
         for o in [0.0f32, 1.0] {
             let back = invert(o, LOGIT_RANGE.0, LOGIT_RANGE.1, sigmoid);
@@ -652,6 +704,70 @@ mod tests {
                     Err(e) => assert!(check(&e), "{mode:?}: wrong error {e}"),
                     Ok(_) => panic!("{mode:?}: accepted bad header"),
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn unterminated_end_header_is_a_header_error() {
+        // A file cut one byte before the body has `end_header` with no
+        // trailing `\n`: structurally bad in both modes, never a
+        // zero-record success (the vertex data is gone with the cut).
+        let g = sample();
+        let mut bytes = Vec::new();
+        write_ply(&mut bytes, &g).unwrap();
+        let body = bytes.len() - 2 * 14 * 4;
+        for mode in [LoadMode::Strict, LoadMode::Lossy] {
+            match load_ply(&bytes[..body - 1], mode) {
+                Err(AssetError::BadHeader(_)) => {}
+                other => panic!("{mode:?}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn header_line_cap_is_inclusive() {
+        // Exactly MAX_HEADER_LINE content bytes plus `\n` is within the
+        // cap; one more content byte is not.
+        let build = |pad: usize| {
+            let mut h = String::from("ply\nformat binary_little_endian 1.0\n");
+            h.push_str("comment ");
+            h.push_str(&"x".repeat(pad - "comment ".len()));
+            h.push('\n');
+            h.push_str("element vertex 0\nend_header\n");
+            h.into_bytes()
+        };
+        // An in-cap comment parses through to "no required properties".
+        match load_ply(&build(MAX_HEADER_LINE)[..], LoadMode::Strict) {
+            Err(AssetError::BadHeader(m)) => {
+                assert!(m.contains("missing property"), "{m}")
+            }
+            other => panic!("cap-length line: {other:?}"),
+        }
+        match load_ply(&build(MAX_HEADER_LINE + 1)[..], LoadMode::Strict) {
+            Err(AssetError::BadHeader(m)) => {
+                assert!(m.contains("too long"), "{m}")
+            }
+            other => panic!("over-cap line: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn absurd_pre_vertex_element_is_rejected() {
+        // A hostile non-vertex element before the vertices must not
+        // make the loader try to skip ~2^64 bytes.
+        let header = format!(
+            "ply\nformat binary_little_endian 1.0\n\
+             element junk {}\nproperty float pad\n\
+             element vertex 1\nproperty float x\nend_header\n",
+            u64::MAX / 4
+        );
+        for mode in [LoadMode::Strict, LoadMode::Lossy] {
+            match load_ply(header.as_bytes(), mode) {
+                Err(AssetError::BadHeader(m)) => {
+                    assert!(m.contains("implausibly large"), "{m}")
+                }
+                other => panic!("{mode:?}: {other:?}"),
             }
         }
     }
