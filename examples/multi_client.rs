@@ -90,6 +90,7 @@ fn main() -> anyhow::Result<()> {
             recover_headroom: 0.5,
             recover_after: 8,
         },
+        ..ServeConfig::default()
     };
     let load = LoadGenConfig {
         clients,

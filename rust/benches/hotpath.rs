@@ -10,11 +10,13 @@ use sltarch::assets::{
 };
 use sltarch::config::{RenderConfig, SceneConfig};
 use sltarch::coordinator::renderer::{default_threads, AlphaMode, CpuRenderer};
-use sltarch::coordinator::{BlendKernel, CpuBackend, FramePipeline, RenderOptions};
+use sltarch::coordinator::{
+    BatchConfig, BlendKernel, CpuBackend, FramePipeline, RenderOptions,
+};
 use sltarch::gaussian::{
     project, project_into, project_into_threaded, Gaussians, Splat2D,
 };
-use sltarch::math::{Quat, Vec3};
+use sltarch::math::{Camera, Quat, Vec3};
 use sltarch::lod::{traverse_sltree, CutCache, CutCacheConfig, SlTree};
 use sltarch::residency::ResidencyConfig;
 use sltarch::scene::{orbit_cameras, walkthrough};
@@ -199,6 +201,108 @@ fn main() {
         b.record(&format!("stage {name} ms/frame"), ms);
     }
     b.record("front_end_threads", stats.front_end_threads as f64);
+
+    // The PR-10 tentpole rows: multi-view batch rendering. K=2 is a
+    // stereo pair (6.5 cm baseline), K=8 fans four such pairs along the
+    // orbit. `shared` runs the full sharing stack (identity coalescing,
+    // seeded searches, gather skip, interleaved blend); `independent`
+    // renders the same batch with all sharing off — the per-view
+    // reference. Outputs are byte-identical either way (golden harness
+    // + proptests), so every row delta is pure cross-view sharing.
+    // "front end" = search + project + bin + sort ms/frame from the
+    // per-view stage stats; blending is excluded so the rows isolate
+    // exactly the stages the batch can share.
+    let stereo = |c: &Camera, d: f32| {
+        let mut out = *c;
+        let r = c.view.rotation();
+        for i in 0..3 {
+            out.view.m[i][3] -= r.row(i).dot(Vec3::new(d, 0.0, 0.0));
+        }
+        out
+    };
+    let front_end_ms_per_frame = |stats: &sltarch::coordinator::RenderStats| {
+        let fe = stats.stages.search
+            + stats.stages.project
+            + stats.stages.bin
+            + stats.stages.sort;
+        fe * 1e3 / stats.frames.max(1) as f64
+    };
+    let pair = vec![cams[0], stereo(&cams[0], 0.065)];
+    let eight: Vec<Camera> = (0..4)
+        .flat_map(|i| [cams[i * 3], stereo(&cams[i * 3], 0.065)])
+        .collect();
+    for (label, bcams) in [("K=2", &pair), ("K=8", &eight)] {
+        for (mode, bcfg) in [
+            ("shared", BatchConfig::default()),
+            ("independent", BatchConfig::independent()),
+        ] {
+            let mut vb = pipeline.batch_with(pipeline.default_options(), bcfg);
+            b.iter(&format!("batch({label}, {mode})"), 3, || {
+                vb.render(bcams).expect("batch render").len()
+            });
+            let mut fe = 0.0f64;
+            let mut frames = 0usize;
+            for v in 0..bcams.len() {
+                let st = vb.view_stats(v).expect("view stats");
+                fe += front_end_ms_per_frame(st) * st.frames as f64;
+                frames += st.frames;
+            }
+            b.record(
+                &format!("batch({label}, {mode}) front end ms/frame"),
+                fe / frames.max(1) as f64,
+            );
+            if mode == "shared" {
+                let bs = vb.batch_stats();
+                b.record(
+                    &format!("batch({label}) searches seeded"),
+                    bs.searches_seeded as f64,
+                );
+                b.record(
+                    &format!("batch({label}) gathers skipped"),
+                    bs.gathers_skipped as f64,
+                );
+            }
+        }
+    }
+    // The duplicate-feed case: two clients on the same camera bits (the
+    // serving layer's coalescing scenario) — the second view's whole
+    // front end is shared, so its front-end ms/frame halves by
+    // construction.
+    let dup = vec![cams[0], cams[0]];
+    let mut vb = pipeline.batch();
+    b.iter("batch(K=2, shared, duplicate-feed)", 3, || {
+        vb.render(&dup).expect("batch render").len()
+    });
+    {
+        let mut fe = 0.0f64;
+        let mut frames = 0usize;
+        for v in 0..dup.len() {
+            let st = vb.view_stats(v).expect("view stats");
+            fe += front_end_ms_per_frame(st) * st.frames as f64;
+            frames += st.frames;
+        }
+        b.record(
+            "batch(K=2, shared, duplicate-feed) front end ms/frame",
+            fe / frames.max(1) as f64,
+        );
+        b.record(
+            "batch front_ends_shared",
+            vb.batch_stats().front_ends_shared as f64,
+        );
+    }
+    // Single-view reference over the same stereo eyes: the 2x / 8x
+    // baseline the shared rows are read against.
+    let mut sref = pipeline.session();
+    for _ in 0..3 {
+        for c in &pair {
+            sref.render(c).expect("single render");
+        }
+    }
+    b.record(
+        "batch single-view front end ms/frame",
+        front_end_ms_per_frame(sref.stats()),
+    );
+    drop(sref);
 
     // The PR-5 tentpole rows: the blend stage alone, scalar reference
     // kernel vs the divergence-free SoA kernel, at scheduler widths

@@ -9,14 +9,15 @@
 //! asserts.
 
 use super::renderer::{
-    blend_tiles, blend_tiles_pjrt, default_threads, AlphaMode, FrameScratch,
+    blend_tiles, blend_tiles_batch, blend_tiles_pjrt, default_threads,
+    AlphaMode, BatchBlendView, FrameScratch,
 };
 use crate::config::RenderConfig;
 use crate::lod::CutCacheConfig;
 use crate::metrics::Image;
 use crate::residency::ResidencyConfig;
 use crate::runtime::PjrtEngine;
-use crate::splat::BlendKernel;
+use crate::splat::{BatchWorkItem, BlendKernel, TileState};
 use anyhow::Result;
 
 /// Typed per-session render knobs (replaces the per-call `AlphaMode`
@@ -90,6 +91,34 @@ pub trait RenderBackend: Send + Sync {
         rcfg: &RenderConfig,
         img: &mut Image,
     ) -> Result<()>;
+
+    /// Blend a whole multi-view batch: `views` holds each view's
+    /// prepared scratch + output image, `items` the interleaved
+    /// `(view, tile)` schedule covering every non-empty tile of every
+    /// view exactly once, and `pool` a caller-owned SoA tile-state
+    /// pool shared across the batch.
+    ///
+    /// The default implementation ignores the combined schedule and
+    /// blends each view independently through [`RenderBackend::blend`]
+    /// — correct for any backend (the schedule covers exactly the tiles
+    /// a per-view blend would touch), just without cross-view work
+    /// stealing. The CPU backend overrides it with the interleaved
+    /// single-cursor scheduler. Either way the output is byte-identical
+    /// to per-view blends.
+    fn blend_batch(
+        &self,
+        views: &mut [BatchBlendView<'_>],
+        items: &[BatchWorkItem],
+        pool: &mut Vec<TileState>,
+        opts: &RenderOptions,
+        rcfg: &RenderConfig,
+    ) -> Result<()> {
+        let _ = (items, pool);
+        for v in views.iter_mut() {
+            self.blend(v.scratch, opts, rcfg, v.img)?;
+        }
+        Ok(())
+    }
 }
 
 /// The pure-CPU backend: the dynamic-greedy multi-threaded tile
@@ -145,6 +174,26 @@ impl RenderBackend for CpuBackend {
             rcfg.t_min,
             self.threads(opts),
             img,
+        );
+        Ok(())
+    }
+
+    fn blend_batch(
+        &self,
+        views: &mut [BatchBlendView<'_>],
+        items: &[BatchWorkItem],
+        pool: &mut Vec<TileState>,
+        opts: &RenderOptions,
+        rcfg: &RenderConfig,
+    ) -> Result<()> {
+        blend_tiles_batch(
+            views,
+            items,
+            pool,
+            opts.alpha.blend_mode(),
+            opts.kernel,
+            rcfg.t_min,
+            self.threads(opts),
         );
         Ok(())
     }

@@ -1,0 +1,625 @@
+//! Multi-view batch rendering: K cameras over one scene in one call.
+//!
+//! A [`ViewBatch`] renders a slice of cameras through one shared front
+//! end wherever cross-view structure allows it, while keeping the
+//! non-negotiable contract that **batch output is byte-identical to K
+//! independent single-view session renders** (pinned by the golden
+//! stereo pass in `rust/tests/golden.rs` and the batch proptests in
+//! `rust/tests/proptests.rs`). Three sharing levels, all exact:
+//!
+//! 1. **Identity groups** ([`BatchConfig::share_front_ends`]): views
+//!    whose cameras are *bitwise equal* (the serving layer's duplicate
+//!    coalescing case — N clients watching the same feed) form one
+//!    group. The leader runs the whole frame once; members clone its
+//!    image. Exact because the pipeline is deterministic: the same
+//!    camera bits always produce the same frame bits.
+//! 2. **Seed groups** ([`BatchConfig::seed_searches`]): identity-group
+//!    leaders whose poses are close (within
+//!    [`BatchConfig::max_translation`] / [`BatchConfig::max_rotation`])
+//!    share one [`crate::lod::CutCache`] — every member's LoD search
+//!    routes through the seed leader's cache, so the frontier a
+//!    neighbouring view just searched seeds this view's search instead
+//!    of a from-the-top traversal. Exact because the cache's
+//!    incremental revalidation re-derives the *canonical* cut from any
+//!    valid frontier at any camera delta (see `lod/cut_cache.rs`); the
+//!    closeness thresholds only decide when sharing is *profitable*,
+//!    never whether it is correct. When two consecutive searches in a
+//!    group select bit-equal cuts, the later view also skips its
+//!    gather and feeds its front end from the earlier view's rendering
+//!    queue (same cut bytes => same queue bytes).
+//! 3. **Interleaved blending** ([`BatchConfig::interleave_tiles`]):
+//!    instead of K back-to-back blend passes (each joining its workers
+//!    at its own ragged tail), the batch splices every view's
+//!    non-empty-tile work list into one
+//!    [`crate::splat::BatchWorkItem`] schedule drained by a single
+//!    atomic-cursor worker pool
+//!    ([`RenderBackend::blend_batch`]) — the LT-unit dynamic dequeue
+//!    applied *across* views. Exact because tiles are disjoint and each
+//!    is blended by the unchanged per-tile kernel. Work items carry an
+//!    optional per-tile tau (a reserved foveated-rendering hook, inert
+//!    today).
+//!
+//! Statistics contract: every view commits through the same
+//! [`super::session::FrameWork`] bookkeeping as a single-view render,
+//! so the *deterministic* counters (`frames`, `cut_total`,
+//! `pairs_total`, `threads`, `front_end_threads`) always match K
+//! independent sessions. The cut-cache counters (`cache_hit`,
+//! `revalidated`, `reseeded`, `verdicts_skipped`) and residency
+//! telemetry additionally match under [`BatchConfig::independent`];
+//! with sharing enabled they reflect the shared searches actually
+//! performed (identity members search nothing; seeded views hit the
+//! leader's cache). Timings are wall-clock and never part of any
+//! equality contract; the interleaved blend attributes each view an
+//! equal 1/K share of the combined blend time.
+
+use super::backend::{BatchBlendView, RenderBackend, RenderOptions};
+use super::pipeline::FramePipeline;
+use super::renderer::front_end_timed;
+use super::session::{FrameWork, RenderSession};
+use super::stats::{RenderStats, StageTimings};
+use crate::math::Camera;
+use crate::metrics::Image;
+use crate::splat::{BatchWorkItem, TileState};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Cross-view sharing policy for a [`ViewBatch`].
+///
+/// Every knob is a *performance* policy: any combination renders
+/// byte-identically to K independent sessions (see the module docs for
+/// why each sharing level is exact).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    /// Coalesce views with bitwise-identical cameras into one front
+    /// end (leader renders, members clone the image).
+    pub share_front_ends: bool,
+    /// Route the LoD searches of pose-close views through one shared
+    /// cut cache, so each view's search starts from the frontier a
+    /// neighbouring view just established (and skip re-gathering when
+    /// consecutive searches select bit-equal cuts).
+    pub seed_searches: bool,
+    /// Blend all views' tiles through one interleaved work list and a
+    /// single scoped worker pool instead of K sequential blend passes.
+    pub interleave_tiles: bool,
+    /// Maximum eye-position distance (world units) for two views to
+    /// share a cut cache. Grouping heuristic only — correctness never
+    /// depends on it.
+    pub max_translation: f32,
+    /// Maximum forward-axis angle (radians) for two views to share a
+    /// cut cache. Grouping heuristic only.
+    pub max_rotation: f32,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            share_front_ends: true,
+            seed_searches: true,
+            interleave_tiles: true,
+            max_translation: 0.5,
+            max_rotation: std::f32::consts::FRAC_PI_8,
+        }
+    }
+}
+
+impl BatchConfig {
+    /// All sharing off: the batch renders each view exactly like an
+    /// independent session (the stats-equality reference mode).
+    pub fn independent() -> Self {
+        BatchConfig {
+            share_front_ends: false,
+            seed_searches: false,
+            interleave_tiles: false,
+            ..BatchConfig::default()
+        }
+    }
+}
+
+/// Batch-level sharing telemetry (what the cross-view machinery
+/// actually reused; per-view rendering statistics live in each view's
+/// [`RenderStats`], see [`ViewBatch::view_stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStats {
+    /// Batch render calls.
+    pub batches: u64,
+    /// Views submitted across all batches.
+    pub views: u64,
+    /// Views served by cloning an identity-group leader's frame
+    /// (their whole front end + blend was shared).
+    pub front_ends_shared: u64,
+    /// LoD searches routed through a pose-close neighbour's cut cache
+    /// instead of this view's own.
+    pub searches_seeded: u64,
+    /// Gathers skipped because a view's cut was bit-equal to the
+    /// previously gathered cut in its batch (the front end read the
+    /// neighbour's rendering queue directly).
+    pub gathers_skipped: u64,
+}
+
+/// A multi-view renderer over one [`FramePipeline`]: K cameras in, K
+/// images out, with cross-view front-end sharing per [`BatchConfig`].
+///
+/// Owns one persistent [`RenderSession`] per view slot (grown lazily to
+/// the widest batch seen), so per-slot temporal state — front-end
+/// scratch, cut caches, per-view stats — carries across calls exactly
+/// like long-lived single-view sessions. Construct via
+/// [`FramePipeline::batch`] / [`FramePipeline::batch_with`] /
+/// [`FramePipeline::batch_on`].
+pub struct ViewBatch<'p> {
+    pipeline: &'p FramePipeline,
+    backend: &'p dyn RenderBackend,
+    opts: RenderOptions,
+    cfg: BatchConfig,
+    /// One session per view slot, grown on demand and kept across
+    /// calls (slot i always serves camera i of a batch).
+    sessions: Vec<RenderSession<'p>>,
+    /// Shared SoA tile-state pool for the interleaved blend.
+    pool: Vec<TileState>,
+    /// Reusable interleaved work-item buffer.
+    items: Vec<BatchWorkItem>,
+    /// The most recently gathered cut within the current batch call
+    /// (drives the gather-skip comparison).
+    prev_cut: Vec<u32>,
+    stats: BatchStats,
+}
+
+/// Bit-level camera identity key: every field that can influence a
+/// rendered frame, as raw bits (so `-0.0` vs `0.0` and NaN payloads
+/// can never alias two cameras the pipeline could treat differently).
+fn cam_key(cam: &Camera) -> [u32; 24] {
+    let mut k = [0u32; 24];
+    let mut w = 0;
+    for row in cam.view.m {
+        for v in row {
+            k[w] = v.to_bits();
+            w += 1;
+        }
+    }
+    for v in cam.intr.to_array() {
+        k[w] = v.to_bits();
+        w += 1;
+    }
+    k[20] = cam.intr.width;
+    k[21] = cam.intr.height;
+    k[22] = cam.near.to_bits();
+    k[23] = cam.far.to_bits();
+    k
+}
+
+/// Whether two poses are close enough to profitably share a cut cache
+/// (translation + forward-axis angle thresholds). Non-finite deltas
+/// compare false, so degenerate cameras never group.
+fn poses_close(a: &Camera, b: &Camera, cfg: &BatchConfig) -> bool {
+    let dt = (a.eye() - b.eye()).length();
+    let fa = a.view.rotation().row(2);
+    let fb = b.view.rotation().row(2);
+    let dr = fa.dot(fb).clamp(-1.0, 1.0).acos();
+    dt <= cfg.max_translation && dr <= cfg.max_rotation
+}
+
+impl<'p> ViewBatch<'p> {
+    pub(crate) fn new(
+        pipeline: &'p FramePipeline,
+        backend: &'p dyn RenderBackend,
+        opts: RenderOptions,
+        cfg: BatchConfig,
+    ) -> Self {
+        ViewBatch {
+            pipeline,
+            backend,
+            opts,
+            cfg,
+            sessions: Vec::new(),
+            pool: Vec::new(),
+            items: Vec::new(),
+            prev_cut: Vec::new(),
+            stats: BatchStats::default(),
+        }
+    }
+
+    /// The sharing policy this batch renders under (fixed at creation).
+    pub fn config(&self) -> &BatchConfig {
+        &self.cfg
+    }
+
+    /// The render options every view slot was opened with.
+    pub fn options(&self) -> &RenderOptions {
+        &self.opts
+    }
+
+    /// Batch-level sharing telemetry.
+    pub fn batch_stats(&self) -> &BatchStats {
+        &self.stats
+    }
+
+    /// Return the sharing telemetry and start a fresh window.
+    pub fn reset_batch_stats(&mut self) -> BatchStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    /// Rendering statistics of one view slot's session (None until a
+    /// batch wide enough to open that slot has rendered).
+    pub fn view_stats(&self, view: usize) -> Option<&RenderStats> {
+        self.sessions.get(view).map(|s| s.stats())
+    }
+
+    /// Number of view slots opened so far (the widest batch rendered).
+    pub fn view_slots(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Start a fresh statistics window on every view slot's session
+    /// (cut caches and scratch stay warm, like
+    /// [`RenderSession::reset_stats`]).
+    pub fn reset_view_stats(&mut self) {
+        for s in &mut self.sessions {
+            s.reset_stats();
+        }
+    }
+
+    /// Render one camera per view slot and return one image per
+    /// camera, byte-identical to rendering each camera through its own
+    /// independent session (see the module docs for the sharing levels
+    /// and why each is exact). Errors abort the whole batch before any
+    /// view's statistics commit, so the per-view counters can never
+    /// count a half-rendered batch.
+    pub fn render(&mut self, cams: &[Camera]) -> Result<Vec<Image>> {
+        let k = cams.len();
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        while self.sessions.len() < k {
+            self.sessions.push(RenderSession::new(
+                self.pipeline,
+                self.backend,
+                self.opts,
+            ));
+        }
+        self.stats.batches += 1;
+        self.stats.views += k as u64;
+
+        // --- plan: identity groups, then seed groups over their
+        // leaders (greedy in view order, so owners always precede
+        // members and splitting the session slice at a member's index
+        // always exposes its owner mutably on the left).
+        let keys: Vec<[u32; 24]> = cams.iter().map(cam_key).collect();
+        let mut owner = vec![0usize; k];
+        let mut cache = vec![0usize; k];
+        let mut seed_leaders: Vec<usize> = Vec::new();
+        for i in 0..k {
+            owner[i] = if self.cfg.share_front_ends {
+                (0..i)
+                    .find(|&j| owner[j] == j && keys[j] == keys[i])
+                    .unwrap_or(i)
+            } else {
+                i
+            };
+            if owner[i] != i {
+                cache[i] = cache[owner[i]];
+                self.stats.front_ends_shared += 1;
+                continue;
+            }
+            cache[i] = if self.cfg.seed_searches {
+                seed_leaders
+                    .iter()
+                    .copied()
+                    .find(|&l| poses_close(&cams[l], &cams[i], &self.cfg))
+                    .unwrap_or(i)
+            } else {
+                i
+            };
+            if cache[i] == i {
+                seed_leaders.push(i);
+            } else {
+                self.stats.searches_seeded += 1;
+            }
+        }
+
+        // --- per-view search/gather + front end (identity members do
+        // nothing here; they clone their owner's image at commit).
+        let pipeline = self.pipeline;
+        let mut images: Vec<Image> = cams
+            .iter()
+            .map(|c| Image::new(c.intr.width, c.intr.height))
+            .collect();
+        let mut frames: Vec<Option<FrameWork>> = (0..k).map(|_| None).collect();
+        let mut queue_src = vec![usize::MAX; k];
+        let mut unique: Vec<usize> = Vec::new();
+        self.prev_cut.clear();
+        // View whose session queue holds the gather of `prev_cut`.
+        let mut prev_owner = usize::MAX;
+
+        for i in 0..k {
+            if owner[i] != i {
+                continue;
+            }
+            let cam = &cams[i];
+            let mut fw;
+            if cache[i] == i {
+                // Own-cache search: the plain single-view stage.
+                let s = &mut self.sessions[i];
+                fw = s.begin_frame();
+                s.search_and_gather(cam, &mut fw);
+                self.prev_cut.clear();
+                self.prev_cut.extend_from_slice(s.cut_cache.cut());
+                prev_owner = i;
+                queue_src[i] = i;
+            } else {
+                // Seeded search: route through the seed leader's cache
+                // (leader index < i by construction).
+                let l = cache[i];
+                let (left, right) = self.sessions.split_at_mut(i);
+                let leader = &mut left[l];
+                let s = &mut right[0];
+                fw = s.begin_frame();
+                leader
+                    .cut_cache
+                    .set_collect_touched(s.opts.residency.enabled);
+                let t = Instant::now();
+                let (cut_len, same, trace) = {
+                    let (cut, trace) = leader.cut_cache.search(
+                        &pipeline.scene().tree,
+                        pipeline.sltree(),
+                        cam,
+                        s.opts.lod_tau,
+                        &s.opts.cut_cache,
+                    );
+                    let same =
+                        prev_owner != usize::MAX && cut == &self.prev_cut[..];
+                    if !same {
+                        pipeline.scene().gaussians.gather_into(cut, &mut s.queue);
+                        self.prev_cut.clear();
+                        self.prev_cut.extend_from_slice(cut);
+                    }
+                    (cut.len() as u64, same, trace)
+                };
+                fw.cut_len = cut_len;
+                fw.record_search(&trace);
+                fw.stages
+                    .record_stage(StageTimings::SEARCH, t.elapsed().as_secs_f64());
+                s.charge_residency(&trace, leader.cut_cache.cut(), &mut fw);
+                if same {
+                    self.stats.gathers_skipped += 1;
+                    queue_src[i] = prev_owner;
+                } else {
+                    prev_owner = i;
+                    queue_src[i] = i;
+                }
+            }
+
+            // Front end over this view's queue (or the bit-equal queue
+            // a neighbouring view already gathered).
+            let qs = queue_src[i];
+            if qs == i {
+                self.sessions[i].front_end(cam, &mut fw)?;
+            } else {
+                let (left, right) = self.sessions.split_at_mut(i);
+                let src = &left[qs];
+                let s = &mut right[0];
+                let width = s.scheduler_width();
+                front_end_timed(&src.queue, cam, &mut s.scratch, &mut fw.stages, width)?;
+                fw.pairs = s.scratch.bins.pairs;
+            }
+            frames[i] = Some(fw);
+            unique.push(i);
+        }
+
+        // --- blend: one interleaved (view, tile) schedule over all
+        // unique views, or per-view passes when interleaving is off.
+        if self.cfg.interleave_tiles && !unique.is_empty() {
+            self.items.clear();
+            let mut rank = 0usize;
+            loop {
+                let mut any = false;
+                for (vi, &v) in unique.iter().enumerate() {
+                    let work = &self.sessions[v].scratch.work;
+                    if rank < work.len() {
+                        self.items.push(BatchWorkItem::new(vi as u32, work[rank]));
+                        any = true;
+                    }
+                }
+                if !any {
+                    break;
+                }
+                rank += 1;
+            }
+            let backend = self.backend;
+            let opts = self.opts;
+            let rcfg = pipeline.rcfg();
+            let t = Instant::now();
+            {
+                let mut views: Vec<BatchBlendView<'_>> =
+                    Vec::with_capacity(unique.len());
+                let mut uniq = unique.iter().copied().peekable();
+                for ((si, s), img) in
+                    self.sessions.iter_mut().enumerate().zip(images.iter_mut())
+                {
+                    if uniq.peek() == Some(&si) {
+                        uniq.next();
+                        views.push(BatchBlendView { scratch: &mut s.scratch, img });
+                    }
+                }
+                backend.blend_batch(
+                    &mut views,
+                    &self.items,
+                    &mut self.pool,
+                    &opts,
+                    rcfg,
+                )?;
+            }
+            // The combined pass has no per-view boundary; attribute an
+            // equal share to each view (timings are telemetry, never
+            // part of an equality contract).
+            let share = t.elapsed().as_secs_f64() / unique.len() as f64;
+            for &v in &unique {
+                if let Some(fw) = frames[v].as_mut() {
+                    fw.stages.record_stage(StageTimings::BLEND, share);
+                }
+            }
+        } else {
+            for &v in &unique {
+                let s = &mut self.sessions[v];
+                let t = Instant::now();
+                s.backend
+                    .blend(&mut s.scratch, &s.opts, pipeline.rcfg(), &mut images[v])?;
+                if let Some(fw) = frames[v].as_mut() {
+                    fw.stages
+                        .record_stage(StageTimings::BLEND, t.elapsed().as_secs_f64());
+                }
+            }
+        }
+
+        // --- commit: whole batch succeeded. Unique views commit their
+        // FrameWork; identity members clone the owner's image and
+        // commit the owner's deterministic counters (what their own
+        // search/front end would have computed, by determinism).
+        let mut committed: Vec<(u64, u64)> = vec![(0, 0); k];
+        for i in 0..k {
+            if owner[i] == i {
+                let fw = frames[i].take().expect("unique view has frame work");
+                committed[i] = (fw.cut_len, fw.pairs);
+                self.sessions[i].commit_frame(&fw);
+            } else {
+                let o = owner[i];
+                let img = images[o].clone();
+                images[i] = img;
+                let mut fw = self.sessions[i].begin_frame();
+                fw.cut_len = committed[o].0;
+                fw.pairs = committed[o].1;
+                self.sessions[i].commit_frame(&fw);
+            }
+        }
+        Ok(images)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SceneConfig;
+    use crate::coordinator::backend::CpuBackend;
+
+    fn pipeline() -> FramePipeline {
+        FramePipeline::builder(SceneConfig::small_scale().quick().build(11)).build()
+    }
+
+    fn orbit_cams(p: &FramePipeline, n: usize) -> Vec<Camera> {
+        (0..n).map(|i| p.scene().scenario_camera(i)).collect()
+    }
+
+    #[test]
+    fn batch_matches_independent_sessions_bitwise() {
+        let p = pipeline();
+        let cams = orbit_cams(&p, 3);
+        for cfg in [BatchConfig::default(), BatchConfig::independent()] {
+            let mut batch = p.batch_with(p.default_options(), cfg);
+            let imgs = batch.render(&cams).unwrap();
+            assert_eq!(imgs.len(), 3);
+            for (i, (img, cam)) in imgs.iter().zip(cams.iter()).enumerate() {
+                let want = p.session().render(cam).unwrap();
+                assert_eq!(img.data, want.data, "view {i} diverged ({cfg:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_views_share_one_front_end() {
+        let p = pipeline();
+        let cam = p.scene().scenario_camera(1);
+        let cams = vec![cam, cam, cam, cam];
+        let mut batch = p.batch();
+        let imgs = batch.render(&cams).unwrap();
+        let want = p.session().render(&cam).unwrap();
+        for img in &imgs {
+            assert_eq!(img.data, want.data);
+        }
+        let bs = batch.batch_stats();
+        assert_eq!(bs.batches, 1);
+        assert_eq!(bs.views, 4);
+        assert_eq!(bs.front_ends_shared, 3, "3 of 4 identical views coalesce");
+        // Deterministic per-view counters still match an independent
+        // render of the same camera.
+        let mut solo = p.session();
+        solo.render(&cam).unwrap();
+        for v in 0..4 {
+            let vs = batch.view_stats(v).unwrap();
+            assert_eq!(vs.frames, 1, "view {v}");
+            assert_eq!(vs.cut_total, solo.stats().cut_total, "view {v}");
+            assert_eq!(vs.pairs_total, solo.stats().pairs_total, "view {v}");
+        }
+    }
+
+    #[test]
+    fn stereo_pair_seeds_and_stays_identical() {
+        let p = pipeline();
+        // A stereo pair: two nearby eyes, same look target.
+        let eye = crate::math::Vec3::new(6.0, 3.0, -6.0);
+        let sep = crate::math::Vec3::new(0.05, 0.0, 0.0);
+        let target = crate::math::Vec3::new(0.0, 0.0, 0.0);
+        let up = crate::math::Vec3::new(0.0, 1.0, 0.0);
+        let intr = crate::math::Intrinsics::from_fov(256, 256, 1.0);
+        let cams = vec![
+            Camera::look_at(eye, target, up, intr),
+            Camera::look_at(eye + sep, target, up, intr),
+        ];
+        let mut batch = p.batch();
+        // Two batch calls: the second exercises the warm shared cache.
+        for _ in 0..2 {
+            let imgs = batch.render(&cams).unwrap();
+            for (i, cam) in cams.iter().enumerate() {
+                let want = p.session().render(cam).unwrap();
+                assert_eq!(imgs[i].data, want.data, "view {i}");
+            }
+        }
+        let bs = batch.batch_stats();
+        assert_eq!(bs.views, 4);
+        assert_eq!(
+            bs.searches_seeded, 2,
+            "the right eye routes through the left eye's cache each call"
+        );
+    }
+
+    #[test]
+    fn independent_mode_matches_session_stats_exactly() {
+        let p = pipeline();
+        let cams = orbit_cams(&p, 2);
+        let backend = CpuBackend::with_threads(2);
+        let mut batch =
+            p.batch_on(&backend, p.default_options(), BatchConfig::independent());
+        // Two calls so the temporal cut caches warm per view slot.
+        batch.render(&cams).unwrap();
+        batch.render(&cams).unwrap();
+        for (v, cam) in cams.iter().enumerate() {
+            let mut solo = p.session_on(&backend, p.default_options());
+            solo.render(cam).unwrap();
+            solo.render(cam).unwrap();
+            let vs = batch.view_stats(v).unwrap();
+            let ss = solo.stats();
+            assert_eq!(vs.frames, ss.frames, "view {v}");
+            assert_eq!(vs.cut_total, ss.cut_total, "view {v}");
+            assert_eq!(vs.pairs_total, ss.pairs_total, "view {v}");
+            assert_cache_counters(vs, ss, v);
+        }
+        let bs = batch.batch_stats();
+        assert_eq!(bs.front_ends_shared, 0);
+        assert_eq!(bs.searches_seeded, 0);
+        assert_eq!(bs.gathers_skipped, 0);
+    }
+
+    fn assert_cache_counters(a: &RenderStats, b: &RenderStats, v: usize) {
+        assert_eq!(a.cache_hit, b.cache_hit, "view {v}");
+        assert_eq!(a.revalidated, b.revalidated, "view {v}");
+        assert_eq!(a.reseeded, b.reseeded, "view {v}");
+        assert_eq!(a.verdicts_skipped, b.verdicts_skipped, "view {v}");
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let p = pipeline();
+        let mut batch = p.batch();
+        let imgs = batch.render(&[]).unwrap();
+        assert!(imgs.is_empty());
+        assert_eq!(batch.batch_stats().batches, 0);
+        assert!(batch.view_stats(0).is_none());
+    }
+}

@@ -7,6 +7,11 @@
 //! * [`session`] — [`RenderSession`]: per-client mutable state (options,
 //!   front-end scratch, temporal cut cache, unified stats); N sessions
 //!   over one `&FramePipeline` form the multi-client serving surface.
+//! * [`batch`] — [`ViewBatch`]: K cameras over one scene in one call,
+//!   with identity-group front-end coalescing, cross-view LoD-search
+//!   seeding through a shared cut cache, and one interleaved
+//!   `(view, tile)` blend schedule — byte-identical to K independent
+//!   session renders ([`BatchConfig`] picks the sharing levels).
 //! * [`backend`] — the [`RenderBackend`] trait with the pure-CPU
 //!   ([`CpuBackend`]) and AOT-artifact ([`PjrtBackend`]) blenders;
 //!   [`RenderOptions::kernel`] picks the CPU blend-kernel
@@ -25,6 +30,7 @@
 #![warn(missing_docs)]
 
 pub mod backend;
+pub mod batch;
 pub mod pipeline;
 pub mod renderer;
 pub mod session;
@@ -32,9 +38,10 @@ pub mod stats;
 pub mod workload;
 
 pub use crate::lod::cut_cache::{CutCache, CutCacheConfig};
-pub use crate::splat::BlendKernel;
+pub use crate::splat::{BatchWorkItem, BlendKernel};
 pub use backend::{CpuBackend, PjrtBackend, RenderBackend, RenderOptions};
+pub use batch::{BatchConfig, BatchStats, ViewBatch};
 pub use pipeline::{FramePipeline, FramePipelineBuilder, SimulationReport};
-pub use renderer::{AlphaMode, CpuRenderer, FrameScratch};
+pub use renderer::{AlphaMode, BatchBlendView, CpuRenderer, FrameScratch};
 pub use session::RenderSession;
 pub use stats::{LatencyHistogram, RenderStats, StageTimings};

@@ -8,6 +8,7 @@
 //! sessions.
 
 use super::backend::{CpuBackend, PjrtBackend, RenderBackend, RenderOptions};
+use super::batch::{BatchConfig, ViewBatch};
 use super::session::RenderSession;
 use super::workload::{frame_workload, lod_workload};
 use crate::config::{ArchConfig, RenderConfig};
@@ -241,6 +242,32 @@ impl FramePipeline {
         opts: RenderOptions,
     ) -> RenderSession<'p> {
         RenderSession::new(self, backend, opts)
+    }
+
+    /// Open a multi-view batch renderer with the pipeline's default
+    /// options and the default sharing policy ([`BatchConfig`]): K
+    /// cameras in, K images out, byte-identical to K independent
+    /// sessions but sharing front-end work across close views.
+    pub fn batch(&self) -> ViewBatch<'_> {
+        self.batch_with(self.defaults, BatchConfig::default())
+    }
+
+    /// Open a multi-view batch renderer with explicit options and
+    /// sharing policy (e.g. [`BatchConfig::independent`] for the
+    /// stats-equality reference mode).
+    pub fn batch_with(&self, opts: RenderOptions, cfg: BatchConfig) -> ViewBatch<'_> {
+        ViewBatch::new(self, self.backend.as_ref(), opts, cfg)
+    }
+
+    /// Open a multi-view batch renderer on a caller-owned backend
+    /// (mirrors [`FramePipeline::session_on`]).
+    pub fn batch_on<'p>(
+        &'p self,
+        backend: &'p dyn RenderBackend,
+        opts: RenderOptions,
+        cfg: BatchConfig,
+    ) -> ViewBatch<'p> {
+        ViewBatch::new(self, backend, opts, cfg)
     }
 
     /// LoD search only: the cut for a camera at the pipeline's tau.

@@ -27,8 +27,8 @@ use crate::runtime::{PjrtEngine, SplatChunk, SplatState, K_CHUNK};
 use crate::splat::blend::PIXELS;
 use crate::splat::{
     blend_tile, blend_tile_soa, project_bin_finish, project_bin_sweep,
-    sort_bins_threaded, BlendKernel, BlendMode, DepthSortScratch, TileBins,
-    TileState, TILE,
+    sort_bins_threaded, BatchWorkItem, BlendKernel, BlendMode,
+    DepthSortScratch, TileBins, TileState, TILE,
 };
 use super::stats::StageTimings;
 use anyhow::Result;
@@ -72,7 +72,9 @@ pub struct FrameScratch {
     /// leaves this pool empty.
     pub tiles: Vec<TileState>,
     /// Work list of non-empty tile indices (the scheduler's queue).
-    work: Vec<u32>,
+    /// `pub(crate)` so the multi-view batch path can splice several
+    /// views' work lists into one interleaved schedule.
+    pub(crate) work: Vec<u32>,
 }
 
 impl FrameScratch {
@@ -397,6 +399,191 @@ fn blend_tiles_soa(
     });
 }
 
+/// One view's slot in a multi-view batch blend: the view's prepared
+/// front end (projected, binned, depth-sorted [`FrameScratch`]) plus
+/// its output image. The batch blend consumes a `&mut [BatchBlendView]`
+/// so each view's buffers stay distinct while the scheduler interleaves
+/// their tiles ([`crate::splat::BatchWorkItem`]) over one worker pool.
+pub struct BatchBlendView<'a> {
+    /// Prepared front-end state. The bins/splats are only read; the
+    /// scratch's own SoA tile pool is bypassed — the batch scheduler
+    /// blends through one shared caller-owned pool instead, so K views
+    /// need one pool of `workers` tile states rather than K.
+    pub scratch: &'a mut FrameScratch,
+    /// The view's output image (written tile by tile).
+    pub img: &'a mut Image,
+}
+
+/// Per-view shared state the batch blend workers read.
+struct BatchViewCtx<'a> {
+    bins: &'a TileBins,
+    splats: &'a [Splat2D],
+    target: SharedImage,
+}
+
+/// Blend an interleaved multi-view tile schedule: every item names one
+/// `(view, tile)` of `views`, and one dynamic-greedy atomic cursor
+/// hands items from **all** views to one scoped worker pool — a view
+/// with heavy tiles soaks up the workers a light view leaves idle,
+/// which a per-view sequence of [`blend_tiles`] calls cannot do (each
+/// call joins its workers at its own tail).
+///
+/// Byte-identity: each tile is blended by exactly the same per-tile
+/// kernel as the single-view scheduler and written to its own view's
+/// image, so the result equals per-view [`blend_tiles`] calls bit for
+/// bit, at any `threads`, in any item order. The caller must list every
+/// `(view, tile)` at most once (disjoint stores) and only non-empty
+/// tiles it wants blended. Per-item `tau` overrides are an inert
+/// foveated hook — ignored here by the byte-identity contract.
+pub(crate) fn blend_tiles_batch(
+    views: &mut [BatchBlendView<'_>],
+    items: &[BatchWorkItem],
+    pool: &mut Vec<TileState>,
+    mode: BlendMode,
+    kernel: BlendKernel,
+    t_min: f32,
+    threads: usize,
+) {
+    let ctxs: Vec<BatchViewCtx<'_>> = views
+        .iter_mut()
+        .map(|v| BatchViewCtx {
+            target: SharedImage::new(v.img),
+            bins: &v.scratch.bins,
+            splats: &v.scratch.splats[..],
+        })
+        .collect();
+    let ctxs = &ctxs[..];
+
+    if threads <= 1 || items.len() <= 1 {
+        match kernel {
+            BlendKernel::Scalar => {
+                let mut rgb = [[0.0f32; 3]; PIXELS];
+                let mut t = [0.0f32; PIXELS];
+                for it in items {
+                    let ctx = &ctxs[it.view as usize];
+                    let idx = it.tile as usize;
+                    let origin = ctx.bins.tile_origin(idx);
+                    blend_one_tile(
+                        ctx.bins.tile(idx),
+                        ctx.splats,
+                        origin,
+                        mode,
+                        &mut rgb,
+                        &mut t,
+                        t_min,
+                    );
+                    // SAFETY: serial path — no concurrent stores; the
+                    // images outlive this call.
+                    unsafe { ctx.target.store_tile(origin, &rgb) };
+                }
+            }
+            BlendKernel::Soa => {
+                if pool.is_empty() {
+                    pool.push(TileState::fresh());
+                }
+                let state = &mut pool[0];
+                for it in items {
+                    let ctx = &ctxs[it.view as usize];
+                    let idx = it.tile as usize;
+                    let origin = ctx.bins.tile_origin(idx);
+                    state.reset();
+                    blend_tile_soa(
+                        ctx.bins.tile(idx),
+                        ctx.splats,
+                        origin,
+                        mode,
+                        state,
+                        t_min,
+                    );
+                    // SAFETY: serial path — no concurrent stores.
+                    unsafe {
+                        ctx.target.store_tile_planes(
+                            origin, &state.r, &state.g, &state.b,
+                        )
+                    };
+                }
+            }
+        }
+        return;
+    }
+
+    let workers = threads.min(items.len());
+    let cursor = AtomicUsize::new(0);
+    let cursor = &cursor;
+    match kernel {
+        BlendKernel::Scalar => {
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(move || {
+                        let mut rgb = [[0.0f32; 3]; PIXELS];
+                        let mut t = [0.0f32; PIXELS];
+                        loop {
+                            let w = cursor.fetch_add(1, Ordering::Relaxed);
+                            if w >= items.len() {
+                                break;
+                            }
+                            let it = items[w];
+                            let ctx = &ctxs[it.view as usize];
+                            let idx = it.tile as usize;
+                            let origin = ctx.bins.tile_origin(idx);
+                            blend_one_tile(
+                                ctx.bins.tile(idx),
+                                ctx.splats,
+                                origin,
+                                mode,
+                                &mut rgb,
+                                &mut t,
+                                t_min,
+                            );
+                            // SAFETY: the cursor hands each item (hence
+                            // each view's tile) to exactly one worker
+                            // and the caller lists every (view, tile)
+                            // at most once, so stores never alias; the
+                            // images outlive the scope.
+                            unsafe { ctx.target.store_tile(origin, &rgb) };
+                        }
+                    });
+                }
+            });
+        }
+        BlendKernel::Soa => {
+            if pool.len() < workers {
+                pool.resize_with(workers, TileState::fresh);
+            }
+            std::thread::scope(|s| {
+                for state in pool[..workers].iter_mut() {
+                    s.spawn(move || loop {
+                        let w = cursor.fetch_add(1, Ordering::Relaxed);
+                        if w >= items.len() {
+                            break;
+                        }
+                        let it = items[w];
+                        let ctx = &ctxs[it.view as usize];
+                        let idx = it.tile as usize;
+                        let origin = ctx.bins.tile_origin(idx);
+                        state.reset();
+                        blend_tile_soa(
+                            ctx.bins.tile(idx),
+                            ctx.splats,
+                            origin,
+                            mode,
+                            state,
+                            t_min,
+                        );
+                        // SAFETY: same disjointness argument as the
+                        // scalar arm.
+                        unsafe {
+                            ctx.target.store_tile_planes(
+                                origin, &state.r, &state.g, &state.b,
+                            )
+                        };
+                    });
+                }
+            });
+        }
+    }
+}
+
 static DEFAULT_THREADS: OnceLock<usize> = OnceLock::new();
 
 /// Default worker count for the tile scheduler: the `SLTARCH_THREADS`
@@ -696,6 +883,90 @@ mod tests {
                     want.data, got.data,
                     "{mode:?} diverged at {threads} threads"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_blend_matches_per_view_blends() {
+        // The multi-view scheduler contract: one interleaved (view,
+        // tile) schedule over one worker pool must reproduce per-view
+        // blend_tiles calls bit for bit — both kernels, both alpha
+        // modes folded in via Group, serial and parallel widths, and
+        // regardless of item interleaving order.
+        let (scene, cut, _) = setup();
+        let queue = scene.gaussians.gather(&cut);
+        let rcfg = RenderConfig::default();
+        let cams = [scene.scenario_camera(0), scene.scenario_camera(2)];
+        let mut scratches = [FrameScratch::new(), FrameScratch::new()];
+        for (cam, scratch) in cams.iter().zip(scratches.iter_mut()) {
+            front_end_into(&queue, cam, scratch, 4).unwrap();
+        }
+        // Round-robin interleave of the two views' work lists, with an
+        // inert per-tile tau on one view to pin the foveated hook as a
+        // no-op.
+        let mut items = Vec::new();
+        let mut rank = 0usize;
+        loop {
+            let mut any = false;
+            for (v, scratch) in scratches.iter().enumerate() {
+                if rank < scratch.work.len() {
+                    let tile = scratch.work[rank];
+                    items.push(if v == 0 {
+                        BatchWorkItem::new(v as u32, tile)
+                    } else {
+                        BatchWorkItem::with_tau(v as u32, tile, 16.0)
+                    });
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+            rank += 1;
+        }
+        for kernel in [BlendKernel::Scalar, BlendKernel::Soa] {
+            for threads in [1usize, 2, 8] {
+                let mut want = Vec::new();
+                for (cam, scratch) in cams.iter().zip(scratches.iter_mut()) {
+                    let mut img = Image::new(cam.intr.width, cam.intr.height);
+                    blend_tiles(
+                        scratch,
+                        BlendMode::PixelGroup,
+                        kernel,
+                        rcfg.t_min,
+                        threads,
+                        &mut img,
+                    );
+                    want.push(img);
+                }
+                let mut got: Vec<Image> = cams
+                    .iter()
+                    .map(|c| Image::new(c.intr.width, c.intr.height))
+                    .collect();
+                let mut pool = Vec::new();
+                {
+                    let mut views: Vec<BatchBlendView> = scratches
+                        .iter_mut()
+                        .zip(got.iter_mut())
+                        .map(|(scratch, img)| BatchBlendView { scratch, img })
+                        .collect();
+                    blend_tiles_batch(
+                        &mut views,
+                        &items,
+                        &mut pool,
+                        BlendMode::PixelGroup,
+                        kernel,
+                        rcfg.t_min,
+                        threads,
+                    );
+                }
+                for (v, (w, g)) in want.iter().zip(got.iter()).enumerate() {
+                    assert_eq!(
+                        w.data, g.data,
+                        "view {v} diverged: {kernel:?} at {threads} threads"
+                    );
+                }
             }
         }
     }

@@ -15,7 +15,7 @@ use super::pipeline::FramePipeline;
 use super::renderer::{default_threads, front_end_timed, FrameScratch};
 use super::stats::{RenderStats, StageTimings};
 use crate::gaussian::Gaussians;
-use crate::lod::CutCache;
+use crate::lod::{CutCache, TraversalTrace};
 use crate::math::Camera;
 use crate::metrics::Image;
 use crate::residency::{ResidencyManager, ResidencyStats};
@@ -23,25 +23,67 @@ use anyhow::Result;
 use std::time::Instant;
 
 /// One client's rendering state over a shared pipeline.
+///
+/// Fields are `pub(crate)` so the multi-view [`ViewBatch`]
+/// (`super::batch`) can drive the same per-frame stages with
+/// cross-view sharing (seeded searches through a neighbour's cut
+/// cache, reused rendering queues, deferred interleaved blending)
+/// while committing through the exact same [`FrameWork`] bookkeeping
+/// `render` uses — that is what keeps batch stats bit-identical to
+/// independent sessions.
 pub struct RenderSession<'p> {
-    pipeline: &'p FramePipeline,
-    backend: &'p dyn RenderBackend,
-    opts: RenderOptions,
-    scratch: FrameScratch,
+    pub(crate) pipeline: &'p FramePipeline,
+    pub(crate) backend: &'p dyn RenderBackend,
+    pub(crate) opts: RenderOptions,
+    pub(crate) scratch: FrameScratch,
     /// Reusable rendering-queue buffer (the gathered cut); with it the
     /// steady-state frame really allocates only its output image.
-    queue: Gaussians,
-    cut_cache: CutCache,
+    pub(crate) queue: Gaussians,
+    pub(crate) cut_cache: CutCache,
     /// Out-of-core slab residency (active only when
     /// [`RenderOptions::residency`] is enabled): replays each frame's
     /// slab-access trace after the search, so it can never change what
     /// the search computed.
-    residency: ResidencyManager,
+    pub(crate) residency: ResidencyManager,
     /// Simulated demand-stall seconds of the most recent frame (0 when
     /// residency is disabled) — the serving layer folds this into its
     /// QoS miss signal.
-    last_stall: f64,
-    stats: RenderStats,
+    pub(crate) last_stall: f64,
+    pub(crate) stats: RenderStats,
+}
+
+/// Per-frame bookkeeping for one in-flight frame of one session: stage
+/// timings plus every deterministic counter the frame will commit.
+/// Accumulated locally and committed to the session's [`RenderStats`]
+/// only once the whole frame succeeded, so a mid-frame error can never
+/// leave the counters mutually inconsistent. Both the single-view
+/// [`RenderSession::render`] and the multi-view batch path
+/// (`super::batch`) flow through this one struct.
+pub(crate) struct FrameWork {
+    /// Frame start (drives `wall_seconds` + the latency histogram).
+    pub(crate) started: Instant,
+    pub(crate) stages: StageTimings,
+    pub(crate) cut_len: u64,
+    /// (gaussian, tile) pairs this frame binned. The single-view path
+    /// reads it off its own scratch after the front end; batch views
+    /// that reuse a neighbour's prepared front end copy the owner's
+    /// value so their stats match an independent render.
+    pub(crate) pairs: u64,
+    pub(crate) cache_hit: u64,
+    pub(crate) revalidated: u64,
+    pub(crate) reseeded: u64,
+    pub(crate) verdicts_skipped: u64,
+    pub(crate) residency: ResidencyStats,
+}
+
+impl FrameWork {
+    /// Fold one LoD-search trace's cache counters into the frame.
+    pub(crate) fn record_search(&mut self, trace: &TraversalTrace) {
+        self.cache_hit += trace.cache_hit;
+        self.revalidated += trace.revalidated;
+        self.reseeded += trace.reseeded;
+        self.verdicts_skipped += trace.verdicts_skipped;
+    }
 }
 
 impl<'p> RenderSession<'p> {
@@ -132,27 +174,33 @@ impl<'p> RenderSession<'p> {
         std::mem::take(&mut self.stats)
     }
 
-    /// Render one frame. Reuses this session's front-end scratch and
-    /// temporal cut cache, so a steady-state frame allocates only its
-    /// output image; output is bit-identical to the stateless reference
-    /// renderer (`CpuRenderer`) at any thread count — the cut cache
-    /// reproduces the full LoD search exactly (see
-    /// [`crate::lod::cut_cache`]), it only makes the search stage
-    /// faster on coherent camera paths.
-    pub fn render(&mut self, cam: &Camera) -> Result<Image> {
-        let frame_t0 = Instant::now();
-        // Accumulate the frame locally and commit to `self.stats` only
-        // once the whole frame succeeded, so a blend error can never
-        // leave the counters mutually inconsistent (cut_total counting
-        // a frame that `frames`/`pairs_total` do not).
-        let mut stages = StageTimings::default();
-
+    /// Start a frame: arm the cut cache's residency touch collection
+    /// and open the local [`FrameWork`] bookkeeping the frame commits
+    /// through on success.
+    pub(crate) fn begin_frame(&mut self) -> FrameWork {
         // Warm-frame residency replay needs the revalidation touch
         // stream, which the cut cache only collects when asked.
         self.cut_cache.set_collect_touched(self.opts.residency.enabled);
+        FrameWork {
+            started: Instant::now(),
+            stages: StageTimings::default(),
+            cut_len: 0,
+            pairs: 0,
+            cache_hit: 0,
+            revalidated: 0,
+            reseeded: 0,
+            verdicts_skipped: 0,
+            residency: ResidencyStats::default(),
+        }
+    }
 
+    /// LoD-search + gather stage through this session's own cut cache,
+    /// then the residency replay. The batch path substitutes a
+    /// neighbour's cache (cross-view seeding) and calls
+    /// [`RenderSession::charge_residency`] itself.
+    pub(crate) fn search_and_gather(&mut self, cam: &Camera, fw: &mut FrameWork) {
         let t = Instant::now();
-        let (cut_len, search_trace) = {
+        let trace = {
             let (cut, trace) = self.cut_cache.search(
                 &self.pipeline.scene().tree,
                 self.pipeline.sltree(),
@@ -163,20 +211,34 @@ impl<'p> RenderSession<'p> {
             // Gather into the session-owned queue buffer: no per-frame
             // rendering-queue allocation once the buffers are warm.
             self.pipeline.scene().gaussians.gather_into(cut, &mut self.queue);
-            (cut.len() as u64, trace)
+            fw.cut_len = cut.len() as u64;
+            trace
         };
-        stages.record_stage(StageTimings::SEARCH, t.elapsed().as_secs_f64());
+        fw.record_search(&trace);
+        fw.stages.record_stage(StageTimings::SEARCH, t.elapsed().as_secs_f64());
+        let cut = std::mem::take(&mut self.cut_cache);
+        self.charge_residency(&trace, cut.cut(), fw);
+        self.cut_cache = cut;
+    }
 
-        // Replay the frame's slab-access streams through the residency
-        // manager: revalidation touches first (empty on cold frames),
-        // then activation fetches. Strictly after the search, so the
-        // pixels can never depend on residency state.
+    /// Replay the frame's slab-access streams through the residency
+    /// manager: revalidation touches first (empty on cold frames),
+    /// then activation fetches. Strictly after the search, so the
+    /// pixels can never depend on residency state. `cut` is the frame's
+    /// selected cut — passed in because the batch path may have
+    /// searched through a *different* session's cache.
+    pub(crate) fn charge_residency(
+        &mut self,
+        trace: &TraversalTrace,
+        cut: &[u32],
+        fw: &mut FrameWork,
+    ) {
         let residency_delta = if self.opts.residency.enabled {
             let streams: [&[u32]; 2] =
-                [&search_trace.touched_sids, &search_trace.activation_sids];
+                [&trace.touched_sids, &trace.activation_sids];
             self.residency.charge_frame(
                 self.pipeline.sltree(),
-                self.cut_cache.cut(),
+                cut,
                 &streams,
                 &self.opts.residency,
                 &self.pipeline.arch().dram,
@@ -185,29 +247,59 @@ impl<'p> RenderSession<'p> {
             ResidencyStats::default()
         };
         self.last_stall = residency_delta.stall_seconds;
+        fw.residency = residency_delta;
+    }
 
+    /// Front-end stage (project -> CSR bin -> depth sort) over this
+    /// session's own queue and scratch at the unified scheduler width.
+    pub(crate) fn front_end(&mut self, cam: &Camera, fw: &mut FrameWork) -> Result<()> {
         let width = self.scheduler_width();
-        front_end_timed(&self.queue, cam, &mut self.scratch, &mut stages, width)?;
+        front_end_timed(&self.queue, cam, &mut self.scratch, &mut fw.stages, width)?;
+        fw.pairs = self.scratch.bins.pairs;
+        Ok(())
+    }
+
+    /// Commit a successfully finished frame's bookkeeping into the
+    /// session's accumulated [`RenderStats`]. Never called on the
+    /// error path, so a blend error can never leave the counters
+    /// mutually inconsistent (cut_total counting a frame that
+    /// `frames`/`pairs_total` do not).
+    pub(crate) fn commit_frame(&mut self, fw: &FrameWork) {
+        self.stats.stages.accumulate(&fw.stages);
+        self.stats.cut_total += fw.cut_len;
+        self.stats.pairs_total += fw.pairs;
+        self.stats.cache_hit += fw.cache_hit;
+        self.stats.revalidated += fw.revalidated;
+        self.stats.reseeded += fw.reseeded;
+        self.stats.verdicts_skipped += fw.verdicts_skipped;
+        self.stats.residency.accumulate(&fw.residency);
+        self.stats.frames += 1;
+        self.stats.threads = self.backend.threads(&self.opts);
+        self.stats.front_end_threads = self.scheduler_width();
+        let frame_seconds = fw.started.elapsed().as_secs_f64();
+        self.stats.wall_seconds += frame_seconds;
+        self.stats.frame_latency.record(frame_seconds);
+    }
+
+    /// Render one frame. Reuses this session's front-end scratch and
+    /// temporal cut cache, so a steady-state frame allocates only its
+    /// output image; output is bit-identical to the stateless reference
+    /// renderer (`CpuRenderer`) at any thread count — the cut cache
+    /// reproduces the full LoD search exactly (see
+    /// [`crate::lod::cut_cache`]), it only makes the search stage
+    /// faster on coherent camera paths.
+    pub fn render(&mut self, cam: &Camera) -> Result<Image> {
+        let mut fw = self.begin_frame();
+        self.search_and_gather(cam, &mut fw);
+        self.front_end(cam, &mut fw)?;
 
         let mut img = Image::new(cam.intr.width, cam.intr.height);
         let t = Instant::now();
         self.backend
             .blend(&mut self.scratch, &self.opts, self.pipeline.rcfg(), &mut img)?;
-        stages.record_stage(StageTimings::BLEND, t.elapsed().as_secs_f64());
+        fw.stages.record_stage(StageTimings::BLEND, t.elapsed().as_secs_f64());
 
-        self.stats.stages.accumulate(&stages);
-        self.stats.cut_total += cut_len;
-        self.stats.pairs_total += self.scratch.bins.pairs;
-        self.stats.cache_hit += search_trace.cache_hit;
-        self.stats.revalidated += search_trace.revalidated;
-        self.stats.reseeded += search_trace.reseeded;
-        self.stats.residency.accumulate(&residency_delta);
-        self.stats.frames += 1;
-        self.stats.threads = self.backend.threads(&self.opts);
-        self.stats.front_end_threads = width;
-        let frame_seconds = frame_t0.elapsed().as_secs_f64();
-        self.stats.wall_seconds += frame_seconds;
-        self.stats.frame_latency.record(frame_seconds);
+        self.commit_frame(&fw);
         Ok(img)
     }
 

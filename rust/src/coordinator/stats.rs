@@ -301,6 +301,13 @@ pub struct RenderStats {
     /// stopped meeting the LoD, summed across frames. 0 unless
     /// `cache_hit > 0`.
     pub reseeded: u64,
+    /// Frontier-path verdicts incremental revalidation reused without
+    /// re-testing because the accumulated camera delta provably could
+    /// not flip them (the cut cache's conservative verdict bounds),
+    /// summed across frames. 0 unless `cache_hit > 0`;
+    /// `revalidated + verdicts_skipped` is what an unbounded
+    /// revalidation would have re-tested.
+    pub verdicts_skipped: u64,
     /// Per-stage wall-clock breakdown.
     pub stages: StageTimings,
     /// End-to-end render latency histogram: one sample per frame (the
@@ -353,6 +360,7 @@ impl RenderStats {
         self.cache_hit += other.cache_hit;
         self.revalidated += other.revalidated;
         self.reseeded += other.reseeded;
+        self.verdicts_skipped += other.verdicts_skipped;
         self.stages.accumulate(&other.stages);
         self.frame_latency.merge(&other.frame_latency);
         self.residency.accumulate(&other.residency);

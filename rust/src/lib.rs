@@ -63,6 +63,20 @@
 //!   per-stage timings (search / project / bin / sort / blend). N
 //!   sessions over one `&FramePipeline` are a thread-safe multi-client
 //!   serving surface (see `examples/multi_client.rs`).
+//! * **[`coordinator::ViewBatch`]** — multi-view batch rendering: K
+//!   cameras over one scene in one call
+//!   ([`coordinator::FramePipeline::batch`]), **byte-identical to K
+//!   independent session renders** while sharing work across views —
+//!   bitwise-identical cameras coalesce into one front end, pose-close
+//!   views route their LoD searches through one shared cut cache (the
+//!   incremental revalidation re-derives the canonical cut exactly from
+//!   a neighbouring view's frontier) and skip re-gathering when
+//!   consecutive cuts are bit-equal, and all views' tiles blend through
+//!   one interleaved [`splat::BatchWorkItem`] schedule on a single
+//!   atomic-cursor worker pool ([`coordinator::BatchConfig`] picks the
+//!   levels; work items carry an inert per-tile tau hook for foveated
+//!   follow-on work). See `examples/stereo.rs` and the
+//!   `batch(...)` rows in `BENCH_hotpath.json`.
 //! * **[`coordinator::RenderBackend`]** — who runs the blending maths:
 //!   [`coordinator::CpuBackend`] (dynamic-greedy multi-threaded tile
 //!   scheduler, bit-identical to serial at any width) or
@@ -187,6 +201,7 @@ pub mod prelude {
     pub use crate::coordinator::backend::{
         CpuBackend, PjrtBackend, RenderBackend, RenderOptions,
     };
+    pub use crate::coordinator::batch::{BatchConfig, BatchStats, ViewBatch};
     pub use crate::coordinator::pipeline::{
         FramePipeline, FramePipelineBuilder, SimulationReport,
     };
@@ -197,6 +212,7 @@ pub mod prelude {
     pub use crate::lod::cut_cache::{CutCache, CutCacheConfig};
     pub use crate::lod::sltree::SlTree;
     pub use crate::splat::kernel::BlendKernel;
+    pub use crate::splat::BatchWorkItem;
     pub use crate::lod::tree::LodTree;
     pub use crate::math::{Camera, Mat4, Vec3};
     pub use crate::metrics::{lpips_proxy, psnr, ssim};

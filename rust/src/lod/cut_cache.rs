@@ -41,22 +41,57 @@
 //! re-derives the new canonical cut exactly — tau deltas, like camera
 //! deltas, only change how much coarsening/refinement work the
 //! revalidation does.
+//!
+//! ## Conservative verdict bounds
+//!
+//! On top of per-frame memoization, revalidation keeps a per-node
+//! **stability budget**: when a verdict is evaluated, the distance of
+//! its deciding quantity from the flip threshold (the smallest frustum
+//! plane slack, and for LoD-tested nodes also `|z - z_threshold|`) is
+//! converted — through a Lipschitz bound on how fast any slack can move
+//! per unit of camera motion — into the pose distance
+//! `|Δeye| + ‖ΔR‖_F` the camera may travel before the verdict could
+//! possibly flip. Subsequent frames *skip the re-test* and reuse the
+//! stored verdict while the accumulated pose distance stays inside the
+//! budget (each skip decrements it, so chains of skips are covered by
+//! the triangle inequality), counting the reuse in
+//! [`TraversalTrace::verdicts_skipped`]. Budgets are halved for safety
+//! and charged a relative epsilon so `f32` evaluation noise near the
+//! threshold cannot be outrun by the real-arithmetic bound; any tau,
+//! intrinsics or near-plane change (which the bound does not model)
+//! disables skipping until budgets are rebuilt. Bit-identity of the
+//! resulting cut is pinned by the incremental-≡-canonical property
+//! tests and the golden digests, both of which exercise this path.
 
 use super::sltree::SlTree;
 use super::traversal::{
     refine_sltree, traverse_sltree, traverse_sltree_frontier, TraversalTrace,
 };
 use super::tree::{LodTree, NONE};
-use crate::math::{Camera, Vec3};
+use crate::math::{Camera, Intrinsics, Vec3};
 
 /// LT-unit count modelled by the cold traversal inside the cache
 /// (matches [`SlTree::traverse`]; results are independent of it).
 const LT_UNITS: usize = 4;
 
-/// Per-node verdict states memoized during one incremental frame.
+/// Per-node verdict states memoized during one incremental frame. The
+/// two stop states are distinguished so a budget-covered skip can
+/// replay the verdict (cut vs culled frontier) without re-testing.
 const OPEN: u8 = 1; // in frustum, fails LoD, has children -> descend
-const STOPPED: u8 = 2; // new frontier node (selected or culled) here
-const DEAD: u8 = 3; // below a STOPPED ancestor
+const STOP_CUT: u8 = 2; // new cut (selected) frontier node here
+const DEAD: u8 = 3; // below a stopped ancestor
+const STOP_CULL: u8 = 4; // new frustum-culled frontier node here
+
+/// Safety factor on verdict-stability budgets: only half the proven
+/// pose-distance headroom is ever spent.
+const BUDGET_SAFETY: f64 = 0.5;
+
+/// Relative epsilon charged against every margin before it becomes a
+/// budget, so `f32` rounding in the verdict expressions (the bound is
+/// real-arithmetic) can never flip a "provably stable" verdict. Sized
+/// ~1e3x above worst-case accumulated `f32` noise at the slack's own
+/// magnitude.
+const BUDGET_EPS_REL: f64 = 1e-4;
 
 /// Fallback policy for the temporal cut cache
 /// ([`RenderOptions::cut_cache`](crate::coordinator::RenderOptions)).
@@ -134,8 +169,12 @@ pub struct CutCache {
     /// see the contract note on [`CutCache::search`].
     tree_id: usize,
     slt_id: usize,
-    /// Camera pose and tau the frontier was computed at.
+    /// Camera pose and tau the frontier was computed at (`right`/`up`/
+    /// `fwd` are the rotation rows — the full matrix feeds the
+    /// verdict-budget pose metric, `fwd` alone the jump guard).
     eye: Vec3,
+    right: Vec3,
+    up: Vec3,
     fwd: Vec3,
     tau: f32,
     /// Incremental frames since the last full traversal.
@@ -155,6 +194,62 @@ pub struct CutCache {
     path: Vec<u32>,
     next_cut: Vec<u32>,
     next_culled: Vec<u32>,
+    // ---- conservative verdict bounds (see module docs) ----
+    /// Remaining pose-distance (`|Δeye| + ‖ΔR‖_F`, f64) each node's
+    /// last evaluated verdict provably survives. Spent by skips.
+    budget: Vec<f64>,
+    /// Epoch at which `budget`/`state` were last refreshed for the
+    /// node (evaluated or skipped). A skip is only legal when this is
+    /// exactly the previous epoch — an unbroken per-frame chain, so
+    /// the decremented budget covers the accumulated pose delta.
+    budget_mark: Vec<u32>,
+    /// Whether the stored budgets chain back to `eye`/`right`/`up`/
+    /// `fwd` through consecutive revalidations (false after any full
+    /// traversal, which leaves budgets stale).
+    budgets_valid: bool,
+    /// Intrinsics and near plane the budgets were computed under; the
+    /// Lipschitz bound pins both, so any change disables skipping
+    /// until budgets are rebuilt.
+    stored_intr: Option<Intrinsics>,
+    stored_near: f32,
+}
+
+/// Squared f64 distance between two `Vec3`s, for the Frobenius metric.
+fn dist_sq64(a: Vec3, b: Vec3) -> f64 {
+    let dx = a.x as f64 - b.x as f64;
+    let dy = a.y as f64 - b.y as f64;
+    let dz = a.z as f64 - b.z as f64;
+    dx * dx + dy * dy + dz * dz
+}
+
+/// Convert a verdict margin (distance of the deciding slack from its
+/// flip threshold, world/slack units) into a pose-distance budget.
+///
+/// Lipschitz bound: a camera move of pose distance
+/// `pd = |Δeye| + ‖ΔR‖_F` shifts any of the node's verdict quantities
+/// by at most `pd * scale` with
+/// `scale = K_rot*(dist + near + h1) + near + 1`, where
+/// `K_rot = 2*(max(hw, hh) + 1)` bounds the normalized side-plane
+/// normals' sensitivity to rotation (`hw`/`hh` are the half-image
+/// extents over focal lengths), `dist` is the node center's distance
+/// from the eye at evaluation time, and `h1` is the AABB half-extent
+/// L1 norm (plane slacks move with the normal through the anchor
+/// offset, the anchor itself, and the projection radius; the LoD depth
+/// `z = fwd·(c - eye)` moves by at most `pd*(dist + 1)`, which the
+/// same scale dominates). The bound holds from the evaluation pose to
+/// *any* later pose, so spending the budget frame-by-frame is covered
+/// by the triangle inequality on the pose metric.
+fn pose_budget(margin: f64, dist: f64, h1: f64, krot: f64, near: f64) -> f64 {
+    let scale = krot * (dist + near + h1) + near + 1.0;
+    let magnitude = dist + near + h1 + 1.0;
+    let b = BUDGET_SAFETY * (margin - BUDGET_EPS_REL * magnitude) / scale;
+    // Fail closed: degenerate inputs (NaN/inf margins, zero scale)
+    // yield a zero budget, i.e. "always re-test".
+    if b.is_finite() && b > 0.0 {
+        b
+    } else {
+        0.0
+    }
 }
 
 impl CutCache {
@@ -231,7 +326,8 @@ impl CutCache {
         }
 
         let eye = cam.eye();
-        let fwd = cam.view.rotation().row(2);
+        let rot = cam.view.rotation();
+        let fwd = rot.row(2);
         // Tau deltas within the step revalidate like camera deltas; the
         // comparison is written so a NaN tau (degenerate config) fails
         // closed into a full traversal.
@@ -250,6 +346,8 @@ impl CutCache {
             self.full_search(tree, slt, cam, tau)
         };
         self.eye = eye;
+        self.right = rot.row(0);
+        self.up = rot.row(1);
         self.fwd = fwd;
         self.tau = tau;
         self.valid = true;
@@ -284,9 +382,14 @@ impl CutCache {
         self.tree_id = tree.nodes.as_ptr() as usize;
         self.slt_id = slt.subtrees.as_ptr() as usize;
         self.frames_since_full = 0;
+        // Full traversals record no margins, so the budget chain is
+        // broken until the next revalidation rebuilds it.
+        self.budgets_valid = false;
         if self.mark.len() != tree.len() {
             self.mark = vec![0; tree.len()];
             self.state = vec![0; tree.len()];
+            self.budget = vec![0.0; tree.len()];
+            self.budget_mark = vec![u32::MAX; tree.len()];
             self.epoch = 0;
         }
         if self.fetched.len() != slt.len() {
@@ -314,6 +417,10 @@ impl CutCache {
     ) -> TraversalTrace {
         if self.epoch == u32::MAX {
             self.mark.fill(0);
+            // `u32::MAX` never equals `epoch - 1` (epoch restarts at
+            // 1), so pre-wrap budget chains cannot leak across the
+            // wrap as false "previous epoch" matches.
+            self.budget_mark.fill(u32::MAX);
             self.epoch = 0;
         }
         self.epoch += 1;
@@ -321,6 +428,31 @@ impl CutCache {
         self.fetched.fill(false);
         let frustum = cam.frustum();
         let mut trace = TraversalTrace { cache_hit: 1, ..Default::default() };
+
+        // Conservative verdict bounds: skipping is legal only while the
+        // quantities the Lipschitz bound pins (tau, intrinsics, near)
+        // are bit-unchanged and the budget chain is unbroken. The pose
+        // distance `pd` is what this frame's move spends from every
+        // skipped node's budget; NaN poses fail closed (`budget >= pd`
+        // is false for a NaN `pd`).
+        let eye_w = cam.eye();
+        let rot = cam.view.rotation();
+        let pd = dist_sq64(eye_w, self.eye).sqrt()
+            + (dist_sq64(rot.row(0), self.right)
+                + dist_sq64(rot.row(1), self.up)
+                + dist_sq64(rot.row(2), self.fwd))
+            .sqrt();
+        let skip_ok = self.budgets_valid
+            && self.budget.len() == tree.len()
+            && tau.to_bits() == self.tau.to_bits()
+            && self.stored_intr == Some(cam.intr)
+            && self.stored_near.to_bits() == cam.near.to_bits();
+        let hw = cam.intr.width as f64 * 0.5 / cam.intr.fx as f64;
+        let hh = cam.intr.height as f64 * 0.5 / cam.intr.fy as f64;
+        let krot = 2.0 * (hw.max(hh) + 1.0);
+        let near64 = cam.near as f64;
+        let tau64 = tau as f64;
+        let fmax = cam.intr.fx.max(cam.intr.fy) as f64;
 
         let old_cut = std::mem::take(&mut self.cut);
         let old_culled = std::mem::take(&mut self.culled);
@@ -342,8 +474,29 @@ impl CutCache {
             // first non-descend verdict is the new frontier node on
             // this path (a coarsen when it sits above `n`).
             for &x in self.path.iter().rev() {
+                let xi = x as usize;
                 let s = if !open {
                     DEAD
+                } else if skip_ok
+                    && self.budget_mark[xi] == epoch - 1
+                    && self.budget[xi] >= pd
+                {
+                    // The camera has provably not moved far enough
+                    // since this verdict was last evaluated to flip
+                    // it: replay it without re-testing. Skipped
+                    // verdicts read no node record, so they push no
+                    // `touched_sids` — the residency replay sees only
+                    // slabs actually accessed.
+                    let prev = self.state[xi];
+                    trace.verdicts_skipped += 1;
+                    self.budget[xi] -= pd;
+                    self.budget_mark[xi] = epoch;
+                    match prev {
+                        STOP_CUT => self.next_cut.push(x),
+                        STOP_CULL => self.next_culled.push(x),
+                        _ => {}
+                    }
+                    prev
                 } else {
                     trace.revalidated += 1;
                     trace.visited += 1;
@@ -351,22 +504,52 @@ impl CutCache {
                         // Each evaluated verdict reads one node record
                         // from its subtree slab — the warm-frame slab
                         // access the residency manager replays.
-                        trace.touched_sids.push(slt.node_sid[x as usize]);
+                        trace.touched_sids.push(slt.node_sid[xi]);
                     }
-                    if !frustum.intersects_aabb(&tree.aabbs[x as usize]) {
+                    let aabb = &tree.aabbs[xi];
+                    // Bit-identical to `intersects_aabb`; the margin
+                    // is the verdict's distance from flipping.
+                    let (inside, fmargin) =
+                        frustum.intersects_aabb_margin(aabb);
+                    let center = aabb.center();
+                    let h = aabb.half_extent();
+                    let dist = dist_sq64(center, eye_w).sqrt();
+                    let h1 = (h.x + h.y + h.z) as f64;
+                    let (s, margin) = if !inside {
                         self.next_culled.push(x);
-                        STOPPED
-                    } else if tree.meets_lod(x, cam, tau)
-                        || tree.nodes[x as usize].is_leaf()
-                    {
-                        self.next_cut.push(x);
-                        STOPPED
+                        (STOP_CULL, fmargin as f64)
                     } else {
-                        OPEN
-                    }
+                        let leaf = tree.nodes[xi].is_leaf();
+                        // A leaf's stop verdict is LoD-independent, so
+                        // only its frustum margin bounds stability.
+                        let lod_margin = if leaf {
+                            f64::INFINITY
+                        } else {
+                            // meets_lod flips where the depth crosses
+                            // max(near, f*w/tau) (projected size is
+                            // infinite at z <= near).
+                            let z = cam.depth(center) as f64;
+                            let t = (fmax
+                                * tree.world_size[xi] as f64
+                                / tau64)
+                                .max(near64);
+                            (z - t).abs()
+                        };
+                        let margin = (fmargin as f64).min(lod_margin);
+                        if tree.meets_lod(x, cam, tau) || leaf {
+                            self.next_cut.push(x);
+                            (STOP_CUT, margin)
+                        } else {
+                            (OPEN, margin)
+                        }
+                    };
+                    self.budget[xi] =
+                        pose_budget(margin, dist, h1, krot, near64);
+                    self.budget_mark[xi] = epoch;
+                    s
                 };
-                self.mark[x as usize] = epoch;
-                self.state[x as usize] = s;
+                self.mark[xi] = epoch;
+                self.state[xi] = s;
                 open = s == OPEN;
             }
             // The frontier node itself no longer stops the search:
@@ -395,6 +578,12 @@ impl CutCache {
         self.next_cut = old_cut;
         self.next_culled = old_culled;
         self.frames_since_full = self.frames_since_full.saturating_add(1);
+        // Budgets now chain to *this* camera (the pose `search` is
+        // about to store) under this tau/intrinsics/near; next frame's
+        // revalidation may skip inside them.
+        self.budgets_valid = true;
+        self.stored_intr = Some(cam.intr);
+        self.stored_near = cam.near;
         trace.selected = self.cut.len() as u64;
         trace
     }
@@ -446,11 +635,95 @@ mod tests {
                     assert_eq!(t.cache_hit, 0, "first frame must be cold");
                 } else {
                     assert_eq!(t.cache_hit, 1, "frame {i} should hit");
-                    assert!(t.revalidated > 0);
+                    // Some verdicts may ride their stability budgets
+                    // instead of re-testing; the path still touches
+                    // every frontier root path.
+                    assert!(t.revalidated + t.verdicts_skipped > 0);
                 }
             }
             assert_eq!(hits, cams.len() as u64 - 1);
         }
+    }
+
+    #[test]
+    fn verdict_budgets_skip_retests_on_small_motion() {
+        // A slow dolly (1e-3 units/frame) spends far less pose
+        // distance than most verdicts' stability budgets, so after the
+        // budget-building first revalidation the cache must start
+        // skipping re-tests — while every frame's cut stays
+        // bit-identical to the canonical search.
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let cfg = CutCacheConfig::default();
+        let intr = crate::math::Intrinsics::from_fov(
+            256,
+            256,
+            60f32.to_radians(),
+        );
+        let mut cache = CutCache::new();
+        let mut skipped = 0u64;
+        let mut evaluated = 0u64;
+        for i in 0..24 {
+            let t = i as f32 * 1e-3;
+            let cam = Camera::look_at(
+                Vec3::new(8.0 + t, 3.0, -6.0),
+                Vec3::new(0.0, 0.0, 0.0),
+                Vec3::new(0.0, 1.0, 0.0),
+                intr,
+            );
+            let tr = assert_frame_matches(
+                &mut cache, &scene, &slt, &cam, 8.0, &cfg,
+                &format!("dolly frame {i}"),
+            );
+            if i == 1 {
+                // Budgets are rebuilt by the first warm frame; the
+                // cold frame before it recorded none.
+                assert_eq!(
+                    tr.verdicts_skipped, 0,
+                    "no budgets exist right after a full traversal"
+                );
+            }
+            skipped += tr.verdicts_skipped;
+            evaluated += tr.revalidated;
+        }
+        assert!(skipped > 0, "tiny camera deltas must skip some re-tests");
+        assert!(evaluated > 0, "cold + budget-building frames evaluate");
+    }
+
+    #[test]
+    fn tau_nudge_disables_skipping_until_budgets_rebuild() {
+        // Budgets are computed under one tau; the Lipschitz bound does
+        // not model tau motion, so the frame after a tau nudge must
+        // re-test everything (skip count 0) and only then resume.
+        let scene = scene();
+        let slt = SlTree::partition(&scene.tree, 32);
+        let cfg = CutCacheConfig::default();
+        let mut cache = CutCache::new();
+        let cam = scene.scenario_camera(2);
+        for warm in 0..3 {
+            let t = assert_frame_matches(
+                &mut cache, &scene, &slt, &cam, 8.0, &cfg,
+                &format!("warm {warm}"),
+            );
+            if warm == 2 {
+                assert!(
+                    t.verdicts_skipped > 0,
+                    "identical pose re-search must skip via budgets"
+                );
+            }
+        }
+        let t = assert_frame_matches(
+            &mut cache, &scene, &slt, &cam, 10.0, &cfg, "tau nudge",
+        );
+        assert_eq!(t.cache_hit, 1, "nudge stays on the incremental path");
+        assert_eq!(
+            t.verdicts_skipped, 0,
+            "tau changed -> budgets void -> every verdict re-tested"
+        );
+        let t = assert_frame_matches(
+            &mut cache, &scene, &slt, &cam, 10.0, &cfg, "after nudge",
+        );
+        assert!(t.verdicts_skipped > 0, "budgets rebuilt at the new tau");
     }
 
     #[test]

@@ -100,6 +100,14 @@ pub struct TraversalTrace {
     /// ([`super::cut_cache::CutCache::set_collect_touched`]); empty for
     /// full traversals (whose slab stream *is* `activation_sids`).
     pub touched_sids: Vec<u32>,
+    /// Frontier-path verdicts the incremental revalidation *reused
+    /// without re-testing* because the accumulated camera delta since
+    /// the verdict was last evaluated provably cannot flip it (the cut
+    /// cache's conservative verdict bounds). Always 0 for full
+    /// traversals; `revalidated + verdicts_skipped` is the total
+    /// frontier-path verdict count an unbounded revalidation would
+    /// have evaluated.
+    pub verdicts_skipped: u64,
 }
 
 impl TraversalTrace {

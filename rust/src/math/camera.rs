@@ -150,6 +150,30 @@ impl Frustum {
         true
     }
 
+    /// [`Frustum::intersects_aabb`] plus the verdict's *margin*: the
+    /// smallest plane slack `n.dot(c) + d + r` over all planes when the
+    /// box is accepted, or the magnitude of the first failing plane's
+    /// (negative) slack when it is rejected. The boolean evaluates the
+    /// exact same expressions in the same short-circuit order as
+    /// `intersects_aabb`, so it is bit-identical to it — the margin is
+    /// side information for the cut cache's conservative verdict bounds
+    /// ([`crate::lod::CutCache`]), which skip re-tests while the camera
+    /// delta provably cannot move any slack across zero.
+    pub fn intersects_aabb_margin(&self, b: &Aabb) -> (bool, f32) {
+        let c = b.center();
+        let h = b.half_extent();
+        let mut margin = f32::INFINITY;
+        for (n, d) in &self.planes {
+            let r = h.x * n.x.abs() + h.y * n.y.abs() + h.z * n.z.abs();
+            let slack = n.dot(c) + d + r;
+            if slack < 0.0 {
+                return (false, -slack);
+            }
+            margin = margin.min(slack);
+        }
+        (true, margin)
+    }
+
     #[inline]
     pub fn contains_point(&self, p: Vec3) -> bool {
         self.planes.iter().all(|(n, d)| n.dot(p) + d >= 0.0)
@@ -202,6 +226,26 @@ mod tests {
             Vec3::splat(120.0),
         );
         assert!(f.intersects_aabb(&huge));
+    }
+
+    #[test]
+    fn margin_variant_agrees_with_plain_intersection_test() {
+        let cam = test_cam();
+        let f = cam.frustum();
+        let mut rejected = 0;
+        for i in -4..=4 {
+            for j in -4..=4 {
+                for k in -4..=4 {
+                    let c = Vec3::new(i as f32, j as f32, k as f32) * 7.0;
+                    let b = Aabb::from_center_half(c, Vec3::splat(1.5));
+                    let (hit, margin) = f.intersects_aabb_margin(&b);
+                    assert_eq!(hit, f.intersects_aabb(&b), "at {c:?}");
+                    assert!(margin >= 0.0, "margin is a magnitude at {c:?}");
+                    rejected += u32::from(!hit);
+                }
+            }
+        }
+        assert!(rejected > 0, "grid must exercise the rejection path");
     }
 
     #[test]

@@ -18,6 +18,17 @@
 //!   rate, maximally clumped), the classic laggy-stream pattern;
 //! * **jitter** — uniform arrival-time noise, deterministic per seed.
 //!
+//! **Correlated mode** ([`LoadGenConfig::correlated`]): instead of
+//! independent per-client streams, every client orbits the *same*
+//! scene path with a small fixed per-client eye offset
+//! ([`LoadGenConfig::correlated_spread`]) — the stereo-pair /
+//! co-located-XR workload. Each tick submits the whole set as one
+//! atomic group through [`FrameServer::submit_batch`], so the server's
+//! batch lane (shared front ends, cross-view LoD-search seeding, one
+//! interleaved tile schedule) carries the load. A group that does not
+//! fit the queue sheds whole, one shed per member, keeping the ledger
+//! per-frame.
+//!
 //! The run is two-phase: a warmup phase finds the QoS operating point,
 //! then [`FrameServer::reset_window`] starts the measured window, so
 //! reported percentiles and the accounting ledger cover exactly the
@@ -25,7 +36,7 @@
 
 use super::{FrameServer, ServeConfig, ServeReport};
 use crate::coordinator::{FramePipeline, RenderOptions};
-use crate::math::Camera;
+use crate::math::{Camera, Vec3};
 use crate::util::Rng;
 use std::time::{Duration, Instant};
 
@@ -54,6 +65,16 @@ pub struct LoadGenConfig {
     /// Make the last client a slow/clumped stream (4x period, 4
     /// requests per wakeup); needs at least 2 clients.
     pub slow_client: bool,
+    /// Correlated co-orbit mode: all clients follow the first camera
+    /// path with small per-client eye offsets, and each tick submits
+    /// one atomic group via [`FrameServer::submit_batch`] (the batch
+    /// lane renders it). Bursts and the slow client do not apply — the
+    /// group *is* the correlated arrival pattern.
+    pub correlated: bool,
+    /// Eye-offset spacing (world units) between adjacent clients in
+    /// correlated mode; keep it small so the batch lane's pose-close
+    /// seeding applies.
+    pub correlated_spread: f32,
     /// Seed for the deterministic jitter streams.
     pub seed: u64,
 }
@@ -69,9 +90,31 @@ impl Default for LoadGenConfig {
             burst_extra: 0,
             jitter: 0.0,
             slow_client: false,
+            correlated: false,
+            correlated_spread: 0.05,
             seed: 0x51E7_ACE5,
         }
     }
+}
+
+/// Shift `cam`'s eye by `offset` world units keeping orientation and
+/// intrinsics exactly — the per-client disparity of correlated mode.
+/// For a view `V(x) = R x + t`, moving the eye by `d` gives
+/// `t' = t - R d`.
+fn offset_camera(cam: &Camera, offset: Vec3) -> Camera {
+    let mut out = *cam;
+    let r = cam.view.rotation();
+    for i in 0..3 {
+        out.view.m[i][3] -= r.row(i).dot(offset);
+    }
+    out
+}
+
+/// Client `c`'s fixed eye offset in correlated mode: clients fan out
+/// laterally, centred on the base path.
+fn correlated_offset(load: &LoadGenConfig, c: usize) -> Vec3 {
+    let centred = c as f32 - (load.clients.saturating_sub(1)) as f32 / 2.0;
+    Vec3::new(load.correlated_spread * centred, 0.0, 0.0)
 }
 
 /// `(arrival period, requests per arrival)` for one client stream.
@@ -136,6 +179,42 @@ fn drive(
     });
 }
 
+/// Run one correlated phase: every tick submits one atomic group (one
+/// offset view of the shared path per client) via
+/// [`FrameServer::submit_batch`]. Open loop like [`drive`]: the
+/// schedule is absolute, and a shed group never delays later ticks.
+fn drive_correlated(
+    server: &FrameServer<'_>,
+    load: &LoadGenConfig,
+    path: &[Camera],
+    frames: usize,
+    phase_tag: u64,
+) {
+    if frames == 0 {
+        return;
+    }
+    let mut rng = Rng::new(load.seed ^ phase_tag);
+    let mut group: Vec<(usize, Camera)> = Vec::with_capacity(load.clients);
+    let start = Instant::now();
+    for tick in 0..frames {
+        let mut due = load.period * tick as f64;
+        if load.jitter > 0.0 {
+            due += load.period * load.jitter * (2.0 * rng.f32() as f64 - 1.0);
+        }
+        let elapsed = start.elapsed().as_secs_f64();
+        if due > elapsed {
+            std::thread::sleep(Duration::from_secs_f64(due - elapsed));
+        }
+        let base = path[tick % path.len()];
+        group.clear();
+        group.extend(
+            (0..load.clients).map(|c| (c, offset_camera(&base, correlated_offset(load, c)))),
+        );
+        // A shed group is part of the experiment, not an error.
+        let _ = server.submit_batch(&group);
+    }
+}
+
 /// Drive `pipeline` through a [`FrameServer`] with `serve` settings
 /// under the synthetic load `load`, one camera path per client
 /// (recycled modulo when `paths` is shorter). Returns the measured
@@ -159,12 +238,20 @@ pub fn run_load(
             .map(|_| s.spawn(|| server.worker()))
             .collect();
         if load.warmup > 0 {
-            drive(&server, load, paths, load.warmup, 0xAA);
+            if load.correlated {
+                drive_correlated(&server, load, &paths[0], load.warmup, 0xAA);
+            } else {
+                drive(&server, load, paths, load.warmup, 0xAA);
+            }
             server.drain();
         }
         // Warmup found the QoS operating point; measure from here.
         server.reset_window();
-        drive(&server, load, paths, load.frames, 0xBB);
+        if load.correlated {
+            drive_correlated(&server, load, &paths[0], load.frames, 0xBB);
+        } else {
+            drive(&server, load, paths, load.frames, 0xBB);
+        }
         server.drain();
         server.close();
         for w in workers {
@@ -268,6 +355,41 @@ mod tests {
             r.served + r.expired + r.failed + r.shed_total()
         );
         assert!(r.queue_high_water <= r.queue_capacity);
+    }
+
+    #[test]
+    fn correlated_mode_batches_every_tick_and_balances_the_ledger() {
+        let p = pipeline();
+        let paths = vec![walkthrough(6.0, 5, 64, 64)];
+        let load = LoadGenConfig {
+            clients: 3,
+            frames: 4,
+            warmup: 1,
+            period: 0.0,
+            correlated: true,
+            ..LoadGenConfig::default()
+        };
+        let serve = ServeConfig {
+            queue_capacity: 32,
+            max_inflight: 32,
+            workers: 1,
+            budget: 10.0,
+            qos: QosConfig::disabled(),
+            ..ServeConfig::default()
+        };
+        let r = run_load(&p, serve, &load, &paths);
+        assert_eq!(r.submitted, 12, "3 clients x 4 measured ticks");
+        assert_eq!(r.served, 12, "roomy caps + huge budget: nothing sheds");
+        assert_eq!(
+            r.submitted,
+            r.served + r.expired + r.failed + r.shed_total()
+        );
+        // Each measured tick went through the batch lane as one group.
+        assert_eq!(r.batch.batches, 4);
+        assert_eq!(r.batch.views, 12);
+        // Pure lateral offsets well inside the pose-close thresholds:
+        // the two non-leader views seed off the leader every tick.
+        assert_eq!(r.batch.searches_seeded, 8);
     }
 
     #[test]

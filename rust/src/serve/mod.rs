@@ -44,8 +44,21 @@
 //! submission is accounted exactly once —
 //! `submitted == served + expired + failed + shed_queue + shed_admission`.
 //!
+//! **Batch lane** ([`FrameServer::submit_batch`]): correlated
+//! same-scene requests (stereo pairs, co-located XR clients, grid
+//! review walls) can be submitted as one atomic group. The group
+//! occupies one queue slot per member, sheds whole (per-member
+//! admission charges roll back on refusal), and renders through a
+//! server-owned [`ViewBatch`] — bitwise-identical frames to the
+//! per-client lanes, but with identity-group coalescing, cross-view
+//! LoD-search seeding and one interleaved tile schedule across the
+//! group. Batch-lane frames bypass per-stream QoS tau adaptation (the
+//! batch renders every member at the lane's base options); deadlines,
+//! misses and the ledger are still tracked per member.
+//!
 //! [`loadgen`] drives this stack with synthetic open-loop camera
-//! streams (burst and slow-client fault injection) and is what the
+//! streams (burst and slow-client fault injection, plus a correlated
+//! co-orbit mode that exercises the batch lane) and is what the
 //! `hotpath` bench and `examples/multi_client.rs` run.
 
 #![warn(missing_docs)]
@@ -58,10 +71,11 @@ pub mod queue;
 pub use admission::AdmissionController;
 pub use loadgen::{calibrate_frame_seconds, run_load, LoadGenConfig};
 pub use qos::{QosConfig, QosController};
-pub use queue::{FrameQueue, FrameRequest, ShedError, ShedReason};
+pub use queue::{FrameQueue, FrameRequest, QueueEntry, ShedError, ShedReason};
 
 use crate::coordinator::{
-    FramePipeline, LatencyHistogram, RenderOptions, RenderSession, RenderStats,
+    BatchConfig, BatchStats, FramePipeline, LatencyHistogram, RenderOptions, RenderSession,
+    RenderStats, ViewBatch,
 };
 use crate::math::Camera;
 use crate::metrics::Image;
@@ -93,6 +107,10 @@ pub struct ServeConfig {
     pub keep_frames: bool,
     /// Per-stream deadline-adaptive LoD degradation.
     pub qos: QosConfig,
+    /// Sharing policy of the batch lane ([`FrameServer::submit_batch`]
+    /// groups render through a server-owned [`ViewBatch`] under this
+    /// config; any setting is byte-identical, it only tunes sharing).
+    pub batch: BatchConfig,
 }
 
 impl Default for ServeConfig {
@@ -105,6 +123,7 @@ impl Default for ServeConfig {
             shed_expired: false,
             keep_frames: false,
             qos: QosConfig::default(),
+            batch: BatchConfig::default(),
         }
     }
 }
@@ -136,6 +155,11 @@ pub struct FrameServer<'p> {
     queue: FrameQueue,
     admission: AdmissionController,
     lanes: Vec<Mutex<ClientLane<'p>>>,
+    /// The batch lane: one [`ViewBatch`] shared by every
+    /// [`submit_batch`](Self::submit_batch) group (its per-slot cut
+    /// caches stay warm across groups, which is the whole point of
+    /// coalescing correlated streams).
+    batch: Mutex<ViewBatch<'p>>,
     seq: AtomicU64,
     submitted: AtomicU64,
     shed_queue: AtomicU64,
@@ -182,6 +206,7 @@ impl<'p> FrameServer<'p> {
             queue: FrameQueue::new(cfg.queue_capacity),
             admission: AdmissionController::new(cfg.max_inflight),
             lanes,
+            batch: Mutex::new(pipeline.batch_with(opts, cfg.batch)),
             seq: AtomicU64::new(0),
             submitted: AtomicU64::new(0),
             shed_queue: AtomicU64::new(0),
@@ -231,12 +256,70 @@ impl<'p> FrameServer<'p> {
         Ok(seq)
     }
 
+    /// Submit a coalesced same-scene group — one `(client, camera)`
+    /// member per correlated stream — rendered together through the
+    /// server's batch lane ([`ViewBatch`]). Returns the members'
+    /// sequence numbers in submission order.
+    ///
+    /// Groups are **atomic**: admission is charged per member, and if
+    /// any member is refused (or the whole group does not fit the
+    /// bounded queue) every already-charged admission rolls back and
+    /// the entire group sheds — each member counts as exactly one shed,
+    /// so the ledger stays per-frame. The [`ShedError::client`] names
+    /// the member that triggered the refusal (first member for a full
+    /// queue).
+    ///
+    /// Deadlines, served/missed/expired accounting and kept frames are
+    /// per member, exactly like [`submit`](Self::submit). The one
+    /// deliberate difference: batch-lane frames bypass per-stream QoS
+    /// tau adaptation, because the group renders at the batch lane's
+    /// base options rather than each lane's degraded tau (coalescing
+    /// only makes sense for streams that share one quality setting).
+    pub fn submit_batch(&self, reqs: &[(usize, Camera)]) -> Result<Vec<u64>, ShedError> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.submitted.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        for (admitted, &(client, _)) in reqs.iter().enumerate() {
+            assert!(client < self.lanes.len(), "unknown client {client}");
+            if let Err(reason) = self.admission.try_admit(client) {
+                for &(c, _) in &reqs[..admitted] {
+                    self.admission.release(c);
+                }
+                self.shed_admission.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+                return Err(ShedError { client, reason });
+            }
+        }
+        let now = Instant::now();
+        let budget = Duration::from_secs_f64(self.cfg.budget.clamp(0.0, 1e9));
+        let mut seqs = Vec::with_capacity(reqs.len());
+        let group: Vec<FrameRequest> = reqs
+            .iter()
+            .map(|&(client, cam)| {
+                let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+                seqs.push(seq);
+                FrameRequest { client, seq, cam, enqueued: now, deadline: now + budget }
+            })
+            .collect();
+        if let Err(reason) = self.queue.push_group(group) {
+            for &(c, _) in reqs {
+                self.admission.release(c);
+            }
+            self.shed_queue.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+            return Err(ShedError { client: reqs[0].0, reason });
+        }
+        Ok(seqs)
+    }
+
     /// Render-worker loop: drains the queue until the server is closed,
     /// then returns. Run any number of these concurrently (typically
     /// from scoped threads — see [`loadgen::run_load`]).
     pub fn worker(&self) {
-        while let Some(req) = self.queue.pop_blocking() {
-            self.handle(req);
+        while let Some(entry) = self.queue.pop_blocking() {
+            match entry {
+                QueueEntry::Single(req) => self.handle(req),
+                QueueEntry::Group(group) => self.handle_group(group),
+            }
         }
     }
 
@@ -298,6 +381,66 @@ impl<'p> FrameServer<'p> {
         self.admission.release(client);
     }
 
+    /// Process one dequeued batch group: shed expired members, render
+    /// the survivors together through the batch lane, and account each
+    /// member in its own client lane.
+    fn handle_group(&self, group: Vec<FrameRequest>) {
+        // Per-member expiry shed first, same policy as singles — a
+        // group member past its deadline should not drag the rest of
+        // the group into rendering a frame nobody can use.
+        let mut live: Vec<FrameRequest> = Vec::with_capacity(group.len());
+        for req in group {
+            let mut lane = self.lane(req.client);
+            lane.queue_wait.record(req.enqueued.elapsed().as_secs_f64());
+            if self.cfg.shed_expired && Instant::now() >= req.deadline {
+                lane.expired += 1;
+                self.expired.fetch_add(1, Ordering::Relaxed);
+                drop(lane);
+                self.admission.release(req.client);
+            } else {
+                live.push(req);
+            }
+        }
+        if live.is_empty() {
+            return;
+        }
+        let cams: Vec<Camera> = live.iter().map(|r| r.cam).collect();
+        let rendered = {
+            let mut batch = self.batch.lock().unwrap_or_else(|e| e.into_inner());
+            batch.render(&cams)
+        };
+        match rendered {
+            Ok(images) => {
+                for (req, img) in live.iter().zip(images) {
+                    {
+                        let mut lane = self.lane(req.client);
+                        let e2e = req.enqueued.elapsed().as_secs_f64();
+                        lane.e2e.record(e2e);
+                        lane.served += 1;
+                        self.served.fetch_add(1, Ordering::Relaxed);
+                        if e2e > self.cfg.budget {
+                            lane.missed += 1;
+                            self.missed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if self.cfg.keep_frames {
+                            lane.frames.push((req.seq, img));
+                        }
+                    }
+                    self.admission.release(req.client);
+                }
+            }
+            Err(_) => {
+                // A failed batch degrades exactly this group; the batch
+                // lane commits no stats on error, so the next group
+                // starts clean.
+                self.failed.fetch_add(live.len() as u64, Ordering::Relaxed);
+                for req in &live {
+                    self.admission.release(req.client);
+                }
+            }
+        }
+    }
+
     /// Block until every admitted request has left the system (the
     /// ledger invariant holds from then on). Call before [`close`]
     /// while workers are still running.
@@ -330,6 +473,11 @@ impl<'p> FrameServer<'p> {
             lane.missed = 0;
             lane.expired = 0;
             lane.frames.clear();
+        }
+        {
+            let mut batch = self.batch.lock().unwrap_or_else(|e| e.into_inner());
+            batch.reset_view_stats();
+            batch.reset_batch_stats();
         }
         self.submitted.store(0, Ordering::Relaxed);
         self.shed_queue.store(0, Ordering::Relaxed);
@@ -380,7 +528,20 @@ impl<'p> FrameServer<'p> {
                 e2e: lane.e2e,
             });
         }
+        let batch = {
+            let batch = self.batch.lock().unwrap_or_else(|e| e.into_inner());
+            // Batch-lane renders live in the lane's own per-slot
+            // sessions; fold them into the aggregate render stats so a
+            // window's work is visible no matter which lane did it.
+            for v in 0..batch.view_slots() {
+                if let Some(vs) = batch.view_stats(v) {
+                    render.merge(vs);
+                }
+            }
+            *batch.batch_stats()
+        };
         ServeReport {
+            batch,
             clients,
             submitted: self.submitted.load(Ordering::Relaxed),
             served: self.served.load(Ordering::Relaxed),
@@ -429,6 +590,10 @@ pub struct ClientReport {
 pub struct ServeReport {
     /// Per-client breakdown.
     pub clients: Vec<ClientReport>,
+    /// Batch-lane sharing telemetry (groups coalesced via
+    /// [`FrameServer::submit_batch`]; zero when only singles were
+    /// served).
+    pub batch: BatchStats,
     /// Submissions attempted this window.
     pub submitted: u64,
     /// Frames rendered and delivered.
@@ -712,6 +877,95 @@ mod tests {
         let r = server.report();
         assert_eq!(r.expired, cams.len() as u64);
         assert_eq!(r.served, 0);
+        assert_eq!(
+            r.submitted,
+            r.served + r.expired + r.failed + r.shed_total()
+        );
+    }
+
+    #[test]
+    fn batch_groups_are_byte_identical_to_direct_sessions() {
+        let p = pipeline();
+        let cams = walkthrough(6.0, 4, 64, 64);
+        let cfg = ServeConfig {
+            queue_capacity: 16,
+            max_inflight: 16,
+            budget: 10.0,
+            keep_frames: true,
+            qos: QosConfig::disabled(),
+            ..ServeConfig::default()
+        };
+        let server = FrameServer::new(&p, cfg, 4);
+        let group: Vec<(usize, Camera)> =
+            cams.iter().enumerate().map(|(c, cam)| (c, *cam)).collect();
+        let seqs = server.submit_batch(&group).unwrap();
+        assert_eq!(seqs.len(), 4);
+        run_inline(&server);
+        for (c, cam) in cams.iter().enumerate() {
+            let frames = server.take_frames(c);
+            assert_eq!(frames.len(), 1, "client {c}");
+            assert_eq!(frames[0].0, seqs[c]);
+            let want = p.session().render(cam).unwrap();
+            assert_eq!(
+                frames[0].1.data, want.data,
+                "batch-lane frame for client {c} must match a direct render"
+            );
+        }
+        let r = server.report();
+        assert_eq!(r.served, 4);
+        assert_eq!(r.batch.batches, 1);
+        assert_eq!(r.batch.views, 4);
+        assert_eq!(
+            r.submitted,
+            r.served + r.expired + r.failed + r.shed_total()
+        );
+        // The batch lane's render work shows up in the aggregate stats.
+        assert_eq!(r.render.frames, 4);
+    }
+
+    #[test]
+    fn batch_group_sheds_roll_back_admission_and_balance_the_ledger() {
+        let p = pipeline();
+        let cam = walkthrough(6.0, 1, 64, 64)[0];
+        // Queue of 2: a single plus a 2-member group cannot both fit.
+        let cfg = ServeConfig {
+            queue_capacity: 2,
+            max_inflight: 8,
+            budget: 10.0,
+            ..ServeConfig::default()
+        };
+        let server = FrameServer::new(&p, cfg, 3);
+        server.submit(0, cam).unwrap();
+        let err = server.submit_batch(&[(1, cam), (2, cam)]).unwrap_err();
+        assert_eq!(err.reason, ShedReason::QueueFull);
+        // The whole group rolled back: only the single is in flight.
+        assert_eq!(server.admission.total_inflight(), 1);
+        // A group that fits exactly is accepted atomically.
+        server.submit_batch(&[(1, cam)]).unwrap();
+        run_inline(&server);
+        let r = server.report();
+        assert_eq!(r.submitted, 4);
+        assert_eq!(r.served, 2);
+        assert_eq!(r.shed_queue, 2, "each shed group member counts once");
+        assert_eq!(
+            r.submitted,
+            r.served + r.expired + r.failed + r.shed_total()
+        );
+        assert_eq!(server.admission.total_inflight(), 0);
+
+        // Admission refusals roll back too: client 1 still holds no
+        // in-flight budget after a mid-group refusal.
+        let tight = ServeConfig { max_inflight: 1, ..cfg };
+        let server = FrameServer::new(&p, tight, 3);
+        server.submit(2, cam).unwrap();
+        let err = server.submit_batch(&[(1, cam), (2, cam)]).unwrap_err();
+        assert_eq!(err.reason, ShedReason::ClientSaturated);
+        assert_eq!(err.client, 2, "the saturated member is named");
+        assert_eq!(server.admission.total_inflight(), 1);
+        run_inline(&server);
+        let r = server.report();
+        assert_eq!(r.submitted, 3);
+        assert_eq!(r.shed_admission, 2);
         assert_eq!(
             r.submitted,
             r.served + r.expired + r.failed + r.shed_total()

@@ -69,15 +69,48 @@ impl std::fmt::Display for ShedError {
 
 impl std::error::Error for ShedError {}
 
+/// One unit of queued work: a single frame request, or a coalesced
+/// same-scene **group** that the server renders together through its
+/// multi-view batch lane
+/// ([`FrameServer::submit_batch`](super::FrameServer::submit_batch)).
+/// A group occupies one queue slot *per member* — capacity accounting
+/// is per frame, so coalescing can never sneak past the queue bound.
+#[derive(Clone, Debug)]
+pub enum QueueEntry {
+    /// One client's frame request.
+    Single(FrameRequest),
+    /// A multi-view group (one request per participating client),
+    /// dequeued atomically so the batch renders all members together.
+    Group(Vec<FrameRequest>),
+}
+
+impl QueueEntry {
+    /// Frame requests this entry holds (its queue-slot footprint).
+    pub fn len(&self) -> usize {
+        match self {
+            QueueEntry::Single(_) => 1,
+            QueueEntry::Group(g) => g.len(),
+        }
+    }
+
+    /// Whether the entry holds no requests (only possible for an empty
+    /// group, which [`FrameQueue::push_group`] refuses to enqueue).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Interior queue state behind the mutex.
 #[derive(Debug, Default)]
 struct QueueState {
-    queue: VecDeque<FrameRequest>,
+    queue: VecDeque<QueueEntry>,
+    /// Occupancy in frame requests (group entries count each member).
+    len: usize,
     closed: bool,
     /// Largest occupancy ever observed (the backpressure test's bound
     /// witness and a useful serving metric).
     high_water: usize,
-    /// Total accepted pushes.
+    /// Total accepted pushes (in frame requests).
     pushed: u64,
 }
 
@@ -108,32 +141,51 @@ impl FrameQueue {
         self.state.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Enqueue a request. Never blocks: a full or closed queue rejects
-    /// immediately with the corresponding [`ShedReason`].
+    /// Enqueue a single request. Never blocks: a full or closed queue
+    /// rejects immediately with the corresponding [`ShedReason`].
     pub fn push(&self, req: FrameRequest) -> Result<(), ShedReason> {
+        self.push_entry(QueueEntry::Single(req))
+    }
+
+    /// Enqueue a coalesced multi-view group **atomically**: either every
+    /// member fits within `capacity` (counted per frame, exactly as if
+    /// they had been pushed individually) or the whole group is shed
+    /// with [`ShedReason::QueueFull`]. Empty groups are refused as full
+    /// rather than enqueued (a zero-frame entry would wedge workers).
+    pub fn push_group(&self, group: Vec<FrameRequest>) -> Result<(), ShedReason> {
+        if group.is_empty() {
+            return Err(ShedReason::QueueFull);
+        }
+        self.push_entry(QueueEntry::Group(group))
+    }
+
+    fn push_entry(&self, entry: QueueEntry) -> Result<(), ShedReason> {
+        let frames = entry.len();
         let mut st = self.lock();
         if st.closed {
             return Err(ShedReason::Closed);
         }
-        if st.queue.len() >= self.capacity {
+        if st.len + frames > self.capacity {
             return Err(ShedReason::QueueFull);
         }
-        st.queue.push_back(req);
-        st.high_water = st.high_water.max(st.queue.len());
-        st.pushed += 1;
+        st.queue.push_back(entry);
+        st.len += frames;
+        st.high_water = st.high_water.max(st.len);
+        st.pushed += frames as u64;
         drop(st);
         self.ready.notify_one();
         Ok(())
     }
 
-    /// Dequeue the oldest request, blocking until one arrives. Returns
+    /// Dequeue the oldest entry, blocking until one arrives. Returns
     /// `None` once the queue is closed **and** drained — the worker
     /// shutdown signal (close never drops queued work).
-    pub fn pop_blocking(&self) -> Option<FrameRequest> {
+    pub fn pop_blocking(&self) -> Option<QueueEntry> {
         let mut st = self.lock();
         loop {
-            if let Some(req) = st.queue.pop_front() {
-                return Some(req);
+            if let Some(entry) = st.queue.pop_front() {
+                st.len -= entry.len();
+                return Some(entry);
             }
             if st.closed {
                 return None;
@@ -143,8 +195,11 @@ impl FrameQueue {
     }
 
     /// Non-blocking dequeue (tests and drain probes).
-    pub fn try_pop(&self) -> Option<FrameRequest> {
-        self.lock().queue.pop_front()
+    pub fn try_pop(&self) -> Option<QueueEntry> {
+        let mut st = self.lock();
+        let entry = st.queue.pop_front()?;
+        st.len -= entry.len();
+        Some(entry)
     }
 
     /// Close the queue: subsequent pushes shed with
@@ -155,9 +210,10 @@ impl FrameQueue {
         self.ready.notify_all();
     }
 
-    /// Current occupancy.
+    /// Current occupancy in frame requests (group entries count each
+    /// member).
     pub fn len(&self) -> usize {
-        self.lock().queue.len()
+        self.lock().len
     }
 
     /// Whether the queue is currently empty.
@@ -201,6 +257,15 @@ mod tests {
         FrameRequest { client, seq, cam: cam(), enqueued: now, deadline: now }
     }
 
+    /// Unwrap a single-request entry (the shape every pre-batch test
+    /// expects).
+    fn single(entry: QueueEntry) -> FrameRequest {
+        match entry {
+            QueueEntry::Single(r) => r,
+            QueueEntry::Group(g) => panic!("expected a single entry, got a group of {}", g.len()),
+        }
+    }
+
     #[test]
     fn occupancy_never_exceeds_capacity() {
         let q = FrameQueue::new(2);
@@ -212,7 +277,7 @@ mod tests {
         assert_eq!(q.high_water(), 2);
         assert_eq!(q.pushed(), 2);
         // Freeing a slot re-admits exactly one.
-        assert_eq!(q.try_pop().unwrap().seq, 0);
+        assert_eq!(single(q.try_pop().unwrap()).seq, 0);
         assert!(q.push(req(0, 3)).is_ok());
         assert_eq!(q.push(req(0, 4)), Err(ShedReason::QueueFull));
         assert!(q.high_water() <= q.capacity());
@@ -225,7 +290,7 @@ mod tests {
             q.push(req(0, s)).unwrap();
         }
         for s in 0..5u64 {
-            assert_eq!(q.pop_blocking().unwrap().seq, s);
+            assert_eq!(single(q.pop_blocking().unwrap()).seq, s);
         }
         assert!(q.is_empty());
         assert!(q.try_pop().is_none());
@@ -239,10 +304,44 @@ mod tests {
         q.close();
         assert_eq!(q.push(req(0, 2)), Err(ShedReason::Closed));
         // Queued work is still delivered, then the shutdown signal.
-        assert_eq!(q.pop_blocking().unwrap().seq, 0);
-        assert_eq!(q.pop_blocking().unwrap().seq, 1);
+        assert_eq!(single(q.pop_blocking().unwrap()).seq, 0);
+        assert_eq!(single(q.pop_blocking().unwrap()).seq, 1);
         assert!(q.pop_blocking().is_none());
         assert!(q.pop_blocking().is_none(), "None must be sticky");
+    }
+
+    #[test]
+    fn groups_count_per_member_and_shed_atomically() {
+        let q = FrameQueue::new(4);
+        q.push(req(0, 0)).unwrap();
+        // A 3-member group fits exactly (1 + 3 == capacity 4)...
+        q.push_group(vec![req(0, 1), req(1, 2), req(2, 3)]).unwrap();
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.high_water(), 4);
+        assert_eq!(q.pushed(), 4);
+        // ...and the next single sheds: no slots left.
+        assert_eq!(q.push(req(0, 4)), Err(ShedReason::QueueFull));
+        // A 2-member group after a single pop still doesn't fit (3 + 2
+        // > 4): the whole group sheds, the queue is untouched.
+        assert_eq!(single(q.try_pop().unwrap()).seq, 0);
+        assert_eq!(
+            q.push_group(vec![req(0, 5), req(1, 6)]),
+            Err(ShedReason::QueueFull)
+        );
+        assert_eq!(q.len(), 3);
+        // The group dequeues as one atomic entry, FIFO-ordered inside.
+        let entry = q.try_pop().unwrap();
+        assert_eq!(entry.len(), 3);
+        assert!(!entry.is_empty());
+        match entry {
+            QueueEntry::Group(g) => {
+                assert_eq!(g.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![1, 2, 3]);
+            }
+            QueueEntry::Single(_) => panic!("expected a group"),
+        }
+        assert!(q.is_empty());
+        // Empty groups are refused, not enqueued.
+        assert_eq!(q.push_group(Vec::new()), Err(ShedReason::QueueFull));
     }
 
     #[test]
@@ -259,8 +358,8 @@ mod tests {
         std::thread::scope(|s| {
             let consumer = s.spawn(|| {
                 let mut got = Vec::new();
-                while let Some(r) = q.pop_blocking() {
-                    got.push(r.seq);
+                while let Some(e) = q.pop_blocking() {
+                    got.push(single(e).seq);
                 }
                 got
             });

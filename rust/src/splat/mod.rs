@@ -28,11 +28,12 @@ pub use blend::{blend_tile, BlendMode, BlendStats};
 pub use divergence::DivergenceStats;
 pub use kernel::{blend_tile_soa, group_keep_threshold, BlendKernel, TileState};
 pub use sort::{
-    float_to_sortable_uint, radix_sort_tile, sort_bins_by_depth,
-    sort_bins_threaded, sort_bins_with, sort_tile_by_depth, DepthSortScratch,
+    float_to_sortable_uint, radix_sort_tile, radix_sort_tile_split,
+    sort_bins_by_depth, sort_bins_threaded, sort_bins_with,
+    sort_tile_by_depth, DepthSortScratch,
 };
 pub use tiling::{
     bin_splats, bin_splats_into, bin_splats_into_threaded, bin_splats_nested,
-    project_bin_finish, project_bin_fused, project_bin_sweep, FusedSweep,
-    TileBins, TilingError, TILE,
+    project_bin_finish, project_bin_fused, project_bin_sweep, BatchWorkItem,
+    FusedSweep, TileBins, TilingError, TILE,
 };

@@ -90,12 +90,91 @@ fn insertion_sort_keys(keys: &mut [u64]) {
     }
 }
 
-/// LSD radix sort (8-bit digits) over `keys`, using `tmp` as the
-/// ping-pong buffer. Histograms for all 8 digit positions are gathered
-/// in a single pre-pass, and any digit position where every key shares
-/// the same byte is skipped entirely — in practice a tile's depth keys
-/// share high bytes, so most of the 8 passes vanish.
+/// The production LSD radix sort (8-bit digits) over `keys`, using
+/// `tmp` as the ping-pong buffer, with the count pass **fused into the
+/// scatter** (the same fusion shape as `splat::project_bin_sweep`):
+/// only digit 0's histogram is gathered up front (one increment per
+/// key instead of the split path's eight), and every scatter pass
+/// counts the *next* digit's histogram on the keys it is already
+/// moving through registers. A digit position where every key shares
+/// the same byte still skips its scatter — in practice a tile's depth
+/// keys share high bytes, so most passes vanish — and gathers the next
+/// histogram in a read-only sweep instead. Histogram contents are
+/// permutation-invariant, so every pass sees byte-for-byte the
+/// counts/cursors the split path computes and the output is identical
+/// ([`radix_sort_keys_split`] stays as the proptested equivalence
+/// reference).
 fn radix_sort_keys(keys: &mut [u64], tmp: &mut Vec<u64>) {
+    let n = keys.len();
+    if n <= 1 {
+        return;
+    }
+    if n < RADIX_CUTOFF {
+        insertion_sort_keys(keys);
+        return;
+    }
+    tmp.clear();
+    tmp.resize(n, 0);
+    let mut hist = [0u32; 256];
+    for &k in keys.iter() {
+        hist[(k & 0xFF) as usize] += 1;
+    }
+    let mut in_keys = true; // does `keys` currently hold the data?
+    for b in 0..8usize {
+        let shift = b * 8;
+        let probe = if in_keys { keys[0] } else { tmp[0] };
+        let mut next = [0u32; 256];
+        if hist[((probe >> shift) & 0xFF) as usize] as usize == n {
+            // Every key shares this byte: the scatter is a no-op, but
+            // the next digit still needs its histogram (read-only
+            // sweep; the final digit needs none).
+            if b < 7 {
+                let src: &[u64] = if in_keys { keys } else { tmp };
+                for &k in src {
+                    next[((k >> (shift + 8)) & 0xFF) as usize] += 1;
+                }
+                hist = next;
+            }
+            continue;
+        }
+        let mut cursors = [0u32; 256];
+        let mut acc = 0u32;
+        for (c, &count) in cursors.iter_mut().zip(hist.iter()) {
+            *c = acc;
+            acc += count;
+        }
+        let (src, dst): (&[u64], &mut [u64]) = if in_keys {
+            (&keys[..], &mut tmp[..])
+        } else {
+            (&tmp[..], &mut keys[..])
+        };
+        if b < 7 {
+            for &k in src {
+                let d = ((k >> shift) & 0xFF) as usize;
+                dst[cursors[d] as usize] = k;
+                cursors[d] += 1;
+                next[((k >> (shift + 8)) & 0xFF) as usize] += 1;
+            }
+            hist = next;
+        } else {
+            for &k in src {
+                let d = ((k >> shift) & 0xFF) as usize;
+                dst[cursors[d] as usize] = k;
+                cursors[d] += 1;
+            }
+        }
+        in_keys = !in_keys;
+    }
+    if !in_keys {
+        keys.copy_from_slice(&tmp[..n]);
+    }
+}
+
+/// The split-pass reference radix sort: histograms for all 8 digit
+/// positions gathered in one pre-pass, then plain scatters. Kept (like
+/// the split project/bin pair) as the equivalence reference the fused
+/// production path is proptested against.
+fn radix_sort_keys_split(keys: &mut [u64], tmp: &mut Vec<u64>) {
     let n = keys.len();
     if n <= 1 {
         return;
@@ -142,9 +221,10 @@ fn radix_sort_keys(keys: &mut [u64], tmp: &mut Vec<u64>) {
     }
 }
 
-/// Radix-sort one tile's splat indices front-to-back in place. Produces
-/// bit-identical order to [`sort_tile_by_depth`] for NaN-free depths
-/// (the only depths projection emits), including the id tie-break.
+/// Radix-sort one tile's splat indices front-to-back in place (the
+/// fused count+scatter production path). Produces bit-identical order
+/// to [`sort_tile_by_depth`] for NaN-free depths (the only depths
+/// projection emits), including the id tie-break.
 pub fn radix_sort_tile(
     indices: &mut [u32],
     splats: &[Splat2D],
@@ -158,6 +238,27 @@ pub fn radix_sort_tile(
         .keys
         .extend(indices.iter().map(|&i| depth_key(splats[i as usize].depth, i)));
     radix_sort_keys(&mut scratch.keys, &mut scratch.tmp);
+    for (slot, &k) in indices.iter_mut().zip(scratch.keys.iter()) {
+        *slot = k as u32;
+    }
+}
+
+/// [`radix_sort_tile`] through the split-pass reference sorter
+/// ([`radix_sort_keys_split`]) — the equivalence baseline for the
+/// fused-radix property test; never on the production path.
+pub fn radix_sort_tile_split(
+    indices: &mut [u32],
+    splats: &[Splat2D],
+    scratch: &mut DepthSortScratch,
+) {
+    if indices.len() <= 1 {
+        return;
+    }
+    scratch.keys.clear();
+    scratch
+        .keys
+        .extend(indices.iter().map(|&i| depth_key(splats[i as usize].depth, i)));
+    radix_sort_keys_split(&mut scratch.keys, &mut scratch.tmp);
     for (slot, &k) in indices.iter_mut().zip(scratch.keys.iter()) {
         *slot = k as u32;
     }
@@ -347,6 +448,37 @@ mod tests {
             sort_tile_by_depth(&mut want, &splats);
             let mut got = idx;
             radix_sort_tile(&mut got, &splats, &mut scratch);
+            assert_eq!(got, want, "case {case} (n={n})");
+        }
+    }
+
+    #[test]
+    fn fused_radix_matches_split_reference() {
+        let mut rng = Rng::new(0xFA5E_D501);
+        let mut fused_scratch = DepthSortScratch::new();
+        let mut split_scratch = DepthSortScratch::new();
+        for case in 0..64 {
+            // Straddle the insertion cutoff and stress both the
+            // uniform-byte skip (heavy duplication) and full scatters.
+            let n = 1 + rng.below(512);
+            let splats: Vec<Splat2D> = (0..n)
+                .map(|i| {
+                    let d = if rng.below(2) == 0 {
+                        [0.25f32, 0.25, 3.5, 7.0][rng.below(4)]
+                    } else {
+                        rng.range(0.2, 1e6)
+                    };
+                    splat(d, i as u32)
+                })
+                .collect();
+            let mut idx: Vec<u32> = (0..n as u32).collect();
+            for i in (1..idx.len()).rev() {
+                idx.swap(i, rng.below(i + 1));
+            }
+            let mut want = idx.clone();
+            radix_sort_tile_split(&mut want, &splats, &mut split_scratch);
+            let mut got = idx;
+            radix_sort_tile(&mut got, &splats, &mut fused_scratch);
             assert_eq!(got, want, "case {case} (n={n})");
         }
     }

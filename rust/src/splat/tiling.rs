@@ -21,6 +21,66 @@ use crate::math::Camera;
 /// Tile side in pixels — fixed at 16 to match the splat HLO artifacts.
 pub const TILE: u32 = 16;
 
+/// One unit of blend work in a **multi-view** tile schedule: a tile of
+/// one view of a [`crate::coordinator::batch::ViewBatch`], plus an
+/// optional per-tile LoD override.
+///
+/// The batch blend scheduler hands interleaved `(view, tile)` items
+/// from all views of a batch to one scoped worker pool through a single
+/// atomic cursor, so a view with heavy tiles borrows the workers that a
+/// view with light tiles is not using — the LT-unit dynamic-dequeue
+/// idea applied across views instead of within one frame.
+///
+/// `tau` is a **reserved foveated-rendering hook**: it rides through
+/// the scheduler so a future per-tile LoD policy (coarser tau in the
+/// periphery, finer at the gaze point) needs no work-item change. The
+/// current blend kernels deliberately ignore it — the batch path's
+/// byte-identity contract (batch output == K independent renders)
+/// requires uniform per-view LoD today — so [`BatchWorkItem::new`]
+/// items and [`BatchWorkItem::with_tau`] items blend identically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchWorkItem {
+    /// Index of the view in the batch's blend-view list.
+    pub view: u32,
+    /// Tile index into that view's [`TileBins`].
+    pub tile: u32,
+    /// Per-tile tau override as f32 bits; `u32::MAX` (a NaN pattern no
+    /// valid tau produces) encodes "no override".
+    tau_bits: u32,
+}
+
+/// Sentinel bit pattern for "no per-tile tau override" (a NaN; taus are
+/// finite and positive, so no real override collides with it).
+const TAU_NONE: u32 = u32::MAX;
+
+impl BatchWorkItem {
+    /// A work item with no per-tile tau override (the whole-view tau
+    /// applies — the only mode the byte-identity contract allows today).
+    #[inline]
+    pub fn new(view: u32, tile: u32) -> Self {
+        BatchWorkItem { view, tile, tau_bits: TAU_NONE }
+    }
+
+    /// A work item carrying a per-tile tau override (the foveated
+    /// hook). `tau` must be finite (NaN would collide with the "no
+    /// override" sentinel encoding).
+    #[inline]
+    pub fn with_tau(view: u32, tile: u32, tau: f32) -> Self {
+        debug_assert!(tau.is_finite(), "per-tile tau must be finite");
+        BatchWorkItem { view, tile, tau_bits: tau.to_bits() }
+    }
+
+    /// The per-tile tau override, if one was attached.
+    #[inline]
+    pub fn tau(&self) -> Option<f32> {
+        if self.tau_bits == TAU_NONE {
+            None
+        } else {
+            Some(f32::from_bits(self.tau_bits))
+        }
+    }
+}
+
 /// Binning-stage failure. Carried as a typed error (instead of the old
 /// `panic!`/`assert!`) through `RenderBackend`/`RenderSession`'s
 /// `Result` render path, so one malformed frame degrades that request
@@ -977,6 +1037,20 @@ mod tests {
         let mut short = bin_splats(&splats, 64, 64);
         short.offsets.pop(); // breaks the offset-table shape
         assert!(short.validate_csr(1).is_err());
+    }
+
+    #[test]
+    fn batch_work_item_tau_roundtrip() {
+        let plain = BatchWorkItem::new(3, 41);
+        assert_eq!(plain.view, 3);
+        assert_eq!(plain.tile, 41);
+        assert_eq!(plain.tau(), None);
+        let fov = BatchWorkItem::with_tau(1, 7, 24.0);
+        assert_eq!(fov.tau(), Some(24.0));
+        assert_ne!(plain, BatchWorkItem::new(3, 40));
+        // 0.0 is a representable (if silly) override, distinct from
+        // the "no override" sentinel.
+        assert_eq!(BatchWorkItem::with_tau(0, 0, 0.0).tau(), Some(0.0));
     }
 
     #[test]

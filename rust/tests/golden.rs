@@ -26,8 +26,10 @@ use std::path::{Path, PathBuf};
 use sltarch::assets::{load_scene, AssembleOptions, LoadMode};
 use sltarch::config::SceneConfig;
 use sltarch::coordinator::renderer::AlphaMode;
-use sltarch::coordinator::{BlendKernel, CpuBackend, FramePipeline, RenderOptions};
-use sltarch::math::Camera;
+use sltarch::coordinator::{
+    BatchConfig, BlendKernel, CpuBackend, FramePipeline, RenderOptions,
+};
+use sltarch::math::{Camera, Vec3};
 use sltarch::residency::ResidencyConfig;
 use sltarch::scene::{orbit_cameras, walkthrough};
 
@@ -237,5 +239,62 @@ fn golden_frames_match_checked_in_digests() {
                 path.display()
             );
         }
+    }
+}
+
+/// Shift a camera's eye by `offset` world units keeping orientation and
+/// intrinsics exactly: for a view `V(x) = R x + t`, `t' = t - R d`.
+fn offset_camera(cam: &Camera, offset: Vec3) -> Camera {
+    let mut out = *cam;
+    let r = cam.view.rotation();
+    for i in 0..3 {
+        out.view.m[i][3] -= r.row(i).dot(offset);
+    }
+    out
+}
+
+#[test]
+fn golden_stereo_batch_matches_single_view_renders() {
+    // The PR-10 batch-rendering bar over the same pinned scenes: a
+    // stereo pair (each scene's golden camera plus a 6.5 cm-offset
+    // right eye) rendered through a ViewBatch must be byte-identical to
+    // two independent session renders at scheduler widths {1, 2, 8} —
+    // with every sharing level on AND with all sharing off. The left
+    // eye is the golden camera itself, so the batch path is transitively
+    // pinned to the checked-in digests through the per-view equality.
+    for (name, pipeline, cam) in scenes() {
+        let right = offset_camera(&cam, Vec3::new(0.065, 0.0, 0.0));
+        let cams = [cam, right];
+        for threads in [1usize, 2, 8] {
+            let backend = CpuBackend::with_threads(threads);
+            for cfg in [BatchConfig::default(), BatchConfig::independent()] {
+                let mut batch =
+                    pipeline.batch_on(&backend, pipeline.default_options(), cfg);
+                let imgs = batch.render(&cams).expect("stereo batch render");
+                for (v, eye_cam) in cams.iter().enumerate() {
+                    let mut session =
+                        pipeline.session_on(&backend, pipeline.default_options());
+                    let want = session.render(eye_cam).expect("single-view render");
+                    assert_eq!(
+                        imgs[v].data, want.data,
+                        "scene `{name}` eye {v}: batch at width {threads} \
+                         diverged from the single-view render ({cfg:?})"
+                    );
+                }
+            }
+        }
+        // The duplicate-feed case (both eyes bitwise equal) coalesces
+        // to one front end and must still reproduce the golden frame.
+        let mut batch = pipeline.batch();
+        let imgs = batch.render(&[cam, cam]).expect("duplicate batch render");
+        let mut session = pipeline.session();
+        let want = session.render(&cam).expect("single-view render");
+        assert_eq!(imgs[0].data, want.data, "scene `{name}`: left dup eye");
+        assert_eq!(imgs[1].data, want.data, "scene `{name}`: right dup eye");
+        assert_eq!(
+            batch.batch_stats().front_ends_shared,
+            1,
+            "scene `{name}`: bitwise-equal eyes must coalesce"
+        );
     }
 }

@@ -5,7 +5,7 @@
 
 use sltarch::config::{DramConfig, SceneConfig};
 use sltarch::coordinator::renderer::{AlphaMode, CpuRenderer};
-use sltarch::coordinator::{CpuBackend, FramePipeline, RenderOptions};
+use sltarch::coordinator::{BatchConfig, CpuBackend, FramePipeline, RenderOptions};
 use sltarch::gaussian::{
     project_into, project_into_threaded, Gaussians, Splat2D, ALPHA_THRESH,
 };
@@ -16,9 +16,9 @@ use sltarch::scene::{build_lod_tree, GeneratorKind, SceneSpec};
 use sltarch::splat::blend::PIXELS;
 use sltarch::splat::{
     bin_splats, bin_splats_into_threaded, bin_splats_nested, blend_tile,
-    blend_tile_soa, group_keep_threshold, radix_sort_tile, sort_bins_threaded,
-    sort_tile_by_depth, BlendKernel, BlendMode, DepthSortScratch, TileBins,
-    TileState,
+    blend_tile_soa, group_keep_threshold, radix_sort_tile, radix_sort_tile_split,
+    sort_bins_threaded, sort_tile_by_depth, BlendKernel, BlendMode,
+    DepthSortScratch, TileBins, TileState,
 };
 use sltarch::util::prop::forall;
 use sltarch::util::Rng;
@@ -651,6 +651,93 @@ fn prop_csr_bins_match_nested_reference() {
         assert_eq!(bins.tile_count(), nested.len());
         for t in 0..nested.len() {
             assert_eq!(bins.tile(t), nested[t].as_slice(), "tile {t}");
+        }
+    });
+}
+
+#[test]
+fn prop_view_batch_matches_independent_sessions_across_widths() {
+    // PR-10 tentpole contract: a ViewBatch render of K cameras is
+    // byte-identical to K independent session renders — with every
+    // sharing level on and with all sharing off — at scheduler widths
+    // {1, 2, 8}, and the deterministic RenderStats counters agree per
+    // view (cache counters too in independent mode).
+    forall(2, |rng| {
+        let mut cfg = SceneConfig::small_scale().quick();
+        cfg.leaves = 1_500 + rng.below(1_500);
+        let pipeline = FramePipeline::builder(cfg.build(rng.next_u64())).build();
+        for k in [1usize, 2, 4] {
+            // Orbit poses plus an exact duplicate when K allows, so
+            // identity coalescing and seed grouping both get a chance
+            // to fire (correctness must hold whether or not they do).
+            let mut cams: Vec<Camera> =
+                (0..k).map(|i| pipeline.scene().scenario_camera(i % 6)).collect();
+            if k >= 3 {
+                cams[2] = cams[0];
+            }
+            for threads in [1usize, 2, 8] {
+                let backend = CpuBackend::with_threads(threads);
+                for bcfg in [BatchConfig::default(), BatchConfig::independent()] {
+                    let mut batch =
+                        pipeline.batch_on(&backend, pipeline.default_options(), bcfg);
+                    let imgs = batch.render(&cams).unwrap();
+                    let independent = !bcfg.share_front_ends && !bcfg.seed_searches;
+                    for (v, cam) in cams.iter().enumerate() {
+                        let mut solo =
+                            pipeline.session_on(&backend, pipeline.default_options());
+                        let want = solo.render(cam).unwrap();
+                        assert_eq!(
+                            imgs[v].data, want.data,
+                            "view {v}/{k} diverged at {threads} threads ({bcfg:?})"
+                        );
+                        let vs = batch.view_stats(v).unwrap();
+                        let ss = solo.stats();
+                        assert_eq!(vs.frames, ss.frames, "view {v}");
+                        assert_eq!(vs.cut_total, ss.cut_total, "view {v}");
+                        assert_eq!(vs.pairs_total, ss.pairs_total, "view {v}");
+                        assert_eq!(vs.threads, ss.threads, "view {v}");
+                        assert_eq!(
+                            vs.front_end_threads, ss.front_end_threads,
+                            "view {v}"
+                        );
+                        if independent {
+                            assert_eq!(vs.cache_hit, ss.cache_hit, "view {v}");
+                            assert_eq!(vs.revalidated, ss.revalidated, "view {v}");
+                            assert_eq!(vs.reseeded, ss.reseeded, "view {v}");
+                            assert_eq!(
+                                vs.verdicts_skipped, ss.verdicts_skipped,
+                                "view {v}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fused_radix_sort_matches_split_reference() {
+    // PR-10 satellite: the fused count-into-scatter radix sort (one
+    // pass fewer over the keys) must order every random tile exactly
+    // like the split count-then-scatter reference — which is itself
+    // pinned to the comparison sort above.
+    forall(48, |rng| {
+        let splats = random_screen_splats(rng);
+        let mut fused_scratch = DepthSortScratch::new();
+        let mut split_scratch = DepthSortScratch::new();
+        for _ in 0..4 {
+            let k = 1 + rng.below(splats.len());
+            let mut idx: Vec<u32> = (0..splats.len() as u32).collect();
+            for i in (1..idx.len()).rev() {
+                idx.swap(i, rng.below(i + 1));
+            }
+            idx.truncate(k);
+            let mut want = idx.clone();
+            radix_sort_tile_split(&mut want, &splats, &mut split_scratch);
+            let mut got = idx;
+            radix_sort_tile(&mut got, &splats, &mut fused_scratch);
+            assert_eq!(got, want);
         }
     });
 }
